@@ -1,0 +1,83 @@
+//! Domain-shift adaptation: the paper's core deployment story.  Exits are
+//! calibrated on a *source* dataset (e.g. SST-2) but serve a *target*
+//! distribution (e.g. IMDb then Yelp) without labels.  This example streams
+//! target datasets through SplitEE back-to-back and shows the bandit
+//! re-converging when the distribution changes mid-stream.
+//!
+//! ```text
+//! cargo run --release --example domain_shift -- [--per-phase 3000]
+//! ```
+
+use anyhow::Result;
+use splitee::config::{Manifest, Settings};
+use splitee::cost::CostModel;
+use splitee::experiments::ConfidenceCache;
+use splitee::policy::{oracle_split, Policy, SampleView, SplitEeSPolicy};
+use splitee::runtime::Runtime;
+use splitee::util::args::Args;
+use splitee::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    splitee::util::logging::init(if args.has("quiet") { 0 } else { 1 });
+    let settings = Settings::from_args(&args).map_err(anyhow::Error::msg)?;
+    let per_phase = args.get_num("per-phase", 3000usize).map_err(anyhow::Error::msg)?;
+
+    let manifest = Manifest::load(&settings.artifacts_dir)?;
+    let runtime = Runtime::cpu()?;
+    let l = manifest.model.n_layers;
+    let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
+
+    // Two target domains sharing one fine-tuned model (SST-2 -> IMDb, Yelp).
+    let phases = ["imdb", "yelp"];
+    let alpha = manifest.source_task("imdb")?.alpha;
+    // One long-lived policy across the distribution change — the paper's
+    // future-work "adapt to changes in the distribution fast" scenario,
+    // using the side-observation variant for fast re-convergence.
+    let mut policy = SplitEeSPolicy::new(l, alpha, settings.beta);
+    let mut rng = Rng::new(settings.seed);
+
+    for (phase, dataset) in phases.iter().enumerate() {
+        let cache = ConfidenceCache::load_or_build(&manifest, &runtime, dataset, "elasticbert")?;
+        let profiles: Vec<(Vec<f32>, Vec<f32>)> = (0..cache.n_samples)
+            .map(|i| (cache.sample_conf(i), cache.sample_ent(i)))
+            .collect();
+        let (oracle, means) = oracle_split(&profiles, &cm, alpha, true);
+        let order = rng.permutation(cache.n_samples);
+        let take = per_phase.min(order.len());
+
+        let mut hits = 0usize;
+        let mut cost = 0.0;
+        let mut window_split = vec![0usize; l + 1];
+        for (t, &i) in order[..take].iter().enumerate() {
+            let conf = cache.sample_conf(i);
+            let ent = cache.sample_ent(i);
+            let o = policy.decide(&SampleView { conf: &conf, ent: &ent }, &cm);
+            hits += (cache.pred_at(o.infer_layer - 1, i) == cache.labels[i]) as usize;
+            cost += o.cost;
+            if t >= take.saturating_sub(500) {
+                window_split[o.split] += 1; // last-500 split histogram
+            }
+        }
+        let modal = window_split
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &c)| c)
+            .map(|(i, _)| i)
+            .unwrap();
+        println!(
+            "phase {} [{dataset:>7}]: oracle split L{oracle} (E[r] {:+.3}), \
+             policy settled on L{modal}; acc {:.1}%, mean cost {:.2} lambda",
+            phase + 1,
+            means[oracle - 1],
+            100.0 * hits as f64 / take as f64,
+            cost / take as f64,
+        );
+    }
+    println!(
+        "\nThe bandit carries its state across the shift and re-converges on the\n\
+         new domain's optimal split within a few hundred samples (SplitEE-S's\n\
+         side observations are what make this fast — paper section 5.5)."
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Edge/cloud co-inference study: how the network generation (WiFi/5G/4G/3G)
+//! moves the optimal split layer, the offload rate, latency and edge energy —
+//! the deployment question figure 1 of the paper poses.
+//!
+//! Also exercises the failure-injection path: a lossy 3G link with outages
+//! forces on-device fallbacks (the LEE/DEE "service outage" scenario).
+//!
+//! ```text
+//! cargo run --release --example edge_cloud_sim -- [--requests 300]
+//! ```
+
+use anyhow::Result;
+use splitee::config::{Manifest, Settings};
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::data::Dataset;
+use splitee::model::MultiExitModel;
+use splitee::policy::SplitEePolicy;
+use splitee::runtime::Runtime;
+use splitee::sim::{CoInferencePipeline, LinkSim};
+use splitee::util::args::Args;
+use splitee::util::stats::Summary;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    splitee::util::logging::init(if args.has("quiet") { 0 } else { 1 });
+    let settings = Settings::from_args(&args).map_err(anyhow::Error::msg)?;
+    let n = args.get_num("requests", 300usize).map_err(anyhow::Error::msg)?;
+
+    let manifest = Manifest::load(&settings.artifacts_dir)?;
+    let runtime = Runtime::cpu()?;
+    let task = manifest.source_task("imdb")?.clone();
+    let model = MultiExitModel::load(&manifest, &runtime, &task.name, "elasticbert")?;
+    let data = Dataset::load(
+        &manifest.root.join(&manifest.dataset("imdb")?.file),
+        "imdb",
+    )?;
+    let n = n.min(data.len());
+
+    println!("network   o(L)  best-split  offload%  outage  acc%   p50 ms   p99 ms   energy/req");
+    println!("{}", "-".repeat(92));
+    for profile in NetworkProfile::all() {
+        let cm = CostModel::paper(profile.offload_lambda, settings.mu, model.n_layers());
+        let mut link = LinkSim::new(profile, settings.seed);
+        if matches!(profile.kind, splitee::cost::network::NetworkKind::ThreeG) {
+            // failure injection on the worst link
+            link.outage_rate = 0.05;
+        }
+        let mut pipeline = CoInferencePipeline::new(&model, link, cm, task.alpha);
+        let mut policy = SplitEePolicy::new(model.n_layers(), task.alpha, settings.beta);
+        let mut latencies = Vec::with_capacity(n);
+        let mut offloads = 0usize;
+        let mut outages = 0usize;
+        let mut correct = 0usize;
+        let mut energy = 0.0;
+        for i in 0..n {
+            let split = policy.choose_split();
+            let trace = pipeline.serve(&data.sample_tokens(i), split, false)?;
+            policy.record(split, trace.reward);
+            latencies.push(trace.latency_ms);
+            offloads += trace.offloaded as usize;
+            outages += trace.outage_fallback as usize;
+            correct += (trace.prediction as i32 == data.labels[i]) as usize;
+            energy += trace.energy;
+        }
+        let s = Summary::of(&latencies);
+        let best = policy.ucb().best_empirical() + 1;
+        println!(
+            "{:<8} {:>4.1}  L{:<9} {:>7.1}%  {:>6} {:>5.1}  {:>7.2}  {:>7.2}  {:>10.2}",
+            format!("{:?}", profile.kind),
+            profile.offload_lambda,
+            best,
+            100.0 * offloads as f64 / n as f64,
+            outages,
+            100.0 * correct as f64 / n as f64,
+            s.p50,
+            s.p99,
+            energy / n as f64,
+        );
+    }
+    println!(
+        "\nReading: cheap links (WiFi) offload aggressively from shallow splits;\n\
+         expensive links (3G, o = 5 lambda) push the bandit to deeper splits and\n\
+         more on-device exits — the mechanism behind paper figures 3-6.\n\
+         Outage fallbacks complete on-device at full depth (service-outage path)."
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Quickstart: load the AOT artifacts, run one sample through the multi-exit
+//! model layer by layer, and let SplitEE decide split + exit-or-offload.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use splitee::config::Manifest;
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::data::Dataset;
+use splitee::model::MultiExitModel;
+use splitee::policy::{Policy, SampleView, SplitEePolicy};
+use splitee::runtime::Runtime;
+use splitee::sim::{CoInferencePipeline, LinkSim};
+
+fn main() -> Result<()> {
+    splitee::util::logging::init(1);
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let runtime = Runtime::cpu()?;
+    println!("PJRT platform: {}", runtime.client().platform_name());
+
+    // 1. Load the fine-tuned multi-exit model for the IMDb task (trained on
+    //    the SST-2-like source domain, evaluated cross-domain — the paper's
+    //    unsupervised setting).
+    let task = manifest.source_task("imdb")?.clone();
+    let model = MultiExitModel::load(&manifest, &runtime, &task.name, "elasticbert")?;
+    println!(
+        "model: {} layers, {} classes, exit threshold alpha = {}",
+        model.n_layers(),
+        model.n_classes(),
+        task.alpha
+    );
+
+    // 2. Take a handful of real evaluation samples.
+    let data = Dataset::load(
+        &manifest.root.join(&manifest.dataset("imdb")?.file),
+        "imdb",
+    )?;
+
+    // 3. Run the paper's Algorithm 1 end to end over a co-inference pipeline
+    //    (edge compute -> 3G uplink -> cloud) for 40 samples.
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::three_g(), 7);
+    let mut pipeline = CoInferencePipeline::new(&model, link, cm, task.alpha);
+    let mut policy = SplitEePolicy::new(model.n_layers(), task.alpha, 1.0);
+
+    let mut correct = 0usize;
+    let mut total_cost = 0.0;
+    let n = 40.min(data.len());
+    for i in 0..n {
+        let tokens = data.sample_tokens(i);
+        let split = policy.choose_split();
+        let trace = pipeline.serve(&tokens, split, false)?;
+        policy.record(split, trace.reward);
+        if trace.prediction as i32 == data.labels[i] {
+            correct += 1;
+        }
+        total_cost += trace.cost_lambda;
+        if i < 8 {
+            println!(
+                "sample {i:2}: split L{split:<2} -> {} at L{:<2} conf {:.3} \
+                 (cost {:.2} lambda, {:.2} ms simulated)",
+                if trace.offloaded { "OFFLOAD, infer" } else { "exit" },
+                trace.infer_layer,
+                trace.confidence,
+                trace.cost_lambda,
+                trace.latency_ms,
+            );
+        }
+    }
+    println!(
+        "\n{n} samples: accuracy {:.1}%, mean cost {:.2} lambda \
+         (final-exit baseline cost = {:.1})",
+        100.0 * correct as f64 / n as f64,
+        total_cost / n as f64,
+        cm.final_exit_cost()
+    );
+
+    // 4. The same decision problem, replayed on cached profiles (how the
+    //    experiment harness evaluates 20 repetitions in seconds).
+    let mut eval_policy = SplitEePolicy::new(model.n_layers(), task.alpha, 1.0);
+    let outs = model.forward_all_exits(&data.range_tokens(0, n))?;
+    let mut exits = vec![0usize; model.n_layers() + 1];
+    for i in 0..n {
+        let conf: Vec<f32> = outs.iter().map(|o| o.conf[i]).collect();
+        let ent: Vec<f32> = outs.iter().map(|o| o.ent[i]).collect();
+        let o = eval_policy.decide(&SampleView { conf: &conf, ent: &ent }, &cm);
+        exits[o.infer_layer] += 1;
+    }
+    println!("exit-layer histogram over the replay: {exits:?}");
+    println!("quickstart OK");
+    Ok(())
+}

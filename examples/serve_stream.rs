@@ -1,0 +1,141 @@
+//! E2E serving driver (deliverable (e)): load the trained multi-exit model
+//! and serve a stream of batched requests through the full coordinator
+//! (router -> dynamic batcher -> SplitEE service -> edge/link/cloud sim),
+//! reporting latency percentiles and throughput.
+//!
+//! ```text
+//! cargo run --release --example serve_stream -- \
+//!     [--dataset imdb] [--requests 500] [--network 4g] [--rate 200] \
+//!     [--policy splitee|splitee-s|final] [--tcp 127.0.0.1:7878]
+//! ```
+//!
+//! With `--tcp`, a TCP front-end is exposed instead of the internal replay
+//! workload; send comma-separated token lines (see rust/src/server/).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+use splitee::config::{Manifest, Settings};
+use splitee::coordinator::service::PolicyKind;
+use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service};
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::data::{Dataset, SampleStream};
+use splitee::model::MultiExitModel;
+use splitee::runtime::Runtime;
+use splitee::sim::LinkSim;
+use splitee::util::args::Args;
+use splitee::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    splitee::util::logging::init(if args.has("quiet") { 0 } else { 1 });
+    let settings = Settings::from_args(&args).map_err(anyhow::Error::msg)?;
+
+    let manifest = Manifest::load(&settings.artifacts_dir)?;
+    let runtime = Runtime::cpu()?;
+    let dataset_name = args.get_or("dataset", "imdb").to_string();
+    let info = manifest.dataset(&dataset_name)?.clone();
+    let task = manifest.source_task(&dataset_name)?.clone();
+    let n_requests = args.get_num("requests", 500usize).map_err(anyhow::Error::msg)?;
+    // mean request arrival rate (requests/s) for the open-loop workload
+    let rate = args.get_num("rate", 200.0f64).map_err(anyhow::Error::msg)?;
+    let network = NetworkProfile::by_name(args.get_or("network", "4g"))
+        .context("--network must be wifi|5g|4g|3g")?;
+    let policy = match args.get_or("policy", "splitee") {
+        "splitee" => PolicyKind::SplitEe,
+        "splitee-s" => PolicyKind::SplitEeS,
+        "final" => PolicyKind::FinalExit,
+        other => anyhow::bail!("unknown policy {other:?}"),
+    };
+
+    let model = Arc::new(MultiExitModel::load(
+        &manifest, &runtime, &task.name, "elasticbert",
+    )?);
+    let dataset = Dataset::load(&manifest.root.join(&info.file), &dataset_name)?;
+    let cm = CostModel::paper(network.offload_lambda, settings.mu, model.n_layers());
+    let link = LinkSim::new(network, settings.seed);
+    let config = splitee::coordinator::ServiceConfig {
+        policy,
+        alpha: task.alpha,
+        beta: settings.beta,
+        batcher: BatcherConfig {
+            batch_sizes: manifest.batch_sizes.clone(),
+            max_wait: Duration::from_millis(5),
+        },
+    };
+
+    let router = Router::new(RouterConfig { max_inflight: 256 });
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+
+    if let Some(addr) = args.get("tcp") {
+        // TCP front-end mode: compute thread + socket loop.
+        let listener = std::net::TcpListener::bind(addr).context("bind")?;
+        println!("listening on {addr}; protocol: comma-separated token ids per line");
+        let compute = {
+            let router = Arc::clone(&router);
+            let bc = config.batcher.clone();
+            std::thread::spawn(move || service.run(router, bc))
+        };
+        let served =
+            splitee::server::serve_tcp(listener, Arc::clone(&router), model.seq_len(), Some(n_requests))?;
+        router.shutdown();
+        compute.join().expect("compute thread").ok();
+        println!("served {served} TCP requests");
+        return Ok(());
+    }
+
+    // Open-loop replay workload: Poisson arrivals at --rate requests/s.
+    let producer = {
+        let router = Arc::clone(&router);
+        let mut rng = Rng::new(settings.seed);
+        let idx: Vec<usize> =
+            SampleStream::shuffled(&dataset, &mut rng).take(n_requests).collect();
+        let tokens: Vec<_> = idx.iter().map(|&i| dataset.sample_tokens(i)).collect();
+        let labels: Vec<i32> = idx.iter().map(|&i| dataset.labels[i]).collect();
+        std::thread::spawn(move || -> (usize, usize) {
+            let mut arrival_rng = Rng::new(0xA881);
+            let (tx, rx) = std::sync::mpsc::channel();
+            for t in tokens {
+                std::thread::sleep(Duration::from_secs_f64(
+                    arrival_rng.exponential(rate).min(0.05),
+                ));
+                if router.submit(t, tx.clone()).is_none() {
+                    break;
+                }
+            }
+            drop(tx);
+            let mut got = 0usize;
+            let mut correct = 0usize;
+            while let Ok(resp) = rx.recv() {
+                // responses arrive in service order; match by id index
+                if resp.prediction as i32 == labels[resp.id as usize] {
+                    correct += 1;
+                }
+                got += 1;
+            }
+            router.shutdown();
+            (got, correct)
+        })
+    };
+
+    let bc = config.batcher.clone();
+    service.run(Arc::clone(&router), bc)?;
+    let (got, correct) = producer.join().expect("producer");
+
+    println!(
+        "\n=== serve_stream report: {dataset_name}, {:?}, network {} ===",
+        args.get_or("policy", "splitee"),
+        args.get_or("network", "4g")
+    );
+    println!("{}", service.metrics.report());
+    println!(
+        "answered {got}/{n_requests} requests, accuracy {:.1}%",
+        100.0 * correct as f64 / got.max(1) as f64
+    );
+    if let Some((best, _)) = service.bandit_summary() {
+        println!("bandit converged toward split layer {best}");
+    }
+    anyhow::ensure!(got == n_requests, "lost {} requests", n_requests - got);
+    Ok(())
+}

@@ -1,0 +1,301 @@
+"""AOT build pipeline: datagen -> train -> lower HLO text -> export artifacts.
+
+Run once via ``make artifacts``; python never appears on the request path.
+Output tree (all consumed by the rust side)::
+
+    artifacts/
+      manifest.json              everything the rust loader needs to know
+      hlo/
+        embed_b{B}.hlo.txt       tokens + embed params -> h0
+        block_b{B}.hlo.txt       h + block params -> h        (Pallas kernels)
+        head_c{C}_b{B}.hlo.txt   h + head params -> probs/conf/ent  (Pallas)
+        prefix_full_c{C}_b{BC}.hlo.txt
+                                 tokens + all params -> per-layer probs/conf/ent
+                                 (jnp reference path; cache-builder throughput)
+      weights/{task}_{style}.bin trained parameters (SPLW format)
+      data/{dataset}.bin         token sequences + labels (SPLD format)
+      fixtures/{task}.json       golden per-layer outputs for integration tests
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5 emits
+64-bit instruction ids that the image's xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+
+All graphs except ``prefix_full`` lower the interpret-mode Pallas kernels;
+``prefix_full`` lowers the pure-jnp reference (pytest proves them allclose,
+and the interpret-mode grid loop would serialize the batch — EXPERIMENTS.md
+section Perf quantifies this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, export
+from .common import (BLOCK_PARAM_ORDER, EMBED_PARAM_ORDER, HEAD_PARAM_ORDER,
+                     DEFAULT_CONFIG, ModelConfig, init_model_params)
+from .model import (block_fn, embed_fn, exit_head_fn, forward_all_exits,
+                    make_prefix_full_fn)
+from .train import (calibrate_alpha, calibrate_tau, eval_all_exits,
+                    split_train_val, train_deebert, train_elasticbert)
+
+BATCH_SIZES = (1, 8)
+CACHE_BATCH = 32
+STYLES = ("elasticbert", "deebert")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_graphs(cfg: ModelConfig, out_hlo: Path, log=print) -> dict:
+    """Lower every serving graph; returns the manifest 'hlo' section."""
+    out_hlo.mkdir(parents=True, exist_ok=True)
+    f32 = jnp.float32
+    d, t, v, f = cfg.d_model, cfg.seq_len, cfg.vocab, cfg.d_ff
+    hlo_index: dict = {"embed": {}, "block": {}, "head_c2": {}, "head_c3": {},
+                       "prefix_full_c2": {}, "prefix_full_c3": {}}
+
+    def dump(name: str, text: str) -> str:
+        rel = f"hlo/{name}.hlo.txt"
+        (out_hlo / f"{name}.hlo.txt").write_text(text)
+        log(f"    wrote {rel} ({len(text) / 1e3:.0f} kB)")
+        return rel
+
+    embed_shapes = [
+        jax.ShapeDtypeStruct((v, d), f32),  # tok
+        jax.ShapeDtypeStruct((t, d), f32),  # pos
+        jax.ShapeDtypeStruct((d,), f32),    # ln_g
+        jax.ShapeDtypeStruct((d,), f32),    # ln_b
+    ]
+    block_shapes = {
+        "ln1_g": (d,), "ln1_b": (d,),
+        "wq": (d, d), "bq": (d,), "wk": (d, d), "bk": (d,),
+        "wv": (d, d), "bv": (d,), "wo": (d, d), "bo": (d,),
+        "ln2_g": (d,), "ln2_b": (d,),
+        "w1": (d, f), "b1": (f,), "w2": (f, d), "b2": (d,),
+    }
+
+    for b in BATCH_SIZES:
+        tok_spec = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        h_spec = jax.ShapeDtypeStruct((b, t, d), f32)
+
+        lowered = jax.jit(embed_fn).lower(tok_spec, *embed_shapes)
+        hlo_index["embed"][str(b)] = dump(f"embed_b{b}", to_hlo_text(lowered))
+
+        blk_arg_specs = [jax.ShapeDtypeStruct(block_shapes[k], f32)
+                         for k in BLOCK_PARAM_ORDER]
+        fn = functools.partial(block_fn, n_heads=cfg.n_heads, use_pallas=True)
+        lowered = jax.jit(fn).lower(h_spec, *blk_arg_specs)
+        hlo_index["block"][str(b)] = dump(f"block_b{b}", to_hlo_text(lowered))
+
+        for c in (2, 3):
+            head_arg_specs = [
+                jax.ShapeDtypeStruct((d,), f32),   # ln_g
+                jax.ShapeDtypeStruct((d,), f32),   # ln_b
+                jax.ShapeDtypeStruct((d, c), f32), # wc
+                jax.ShapeDtypeStruct((c,), f32),   # bc
+            ]
+            fn = functools.partial(exit_head_fn, use_pallas=True)
+            lowered = jax.jit(fn).lower(h_spec, *head_arg_specs)
+            hlo_index[f"head_c{c}"][str(b)] = dump(
+                f"head_c{c}_b{b}", to_hlo_text(lowered))
+
+    # prefix_full: weights-as-args full forward, reference path, cache batch.
+    for c in (2, 3):
+
+        def prefix(tokens, *flat):
+            params = unflatten_args(list(flat), cfg, c)
+            return forward_all_exits(params, tokens, cfg, use_pallas=False)
+
+        arg_specs = flat_arg_specs(cfg, c)
+        tok_spec = jax.ShapeDtypeStruct((CACHE_BATCH, t), jnp.int32)
+        lowered = jax.jit(prefix).lower(tok_spec, *arg_specs)
+        hlo_index[f"prefix_full_c{c}"][str(CACHE_BATCH)] = dump(
+            f"prefix_full_c{c}_b{CACHE_BATCH}", to_hlo_text(lowered))
+    return hlo_index
+
+
+def flat_arg_specs(cfg: ModelConfig, n_classes: int):
+    """ShapeDtypeStructs for the canonical flat parameter order:
+    embed params, then block0..L-1 params, then head0..L-1 params."""
+    f32 = jnp.float32
+    d, t, v, f = cfg.d_model, cfg.seq_len, cfg.vocab, cfg.d_ff
+    shapes = [(v, d), (t, d), (d,), (d,)]
+    block_shape = {
+        "ln1_g": (d,), "ln1_b": (d,),
+        "wq": (d, d), "bq": (d,), "wk": (d, d), "bk": (d,),
+        "wv": (d, d), "bv": (d,), "wo": (d, d), "bo": (d,),
+        "ln2_g": (d,), "ln2_b": (d,),
+        "w1": (d, f), "b1": (f,), "w2": (f, d), "b2": (d,),
+    }
+    for _ in range(cfg.n_layers):
+        shapes += [block_shape[k] for k in BLOCK_PARAM_ORDER]
+    head_shape = {"ln_g": (d,), "ln_b": (d,), "wc": (d, n_classes), "bc": (n_classes,)}
+    for _ in range(cfg.n_layers):
+        shapes += [head_shape[k] for k in HEAD_PARAM_ORDER]
+    return [jax.ShapeDtypeStruct(s, f32) for s in shapes]
+
+
+def unflatten_args(flat: list, cfg: ModelConfig, n_classes: int) -> dict:
+    """Inverse of the canonical flat order used by ``flat_arg_specs``."""
+    i = 0
+
+    def take(n):
+        nonlocal i
+        chunk = flat[i:i + n]
+        i += n
+        return chunk
+
+    embed = dict(zip(EMBED_PARAM_ORDER, take(len(EMBED_PARAM_ORDER))))
+    blocks = [dict(zip(BLOCK_PARAM_ORDER, take(len(BLOCK_PARAM_ORDER))))
+              for _ in range(cfg.n_layers)]
+    heads = [dict(zip(HEAD_PARAM_ORDER, take(len(HEAD_PARAM_ORDER))))
+             for _ in range(cfg.n_layers)]
+    assert i == len(flat)
+    return {"embed": embed, "blocks": blocks, "heads": heads}
+
+
+def flatten_args(params: dict) -> list:
+    """Model params -> canonical flat list (same order as flat_arg_specs)."""
+    flat = [params["embed"][k] for k in EMBED_PARAM_ORDER]
+    for blk in params["blocks"]:
+        flat += [blk[k] for k in BLOCK_PARAM_ORDER]
+    for head in params["heads"]:
+        flat += [head[k] for k in HEAD_PARAM_ORDER]
+    return flat
+
+
+def build(out_dir: Path, cfg: ModelConfig, quick: bool, log=print) -> None:
+    t_start = time.time()
+    out_dir.mkdir(parents=True, exist_ok=True)
+    # a rebuild invalidates any rust-side confidence caches
+    import shutil
+    shutil.rmtree(out_dir / "cache", ignore_errors=True)
+    for sub in ("hlo", "weights", "data", "fixtures"):
+        (out_dir / sub).mkdir(exist_ok=True)
+
+    # ---- 1. datasets -----------------------------------------------------
+    log("[1/4] generating datasets")
+    data = {}
+    for name, spec in datagen.SPECS.items():
+        n_cap = 2000 if quick else spec.n_samples
+        spec_eff = spec if n_cap == spec.n_samples else \
+            datagen.DatasetSpec(**{**spec.__dict__, "n_samples": n_cap})
+        tokens, labels, diff = datagen.generate(spec_eff, cfg.seq_len, cfg.vocab)
+        data[name] = (tokens, labels, diff, spec_eff)
+        export.write_dataset(out_dir / "data" / f"{name}.bin",
+                             tokens, labels, diff, spec.n_classes)
+        log(f"    {name}: {len(tokens)} samples, C={spec.n_classes}")
+
+    # ---- 2. training ------------------------------------------------------
+    log("[2/4] training multi-exit models")
+    steps = {"eb": 60, "db1": 50, "db2": 40} if quick else \
+            {"eb": 550, "db1": 300, "db2": 150}
+    tasks = {}
+    fixtures = {}
+    for task in ("sst2", "rte", "mnli", "mrpc"):
+        tokens, labels, diff, spec = data[task]
+        tr_t, tr_l, va_t, va_l = split_train_val(tokens, labels, spec.seed)
+        c = spec.n_classes
+        task_info = {"classes": c, "weights": {}, "styles": list(STYLES)}
+        for style in STYLES:
+            log(f"  training {task} [{style}]")
+            if style == "elasticbert":
+                params = train_elasticbert(tr_t, tr_l, cfg, c, spec.seed,
+                                           steps=steps["eb"], log=log)
+            else:
+                params = train_deebert(tr_t, tr_l, cfg, c, spec.seed,
+                                       steps1=steps["db1"], steps2=steps["db2"],
+                                       log=log)
+            acc, conf, ent, pred = eval_all_exits(params, va_t, va_l, cfg)
+            if style == "elasticbert":
+                task_info["alpha"] = calibrate_alpha(conf, pred, va_l)
+                task_info["val_acc_per_exit"] = [round(float(a), 4) for a in acc]
+            else:
+                task_info["tau"] = calibrate_tau(ent, pred, va_l, c)
+                task_info["deebert_val_acc_per_exit"] = [round(float(a), 4) for a in acc]
+            rel = f"weights/{task}_{style}.bin"
+            export.write_weights(out_dir / rel, export.flatten_params(params))
+            task_info["weights"][style] = rel
+            log(f"    {task} [{style}] final-exit val acc {acc[-1]:.4f}")
+
+            if style == "elasticbert":
+                # golden fixture: 8 val samples, per-layer outputs
+                fx_t, fx_l = va_t[:8], va_l[:8]
+                probs, cf, en = forward_all_exits(params, jnp.asarray(fx_t), cfg)
+                fixtures[task] = export.fixture_entry(
+                    fx_t, fx_l, np.asarray(probs), np.asarray(cf), np.asarray(en))
+        tasks[task] = task_info
+
+    for task, fx in fixtures.items():
+        export.write_json(out_dir / "fixtures" / f"{task}.json", fx)
+
+    # ---- 3. HLO lowering ---------------------------------------------------
+    log("[3/4] lowering graphs to HLO text")
+    hlo_index = lower_graphs(cfg, out_dir / "hlo", log=log)
+
+    # ---- 4. manifest -------------------------------------------------------
+    log("[4/4] writing manifest")
+    datasets = {}
+    for name, (tokens, labels, diff, spec) in data.items():
+        entry = {
+            "file": f"data/{name}.bin",
+            "classes": spec.n_classes,
+            "samples": len(tokens),
+            "role": spec.role,
+            "paper_name": spec.paper_name,
+            "paper_samples": datagen.SPECS[name].n_samples,
+            "family": spec.family,
+        }
+        if spec.role == "eval":
+            entry["source"] = datagen.EVAL_TO_SOURCE[name]
+        datasets[name] = entry
+
+    manifest = {
+        "format_version": 1,
+        "model": {
+            "vocab": cfg.vocab, "seq_len": cfg.seq_len, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "n_layers": cfg.n_layers,
+        },
+        "batch_sizes": list(BATCH_SIZES),
+        "cache_batch": CACHE_BATCH,
+        "arg_order": {
+            "embed": EMBED_PARAM_ORDER,
+            "block": BLOCK_PARAM_ORDER,
+            "head": HEAD_PARAM_ORDER,
+            "prefix_full": "tokens, embed params, block0..L-1 params, head0..L-1 params",
+        },
+        "tasks": tasks,
+        "datasets": datasets,
+        "hlo": hlo_index,
+        "quick": quick,
+    }
+    export.write_json(out_dir / "manifest.json", manifest)
+    log(f"artifacts complete in {time.time() - t_start:.0f}s -> {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny datasets + few training steps (CI smoke)")
+    args = ap.parse_args()
+    build(Path(args.out), DEFAULT_CONFIG, args.quick)
+
+
+if __name__ == "__main__":
+    main()

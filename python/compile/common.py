@@ -1,0 +1,127 @@
+"""Shared model configuration and parameter utilities.
+
+The multi-exit encoder reproduced here stands in for ElasticBERT-base
+(see DESIGN.md section 2): a 12-layer pre-LN transformer encoder with an exit
+head attached after every layer.  All shapes are fixed at AOT time so the
+lowered HLO has static signatures the rust runtime can rely on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of the multi-exit encoder."""
+
+    vocab: int = 1024
+    seq_len: int = 32
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 128
+    n_layers: int = 12
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+# Keys of one transformer block's parameters, in the canonical argument order
+# used by the AOT-lowered `block` graph.  The rust runtime feeds literals in
+# exactly this order (exported in artifacts/manifest.json).
+BLOCK_PARAM_ORDER: List[str] = [
+    "ln1_g", "ln1_b",
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2_g", "ln2_b",
+    "w1", "b1", "w2", "b2",
+]
+
+# Exit-head parameter order for the `exit_head` graph.
+HEAD_PARAM_ORDER: List[str] = ["ln_g", "ln_b", "wc", "bc"]
+
+# Embedding parameter order for the `embed` graph.
+EMBED_PARAM_ORDER: List[str] = ["tok", "pos", "ln_g", "ln_b"]
+
+
+def init_block_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Initialise one transformer block (pre-LN attention + FFN)."""
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    s_attn = 1.0 / np.sqrt(d)
+    s_ff = 1.0 / np.sqrt(d)
+    s_ff2 = 1.0 / np.sqrt(f)
+    return {
+        "ln1_g": jnp.ones((d,), jnp.float32),
+        "ln1_b": jnp.zeros((d,), jnp.float32),
+        "wq": jax.random.normal(ks[0], (d, d), jnp.float32) * s_attn,
+        "bq": jnp.zeros((d,), jnp.float32),
+        "wk": jax.random.normal(ks[1], (d, d), jnp.float32) * s_attn,
+        "bk": jnp.zeros((d,), jnp.float32),
+        "wv": jax.random.normal(ks[2], (d, d), jnp.float32) * s_attn,
+        "bv": jnp.zeros((d,), jnp.float32),
+        "wo": jax.random.normal(ks[3], (d, d), jnp.float32) * s_attn,
+        "bo": jnp.zeros((d,), jnp.float32),
+        "ln2_g": jnp.ones((d,), jnp.float32),
+        "ln2_b": jnp.zeros((d,), jnp.float32),
+        "w1": jax.random.normal(ks[4], (d, f), jnp.float32) * s_ff,
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": jax.random.normal(ks[5], (f, d), jnp.float32) * s_ff2,
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_head_params(key: jax.Array, cfg: ModelConfig, n_classes: int) -> Dict[str, jax.Array]:
+    """Initialise one exit head ([CLS] LayerNorm + linear classifier)."""
+    d = cfg.d_model
+    return {
+        "ln_g": jnp.ones((d,), jnp.float32),
+        "ln_b": jnp.zeros((d,), jnp.float32),
+        "wc": jax.random.normal(key, (d, n_classes), jnp.float32) / np.sqrt(d),
+        "bc": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def init_embed_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Initialise token + positional embeddings and the embedding LayerNorm."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "pos": jax.random.normal(k2, (cfg.seq_len, cfg.d_model), jnp.float32) * 0.02,
+        "ln_g": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln_b": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+
+
+def init_model_params(seed: int, cfg: ModelConfig, n_classes: int) -> Dict:
+    """Full multi-exit model: embeddings, L blocks, L exit heads."""
+    key = jax.random.PRNGKey(seed)
+    k_embed, k_blocks, k_heads = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    head_keys = jax.random.split(k_heads, cfg.n_layers)
+    return {
+        "embed": init_embed_params(k_embed, cfg),
+        "blocks": [init_block_params(k, cfg) for k in block_keys],
+        "heads": [init_head_params(k, cfg, n_classes) for k in head_keys],
+    }
+
+
+def block_param_list(p: Dict[str, jax.Array]) -> List[jax.Array]:
+    """Block params in canonical argument order (see BLOCK_PARAM_ORDER)."""
+    return [p[k] for k in BLOCK_PARAM_ORDER]
+
+
+def head_param_list(p: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [p[k] for k in HEAD_PARAM_ORDER]
+
+
+def embed_param_list(p: Dict[str, jax.Array]) -> List[jax.Array]:
+    return [p[k] for k in EMBED_PARAM_ORDER]

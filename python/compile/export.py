@@ -1,0 +1,109 @@
+"""Binary + JSON export formats shared with the rust side.
+
+All binary formats are little-endian.  The rust readers live in
+``rust/src/model/weights.rs`` and ``rust/src/data/format.rs``; keep the magic
+numbers and layouts in sync.
+
+weights.bin::
+
+    u32 magic = 0x53504C57 ("SPLW")      u32 version = 1
+    u32 n_tensors
+    per tensor:
+        u16 name_len, name bytes (utf-8)
+        u8 dtype (0 = f32, 1 = i32)
+        u8 ndim, u32 dims[ndim]
+        raw data (numel * 4 bytes)
+
+data.bin::
+
+    u32 magic = 0x53504C44 ("SPLD")      u32 version = 1
+    u32 n_samples, u32 seq_len, u32 n_classes
+    i32 tokens[n * seq_len]
+    i32 labels[n]
+    i32 difficulty[n]                    (mixture config index, see datagen)
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+WEIGHTS_MAGIC = 0x53504C57
+DATA_MAGIC = 0x53504C44
+VERSION = 1
+
+DTYPE_F32 = 0
+DTYPE_I32 = 1
+
+
+def write_weights(path: Path, tensors: List) -> None:
+    """Write named tensors.  ``tensors`` is a list of (name, np.ndarray)."""
+    with open(path, "wb") as f:
+        f.write(struct.pack("<III", WEIGHTS_MAGIC, VERSION, len(tensors)))
+        for name, arr in tensors:
+            arr = np.asarray(arr)
+            if arr.dtype == np.float32:
+                dtype = DTYPE_F32
+            elif arr.dtype == np.int32:
+                dtype = DTYPE_I32
+            else:
+                raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", dtype, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def flatten_params(params: Dict) -> List:
+    """Flatten a model param dict into the canonical (name, array) list.
+
+    Naming scheme (mirrored by the rust loader):
+      ``embed.<key>``, ``block<i>.<key>``, ``head<i>.<key>``.
+    """
+    from .common import BLOCK_PARAM_ORDER, EMBED_PARAM_ORDER, HEAD_PARAM_ORDER
+
+    out = []
+    for k in EMBED_PARAM_ORDER:
+        out.append((f"embed.{k}", np.asarray(params["embed"][k], np.float32)))
+    for i, blk in enumerate(params["blocks"]):
+        for k in BLOCK_PARAM_ORDER:
+            out.append((f"block{i}.{k}", np.asarray(blk[k], np.float32)))
+    for i, head in enumerate(params["heads"]):
+        for k in HEAD_PARAM_ORDER:
+            out.append((f"head{i}.{k}", np.asarray(head[k], np.float32)))
+    return out
+
+
+def write_dataset(path: Path, tokens: np.ndarray, labels: np.ndarray,
+                  difficulty: np.ndarray, n_classes: int) -> None:
+    n, t = tokens.shape
+    assert labels.shape == (n,) and difficulty.shape == (n,)
+    with open(path, "wb") as f:
+        f.write(struct.pack("<IIIII", DATA_MAGIC, VERSION, n, t, n_classes))
+        f.write(np.ascontiguousarray(tokens, np.int32).tobytes())
+        f.write(np.ascontiguousarray(labels, np.int32).tobytes())
+        f.write(np.ascontiguousarray(difficulty, np.int32).tobytes())
+
+
+def write_json(path: Path, obj) -> None:
+    path.write_text(json.dumps(obj, indent=1, sort_keys=True))
+
+
+def fixture_entry(tokens: np.ndarray, labels: np.ndarray, probs: np.ndarray,
+                  conf: np.ndarray, ent: np.ndarray) -> Dict:
+    """Golden values for the rust integration test: a handful of samples with
+    per-layer outputs computed by the python reference model."""
+    return {
+        "tokens": tokens.astype(int).tolist(),
+        "labels": labels.astype(int).tolist(),
+        "probs": np.round(probs.astype(float), 6).tolist(),   # [L][B][C]
+        "conf": np.round(conf.astype(float), 6).tolist(),     # [L][B]
+        "ent": np.round(ent.astype(float), 6).tolist(),       # [L][B]
+    }

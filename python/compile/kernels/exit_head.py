@@ -1,0 +1,69 @@
+"""Pallas kernel: fused exit head ([CLS] pool -> LN -> classifier -> softmax).
+
+Emits three outputs in one kernel so the rust coordinator gets everything a
+policy might need from a single PJRT execute:
+
+  * probs [B, C]  — class probabilities,
+  * conf  [B]     — max-probability confidence (the paper's C_i, used by
+                    SplitEE / SplitEE-S / ElasticBERT-style thresholding),
+  * ent   [B]     — prediction entropy in nats (DeeBERT's exit measure).
+
+The whole head is a [D] vector x [D, C] matmul per row — trivially
+VMEM-resident; fusing pooling + LN + softmax avoids three HBM round trips per
+exit evaluation, which matters because SplitEE-S evaluates every exit head
+j <= i_t on the edge device.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _exit_head_kernel(x_ref, ln_g_ref, ln_b_ref, wc_ref, bc_ref,
+                      probs_ref, conf_ref, ent_ref):
+    cls = x_ref[0, 0]  # [D] — [CLS] token of this batch row
+    h = _ln(cls[None, :], ln_g_ref[...], ln_b_ref[...])  # [1, D]
+    logits = jnp.dot(h, wc_ref[...], preferred_element_type=jnp.float32) + bc_ref[...]
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)  # [1, C]
+    probs_ref[0] = probs[0]
+    conf_ref[0] = jnp.max(probs[0])
+    ent_ref[0] = -jnp.sum(probs[0] * jnp.log(probs[0] + 1e-12))
+
+
+def exit_head(
+    x: jnp.ndarray, p: Dict[str, jnp.ndarray], interpret: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exit head over hidden states x: [B, T, D] -> (probs, conf, ent)."""
+    B, T, D = x.shape
+    C = p["wc"].shape[1]
+    row = pl.BlockSpec((1, T, D), lambda b: (b, 0, 0))
+    full = lambda a: pl.BlockSpec(a.shape, lambda b: (0,) * a.ndim)
+    weights = [p[k] for k in ("ln_g", "ln_b", "wc", "bc")]
+    return pl.pallas_call(
+        _exit_head_kernel,
+        grid=(B,),
+        in_specs=[row] + [full(w) for w in weights],
+        out_specs=(
+            pl.BlockSpec((1, C), lambda b: (b, 0)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, C), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+            jax.ShapeDtypeStruct((B,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, *weights)

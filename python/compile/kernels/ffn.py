@@ -1,0 +1,52 @@
+"""Pallas kernel: fused pre-LN feed-forward block (LN -> W1 -> GELU -> W2 -> +x).
+
+Same VMEM strategy as the attention kernel: grid over batch rows, one [T, D]
+activation tile + both FFN weight matrices resident per grid step (W1/W2 are
+64x128 f32 = 32 KiB each).  The two matmuls are MXU-shaped dense `jnp.dot`s;
+GELU runs on the VPU between them without an HBM round trip — that fusion is
+the point of making this one kernel instead of three XLA ops.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _gelu(x: jnp.ndarray) -> jnp.ndarray:
+    # tanh-approximate GELU, matching jax.nn.gelu(approximate=True).
+    c = jnp.sqrt(jnp.float32(2.0 / jnp.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _ffn_kernel(x_ref, ln2_g_ref, ln2_b_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[0]  # [T, D]
+    h = _ln(x, ln2_g_ref[...], ln2_b_ref[...])
+    h = jnp.dot(h, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    h = _gelu(h)
+    o_ref[0] = x + jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+
+
+def ffn(x: jnp.ndarray, p: Dict[str, jnp.ndarray], interpret: bool = True) -> jnp.ndarray:
+    """Fused FFN block over x: [B, T, D].  Residual included."""
+    B, T, D = x.shape
+    row = pl.BlockSpec((1, T, D), lambda b: (b, 0, 0))
+    full = lambda a: pl.BlockSpec(a.shape, lambda b: (0,) * a.ndim)
+    weights = [p[k] for k in ("ln2_g", "ln2_b", "w1", "b1", "w2", "b2")]
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=(B,),
+        in_specs=[row] + [full(w) for w in weights],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+        interpret=interpret,
+    )(x, *weights)

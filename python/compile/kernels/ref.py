@@ -1,0 +1,82 @@
+"""Pure-jnp reference (oracle) implementations of every Pallas kernel.
+
+These are the ground truth the Pallas kernels are validated against in
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/seeds and
+``assert_allclose``).  They are also used by the high-throughput
+``prefix_full`` cache-builder graph, where the interpret-mode Pallas
+lowering's sequential grid loop would serialize the batch (see
+DESIGN.md section 3 / EXPERIMENTS.md section Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def layer_norm(x: jnp.ndarray, g: jnp.ndarray, b: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def attention_ref(x: jnp.ndarray, p: Dict[str, jnp.ndarray], n_heads: int) -> jnp.ndarray:
+    """Pre-LN multi-head self-attention with residual: ``x + MHA(LN1(x))``.
+
+    x: [B, T, D].  Bidirectional (encoder) attention, no mask.
+    """
+    B, T, D = x.shape
+    dh = D // n_heads
+    h = layer_norm(x, p["ln1_g"], p["ln1_b"])
+    q = h @ p["wq"] + p["bq"]
+    k = h @ p["wk"] + p["bk"]
+    v = h @ p["wv"] + p["bv"]
+    # [B, T, H, dh] -> [B, H, T, dh]
+    q = q.reshape(B, T, n_heads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, T, n_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, T, n_heads, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhts,bhsd->bhtd", w, v)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, D)
+    return x + (o @ p["wo"] + p["bo"])
+
+
+def ffn_ref(x: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Pre-LN feed-forward with residual: ``x + W2*gelu(W1*LN2(x))``."""
+    h = layer_norm(x, p["ln2_g"], p["ln2_b"])
+    h = jax.nn.gelu(h @ p["w1"] + p["b1"], approximate=True)
+    return x + (h @ p["w2"] + p["b2"])
+
+
+def block_ref(x: jnp.ndarray, p: Dict[str, jnp.ndarray], n_heads: int) -> jnp.ndarray:
+    """One full transformer block (attention then FFN, both residual)."""
+    return ffn_ref(attention_ref(x, p, n_heads), p)
+
+
+def exit_head_ref(
+    x: jnp.ndarray, p: Dict[str, jnp.ndarray]
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Exit head: [CLS] pooling -> LN -> classifier -> softmax.
+
+    Returns (probs [B, C], confidence=max prob [B], entropy [B] in nats).
+    Confidence is the paper's C_i; entropy is the DeeBERT-style measure.
+    """
+    cls = x[:, 0, :]  # [B, D]
+    h = layer_norm(cls, p["ln_g"], p["ln_b"])
+    logits = h @ p["wc"] + p["bc"]
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    conf = jnp.max(probs, axis=-1)
+    ent = -jnp.sum(probs * jnp.log(probs + 1e-12), axis=-1)
+    return probs, conf, ent
+
+
+def embed_ref(tokens: jnp.ndarray, p: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Token + positional embedding followed by LayerNorm.  tokens: [B, T] i32."""
+    h = p["tok"][tokens] + p["pos"][None, :, :]
+    return layer_norm(h, p["ln_g"], p["ln_b"])

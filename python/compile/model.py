@@ -1,0 +1,104 @@
+"""Layer-2 JAX model: the multi-exit encoder (ElasticBERT-stand-in).
+
+Composes the Layer-1 Pallas kernels (attention, ffn, exit_head) into the
+graphs that ``aot.py`` lowers to HLO text for the rust runtime:
+
+  * ``embed_fn``      tokens [B,T] i32 (+ embed params)  -> h0 [B,T,D]
+  * ``block_fn``      h [B,T,D] (+ block params)         -> h' [B,T,D]
+  * ``exit_head_fn``  h [B,T,D] (+ head params)          -> (probs, conf, ent)
+  * ``prefix_full_fn`` tokens -> per-layer (probs, conf, ent) stacked over L
+                       (weights baked as constants; cache-builder graph)
+
+``use_pallas`` switches between the Pallas kernels (interpret=True — the
+serving-path artifacts) and the pure-jnp reference (the throughput-oriented
+cache builder; numerically identical, verified by pytest).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BLOCK_PARAM_ORDER, HEAD_PARAM_ORDER, ModelConfig
+from .kernels import ref
+from .kernels.attention import attention
+from .kernels.exit_head import exit_head
+from .kernels.ffn import ffn
+
+
+def embed_fn(tokens: jnp.ndarray, tok: jnp.ndarray, pos: jnp.ndarray,
+             ln_g: jnp.ndarray, ln_b: jnp.ndarray) -> jnp.ndarray:
+    """Embedding graph.  A gather is memory-bound, not MXU work, so this stays
+    plain jnp rather than a Pallas kernel (DESIGN.md section 8)."""
+    return ref.embed_ref(tokens, {"tok": tok, "pos": pos, "ln_g": ln_g, "ln_b": ln_b})
+
+
+def block_fn(h: jnp.ndarray, *params: jnp.ndarray, n_heads: int,
+             use_pallas: bool = True) -> jnp.ndarray:
+    """One transformer block, weights as positional args (BLOCK_PARAM_ORDER)."""
+    p = dict(zip(BLOCK_PARAM_ORDER, params))
+    if use_pallas:
+        return ffn(attention(h, p, n_heads), p)
+    return ref.block_ref(h, p, n_heads)
+
+
+def exit_head_fn(h: jnp.ndarray, *params: jnp.ndarray,
+                 use_pallas: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One exit head, weights as positional args (HEAD_PARAM_ORDER)."""
+    p = dict(zip(HEAD_PARAM_ORDER, params))
+    if use_pallas:
+        return exit_head(h, p)
+    return ref.exit_head_ref(h, p)
+
+
+def forward_all_exits(
+    params: Dict, tokens: jnp.ndarray, cfg: ModelConfig, use_pallas: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full forward pass through every layer and every exit head.
+
+    Returns (probs [L,B,C], conf [L,B], ent [L,B]).  This is the graph behind
+    the confidence cache and the python-side training/eval utilities.
+    """
+    h = ref.embed_ref(tokens, params["embed"])
+    probs_l: List[jnp.ndarray] = []
+    conf_l: List[jnp.ndarray] = []
+    ent_l: List[jnp.ndarray] = []
+    for blk, head in zip(params["blocks"], params["heads"]):
+        if use_pallas:
+            h = ffn(attention(h, blk, cfg.n_heads), blk)
+            probs, conf, ent = exit_head(h, head)
+        else:
+            h = ref.block_ref(h, blk, cfg.n_heads)
+            probs, conf, ent = ref.exit_head_ref(h, head)
+        probs_l.append(probs)
+        conf_l.append(conf)
+        ent_l.append(ent)
+    return jnp.stack(probs_l), jnp.stack(conf_l), jnp.stack(ent_l)
+
+
+def forward_logits_all_exits(
+    params: Dict, tokens: jnp.ndarray, cfg: ModelConfig
+) -> jnp.ndarray:
+    """Per-exit *logits* [L, B, C] (reference path) — used by the trainer."""
+    h = ref.embed_ref(tokens, params["embed"])
+    logits_l: List[jnp.ndarray] = []
+    for blk, head in zip(params["blocks"], params["heads"]):
+        h = ref.block_ref(h, blk, cfg.n_heads)
+        cls = ref.layer_norm(h[:, 0, :], head["ln_g"], head["ln_b"])
+        logits_l.append(cls @ head["wc"] + head["bc"])
+    return jnp.stack(logits_l)
+
+
+def make_prefix_full_fn(params: Dict, cfg: ModelConfig, use_pallas: bool = False):
+    """Close over trained weights -> tokens-only graph for the cache builder.
+
+    Baking the weights as HLO constants sidesteps argument-order fragility for
+    the one graph with ~400k parameters, and lets XLA constant-fold layouts.
+    """
+
+    def fn(tokens: jnp.ndarray):
+        return forward_all_exits(params, tokens, cfg, use_pallas=use_pallas)
+
+    return fn

@@ -1,0 +1,236 @@
+"""Build-time training of the multi-exit encoder (paper section 5.1 / figure 2).
+
+Two training styles, both from the paper:
+
+  * ``elasticbert`` — joint training: the sum of cross-entropy losses over
+    *all* exits updates backbone and heads together (ElasticBERT's recipe,
+    which SplitEE uses as its backbone).
+  * ``deebert`` — two-stage: (1) train backbone + final head with the final
+    loss only (plain BERT fine-tuning); (2) freeze the backbone and final
+    head, train the intermediate heads.  DeeBERT's recipe, used for the
+    DeeBERT baseline row of Table 2.
+
+Optimisation is hand-rolled Adam (optax is not in the offline image).  The
+trainer also calibrates, on a held-out validation split of the *source*
+dataset, the exit thresholds the paper treats as given:
+
+  * ``alpha`` — max-probability confidence threshold (SplitEE / ElasticBERT),
+  * ``tau``   — entropy threshold (DeeBERT),
+
+each as the loosest threshold whose threshold-cascade accuracy stays within
+0.5 points of final-exit accuracy on source validation data.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, init_model_params
+from .model import forward_logits_all_exits
+
+VAL_FRACTION = 0.15
+
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam (no optax in the offline image)
+# --------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+def _ce(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy.  logits [B, C], labels [B] i32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def joint_loss(params, tokens, labels, cfg: ModelConfig) -> jnp.ndarray:
+    """ElasticBERT-style: mean CE over all L exits."""
+    logits = forward_logits_all_exits(params, tokens, cfg)  # [L, B, C]
+    return jnp.mean(jax.vmap(_ce, in_axes=(0, None))(logits, labels))
+
+
+def final_loss(params, tokens, labels, cfg: ModelConfig) -> jnp.ndarray:
+    """DeeBERT stage 1: CE of the final exit only."""
+    logits = forward_logits_all_exits(params, tokens, cfg)
+    return _ce(logits[-1], labels)
+
+
+def heads_loss(heads, frozen, tokens, labels, cfg: ModelConfig) -> jnp.ndarray:
+    """DeeBERT stage 2: CE of intermediate exits, backbone + final head frozen."""
+    params = {"embed": frozen["embed"], "blocks": frozen["blocks"],
+              "heads": list(heads) + [frozen["final_head"]]}
+    logits = forward_logits_all_exits(params, tokens, cfg)  # [L, B, C]
+    return jnp.mean(jax.vmap(_ce, in_axes=(0, None))(logits[:-1], labels))
+
+
+# --------------------------------------------------------------------------
+# Training loops
+# --------------------------------------------------------------------------
+
+def _batches(rng: np.random.Generator, n: int, bs: int, steps: int):
+    for _ in range(steps):
+        yield rng.integers(0, n, size=bs)
+
+
+def train_elasticbert(tokens: np.ndarray, labels: np.ndarray, cfg: ModelConfig,
+                      n_classes: int, seed: int, steps: int = 700,
+                      bs: int = 64, lr: float = 1e-3, log=print) -> Dict:
+    """Joint multi-exit training.  Returns trained params."""
+    params = init_model_params(seed, cfg, n_classes)
+    opt = adam_init(params)
+    loss_grad = jax.jit(jax.value_and_grad(
+        functools.partial(joint_loss, cfg=cfg)))
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for step, idx in enumerate(_batches(rng, len(tokens), bs, steps)):
+        loss, grads = loss_grad(params, jnp.asarray(tokens[idx]), jnp.asarray(labels[idx]))
+        params, opt = adam_update(params, grads, opt, lr)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"    [elasticbert] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params
+
+
+def train_deebert(tokens: np.ndarray, labels: np.ndarray, cfg: ModelConfig,
+                  n_classes: int, seed: int, steps1: int = 500, steps2: int = 400,
+                  bs: int = 64, lr: float = 1e-3, log=print) -> Dict:
+    """Two-stage DeeBERT training.  Returns trained params."""
+    params = init_model_params(seed + 7, cfg, n_classes)
+    # ---- stage 1: backbone + final head, final loss only
+    opt = adam_init(params)
+    lg1 = jax.jit(jax.value_and_grad(functools.partial(final_loss, cfg=cfg)))
+    rng = np.random.default_rng(seed + 7)
+    t0 = time.time()
+    for step, idx in enumerate(_batches(rng, len(tokens), bs, steps1)):
+        loss, grads = lg1(params, jnp.asarray(tokens[idx]), jnp.asarray(labels[idx]))
+        params, opt = adam_update(params, grads, opt, lr)
+        if step % 100 == 0 or step == steps1 - 1:
+            log(f"    [deebert s1]  step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    # ---- stage 2: freeze backbone + final head, train intermediate heads
+    frozen = {"embed": params["embed"], "blocks": params["blocks"],
+              "final_head": params["heads"][-1]}
+    heads = params["heads"][:-1]
+    opt2 = adam_init(heads)
+    lg2 = jax.jit(jax.value_and_grad(functools.partial(heads_loss, cfg=cfg)),
+                  static_argnums=())
+
+    def lg2_wrapped(heads_, tok_, lab_):
+        return jax.value_and_grad(heads_loss)(heads_, frozen, tok_, lab_, cfg)
+
+    lg2j = jax.jit(lg2_wrapped)
+    for step, idx in enumerate(_batches(rng, len(tokens), bs, steps2)):
+        loss, grads = lg2j(heads, jnp.asarray(tokens[idx]), jnp.asarray(labels[idx]))
+        heads, opt2 = adam_update(heads, grads, opt2, lr)
+        if step % 100 == 0 or step == steps2 - 1:
+            log(f"    [deebert s2]  step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    params["heads"] = list(heads) + [frozen["final_head"]]
+    return params
+
+
+# --------------------------------------------------------------------------
+# Evaluation + threshold calibration
+# --------------------------------------------------------------------------
+
+def eval_all_exits(params: Dict, tokens: np.ndarray, labels: np.ndarray,
+                   cfg: ModelConfig, bs: int = 256
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Run the model over a dataset.  Returns (acc [L], conf [L,N], ent [L,N],
+    pred [L,N])."""
+    fwd = jax.jit(functools.partial(forward_logits_all_exits, cfg=cfg))
+    confs, ents, preds = [], [], []
+    for i in range(0, len(tokens), bs):
+        logits = fwd(params, jnp.asarray(tokens[i:i + bs]))  # [L, B, C]
+        logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        confs.append(np.asarray(jnp.max(p, axis=-1)))
+        ents.append(np.asarray(-jnp.sum(p * jnp.log(p + 1e-12), axis=-1)))
+        preds.append(np.asarray(jnp.argmax(p, axis=-1)))
+    conf = np.concatenate(confs, axis=1)
+    ent = np.concatenate(ents, axis=1)
+    pred = np.concatenate(preds, axis=1)
+    acc = (pred == labels[None, :]).mean(axis=1)
+    return acc, conf, ent, pred
+
+
+def calibrate_alpha(conf: np.ndarray, pred: np.ndarray, labels: np.ndarray,
+                    tol: float = 0.003) -> float:
+    """Smallest confidence threshold whose exit-at-first-confident-layer
+    cascade accuracy is within ``tol`` of final-exit accuracy."""
+    final_acc = (pred[-1] == labels).mean()
+    for alpha in np.arange(0.50, 0.99, 0.02):
+        acc = _cascade_acc_conf(conf, pred, labels, alpha)
+        if acc >= final_acc - tol:
+            return round(float(alpha), 3)
+    return 0.98
+
+
+def calibrate_tau(ent: np.ndarray, pred: np.ndarray, labels: np.ndarray,
+                  n_classes: int, tol: float = 0.003) -> float:
+    """Largest entropy threshold whose exit-when-entropy-below cascade
+    accuracy is within ``tol`` of final-exit accuracy."""
+    final_acc = (pred[-1] == labels).mean()
+    max_ent = float(np.log(n_classes))
+    best = 0.05 * max_ent
+    for tau in np.linspace(0.98, 0.02, 49) * max_ent:
+        acc = _cascade_acc_ent(ent, pred, labels, tau)
+        if acc >= final_acc - tol:
+            best = tau
+            break
+    return round(float(best), 4)
+
+
+def _cascade_acc_conf(conf, pred, labels, alpha):
+    L, N = conf.shape
+    exit_layer = np.argmax(conf >= alpha, axis=0)           # first confident
+    never = ~(conf >= alpha).any(axis=0)
+    exit_layer[never] = L - 1
+    chosen = pred[exit_layer, np.arange(N)]
+    return (chosen == labels).mean()
+
+
+def _cascade_acc_ent(ent, pred, labels, tau):
+    L, N = ent.shape
+    exit_layer = np.argmax(ent <= tau, axis=0)
+    never = ~(ent <= tau).any(axis=0)
+    exit_layer[never] = L - 1
+    chosen = pred[exit_layer, np.arange(N)]
+    return (chosen == labels).mean()
+
+
+def split_train_val(tokens: np.ndarray, labels: np.ndarray, seed: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic train/validation split of a source dataset."""
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(tokens))
+    n_val = int(len(tokens) * VAL_FRACTION)
+    val, tr = order[:n_val], order[n_val:]
+    return tokens[tr], labels[tr], tokens[val], labels[val]

@@ -1,0 +1,100 @@
+"""Dataset-substrate invariants: token layout, label mechanism, determinism,
+difficulty mixture composition."""
+
+import numpy as np
+import pytest
+
+from compile.common import DEFAULT_CONFIG
+from compile.datagen import (CLS_ID, EVAL_TO_SOURCE, FLIP_ID, SPECS,
+                             DatasetSpec, DifficultyMix, generate,
+                             topic_tokens)
+
+CFG = DEFAULT_CONFIG
+
+
+@pytest.fixture(scope="module")
+def small():
+    spec = DatasetSpec("t", "sentiment", 2, 3000,
+                       DifficultyMix(.3, .2, .1, .3, .1),
+                       700, 950, 1.3, 42, "eval")
+    return spec, generate(spec, CFG.seq_len, CFG.vocab)
+
+
+def test_shapes_and_dtypes(small):
+    spec, (tokens, labels, diff) = small
+    assert tokens.shape == (3000, CFG.seq_len)
+    assert tokens.dtype == np.int32
+    assert labels.shape == (3000,) and labels.dtype == np.int32
+    assert diff.shape == (3000,) and diff.dtype == np.int32
+
+
+def test_token_ranges(small):
+    spec, (tokens, labels, diff) = small
+    assert tokens.min() >= 0
+    assert tokens.max() < CFG.vocab
+    assert np.all(tokens[:, 0] == CLS_ID)
+
+
+def test_labels_in_range(small):
+    spec, (tokens, labels, diff) = small
+    assert labels.min() >= 0 and labels.max() < spec.n_classes
+
+
+def test_flip_mechanism(small):
+    """Label == (topic class + #flips) mod C: verify via reconstruction."""
+    spec, (tokens, labels, diff) = small
+    topics = topic_tokens(spec.family, spec.n_classes)
+    for i in range(500):
+        flips = int((tokens[i] == FLIP_ID).sum())
+        # infer topic class from topic-token majority
+        counts = [np.isin(tokens[i], topics[c]).sum() for c in range(2)]
+        if counts[0] == counts[1]:
+            continue  # ambiguous surface, skip
+        c = int(np.argmax(counts))
+        expected_flips = {0: 0, 1: 0, 2: 0, 3: 1, 4: 2}[int(diff[i])]
+        assert flips == expected_flips, (i, flips, diff[i])
+        assert labels[i] == (c + flips) % 2, (i, c, flips, labels[i])
+
+
+def test_difficulty_mixture_proportions(small):
+    spec, (tokens, labels, diff) = small
+    weights = [.3, .2, .1, .3, .1]
+    for cfg_idx, w in enumerate(weights):
+        frac = (diff == cfg_idx).mean()
+        assert abs(frac - w) < 0.03, (cfg_idx, frac, w)
+
+
+def test_determinism():
+    spec = SPECS["imdb"]
+    a = generate(spec, CFG.seq_len, CFG.vocab)
+    b = generate(spec, CFG.seq_len, CFG.vocab)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_source_eval_pairing_families_match():
+    for ev, src in EVAL_TO_SOURCE.items():
+        assert SPECS[ev].family == SPECS[src].family
+        assert SPECS[ev].n_classes == SPECS[src].n_classes
+        assert SPECS[src].role == "source"
+        assert SPECS[ev].role == "eval"
+
+
+def test_all_specs_token_layout_valid():
+    for name, s in SPECS.items():
+        t = topic_tokens(s.family, s.n_classes)
+        assert t.max() < s.bg_lo <= s.bg_hi <= CFG.vocab, name
+
+
+def test_class_balance(small):
+    spec, (tokens, labels, diff) = small
+    frac = labels.mean()
+    assert 0.4 < frac < 0.6, frac
+
+
+def test_domain_shift_changes_background():
+    """Source and eval of the same family must differ in background tokens."""
+    src_tok, _, _ = generate(SPECS["sst2"], CFG.seq_len, CFG.vocab)
+    ev_tok, _, _ = generate(SPECS["imdb"], CFG.seq_len, CFG.vocab)
+    # eval background reaches ids the source never uses
+    assert ev_tok.max() > src_tok.max()

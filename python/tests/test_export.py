@@ -1,0 +1,92 @@
+"""Binary export format round-trips (pure-python readers mirror the rust ones)."""
+
+import struct
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile import export
+from compile.common import DEFAULT_CONFIG, init_model_params
+
+
+def read_weights(path: Path):
+    """Python mirror of rust/src/model/weights.rs for round-trip testing."""
+    out = {}
+    with open(path, "rb") as f:
+        magic, version, n = struct.unpack("<III", f.read(12))
+        assert magic == export.WEIGHTS_MAGIC and version == export.VERSION
+        for _ in range(n):
+            (name_len,) = struct.unpack("<H", f.read(2))
+            name = f.read(name_len).decode()
+            dtype, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+            numel = int(np.prod(dims)) if ndim else 1
+            raw = f.read(numel * 4)
+            np_dtype = np.float32 if dtype == export.DTYPE_F32 else np.int32
+            out[name] = np.frombuffer(raw, np_dtype).reshape(dims)
+        assert f.read() == b""
+    return out
+
+
+def read_dataset(path: Path):
+    with open(path, "rb") as f:
+        magic, version, n, t, c = struct.unpack("<IIIII", f.read(20))
+        assert magic == export.DATA_MAGIC and version == export.VERSION
+        tokens = np.frombuffer(f.read(4 * n * t), np.int32).reshape(n, t)
+        labels = np.frombuffer(f.read(4 * n), np.int32)
+        diff = np.frombuffer(f.read(4 * n), np.int32)
+        assert f.read() == b""
+    return tokens, labels, diff, c
+
+
+def test_weights_roundtrip(tmp_path):
+    params = init_model_params(0, DEFAULT_CONFIG, 2)
+    tensors = export.flatten_params(params)
+    path = tmp_path / "w.bin"
+    export.write_weights(path, tensors)
+    loaded = read_weights(path)
+    assert len(loaded) == len(tensors)
+    for name, arr in tensors:
+        np.testing.assert_array_equal(loaded[name], np.asarray(arr))
+
+
+def test_flatten_params_naming():
+    params = init_model_params(0, DEFAULT_CONFIG, 2)
+    names = [n for n, _ in export.flatten_params(params)]
+    assert names[0] == "embed.tok"
+    assert "block0.wq" in names
+    assert "block11.b2" in names
+    assert "head11.bc" in names
+    assert len(names) == 4 + 12 * 16 + 12 * 4
+
+
+def test_dataset_roundtrip(tmp_path):
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, 1024, size=(50, 32)).astype(np.int32)
+    labels = rng.integers(0, 3, size=50).astype(np.int32)
+    diff = rng.integers(0, 5, size=50).astype(np.int32)
+    path = tmp_path / "d.bin"
+    export.write_dataset(path, tokens, labels, diff, 3)
+    t2, l2, d2, c = read_dataset(path)
+    np.testing.assert_array_equal(tokens, t2)
+    np.testing.assert_array_equal(labels, l2)
+    np.testing.assert_array_equal(diff, d2)
+    assert c == 3
+
+
+def test_weights_rejects_bad_dtype(tmp_path):
+    with pytest.raises(ValueError):
+        export.write_weights(tmp_path / "b.bin",
+                             [("x", np.zeros(3, np.float64))])
+
+
+def test_fixture_entry_shapes():
+    L, B, C = 12, 4, 2
+    fx = export.fixture_entry(
+        np.zeros((B, 32), np.int32), np.zeros(B, np.int32),
+        np.zeros((L, B, C)), np.zeros((L, B)), np.zeros((L, B)))
+    assert len(fx["tokens"]) == B
+    assert len(fx["probs"]) == L
+    assert len(fx["probs"][0]) == B
+    assert len(fx["conf"]) == L

@@ -1,0 +1,175 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and seeds; every case asserts allclose.  This is the
+core correctness signal for the serving-path artifacts: the HLO the rust
+runtime executes is lowered from exactly these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.common import DEFAULT_CONFIG, ModelConfig, init_block_params, \
+    init_head_params, init_embed_params
+from compile.kernels import ref
+from compile.kernels.attention import attention
+from compile.kernels.exit_head import exit_head
+from compile.kernels.ffn import ffn
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _x(seed: int, b: int, t: int, d: int) -> jnp.ndarray:
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, t, d), jnp.float32)
+
+
+def _cfg(t: int, d: int, heads: int, ff: int) -> ModelConfig:
+    return ModelConfig(seq_len=t, d_model=d, n_heads=heads, d_ff=ff)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 5, 8]),
+    t=st.sampled_from([4, 16, 32]),
+    heads=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(b, t, heads, seed):
+    d = 16 * heads
+    cfg = _cfg(t, d, heads, 2 * d)
+    p = init_block_params(jax.random.PRNGKey(seed), cfg)
+    x = _x(seed ^ 0x5A5A, b, t, d)
+    got = attention(x, p, heads)
+    want = ref.attention_ref(x, p, heads)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+def test_attention_residual_identity_weights():
+    """With zero projection output weights the block must be the identity."""
+    cfg = DEFAULT_CONFIG
+    p = init_block_params(jax.random.PRNGKey(0), cfg)
+    p = dict(p)
+    p["wo"] = jnp.zeros_like(p["wo"])
+    p["bo"] = jnp.zeros_like(p["bo"])
+    x = _x(3, 2, cfg.seq_len, cfg.d_model)
+    np.testing.assert_allclose(attention(x, p, cfg.n_heads), x, **TOL)
+
+
+def test_attention_default_config_shape():
+    cfg = DEFAULT_CONFIG
+    p = init_block_params(jax.random.PRNGKey(1), cfg)
+    x = _x(7, 8, cfg.seq_len, cfg.d_model)
+    out = attention(x, p, cfg.n_heads)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------------------
+# ffn
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 3, 8]),
+    t=st.sampled_from([4, 32]),
+    d=st.sampled_from([16, 64]),
+    ff=st.sampled_from([32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ffn_matches_ref(b, t, d, ff, seed):
+    cfg = _cfg(t, d, 4, ff)
+    p = init_block_params(jax.random.PRNGKey(seed), cfg)
+    x = _x(seed ^ 0xC3C3, b, t, d)
+    np.testing.assert_allclose(ffn(x, p), ref.ffn_ref(x, p), **TOL)
+
+
+def test_ffn_residual_identity_weights():
+    cfg = DEFAULT_CONFIG
+    p = dict(init_block_params(jax.random.PRNGKey(0), cfg))
+    p["w2"] = jnp.zeros_like(p["w2"])
+    p["b2"] = jnp.zeros_like(p["b2"])
+    x = _x(5, 2, cfg.seq_len, cfg.d_model)
+    np.testing.assert_allclose(ffn(x, p), x, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# exit head
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 8]),
+    c=st.sampled_from([2, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exit_head_matches_ref(b, c, seed):
+    cfg = DEFAULT_CONFIG
+    p = init_head_params(jax.random.PRNGKey(seed), cfg, c)
+    x = _x(seed ^ 0x0F0F, b, cfg.seq_len, cfg.d_model)
+    got = exit_head(x, p)
+    want = ref.exit_head_ref(x, p)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([1, 8]), c=st.sampled_from([2, 3]),
+       seed=st.integers(0, 2**31 - 1))
+def test_exit_head_invariants(b, c, seed):
+    """probs on the simplex; conf = max prob; entropy within [0, ln C]."""
+    cfg = DEFAULT_CONFIG
+    p = init_head_params(jax.random.PRNGKey(seed), cfg, c)
+    x = _x(seed, b, cfg.seq_len, cfg.d_model)
+    probs, conf, ent = exit_head(x, p)
+    np.testing.assert_allclose(jnp.sum(probs, axis=-1), jnp.ones(b), **TOL)
+    assert bool(jnp.all(probs >= 0))
+    np.testing.assert_allclose(conf, jnp.max(probs, axis=-1), **TOL)
+    assert bool(jnp.all(ent >= -1e-6))
+    assert bool(jnp.all(ent <= np.log(c) + 1e-5))
+
+
+def test_exit_head_uses_cls_token_only():
+    """Changing non-CLS positions must not change the head output."""
+    cfg = DEFAULT_CONFIG
+    p = init_head_params(jax.random.PRNGKey(2), cfg, 2)
+    x = _x(11, 4, cfg.seq_len, cfg.d_model)
+    y = x.at[:, 1:, :].set(0.0)
+    got_x = exit_head(x, p)
+    got_y = exit_head(y, p)
+    for g, h in zip(got_x, got_y):
+        np.testing.assert_allclose(g, h, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# layer norm oracle sanity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_layernorm_zero_mean_unit_var(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64), jnp.float32) * 5 + 3
+    g = jnp.ones((64,))
+    b = jnp.zeros((64,))
+    y = ref.layer_norm(x, g, b)
+    np.testing.assert_allclose(jnp.mean(y, axis=-1), jnp.zeros(4), atol=1e-5)
+    np.testing.assert_allclose(
+        jnp.var(y, axis=-1), jnp.ones(4), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def test_embed_shapes_and_determinism():
+    cfg = DEFAULT_CONFIG
+    p = init_embed_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.zeros((2, cfg.seq_len), jnp.int32)
+    h = ref.embed_ref(tok, p)
+    assert h.shape == (2, cfg.seq_len, cfg.d_model)
+    np.testing.assert_allclose(h[0], h[1], **TOL)  # same tokens -> same rows

@@ -1,0 +1,93 @@
+"""L2 model invariants: pallas/ref agreement at model scope, shapes, and the
+canonical flatten/unflatten round-trip the AOT artifacts depend on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import flat_arg_specs, flatten_args, unflatten_args
+from compile.common import (BLOCK_PARAM_ORDER, DEFAULT_CONFIG, EMBED_PARAM_ORDER,
+                            HEAD_PARAM_ORDER, init_model_params)
+from compile.model import (forward_all_exits, forward_logits_all_exits)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_model_params(0, DEFAULT_CONFIG, 3)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    key = jax.random.PRNGKey(9)
+    return jax.random.randint(key, (4, DEFAULT_CONFIG.seq_len), 0,
+                              DEFAULT_CONFIG.vocab, jnp.int32)
+
+
+def test_forward_shapes(params, tokens):
+    cfg = DEFAULT_CONFIG
+    probs, conf, ent = forward_all_exits(params, tokens, cfg)
+    assert probs.shape == (cfg.n_layers, 4, 3)
+    assert conf.shape == (cfg.n_layers, 4)
+    assert ent.shape == (cfg.n_layers, 4)
+
+
+def test_pallas_path_matches_ref_path(params, tokens):
+    """The full 12-layer pallas composition must agree with the jnp reference
+    — this is what licenses using the ref path for the prefix_full artifact."""
+    cfg = DEFAULT_CONFIG
+    p_probs, p_conf, p_ent = forward_all_exits(params, tokens, cfg, use_pallas=True)
+    r_probs, r_conf, r_ent = forward_all_exits(params, tokens, cfg, use_pallas=False)
+    np.testing.assert_allclose(p_probs, r_probs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(p_conf, r_conf, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(p_ent, r_ent, rtol=1e-4, atol=1e-4)
+
+
+def test_probs_on_simplex(params, tokens):
+    probs, conf, ent = forward_all_exits(params, tokens, DEFAULT_CONFIG)
+    np.testing.assert_allclose(np.sum(np.asarray(probs), axis=-1),
+                               np.ones((DEFAULT_CONFIG.n_layers, 4)),
+                               rtol=1e-5, atol=1e-5)
+    assert np.all(np.asarray(conf) <= 1.0 + 1e-6)
+    assert np.all(np.asarray(conf) >= 1.0 / 3 - 1e-6)  # max prob >= 1/C
+
+
+def test_logits_match_probs(params, tokens):
+    cfg = DEFAULT_CONFIG
+    logits = forward_logits_all_exits(params, tokens, cfg)
+    probs, _, _ = forward_all_exits(params, tokens, cfg)
+    soft = jax.nn.softmax(logits, axis=-1)
+    np.testing.assert_allclose(soft, probs, rtol=1e-5, atol=1e-5)
+
+
+def test_flatten_unflatten_roundtrip(params):
+    cfg = DEFAULT_CONFIG
+    flat = flatten_args(params)
+    rebuilt = unflatten_args(flat, cfg, 3)
+    for k in EMBED_PARAM_ORDER:
+        np.testing.assert_array_equal(rebuilt["embed"][k], params["embed"][k])
+    for i in range(cfg.n_layers):
+        for k in BLOCK_PARAM_ORDER:
+            np.testing.assert_array_equal(rebuilt["blocks"][i][k],
+                                          params["blocks"][i][k])
+        for k in HEAD_PARAM_ORDER:
+            np.testing.assert_array_equal(rebuilt["heads"][i][k],
+                                          params["heads"][i][k])
+
+
+def test_flat_arg_specs_match_flatten(params):
+    cfg = DEFAULT_CONFIG
+    flat = flatten_args(params)
+    specs = flat_arg_specs(cfg, 3)
+    assert len(flat) == len(specs)
+    for a, s in zip(flat, specs):
+        assert a.shape == s.shape, (a.shape, s.shape)
+        assert a.dtype == s.dtype
+
+
+def test_deterministic_forward(params, tokens):
+    cfg = DEFAULT_CONFIG
+    a = forward_all_exits(params, tokens, cfg)
+    b = forward_all_exits(params, tokens, cfg)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

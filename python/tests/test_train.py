@@ -1,0 +1,105 @@
+"""Training-pipeline smoke + calibration correctness (fast settings)."""
+
+import numpy as np
+import pytest
+
+from compile.common import DEFAULT_CONFIG
+from compile.datagen import SPECS, DatasetSpec, DifficultyMix, generate
+from compile.train import (adam_init, adam_update, calibrate_alpha,
+                           calibrate_tau, eval_all_exits, joint_loss,
+                           split_train_val, train_elasticbert, train_deebert,
+                           _cascade_acc_conf, _cascade_acc_ent)
+
+CFG = DEFAULT_CONFIG
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    spec = DatasetSpec("tiny", "sentiment", 2, 1200,
+                       DifficultyMix(.5, .2, .1, .15, .05),
+                       700, 950, 1.3, 7, "source")
+    tokens, labels, _ = generate(spec, CFG.seq_len, CFG.vocab)
+    return tokens, labels
+
+
+@pytest.fixture(scope="module")
+def trained(tiny_data):
+    tokens, labels = tiny_data
+    tr_t, tr_l, va_t, va_l = split_train_val(tokens, labels, 0)
+    params = train_elasticbert(tr_t, tr_l, CFG, 2, 0, steps=50,
+                               log=lambda *a: None)
+    return params, va_t, va_l
+
+
+def test_loss_decreases(tiny_data):
+    import jax.numpy as jnp
+    from compile.common import init_model_params
+    tokens, labels = tiny_data
+    params = init_model_params(0, CFG, 2)
+    l0 = float(joint_loss(params, jnp.asarray(tokens[:64]),
+                          jnp.asarray(labels[:64]), CFG))
+    trained = train_elasticbert(tokens, labels, CFG, 2, 0, steps=40,
+                                log=lambda *a: None)
+    l1 = float(joint_loss(trained, jnp.asarray(tokens[:64]),
+                          jnp.asarray(labels[:64]), CFG))
+    assert l1 < l0 * 0.8, (l0, l1)
+
+
+def test_eval_outputs(trained):
+    params, va_t, va_l = trained
+    acc, conf, ent, pred = eval_all_exits(params, va_t, va_l, CFG)
+    L, N = conf.shape
+    assert L == CFG.n_layers and N == len(va_l)
+    assert acc.shape == (L,)
+    assert np.all(acc >= 0) and np.all(acc <= 1)
+    assert np.all(conf > 0) and np.all(conf <= 1 + 1e-6)
+    assert np.all(ent >= -1e-6)
+    # trained model must beat chance at the deepest exit
+    assert acc[-1] > 0.6
+
+
+def test_calibrated_alpha_preserves_accuracy(trained):
+    params, va_t, va_l = trained
+    acc, conf, ent, pred = eval_all_exits(params, va_t, va_l, CFG)
+    alpha = calibrate_alpha(conf, pred, va_l)
+    assert 0.5 <= alpha <= 0.98
+    cascade = _cascade_acc_conf(conf, pred, va_l, alpha)
+    assert cascade >= acc[-1] - 0.005 - 1e-9
+
+
+def test_calibrated_tau_preserves_accuracy(trained):
+    params, va_t, va_l = trained
+    acc, conf, ent, pred = eval_all_exits(params, va_t, va_l, CFG)
+    tau = calibrate_tau(ent, pred, va_l, 2)
+    assert 0 < tau < np.log(2) + 1e-9
+    cascade = _cascade_acc_ent(ent, pred, va_l, tau)
+    assert cascade >= acc[-1] - 0.005 - 1e-9
+
+
+def test_deebert_two_stage_runs(tiny_data):
+    tokens, labels = tiny_data
+    params = train_deebert(tokens[:600], labels[:600], CFG, 2, 0,
+                           steps1=25, steps2=20, log=lambda *a: None)
+    assert len(params["heads"]) == CFG.n_layers
+    acc, *_ = eval_all_exits(params, tokens[600:900], labels[600:900], CFG)
+    assert acc[-1] > 0.55  # stage-1 fine-tuning must beat chance
+
+
+def test_adam_moves_params():
+    import jax.numpy as jnp
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 2.0)}
+    st = adam_init(params)
+    new, st2 = adam_update(params, grads, st, lr=0.1)
+    assert st2["t"] == 1
+    assert np.all(np.asarray(new["w"]) < 1.0)
+
+
+def test_split_train_val_disjoint_and_complete(tiny_data):
+    tokens, labels = tiny_data
+    tr_t, tr_l, va_t, va_l = split_train_val(tokens, labels, 3)
+    assert len(tr_t) + len(va_t) == len(tokens)
+    assert len(va_t) == int(len(tokens) * 0.15)
+    # determinism
+    tr_t2, *_ = split_train_val(tokens, labels, 3)
+    np.testing.assert_array_equal(tr_t, tr_t2)

@@ -1,0 +1,50 @@
+//! Bench for paper Figures 3-6: times the offload-cost sweep (5 o-values x
+//! 2 algorithms over a cache).  Synthetic fallback keeps the bench runnable
+//! without artifacts.
+
+use splitee::config::{Manifest, Settings};
+use splitee::cost::CostModel;
+use splitee::experiments::figures::{sweep_dataset, OFFLOAD_SWEEP};
+use splitee::experiments::runner::run_policy_repeated;
+use splitee::experiments::ConfidenceCache;
+use splitee::policy::SplitEePolicy;
+use splitee::runtime::Runtime;
+use splitee::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("figures");
+
+    // synthetic sweep (always available)
+    let cache = ConfidenceCache::synthetic(10_000, 12, 13);
+    suite.bench("sweep_o_synthetic_10k_x5", 0, 5, || {
+        for &o in &OFFLOAD_SWEEP {
+            let cm = CostModel::paper(o, 0.1, 12);
+            let mut p = SplitEePolicy::new(12, 0.9, 1.0);
+            std::hint::black_box(run_policy_repeated(&cache, &mut p, &cm, 1, 3));
+        }
+    });
+
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let runtime = Runtime::cpu().expect("client");
+        let mut settings = Settings::default();
+        settings.artifacts_dir = dir;
+        settings.reps = 3;
+        let real =
+            ConfidenceCache::load_or_build(&manifest, &runtime, "imdb", "elasticbert").unwrap();
+        suite.bench("sweep_o_imdb_reps3_both_algos", 0, 2, || {
+            for algo in ["splitee", "splitee-s"] {
+                std::hint::black_box(
+                    sweep_dataset(&manifest, &real, "imdb", algo, &settings).expect("sweep"),
+                );
+            }
+        });
+    } else {
+        eprintln!("NOTE: no artifacts; real-data sweep bench skipped");
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,54 @@
+//! L3 hot-path microbenches: ns per policy decision.  The bandit math must
+//! never rival the model cost (perf target: < 1 µs/decision).
+
+use splitee::cost::CostModel;
+use splitee::data::synth::{SynthMix, SynthProfile};
+use splitee::policy::{AdaptiveThresholdPolicy, DeeBertPolicy, ElasticBertPolicy,
+                      FinalExitPolicy, PerSamplePolicy, Policy, RandomExitPolicy,
+                      SampleView, SplitEePolicy, SplitEeSPolicy};
+use splitee::util::bench::BenchSuite;
+use splitee::util::rng::Rng;
+
+fn main() {
+    let mut suite = BenchSuite::new("policies");
+    let cm = CostModel::paper(5.0, 0.1, 12);
+    let mut rng = Rng::new(1);
+    let profile = SynthProfile::generate(4096, 12, SynthMix::default(), &mut rng);
+    let ent: Vec<Vec<f32>> = profile
+        .conf
+        .iter()
+        .map(|cs| cs.iter().map(|c| 1.0 - c).collect())
+        .collect();
+
+    macro_rules! bench_policy {
+        ($name:expr, $p:expr) => {{
+            let mut p = $p;
+            let mut i = 0usize;
+            suite.bench($name, 2_000, 50_000, || {
+                let s = SampleView { conf: &profile.conf[i], ent: &ent[i] };
+                std::hint::black_box(p.decide(&s, &cm));
+                i = (i + 1) % profile.len();
+            });
+        }};
+    }
+
+    bench_policy!("splitee_decide", SplitEePolicy::new(12, 0.85, 1.0));
+    bench_policy!("splitee_s_decide", SplitEeSPolicy::new(12, 0.85, 1.0));
+    bench_policy!("deebert_decide", DeeBertPolicy::new(0.25));
+    bench_policy!("elasticbert_decide", ElasticBertPolicy::new(0.85));
+    bench_policy!("random_decide", RandomExitPolicy::new(0.85, 3));
+    bench_policy!("final_exit_decide", FinalExitPolicy);
+    bench_policy!("adaptive_threshold_decide", AdaptiveThresholdPolicy::new(12, 1.0));
+    bench_policy!("per_sample_decide", PerSamplePolicy::new(12, 0.85, 1.0));
+
+    // bandit primitive alone
+    {
+        let mut ucb = splitee::bandit::Ucb::new(12, 1.0);
+        suite.bench("ucb_choose_update", 2_000, 100_000, || {
+            let a = ucb.choose();
+            ucb.update(a, 0.5);
+        });
+    }
+
+    suite.finish();
+}

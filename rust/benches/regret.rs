@@ -1,0 +1,55 @@
+//! Bench for paper Figure 7: times the cumulative-regret computation
+//! (oracle solve + multi-rep replay with per-round regret accounting).
+
+use splitee::config::{Manifest, Settings};
+use splitee::cost::CostModel;
+use splitee::experiments::regret::regret_curves_with_alpha;
+use splitee::experiments::ConfidenceCache;
+use splitee::policy::{Policy, SplitEePolicy, SplitEeSPolicy};
+use splitee::runtime::Runtime;
+use splitee::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("regret");
+    let cm = CostModel::paper(5.0, 0.1, 12);
+
+    let cache = ConfidenceCache::synthetic(10_000, 12, 17);
+    suite.bench("regret_splitee_10k_reps3", 0, 4, || {
+        let mut mk: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(|| Box::new(SplitEePolicy::new(12, 0.9, 1.0)));
+        std::hint::black_box(regret_curves_with_alpha(
+            &cache, "SplitEE", mk.as_mut(), &cm, 0.9, 3, 5, 50,
+        ));
+    });
+    suite.bench("regret_splitee_s_10k_reps3", 0, 4, || {
+        let mut mk: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(|| Box::new(SplitEeSPolicy::new(12, 0.9, 1.0)));
+        std::hint::black_box(regret_curves_with_alpha(
+            &cache, "SplitEE-S", mk.as_mut(), &cm, 0.9, 3, 5, 50,
+        ));
+    });
+
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let runtime = Runtime::cpu().expect("client");
+        let settings = Settings { artifacts_dir: dir, ..Settings::default() };
+        let _ = settings;
+        let real =
+            ConfidenceCache::load_or_build(&manifest, &runtime, "imdb", "elasticbert").unwrap();
+        let alpha = manifest.source_task("imdb").unwrap().alpha;
+        suite.bench("regret_imdb_reps5", 0, 2, || {
+            let mut mk: Box<dyn FnMut() -> Box<dyn Policy>> =
+                Box::new(move || Box::new(SplitEePolicy::new(12, alpha, 1.0)));
+            std::hint::black_box(regret_curves_with_alpha(
+                &real, "SplitEE", mk.as_mut(), &cm, alpha, 5, 5, 50,
+            ));
+        });
+    } else {
+        eprintln!("NOTE: no artifacts; real-data regret bench skipped");
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,57 @@
+//! PJRT execute latency per compiled graph at each batch size — the L2/L3
+//! boundary the serving loop pays per layer.  Needs `make artifacts`.
+
+use splitee::config::Manifest;
+use splitee::model::MultiExitModel;
+use splitee::runtime::Runtime;
+use splitee::tensor::TensorI32;
+use splitee::util::bench::BenchSuite;
+
+fn main() {
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench runtime: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let runtime = Runtime::cpu().expect("client");
+    let model = MultiExitModel::load(&manifest, &runtime, "sst2", "elasticbert").expect("model");
+    let mut suite = BenchSuite::new("runtime");
+
+    for &b in &manifest.batch_sizes {
+        let tokens = TensorI32::new(
+            vec![b, manifest.model.seq_len],
+            (0..(b * manifest.model.seq_len) as i32).map(|i| i % 997).collect(),
+        )
+        .unwrap();
+        let h = model.embed(&tokens).unwrap();
+
+        suite.bench_items(&format!("embed_b{b}"), 20, 200, b as f64, || {
+            std::hint::black_box(model.embed(&tokens).unwrap());
+        });
+        suite.bench_items(&format!("block_b{b}"), 20, 200, b as f64, || {
+            std::hint::black_box(model.block(&h, 0).unwrap());
+        });
+        suite.bench_items(&format!("exit_head_b{b}"), 20, 200, b as f64, || {
+            std::hint::black_box(model.exit_head(&h, 0).unwrap());
+        });
+        suite.bench_items(&format!("full_12_layers_b{b}"), 5, 50, b as f64, || {
+            std::hint::black_box(model.run_split(&tokens, 11).unwrap());
+        });
+    }
+
+    // the cache-builder graph
+    let cb = manifest.cache_batch;
+    let tokens = TensorI32::new(
+        vec![cb, manifest.model.seq_len],
+        (0..(cb * manifest.model.seq_len) as i32).map(|i| i % 997).collect(),
+    )
+    .unwrap();
+    suite.bench_items(&format!("prefix_full_b{cb}"), 3, 30, cb as f64, || {
+        std::hint::black_box(model.forward_all_exits(&tokens).unwrap());
+    });
+
+    suite.finish();
+}

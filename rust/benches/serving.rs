@@ -1,0 +1,96 @@
+//! End-to-end serving bench: requests/s and per-request latency through
+//! router -> batcher -> service (the deliverable-(e) driver, timed).
+//! Needs `make artifacts`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use splitee::config::Manifest;
+use splitee::coordinator::service::PolicyKind;
+use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::data::Dataset;
+use splitee::model::MultiExitModel;
+use splitee::runtime::Runtime;
+use splitee::sim::LinkSim;
+use splitee::util::bench::BenchSuite;
+
+fn main() {
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench serving: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let runtime = Runtime::cpu().expect("client");
+    let task = manifest.source_task("imdb").expect("task").clone();
+    let model = Arc::new(
+        MultiExitModel::load(&manifest, &runtime, &task.name, "elasticbert").expect("model"),
+    );
+    let info = manifest.dataset("imdb").expect("dataset");
+    let data = Dataset::load(&manifest.root.join(&info.file), "imdb").expect("data");
+    let mut suite = BenchSuite::new("serving");
+
+    for (label, kind) in [
+        ("serve_200req_splitee", PolicyKind::SplitEe),
+        ("serve_200req_splitee_s", PolicyKind::SplitEeS),
+        ("serve_200req_final_exit", PolicyKind::FinalExit),
+        ("serve_200req_fixed4", PolicyKind::Fixed(4)),
+    ] {
+        let n = 200usize;
+        suite.bench_items(label, 0, 3, n as f64, || {
+            let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+            let link = LinkSim::new(NetworkProfile::three_g(), 7);
+            let config = ServiceConfig {
+                policy: kind,
+                alpha: task.alpha,
+                beta: 1.0,
+                batcher: BatcherConfig {
+                    batch_sizes: manifest.batch_sizes.clone(),
+                    max_wait: Duration::from_millis(2),
+                },
+            };
+            let router = Router::new(RouterConfig::default());
+            let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+            let producer = {
+                let router = Arc::clone(&router);
+                let tokens: Vec<_> = (0..n).map(|i| data.sample_tokens(i % data.len())).collect();
+                std::thread::spawn(move || {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    for t in tokens {
+                        if router.submit(t, tx.clone()).is_none() {
+                            break;
+                        }
+                    }
+                    drop(tx);
+                    while rx.recv().is_ok() {}
+                    router.shutdown();
+                })
+            };
+            let bc = config.batcher.clone();
+            service.run(Arc::clone(&router), bc).expect("serve");
+            producer.join().unwrap();
+            assert_eq!(service.metrics.served, n as u64);
+        });
+    }
+
+    // raw PJRT roofline for comparison: back-to-back full-depth batches of 8
+    {
+        let tokens = data.range_tokens(0, 8);
+        let t0 = Instant::now();
+        let iters = 25;
+        for _ in 0..iters {
+            std::hint::black_box(model.run_split(&tokens, model.n_layers() - 1).unwrap());
+        }
+        let per_req = t0.elapsed().as_secs_f64() / (iters * 8) as f64;
+        println!(
+            "  raw full-depth roofline: {:.0} req/s ({:.2} ms/request at B=8)",
+            1.0 / per_req,
+            per_req * 1e3
+        );
+    }
+
+    suite.finish();
+}

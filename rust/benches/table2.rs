@@ -1,0 +1,53 @@
+//! Bench for paper Table 2: times the full main-results regeneration
+//! (5 datasets x 6 policies x `--reps` shuffles over the confidence caches).
+//! Falls back to a synthetic cache when artifacts are missing so the bench
+//! always measures the bandit/runner hot path.
+
+use splitee::config::{Manifest, Settings};
+use splitee::cost::CostModel;
+use splitee::experiments::runner::run_policy_repeated;
+use splitee::experiments::{table2, ConfidenceCache};
+use splitee::policy::{FinalExitPolicy, SplitEePolicy, SplitEeSPolicy};
+use splitee::runtime::Runtime;
+use splitee::util::bench::BenchSuite;
+
+fn main() {
+    let mut suite = BenchSuite::new("table2");
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+
+    // always-available: the runner hot path on a synthetic cache
+    let cache = ConfidenceCache::synthetic(20_000, 12, 11);
+    let cm = CostModel::paper(5.0, 0.1, 12);
+    suite.bench_items("runner_splitee_20k_samples", 1, 10, 20_000.0, || {
+        let mut p = SplitEePolicy::new(12, 0.9, 1.0);
+        std::hint::black_box(run_policy_repeated(&cache, &mut p, &cm, 1, 3));
+    });
+    suite.bench_items("runner_splitee_s_20k_samples", 1, 10, 20_000.0, || {
+        let mut p = SplitEeSPolicy::new(12, 0.9, 1.0);
+        std::hint::black_box(run_policy_repeated(&cache, &mut p, &cm, 1, 3));
+    });
+    suite.bench_items("runner_final_exit_20k_samples", 1, 10, 20_000.0, || {
+        let mut p = FinalExitPolicy;
+        std::hint::black_box(run_policy_repeated(&cache, &mut p, &cm, 1, 3));
+    });
+
+    // the real thing, when artifacts exist (uses cached confidences)
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let runtime = Runtime::cpu().expect("client");
+        let mut settings = Settings::default();
+        settings.artifacts_dir = dir;
+        // bench runs must not clobber the canonical results/ files
+        settings.results_dir = std::env::temp_dir().join("splitee_bench_results");
+        settings.reps = 5; // bench-speed reps; the CLI default is 20
+        suite.bench("table2_full_5datasets_reps5", 0, 2, || {
+            std::hint::black_box(table2::run(&manifest, &runtime, &settings).expect("table2"));
+        });
+    } else {
+        eprintln!("NOTE: no artifacts; full-table bench skipped");
+    }
+
+    suite.finish();
+}

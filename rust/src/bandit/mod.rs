@@ -1,0 +1,262 @@
+//! Multi-armed-bandit primitives: UCB index, arm statistics, regret tracking.
+//!
+//! SplitEE (Algorithm 1) is classical UCB1 over the `L` candidate split
+//! layers with reward eq. 1; SplitEE-S additionally updates every arm
+//! `j <= i_t` from side observations.  These primitives are policy-agnostic —
+//! the policies in [`crate::policy`] compose them with the cost model.
+
+/// Running statistics of one arm.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArmStats {
+    /// pull (update) count N(i)
+    pub n: u64,
+    /// empirical mean reward Q(i)
+    pub q: f64,
+}
+
+impl ArmStats {
+    /// Incremental mean update.
+    #[inline]
+    pub fn update(&mut self, reward: f64) {
+        self.n += 1;
+        self.q += (reward - self.q) / self.n as f64;
+    }
+}
+
+/// UCB1 state over `k` arms (paper line 6: `argmax Q(i) + beta sqrt(ln t / N(i))`).
+#[derive(Debug, Clone)]
+pub struct Ucb {
+    arms: Vec<ArmStats>,
+    /// exploration coefficient beta (paper: 1.0)
+    pub beta: f64,
+    /// round counter t (number of choose() calls)
+    pub t: u64,
+}
+
+impl Ucb {
+    pub fn new(k: usize, beta: f64) -> Ucb {
+        assert!(k > 0, "need at least one arm");
+        Ucb { arms: vec![ArmStats::default(); k], beta, t: 0 }
+    }
+
+    pub fn k(&self) -> usize {
+        self.arms.len()
+    }
+
+    pub fn arm(&self, i: usize) -> &ArmStats {
+        &self.arms[i]
+    }
+
+    /// UCB index of arm `i` at the current round; infinite for unpulled arms
+    /// (realises "play each arm once" initialisation without a special phase).
+    pub fn index(&self, i: usize) -> f64 {
+        let a = &self.arms[i];
+        if a.n == 0 {
+            return f64::INFINITY;
+        }
+        let t = self.t.max(1) as f64;
+        a.q + self.beta * (t.ln() / a.n as f64).sqrt()
+    }
+
+    /// Choose the arm with the highest UCB index.  Ties (including the
+    /// initial all-infinite round) break to the lowest index, which matches
+    /// the algorithm's "play each arm once" warm start in layer order.
+    pub fn choose(&mut self) -> usize {
+        self.t += 1;
+        let mut best = 0;
+        let mut best_v = f64::NEG_INFINITY;
+        for i in 0..self.arms.len() {
+            let v = self.index(i);
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Record a reward for `arm`.
+    pub fn update(&mut self, arm: usize, reward: f64) {
+        self.arms[arm].update(reward);
+    }
+
+    /// The arm with the highest empirical mean (for reporting convergence).
+    pub fn best_empirical(&self) -> usize {
+        let mut best = 0;
+        for i in 1..self.arms.len() {
+            if self.arms[i].q > self.arms[best].q {
+                best = i;
+            }
+        }
+        best
+    }
+
+    pub fn reset(&mut self) {
+        for a in &mut self.arms {
+            *a = ArmStats::default();
+        }
+        self.t = 0;
+    }
+}
+
+/// Cumulative-regret accumulator for one run (paper eq. 3 / figure 7).
+#[derive(Debug, Clone, Default)]
+pub struct RegretTracker {
+    cumulative: f64,
+    /// cumulative regret after each round (the figure-7 curve)
+    pub curve: Vec<f64>,
+}
+
+impl RegretTracker {
+    pub fn new() -> RegretTracker {
+        RegretTracker::default()
+    }
+
+    /// Record one round: the oracle's reward minus the played reward.
+    pub fn record(&mut self, reward_opt: f64, reward_played: f64) {
+        self.cumulative += reward_opt - reward_played;
+        self.curve.push(self.cumulative);
+    }
+
+    pub fn total(&self) -> f64 {
+        self.cumulative
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.curve.len()
+    }
+
+    /// Downsample the curve to at most `points` entries (for reports).
+    pub fn downsample(&self, points: usize) -> Vec<(usize, f64)> {
+        if self.curve.is_empty() || points == 0 {
+            return Vec::new();
+        }
+        let step = (self.curve.len() as f64 / points as f64).max(1.0);
+        let mut out = Vec::new();
+        let mut x = 0.0;
+        while (x as usize) < self.curve.len() {
+            let i = x as usize;
+            out.push((i + 1, self.curve[i]));
+            x += step;
+        }
+        if out.last().map(|&(i, _)| i) != Some(self.curve.len()) {
+            out.push((self.curve.len(), self.cumulative));
+        }
+        out
+    }
+}
+
+/// A deterministic environment for bandit unit tests: Bernoulli-ish arms with
+/// fixed means and bounded noise.
+#[cfg(test)]
+pub(crate) fn simulate_ucb(means: &[f64], rounds: usize, beta: f64, seed: u64) -> (Ucb, f64) {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed);
+    let mut ucb = Ucb::new(means.len(), beta);
+    let best = means.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut regret = 0.0;
+    for _ in 0..rounds {
+        let arm = ucb.choose();
+        let reward = means[arm] + (rng.next_f64() - 0.5) * 0.1;
+        ucb.update(arm, reward);
+        regret += best - means[arm];
+    }
+    (ucb, regret)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arm_stats_running_mean() {
+        let mut a = ArmStats::default();
+        a.update(1.0);
+        a.update(0.0);
+        a.update(0.5);
+        assert_eq!(a.n, 3);
+        assert!((a.q - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plays_every_arm_once_first() {
+        let mut ucb = Ucb::new(5, 1.0);
+        let mut seen = Vec::new();
+        for _ in 0..5 {
+            let arm = ucb.choose();
+            seen.push(arm);
+            ucb.update(arm, 0.1);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn converges_to_best_arm() {
+        let means = [0.2, 0.5, 0.8, 0.4];
+        let (ucb, _) = simulate_ucb(&means, 5000, 1.0, 42);
+        assert_eq!(ucb.best_empirical(), 2);
+        // the best arm must dominate pulls
+        assert!(ucb.arm(2).n > 3000, "best arm pulled {} times", ucb.arm(2).n);
+    }
+
+    #[test]
+    fn regret_is_sublinear() {
+        let means = [0.2, 0.5, 0.8, 0.4];
+        let (_, r1k) = simulate_ucb(&means, 1000, 1.0, 7);
+        let (_, r10k) = simulate_ucb(&means, 10_000, 1.0, 7);
+        // 10x the rounds must cost far less than 10x the regret
+        assert!(r10k < r1k * 4.0, "r1k={r1k:.1} r10k={r10k:.1}");
+    }
+
+    #[test]
+    fn pulls_every_arm_infinitely_often() {
+        let means = [0.2, 0.9];
+        let (ucb, _) = simulate_ucb(&means, 20_000, 1.0, 3);
+        assert!(ucb.arm(0).n > 10, "suboptimal arm still explored");
+    }
+
+    #[test]
+    fn higher_beta_explores_more() {
+        let means = [0.2, 0.8];
+        let (low, _) = simulate_ucb(&means, 5000, 0.3, 11);
+        let (high, _) = simulate_ucb(&means, 5000, 3.0, 11);
+        assert!(high.arm(0).n > low.arm(0).n);
+    }
+
+    #[test]
+    fn regret_tracker_accumulates() {
+        let mut rt = RegretTracker::new();
+        rt.record(1.0, 0.5);
+        rt.record(1.0, 1.0);
+        rt.record(1.0, 0.0);
+        assert!((rt.total() - 1.5).abs() < 1e-12);
+        assert_eq!(rt.curve, vec![0.5, 0.5, 1.5]);
+    }
+
+    #[test]
+    fn downsample_keeps_endpoints() {
+        let mut rt = RegretTracker::new();
+        for _ in 0..1000 {
+            rt.record(1.0, 0.9);
+        }
+        let ds = rt.downsample(10);
+        assert!(ds.len() >= 10 && ds.len() <= 12);
+        assert_eq!(ds.first().unwrap().0, 1);
+        assert_eq!(ds.last().unwrap().0, 1000);
+        assert!((ds.last().unwrap().1 - rt.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut ucb = Ucb::new(3, 1.0);
+        for _ in 0..10 {
+            let a = ucb.choose();
+            ucb.update(a, 1.0);
+        }
+        ucb.reset();
+        assert_eq!(ucb.t, 0);
+        assert_eq!(ucb.arm(0).n, 0);
+        assert_eq!(ucb.index(0), f64::INFINITY);
+    }
+}

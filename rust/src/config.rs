@@ -1,0 +1,369 @@
+//! Typed configuration: artifact manifest + runtime settings.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for model geometry, dataset inventory, calibrated
+//! thresholds and artifact paths.  Runtime settings (cost model knobs,
+//! experiment parameters) layer CLI overrides on top of defaults.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::args::Args;
+use crate::util::json::{self, Json};
+
+/// Model geometry (mirrors python `ModelConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelGeometry {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+}
+
+/// One fine-tuning task (source dataset) with its trained weight files and
+/// calibrated thresholds.
+#[derive(Debug, Clone)]
+pub struct TaskInfo {
+    pub name: String,
+    pub classes: usize,
+    /// confidence threshold alpha (SplitEE / ElasticBERT policies)
+    pub alpha: f64,
+    /// entropy threshold tau (DeeBERT policy)
+    pub tau: f64,
+    /// style -> weights file (relative to artifact dir)
+    pub weights: BTreeMap<String, String>,
+    pub val_acc_per_exit: Vec<f64>,
+}
+
+/// One dataset (source or eval).
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub file: String,
+    pub classes: usize,
+    pub samples: usize,
+    pub role: String,
+    pub family: String,
+    pub paper_name: String,
+    pub paper_samples: usize,
+    /// eval datasets: the source task whose weights/thresholds apply
+    pub source: Option<String>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub model: ModelGeometry,
+    pub batch_sizes: Vec<usize>,
+    pub cache_batch: usize,
+    pub tasks: BTreeMap<String, TaskInfo>,
+    pub datasets: BTreeMap<String, DatasetInfo>,
+    /// graph name -> batch size -> HLO path (relative to root)
+    pub hlo: BTreeMap<String, BTreeMap<usize, String>>,
+    pub quick: bool,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(root: &Path) -> Result<Manifest> {
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(root.to_path_buf(), &v)
+    }
+
+    fn from_json(root: PathBuf, v: &Json) -> Result<Manifest> {
+        let m = v.get("model")?;
+        let model = ModelGeometry {
+            vocab: m.get("vocab")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+        };
+        let batch_sizes = v
+            .get("batch_sizes")?
+            .as_arr()?
+            .iter()
+            .map(|b| b.as_usize())
+            .collect::<Result<Vec<_>, _>>()?;
+        let cache_batch = v.get("cache_batch")?.as_usize()?;
+
+        let mut tasks = BTreeMap::new();
+        for (name, t) in v.get("tasks")?.as_obj()? {
+            let mut weights = BTreeMap::new();
+            for (style, path) in t.get("weights")?.as_obj()? {
+                weights.insert(style.clone(), path.as_str()?.to_string());
+            }
+            tasks.insert(
+                name.clone(),
+                TaskInfo {
+                    name: name.clone(),
+                    classes: t.get("classes")?.as_usize()?,
+                    alpha: t.get("alpha")?.as_f64()?,
+                    tau: t.get("tau")?.as_f64()?,
+                    weights,
+                    val_acc_per_exit: t
+                        .get("val_acc_per_exit")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_f64())
+                        .collect::<Result<Vec<_>, _>>()?,
+                },
+            );
+        }
+
+        let mut datasets = BTreeMap::new();
+        for (name, d) in v.get("datasets")?.as_obj()? {
+            datasets.insert(
+                name.clone(),
+                DatasetInfo {
+                    name: name.clone(),
+                    file: d.get("file")?.as_str()?.to_string(),
+                    classes: d.get("classes")?.as_usize()?,
+                    samples: d.get("samples")?.as_usize()?,
+                    role: d.get("role")?.as_str()?.to_string(),
+                    family: d.get("family")?.as_str()?.to_string(),
+                    paper_name: d.get("paper_name")?.as_str()?.to_string(),
+                    paper_samples: d.get("paper_samples")?.as_usize()?,
+                    source: d.opt("source").map(|s| s.as_str().unwrap_or("").to_string()),
+                },
+            );
+        }
+
+        let mut hlo = BTreeMap::new();
+        for (graph, by_batch) in v.get("hlo")?.as_obj()? {
+            let mut inner = BTreeMap::new();
+            for (b, path) in by_batch.as_obj()? {
+                inner.insert(
+                    b.parse::<usize>().context("batch size key")?,
+                    path.as_str()?.to_string(),
+                );
+            }
+            hlo.insert(graph.clone(), inner);
+        }
+
+        let quick = v.opt("quick").map(|q| q.as_bool().unwrap_or(false)).unwrap_or(false);
+
+        Ok(Manifest {
+            root,
+            model,
+            batch_sizes,
+            cache_batch,
+            tasks,
+            datasets,
+            hlo,
+            quick,
+        })
+    }
+
+    /// Absolute path of an HLO artifact.
+    pub fn hlo_path(&self, graph: &str, batch: usize) -> Result<PathBuf> {
+        let by_batch = self
+            .hlo
+            .get(graph)
+            .with_context(|| format!("manifest has no graph {graph:?}"))?;
+        let rel = by_batch
+            .get(&batch)
+            .with_context(|| format!("graph {graph:?} not compiled for batch {batch}"))?;
+        Ok(self.root.join(rel))
+    }
+
+    /// Absolute path of a weights file.
+    pub fn weights_path(&self, task: &str, style: &str) -> Result<PathBuf> {
+        let t = self.task(task)?;
+        let rel = t
+            .weights
+            .get(style)
+            .with_context(|| format!("task {task:?} has no style {style:?}"))?;
+        Ok(self.root.join(rel))
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskInfo> {
+        self.tasks
+            .get(name)
+            .with_context(|| format!("unknown task {name:?}"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetInfo> {
+        self.datasets
+            .get(name)
+            .with_context(|| format!("unknown dataset {name:?}"))
+    }
+
+    /// The source task of an eval dataset (e.g. imdb -> sst2).
+    pub fn source_task(&self, dataset: &str) -> Result<&TaskInfo> {
+        let d = self.dataset(dataset)?;
+        let src = d
+            .source
+            .as_ref()
+            .with_context(|| format!("dataset {dataset:?} has no source task"))?;
+        self.task(src)
+    }
+
+    /// All eval dataset names in canonical (paper) order.
+    pub fn eval_datasets(&self) -> Vec<String> {
+        // Paper order: IMDb, Yelp, SciTail, SNLI, QQP.
+        let paper_order = ["imdb", "yelp", "scitail", "snli", "qqp"];
+        let mut out: Vec<String> = paper_order
+            .iter()
+            .filter(|n| self.datasets.contains_key(**n))
+            .map(|n| n.to_string())
+            .collect();
+        // anything else (custom datasets), alphabetically after
+        for (name, d) in &self.datasets {
+            if d.role == "eval" && !out.contains(name) {
+                out.push(name.clone());
+            }
+        }
+        out
+    }
+}
+
+/// Runtime settings assembled from defaults + CLI flags.
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+    /// cost-confidence conversion factor mu (paper: 0.1)
+    pub mu: f64,
+    /// UCB exploration parameter beta (paper: 1.0)
+    pub beta: f64,
+    /// offloading cost in lambda units (paper sweeps 1..5, table 2 uses 5)
+    pub offload_cost: f64,
+    /// experiment repetitions (paper: 20)
+    pub reps: usize,
+    pub seed: u64,
+    pub verbosity: u8,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Settings {
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            mu: 0.1,
+            beta: 1.0,
+            offload_cost: 5.0,
+            reps: 20,
+            seed: 0xB0BA,
+            verbosity: 1,
+        }
+    }
+}
+
+impl Settings {
+    /// Apply CLI overrides.
+    pub fn from_args(args: &Args) -> Result<Settings> {
+        let mut s = Settings::default();
+        if let Some(dir) = args.get("artifacts") {
+            s.artifacts_dir = PathBuf::from(dir);
+        }
+        if let Some(dir) = args.get("results") {
+            s.results_dir = PathBuf::from(dir);
+        }
+        s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
+        s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
+        s.offload_cost = args.get_num("o", s.offload_cost).map_err(anyhow::Error::msg)?;
+        s.reps = args.get_num("reps", s.reps).map_err(anyhow::Error::msg)?;
+        s.seed = args.get_num("seed", s.seed).map_err(anyhow::Error::msg)?;
+        if args.has("quiet") {
+            s.verbosity = 0;
+        } else if args.has("debug") {
+            s.verbosity = 2;
+        }
+        if s.mu < 0.0 {
+            bail!("--mu must be non-negative, got {}", s.mu);
+        }
+        if s.reps == 0 {
+            bail!("--reps must be positive");
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> String {
+        r#"{
+ "batch_sizes": [1, 8],
+ "cache_batch": 32,
+ "datasets": {
+  "imdb": {"file": "data/imdb.bin", "classes": 2, "samples": 100,
+           "role": "eval", "family": "sentiment", "paper_name": "IMDb",
+           "paper_samples": 25000, "source": "sst2"},
+  "sst2": {"file": "data/sst2.bin", "classes": 2, "samples": 50,
+           "role": "source", "family": "sentiment", "paper_name": "SST-2",
+           "paper_samples": 68000}
+ },
+ "hlo": {"block": {"1": "hlo/block_b1.hlo.txt", "8": "hlo/block_b8.hlo.txt"}},
+ "model": {"vocab": 1024, "seq_len": 32, "d_model": 64, "n_heads": 4,
+           "d_ff": 128, "n_layers": 12},
+ "quick": true,
+ "tasks": {
+  "sst2": {"classes": 2, "alpha": 0.86, "tau": 0.35,
+           "weights": {"elasticbert": "weights/sst2_elasticbert.bin"},
+           "val_acc_per_exit": [0.9, 0.95]}
+ }
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let v = json::parse(&sample_manifest_json()).unwrap();
+        let m = Manifest::from_json(PathBuf::from("/tmp/a"), &v).unwrap();
+        assert_eq!(m.model.n_layers, 12);
+        assert_eq!(m.batch_sizes, vec![1, 8]);
+        assert!(m.quick);
+        assert_eq!(m.task("sst2").unwrap().alpha, 0.86);
+        assert_eq!(m.dataset("imdb").unwrap().source.as_deref(), Some("sst2"));
+        assert_eq!(m.source_task("imdb").unwrap().name, "sst2");
+        assert_eq!(
+            m.hlo_path("block", 8).unwrap(),
+            PathBuf::from("/tmp/a/hlo/block_b8.hlo.txt")
+        );
+        assert!(m.hlo_path("block", 4).is_err());
+        assert!(m.hlo_path("nope", 1).is_err());
+        assert_eq!(m.eval_datasets(), vec!["imdb".to_string()]);
+    }
+
+    #[test]
+    fn settings_defaults_match_paper() {
+        let s = Settings::default();
+        assert_eq!(s.mu, 0.1);
+        assert_eq!(s.beta, 1.0);
+        assert_eq!(s.offload_cost, 5.0);
+        assert_eq!(s.reps, 20);
+    }
+
+    #[test]
+    fn settings_overrides() {
+        let args = Args::parse(
+            ["x", "--mu", "0.2", "--reps", "5", "--o", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let s = Settings::from_args(&args).unwrap();
+        assert_eq!(s.mu, 0.2);
+        assert_eq!(s.reps, 5);
+        assert_eq!(s.offload_cost, 3.0);
+    }
+
+    #[test]
+    fn settings_rejects_bad_values() {
+        let args = Args::parse(["x", "--reps", "0"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
+        let args = Args::parse(["x", "--mu", "-1"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
+    }
+}

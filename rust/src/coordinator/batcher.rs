@@ -1,0 +1,259 @@
+//! Dynamic batcher: groups router requests into batches matched to the
+//! compiled PJRT batch sizes.
+//!
+//! Policy: wait up to `max_wait` for the preferred (largest compiled) batch
+//! to fill; on timeout, emit whatever is queued using the best-fitting
+//! compiled size (padding the tail).  Order is preserved; padding rows are
+//! marked so replies are only sent for real requests.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::{Request, Router};
+use crate::model::plan_batches;
+use crate::tensor::TensorI32;
+
+/// Batcher parameters.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// compiled batch sizes (from the manifest)
+    pub batch_sizes: Vec<usize>,
+    /// how long to wait for a full preferred batch
+    pub max_wait: Duration,
+}
+
+impl BatcherConfig {
+    pub fn preferred(&self) -> usize {
+        *self.batch_sizes.iter().max().expect("batch sizes")
+    }
+}
+
+/// A formed batch: the padded token tensor plus the real requests.
+#[derive(Debug)]
+pub struct Batch {
+    /// [B, T] where B is a compiled batch size (>= requests.len())
+    pub tokens: TensorI32,
+    /// the real requests, in arrival order (len <= B)
+    pub requests: Vec<Request>,
+    /// compiled batch size used
+    pub padded_to: usize,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn real_len(&self) -> usize {
+        self.requests.len()
+    }
+}
+
+/// Pulls from the router and forms batches.
+pub struct Batcher {
+    router: Arc<Router>,
+    config: BatcherConfig,
+    /// batches already formed but not yet handed out (form_all can yield
+    /// several batches from one router pull)
+    pending: std::collections::VecDeque<Batch>,
+}
+
+impl Batcher {
+    pub fn new(router: Arc<Router>, config: BatcherConfig) -> Batcher {
+        assert!(!config.batch_sizes.is_empty());
+        Batcher { router, config, pending: std::collections::VecDeque::new() }
+    }
+
+    /// Form the next batch.  Returns None when the router is shut down and
+    /// drained.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if let Some(b) = self.pending.pop_front() {
+            return Some(b);
+        }
+        let preferred = self.config.preferred();
+        let deadline = Instant::now() + self.config.max_wait;
+
+        // Block for the first request (or shutdown).
+        let mut got = self.router.pull(preferred);
+        if got.is_empty() {
+            return None; // shut down and drained
+        }
+        // Top up until the preferred size or the deadline.
+        while got.len() < preferred && Instant::now() < deadline {
+            if !self.router.is_accepting() && self.router.queued() == 0 {
+                break;
+            }
+            let more = self.router.try_pull(preferred - got.len());
+            if more.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            } else {
+                got.extend(more);
+            }
+        }
+        self.pending = Self::form_all(got, &self.config.batch_sizes).into();
+        self.pending.pop_front()
+    }
+
+    /// Deterministic batch formation covering *every* request (exposed for
+    /// tests and for the experiment harness): follows [`plan_batches`] so
+    /// each produced batch uses a compiled size, padding only the tail.
+    pub fn form_all(requests: Vec<Request>, batch_sizes: &[usize]) -> Vec<Batch> {
+        assert!(!requests.is_empty());
+        let n = requests.len();
+        let plan = plan_batches(n, batch_sizes);
+        let mut out = Vec::with_capacity(plan.len());
+        let mut rest = requests;
+        for (bsz, real) in plan {
+            let tail = rest.split_off(real.min(rest.len()));
+            let head = std::mem::replace(&mut rest, tail);
+            let rows: Vec<&TensorI32> = head.iter().map(|r| &r.tokens).collect();
+            let tokens = TensorI32::concat_rows(&rows).expect("batch concat");
+            let tokens = tokens.pad_rows_to(bsz).expect("batch pad");
+            out.push(Batch {
+                tokens,
+                requests: head,
+                padded_to: bsz,
+                formed_at: Instant::now(),
+            });
+        }
+        debug_assert!(rest.is_empty());
+        debug_assert_eq!(out.iter().map(|b| b.real_len()).sum::<usize>(), n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::router::RouterConfig;
+    use crate::util::rng::Rng;
+    use std::sync::mpsc;
+
+    fn request(id_marker: i32) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id: id_marker as u64,
+            tokens: TensorI32::new(vec![1, 4], vec![id_marker; 4]).unwrap(),
+            submitted_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn form_exact_batch() {
+        let reqs: Vec<Request> = (0..8).map(request).collect();
+        let bs = Batcher::form_all(reqs, &[1, 8]);
+        assert_eq!(bs.len(), 1);
+        let b = &bs[0];
+        assert_eq!(b.padded_to, 8);
+        assert_eq!(b.real_len(), 8);
+        assert_eq!(b.tokens.shape(), &[8, 4]);
+        for (i, r) in b.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64); // order preserved
+        }
+    }
+
+    #[test]
+    fn form_pads_small_batch() {
+        let reqs: Vec<Request> = (0..3).map(request).collect();
+        let bs = Batcher::form_all(reqs, &[8]);
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].padded_to, 8);
+        assert_eq!(bs[0].real_len(), 3);
+        assert_eq!(bs[0].tokens.shape(), &[8, 4]);
+        // padding repeats the last real row
+        assert_eq!(bs[0].tokens.at(&[7, 0]).unwrap(), 2);
+    }
+
+    #[test]
+    fn form_splits_overflow_into_multiple_batches() {
+        let reqs: Vec<Request> = (0..11).map(request).collect();
+        let bs = Batcher::form_all(reqs, &[1, 8]);
+        let total: usize = bs.iter().map(|b| b.real_len()).sum();
+        assert_eq!(total, 11);
+        assert_eq!(bs[0].padded_to, 8);
+        // ids across batches: 0..11 in order
+        let ids: Vec<u64> = bs.iter().flat_map(|b| b.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, (0..11).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn form_single() {
+        let bs = Batcher::form_all(vec![request(9)], &[1, 8]);
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].padded_to, 1);
+        assert_eq!(bs[0].tokens.shape(), &[1, 4]);
+    }
+
+    #[test]
+    fn batcher_drains_router_end_to_end() {
+        let router = Router::new(RouterConfig::default());
+        let mut batcher = Batcher::new(
+            Arc::clone(&router),
+            BatcherConfig { batch_sizes: vec![1, 8], max_wait: Duration::from_millis(5) },
+        );
+        let (tx, _rx) = mpsc::channel();
+        for _ in 0..20 {
+            router.submit(TensorI32::zeros(vec![1, 4]), tx.clone());
+        }
+        router.shutdown();
+        let mut total = 0;
+        let mut ids = Vec::new();
+        while let Some(b) = batcher.next_batch() {
+            total += b.real_len();
+            ids.extend(b.requests.iter().map(|r| r.id));
+            assert!(b.padded_to == 1 || b.padded_to == 8);
+        }
+        assert_eq!(total, 20);
+        // every id exactly once, in order
+        assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn property_batching_preserves_every_request() {
+        // property test: arbitrary request counts and batch-size menus
+        crate::util::prop::quickcheck(
+            |rng: &mut Rng, size| {
+                let n = 1 + rng.below(size as u64 * 2 + 1) as usize;
+                let menu = match rng.below(3) {
+                    0 => vec![1, 8],
+                    1 => vec![4],
+                    _ => vec![2, 16],
+                };
+                (n, menu)
+            },
+            |(n, menu)| {
+                let reqs: Vec<Request> = (0..*n as i32).map(request).collect();
+                let bs = Batcher::form_all(reqs, menu);
+                let mut seen = Vec::new();
+                for b in &bs {
+                    if b.requests.is_empty() {
+                        return Err("empty batch".into());
+                    }
+                    if b.tokens.shape()[0] != b.padded_to {
+                        return Err(format!(
+                            "padded shape {:?} != {}",
+                            b.tokens.shape(),
+                            b.padded_to
+                        ));
+                    }
+                    if !menu.contains(&b.padded_to) {
+                        return Err(format!("{} not a compiled size", b.padded_to));
+                    }
+                    // padded rows replicate the last real row's tokens
+                    let last_real = b.requests.len() - 1;
+                    for pad_row in b.requests.len()..b.padded_to {
+                        if b.tokens.at(&[pad_row, 0]).unwrap()
+                            != b.tokens.at(&[last_real, 0]).unwrap()
+                        {
+                            return Err("padding does not replicate last row".into());
+                        }
+                    }
+                    seen.extend(b.requests.iter().map(|r| r.id));
+                }
+                let expected: Vec<u64> = (0..*n as u64).collect();
+                if seen != expected {
+                    return Err(format!("seen {seen:?} expected {expected:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

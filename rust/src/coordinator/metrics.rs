@@ -1,0 +1,169 @@
+//! Serving metrics: latency, throughput, exit-layer distribution, offload
+//! rate, cost accounting — everything `splitee serve` reports.
+
+use std::time::Instant;
+
+use crate::util::stats::{LatencyHistogram, Welford};
+
+/// Aggregated metrics for a serving session.
+#[derive(Debug)]
+pub struct ServingMetrics {
+    started: Instant,
+    pub latency: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub cost_lambda: Welford,
+    pub energy: Welford,
+    /// requests answered at each (1-based) layer
+    pub per_layer: Vec<u64>,
+    pub served: u64,
+    pub offloaded: u64,
+    pub outage_fallbacks: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+}
+
+impl ServingMetrics {
+    pub fn new(n_layers: usize) -> ServingMetrics {
+        ServingMetrics {
+            started: Instant::now(),
+            latency: LatencyHistogram::new(),
+            queue_wait: LatencyHistogram::new(),
+            cost_lambda: Welford::new(),
+            energy: Welford::new(),
+            per_layer: vec![0; n_layers + 1], // index 1..=L
+            served: 0,
+            offloaded: 0,
+            outage_fallbacks: 0,
+            batches: 0,
+            padded_rows: 0,
+        }
+    }
+
+    pub fn record_request(
+        &mut self,
+        infer_layer: usize,
+        offloaded: bool,
+        outage: bool,
+        latency_ms: f64,
+        queue_wait_ms: f64,
+        cost: f64,
+        energy: f64,
+    ) {
+        self.served += 1;
+        if offloaded {
+            self.offloaded += 1;
+        }
+        if outage {
+            self.outage_fallbacks += 1;
+        }
+        if infer_layer < self.per_layer.len() {
+            self.per_layer[infer_layer] += 1;
+        }
+        self.latency.record_us(latency_ms * 1e3);
+        self.queue_wait.record_us(queue_wait_ms * 1e3);
+        self.cost_lambda.push(cost);
+        self.energy.push(energy);
+    }
+
+    pub fn record_batch(&mut self, real: usize, padded_to: usize) {
+        self.batches += 1;
+        self.padded_rows += (padded_to - real) as u64;
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64();
+        if secs > 0.0 {
+            self.served as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn offload_rate(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.offloaded as f64 / self.served as f64
+        }
+    }
+
+    /// Multi-line human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "served {} requests in {} batches ({:.1} req/s, {:.1}% padding)\n",
+            self.served,
+            self.batches,
+            self.throughput_rps(),
+            100.0 * self.padded_rows as f64
+                / ((self.served + self.padded_rows).max(1)) as f64,
+        ));
+        out.push_str(&format!(
+            "latency  p50 {:.2} ms   p99 {:.2} ms   mean {:.2} ms   max {:.2} ms\n",
+            self.latency.percentile_us(50.0) / 1e3,
+            self.latency.percentile_us(99.0) / 1e3,
+            self.latency.mean_us() / 1e3,
+            self.latency.max_us() / 1e3,
+        ));
+        out.push_str(&format!(
+            "queue    p50 {:.2} ms   p99 {:.2} ms\n",
+            self.queue_wait.percentile_us(50.0) / 1e3,
+            self.queue_wait.percentile_us(99.0) / 1e3,
+        ));
+        out.push_str(&format!(
+            "cost     mean {:.3} lambda/request   energy mean {:.3}\n",
+            self.cost_lambda.mean(),
+            self.energy.mean(),
+        ));
+        out.push_str(&format!(
+            "offload  {:.1}%   outage fallbacks {}\n",
+            100.0 * self.offload_rate(),
+            self.outage_fallbacks,
+        ));
+        out.push_str("exit layers: ");
+        for (layer, &count) in self.per_layer.iter().enumerate().skip(1) {
+            if count > 0 {
+                out.push_str(&format!("L{layer}:{count} "));
+            }
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = ServingMetrics::new(12);
+        m.record_request(3, false, false, 5.0, 0.5, 2.7, 2.7, );
+        m.record_request(12, true, false, 20.0, 1.0, 7.6, 5.1);
+        m.record_batch(2, 8);
+        assert_eq!(m.served, 2);
+        assert_eq!(m.offloaded, 1);
+        assert_eq!(m.per_layer[3], 1);
+        assert_eq!(m.per_layer[12], 1);
+        assert_eq!(m.padded_rows, 6);
+        assert!((m.offload_rate() - 0.5).abs() < 1e-12);
+        assert!((m.cost_lambda.mean() - 5.15).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_contains_key_lines() {
+        let mut m = ServingMetrics::new(12);
+        m.record_request(5, false, false, 1.0, 0.1, 1.0, 1.0);
+        let r = m.report();
+        assert!(r.contains("latency"));
+        assert!(r.contains("offload"));
+        assert!(r.contains("L5:1"));
+    }
+
+    #[test]
+    fn empty_metrics_do_not_divide_by_zero() {
+        let m = ServingMetrics::new(12);
+        assert_eq!(m.offload_rate(), 0.0);
+        let _ = m.report();
+    }
+}

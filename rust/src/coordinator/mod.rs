@@ -1,0 +1,24 @@
+//! The serving coordinator — the system around the paper's algorithm.
+//!
+//! Request flow:
+//!
+//! ```text
+//!     client -> Router (admission, backpressure)
+//!            -> Batcher (dynamic batching to compiled batch sizes)
+//!            -> Service (policy decides split; edge/cloud pipeline runs it)
+//!            -> reply channels
+//! ```
+//!
+//! The split-layer decision is *distribution-level* (one bandit per
+//! deployment, as in the paper), so a whole batch shares the chosen split;
+//! the exit-or-offload decision is per sample.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod service;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use metrics::ServingMetrics;
+pub use router::{Request, Response, Router, RouterConfig};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,272 @@
+//! The serving loop: policy-driven split execution over dynamic batches.
+//!
+//! One `Service` owns the model, the edge/cloud/link simulators, the bandit
+//! policy and the metrics.  The split-layer choice is per *batch* (the
+//! bandit's decision is distribution-level, exactly as in the paper — one
+//! deployment has one split); exit-or-offload is per sample; the bandit is
+//! updated once per sample with the realised reward.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::router::{Response, Router};
+use crate::cost::CostModel;
+use crate::model::{plan_batches, MultiExitModel};
+use crate::policy::{SplitEePolicy, SplitEeSPolicy};
+use crate::sim::device::{CloudSim, EdgeSim};
+use crate::sim::link::{LinkSim, TransferResult};
+use crate::tensor::TensorF32;
+
+/// Which split policy drives the service.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// UCB over split layers, single-head inference (Algorithm 1)
+    SplitEe,
+    /// UCB with side observations (section 4.2)
+    SplitEeS,
+    /// fixed split layer (1-based)
+    Fixed(usize),
+    /// no split: every sample to the final layer on-device
+    FinalExit,
+}
+
+/// Service parameters.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub policy: PolicyKind,
+    /// exit threshold alpha (from the manifest's calibrated value)
+    pub alpha: f64,
+    /// UCB exploration parameter
+    pub beta: f64,
+    pub batcher: BatcherConfig,
+}
+
+/// Policy state held by the service.
+enum PolicyState {
+    SplitEe(SplitEePolicy),
+    SplitEeS(SplitEeSPolicy),
+    Fixed(usize),
+    FinalExit,
+}
+
+/// The serving engine.
+pub struct Service {
+    model: Arc<MultiExitModel>,
+    cost: CostModel,
+    pub edge: EdgeSim,
+    pub cloud: CloudSim,
+    pub link: LinkSim,
+    policy: PolicyState,
+    alpha: f64,
+    pub metrics: ServingMetrics,
+}
+
+impl Service {
+    pub fn new(
+        model: Arc<MultiExitModel>,
+        cost: CostModel,
+        link: LinkSim,
+        config: &ServiceConfig,
+    ) -> Service {
+        let l = model.n_layers();
+        let policy = match config.policy {
+            PolicyKind::SplitEe => {
+                PolicyState::SplitEe(SplitEePolicy::new(l, config.alpha, config.beta))
+            }
+            PolicyKind::SplitEeS => {
+                PolicyState::SplitEeS(SplitEeSPolicy::new(l, config.alpha, config.beta))
+            }
+            PolicyKind::Fixed(k) => PolicyState::Fixed(k.clamp(1, l)),
+            PolicyKind::FinalExit => PolicyState::FinalExit,
+        };
+        Service {
+            metrics: ServingMetrics::new(l),
+            model,
+            cost,
+            edge: EdgeSim::default(),
+            cloud: CloudSim::default(),
+            link,
+            policy,
+            alpha: config.alpha,
+        }
+    }
+
+    fn choose_split(&mut self) -> usize {
+        match &mut self.policy {
+            PolicyState::SplitEe(p) => p.choose_split(),
+            PolicyState::SplitEeS(p) => p.choose_split(),
+            PolicyState::Fixed(k) => *k,
+            PolicyState::FinalExit => self.model.n_layers(),
+        }
+    }
+
+    fn side_info(&self) -> bool {
+        matches!(self.policy, PolicyState::SplitEeS(_))
+    }
+
+    /// Run the blocking serve loop until the router is shut down + drained.
+    pub fn run(&mut self, router: Arc<Router>, batcher_config: BatcherConfig) -> Result<()> {
+        let mut batcher = Batcher::new(router, batcher_config);
+        while let Some(batch) = batcher.next_batch() {
+            self.serve_batch(batch)?;
+        }
+        Ok(())
+    }
+
+    /// Serve one formed batch.
+    pub fn serve_batch(&mut self, batch: Batch) -> Result<()> {
+        let l = self.model.n_layers();
+        let n_real = batch.real_len();
+        let split = self.choose_split();
+        let side = self.side_info();
+        self.metrics.record_batch(n_real, batch.padded_to);
+
+        // ---- edge share (real PJRT compute on the padded batch)
+        let t0 = Instant::now();
+        let mut h = self.model.embed(&batch.tokens)?;
+        let mut prefix_conf: Vec<Vec<f32>> = Vec::new(); // per layer, per row
+        for layer in 0..split {
+            h = self.model.block(&h, layer)?;
+            if side && layer + 1 < split {
+                prefix_conf.push(self.model.exit_head(&h, layer)?.conf);
+            }
+        }
+        let exit_out = self.model.exit_head(&h, split - 1)?;
+        let edge_ms = self.edge.simulated_ms(t0.elapsed().as_secs_f64() * 1e3);
+
+        // ---- per-sample exit-or-offload
+        let mut offload_rows: Vec<usize> = Vec::new();
+        for row in 0..n_real {
+            let conf = exit_out.conf[row] as f64;
+            if conf < self.alpha && split < l {
+                offload_rows.push(row);
+            }
+        }
+
+        // ---- cloud share for the offloaded subset
+        let mut final_preds: Vec<(usize, usize, f32, f64, bool)> = Vec::new();
+        // (row, pred, conf, extra_latency_ms, outage)
+        if !offload_rows.is_empty() {
+            let payload = LinkSim::activation_payload(self.model.seq_len(), h.shape()[2]);
+            // gather offloaded rows of h into a contiguous tensor
+            let rows: Vec<TensorF32> = offload_rows
+                .iter()
+                .map(|&r| h.slice_rows(r, r + 1).expect("row slice"))
+                .collect();
+            let row_refs: Vec<&TensorF32> = rows.iter().collect();
+            let gathered = TensorF32::concat_rows(&row_refs).expect("gather");
+            let plan = plan_batches(offload_rows.len(), self.model.batch_sizes());
+            let mut done = 0usize;
+            for (bsz, real) in plan {
+                let chunk = gathered
+                    .slice_rows(done, done + real)
+                    .expect("chunk")
+                    .pad_rows_to(bsz)
+                    .expect("pad");
+                let t1 = Instant::now();
+                let h_final = self.model.forward_rest(&chunk, split - 1)?;
+                let out = self.model.exit_head(&h_final, l - 1)?;
+                let cloud_ms = self.cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
+                for i in 0..real {
+                    let row = offload_rows[done + i];
+                    match self.link.transfer(payload) {
+                        TransferResult::Delivered { ms, .. } => {
+                            final_preds.push((row, out.pred[i], out.conf[i], ms + cloud_ms, false));
+                        }
+                        TransferResult::Outage => {
+                            // fall back: the cloud result is unreachable; the
+                            // edge must finish locally (same numbers, edge
+                            // timing, no offload charge)
+                            let local_ms = self.edge.simulated_ms(cloud_ms / self.cloud.compute_scale.max(1e-9));
+                            final_preds.push((row, out.pred[i], out.conf[i], local_ms, true));
+                        }
+                    }
+                }
+                done += real;
+            }
+        }
+
+        // ---- replies + policy updates + metrics
+        let mut final_by_row = vec![None; n_real];
+        for (row, pred, conf, extra_ms, outage) in final_preds {
+            final_by_row[row] = Some((pred, conf, extra_ms, outage));
+        }
+        for (row, req) in batch.requests.iter().enumerate() {
+            let queue_ms = batch
+                .formed_at
+                .duration_since(req.submitted_at)
+                .as_secs_f64()
+                * 1e3;
+            let (infer_layer, pred, conf, offloaded, outage, extra_ms) = match &final_by_row[row]
+            {
+                Some((pred, conf, extra_ms, outage)) => {
+                    (l, *pred, *conf, !*outage, *outage, *extra_ms)
+                }
+                None => (split, exit_out.pred[row], exit_out.conf[row], false, false, 0.0),
+            };
+            let latency = queue_ms + edge_ms + extra_ms;
+            let (cost, energy, reward) = if outage {
+                let gamma = self.cost.compute_cost_cascade(l);
+                (gamma, self.edge.energy(gamma, false), self.cost.reward_exit(l, conf as f64, side))
+            } else if offloaded {
+                (
+                    self.cost.total_cost(split, true, side),
+                    self.edge.energy(self.cost.gamma(split, side), true),
+                    self.cost.reward_offload(split, conf as f64, side),
+                )
+            } else {
+                (
+                    self.cost.total_cost(split, false, side),
+                    self.edge.energy(self.cost.gamma(split, side), false),
+                    self.cost.reward_exit(split, exit_out.conf[row] as f64, side),
+                )
+            };
+
+            match &mut self.policy {
+                PolicyState::SplitEe(p) => p.record(split, reward),
+                PolicyState::SplitEeS(p) => {
+                    let mut prefix: Vec<f32> =
+                        prefix_conf.iter().map(|layer| layer[row]).collect();
+                    prefix.push(exit_out.conf[row]);
+                    let conf_final = offloaded.then_some(conf as f64);
+                    p.record_prefix(&self.cost, &prefix, conf_final);
+                }
+                _ => {}
+            }
+
+            self.metrics.record_request(
+                infer_layer,
+                offloaded,
+                outage,
+                latency,
+                queue_ms,
+                cost,
+                energy,
+            );
+            let _ = req.reply.send(Response {
+                id: req.id,
+                prediction: pred,
+                confidence: conf,
+                infer_layer,
+                offloaded,
+                latency_ms: latency,
+            });
+        }
+        Ok(())
+    }
+
+    /// Current bandit state summary, if the policy is a bandit.
+    pub fn bandit_summary(&self) -> Option<(usize, Vec<(u64, f64)>)> {
+        let ucb = match &self.policy {
+            PolicyState::SplitEe(p) => p.ucb(),
+            PolicyState::SplitEeS(p) => p.ucb(),
+            _ => return None,
+        };
+        let arms = (0..ucb.k()).map(|i| (ucb.arm(i).n, ucb.arm(i).q)).collect();
+        Some((ucb.best_empirical() + 1, arms))
+    }
+}

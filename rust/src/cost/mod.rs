@@ -1,0 +1,161 @@
+//! Cost model (paper section 3) and network profiles.
+//!
+//! All costs are expressed in **lambda units**, the paper's abstract per-layer
+//! computational cost.  `lambda = lambda1 + lambda2` splits into processing
+//! (`lambda1`) and exit-head inference (`lambda2 = lambda1 / 6` — the paper
+//! counts 5 matmuls to process a layer and 1 to infer).  Offloading costs
+//! `o ∈ {1..5} * lambda` depending on the network generation.
+
+pub mod network;
+
+pub use network::NetworkProfile;
+
+/// The paper's cost/reward model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// per-layer total cost lambda (paper sets 1.0 wlog)
+    pub lambda: f64,
+    /// per-layer processing share (5/6 lambda)
+    pub lambda1: f64,
+    /// per-exit inference share (1/6 lambda)
+    pub lambda2: f64,
+    /// offloading cost o, in the same units
+    pub offload: f64,
+    /// confidence<->cost conversion factor mu (paper: 0.1)
+    pub mu: f64,
+    /// number of layers L
+    pub n_layers: usize,
+}
+
+impl CostModel {
+    /// Paper configuration: `lambda = 1`, `lambda2 = lambda1 / 6`.
+    pub fn paper(offload_lambda: f64, mu: f64, n_layers: usize) -> CostModel {
+        let lambda = 1.0;
+        let lambda1 = lambda * 6.0 / 7.0;
+        let lambda2 = lambda / 7.0;
+        CostModel { lambda, lambda1, lambda2, offload: offload_lambda * lambda, mu, n_layers }
+    }
+
+    /// Computation cost of processing up to layer `i` (1-based) and running
+    /// a *single* exit head there — the SplitEE variant's cost
+    /// (`lambda1 * i + lambda2`).
+    pub fn compute_cost_splitee(&self, layer_1based: usize) -> f64 {
+        self.lambda1 * layer_1based as f64 + self.lambda2
+    }
+
+    /// Computation cost of processing up to layer `i` (1-based) evaluating
+    /// *every* exit head on the way — the SplitEE-S variant and the
+    /// DeeBERT/ElasticBERT threshold cascades (`lambda * i`).
+    pub fn compute_cost_cascade(&self, layer_1based: usize) -> f64 {
+        self.lambda * layer_1based as f64
+    }
+
+    /// Reward (paper eq. 1) when the sample **exits** at split layer `i`
+    /// (1-based) with confidence `conf_i`.  `side_info` selects the cascade
+    /// cost (SplitEE-S) vs the single-head cost (SplitEE).
+    pub fn reward_exit(&self, layer_1based: usize, conf_i: f64, side_info: bool) -> f64 {
+        conf_i - self.mu * self.gamma(layer_1based, side_info)
+    }
+
+    /// Reward (paper eq. 1) when the sample is **offloaded** from split layer
+    /// `i` and infers at the final layer with confidence `conf_l`.
+    pub fn reward_offload(&self, layer_1based: usize, conf_l: f64, side_info: bool) -> f64 {
+        conf_l - self.mu * (self.gamma(layer_1based, side_info) + self.offload)
+    }
+
+    /// gamma_i: computation cost charged at split layer `i` (1-based).
+    pub fn gamma(&self, layer_1based: usize, side_info: bool) -> f64 {
+        if side_info {
+            self.compute_cost_cascade(layer_1based)
+        } else {
+            self.compute_cost_splitee(layer_1based)
+        }
+    }
+
+    /// Cost actually *accumulated* for a sample: computation at the split +
+    /// offload cost if it was offloaded.  This is what Table 2 / Figures 4, 6
+    /// total (in lambda units).
+    pub fn total_cost(&self, layer_1based: usize, offloaded: bool, side_info: bool) -> f64 {
+        self.gamma(layer_1based, side_info) + if offloaded { self.offload } else { 0.0 }
+    }
+
+    /// Cost of the final-exit baseline: every sample through all L layers.
+    pub fn final_exit_cost(&self) -> f64 {
+        self.lambda * self.n_layers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::paper(5.0, 0.1, 12)
+    }
+
+    #[test]
+    fn lambda_split_matches_paper_ratio() {
+        let c = cm();
+        assert!((c.lambda1 + c.lambda2 - c.lambda).abs() < 1e-12);
+        assert!((c.lambda2 - c.lambda1 / 6.0).abs() < 1e-12, "lambda2 = lambda1/6");
+    }
+
+    #[test]
+    fn splitee_cost_cheaper_than_cascade() {
+        let c = cm();
+        for i in 2..=12 {
+            assert!(c.compute_cost_splitee(i) < c.compute_cost_cascade(i));
+        }
+        // at layer 1 both run exactly one head: identical cost
+        assert!((c.compute_cost_splitee(1) - c.compute_cost_cascade(1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reward_exit_matches_eq1() {
+        let c = cm();
+        // r(i) = C_i - mu * gamma_i
+        let r = c.reward_exit(4, 0.9, false);
+        let expected = 0.9 - 0.1 * (c.lambda1 * 4.0 + c.lambda2);
+        assert!((r - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reward_offload_matches_eq1() {
+        let c = cm();
+        // r(i) = C_L - mu * (gamma_i + o)
+        let r = c.reward_offload(4, 0.95, false);
+        let expected = 0.95 - 0.1 * (c.lambda1 * 4.0 + c.lambda2 + 5.0);
+        assert!((r - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offload_is_charged_in_total_cost() {
+        let c = cm();
+        let exit = c.total_cost(3, false, false);
+        let off = c.total_cost(3, true, false);
+        assert!((off - exit - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn final_exit_cost_is_lambda_l() {
+        assert!((cm().final_exit_cost() - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deeper_exit_costs_more() {
+        let c = cm();
+        for i in 1..12 {
+            assert!(c.compute_cost_splitee(i) < c.compute_cost_splitee(i + 1));
+            assert!(c.compute_cost_cascade(i) < c.compute_cost_cascade(i + 1));
+        }
+    }
+
+    #[test]
+    fn paper_observation_layer6_crossover() {
+        // Section 5.4: processing beyond layer 6 costs more than the
+        // worst-case offload (o = 5 lambda).
+        let c = cm();
+        assert!(c.compute_cost_cascade(6) > c.offload);
+        assert!(c.compute_cost_cascade(5) <= c.offload);
+    }
+}

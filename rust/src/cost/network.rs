@@ -1,0 +1,137 @@
+//! Network profiles: map communication technology to the paper's offloading
+//! cost `o` and to simulated link behaviour for the serving-path simulator.
+//!
+//! The paper treats `o` as user-defined, bounded by ~5x the per-layer
+//! computational cost across 3G/4G/5G/Wi-Fi (section 5.2, citing Kuang et
+//! al. for the cost calculus).  The simulator additionally needs latency and
+//! bandwidth figures; these are representative uplink numbers for each
+//! generation, used only for wall-clock serving metrics — the paper's
+//! tables/figures are all in lambda units and do not depend on them.
+
+/// A communication technology between edge and cloud.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetworkKind {
+    WiFi,
+    FiveG,
+    FourG,
+    ThreeG,
+}
+
+/// Link model: paper-cost plus simulator latency/bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkProfile {
+    pub kind: NetworkKind,
+    /// offloading cost in lambda units (paper's o)
+    pub offload_lambda: f64,
+    /// one-way base latency, milliseconds
+    pub base_latency_ms: f64,
+    /// uplink bandwidth, megabits/s
+    pub uplink_mbps: f64,
+    /// probability a transfer needs a retransmission (failure injection)
+    pub loss_rate: f64,
+}
+
+impl NetworkProfile {
+    pub fn wifi() -> NetworkProfile {
+        NetworkProfile {
+            kind: NetworkKind::WiFi,
+            offload_lambda: 1.0,
+            base_latency_ms: 2.0,
+            uplink_mbps: 100.0,
+            loss_rate: 0.001,
+        }
+    }
+
+    pub fn five_g() -> NetworkProfile {
+        NetworkProfile {
+            kind: NetworkKind::FiveG,
+            offload_lambda: 2.0,
+            base_latency_ms: 10.0,
+            uplink_mbps: 50.0,
+            loss_rate: 0.005,
+        }
+    }
+
+    pub fn four_g() -> NetworkProfile {
+        NetworkProfile {
+            kind: NetworkKind::FourG,
+            offload_lambda: 3.5,
+            base_latency_ms: 35.0,
+            uplink_mbps: 10.0,
+            loss_rate: 0.01,
+        }
+    }
+
+    pub fn three_g() -> NetworkProfile {
+        NetworkProfile {
+            kind: NetworkKind::ThreeG,
+            offload_lambda: 5.0,
+            base_latency_ms: 100.0,
+            uplink_mbps: 1.5,
+            loss_rate: 0.03,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<NetworkProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "wifi" => Some(Self::wifi()),
+            "5g" | "fiveg" => Some(Self::five_g()),
+            "4g" | "fourg" => Some(Self::four_g()),
+            "3g" | "threeg" => Some(Self::three_g()),
+            _ => None,
+        }
+    }
+
+    /// All profiles, best to worst.
+    pub fn all() -> Vec<NetworkProfile> {
+        vec![Self::wifi(), Self::five_g(), Self::four_g(), Self::three_g()]
+    }
+
+    /// Simulated one-way transfer time for a payload, in milliseconds.
+    pub fn transfer_ms(&self, payload_bytes: usize) -> f64 {
+        self.base_latency_ms + (payload_bytes as f64 * 8.0 / 1e6) / self.uplink_mbps * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offload_costs_span_paper_range() {
+        // paper: o in {lambda .. 5 lambda}
+        for p in NetworkProfile::all() {
+            assert!((1.0..=5.0).contains(&p.offload_lambda), "{:?}", p.kind);
+        }
+        assert_eq!(NetworkProfile::three_g().offload_lambda, 5.0);
+        assert_eq!(NetworkProfile::wifi().offload_lambda, 1.0);
+    }
+
+    #[test]
+    fn worse_generation_means_higher_cost_and_latency() {
+        let all = NetworkProfile::all();
+        for w in all.windows(2) {
+            assert!(w[0].offload_lambda <= w[1].offload_lambda);
+            assert!(w[0].base_latency_ms < w[1].base_latency_ms);
+            assert!(w[0].uplink_mbps > w[1].uplink_mbps);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(NetworkProfile::by_name("wifi").unwrap().kind, NetworkKind::WiFi);
+        assert_eq!(NetworkProfile::by_name("5G").unwrap().kind, NetworkKind::FiveG);
+        assert_eq!(NetworkProfile::by_name("4g").unwrap().kind, NetworkKind::FourG);
+        assert_eq!(NetworkProfile::by_name("3g").unwrap().kind, NetworkKind::ThreeG);
+        assert!(NetworkProfile::by_name("2g").is_none());
+    }
+
+    #[test]
+    fn transfer_time_scales_with_payload() {
+        let p = NetworkProfile::four_g();
+        let small = p.transfer_ms(1_000);
+        let large = p.transfer_ms(1_000_000);
+        assert!(large > small);
+        assert!(small >= p.base_latency_ms);
+    }
+}

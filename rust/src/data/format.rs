@@ -1,0 +1,213 @@
+//! SPLD dataset reader (written by `python/compile/export.py`).
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//!     u32 magic = 0x53504C44 ("SPLD")    u32 version = 1
+//!     u32 n_samples, u32 seq_len, u32 n_classes
+//!     i32 tokens[n * seq_len]
+//!     i32 labels[n]
+//!     i32 difficulty[n]
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+use crate::tensor::TensorI32;
+
+pub const DATA_MAGIC: u32 = 0x53504C44;
+pub const FORMAT_VERSION: u32 = 1;
+
+/// An evaluation or source dataset held in memory.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    /// [N, T] token ids
+    pub tokens: TensorI32,
+    /// gold labels — used only for *metrics*, never by the policies
+    /// (the paper's setup is unsupervised)
+    pub labels: Vec<i32>,
+    /// difficulty-mixture index per sample (0=easy .. 4=flip2)
+    pub difficulty: Vec<i32>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path, name: &str) -> Result<Dataset> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading dataset {path:?}"))?;
+        let mut r = std::io::Cursor::new(&bytes);
+        let magic = r.read_u32::<LittleEndian>().context("magic")?;
+        if magic != DATA_MAGIC {
+            bail!("{path:?}: bad magic {magic:#x} (expected SPLD)");
+        }
+        let version = r.read_u32::<LittleEndian>()?;
+        if version != FORMAT_VERSION {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let n = r.read_u32::<LittleEndian>()? as usize;
+        let t = r.read_u32::<LittleEndian>()? as usize;
+        let c = r.read_u32::<LittleEndian>()? as usize;
+        let mut tokens = vec![0i32; n * t];
+        r.read_i32_into::<LittleEndian>(&mut tokens)
+            .context("tokens truncated")?;
+        let mut labels = vec![0i32; n];
+        r.read_i32_into::<LittleEndian>(&mut labels)
+            .context("labels truncated")?;
+        let mut difficulty = vec![0i32; n];
+        r.read_i32_into::<LittleEndian>(&mut difficulty)
+            .context("difficulty truncated")?;
+        if (r.position() as usize) != bytes.len() {
+            bail!(
+                "{path:?}: {} trailing bytes",
+                bytes.len() - r.position() as usize
+            );
+        }
+        for &l in &labels {
+            if l < 0 || l as usize >= c {
+                bail!("{path:?}: label {l} out of range [0, {c})");
+            }
+        }
+        Ok(Dataset {
+            name: name.to_string(),
+            seq_len: t,
+            n_classes: c,
+            tokens: TensorI32::new(vec![n, t], tokens).map_err(|e| anyhow::anyhow!(e))?,
+            labels,
+            difficulty,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Tokens of one sample as a [1, T] tensor.
+    pub fn sample_tokens(&self, i: usize) -> TensorI32 {
+        self.tokens.slice_rows(i, i + 1).expect("sample index")
+    }
+
+    /// Tokens of a contiguous range as a [n, T] tensor.
+    pub fn range_tokens(&self, lo: usize, hi: usize) -> TensorI32 {
+        self.tokens.slice_rows(lo, hi).expect("range")
+    }
+
+    /// Gather rows by index (for shuffled batching).
+    pub fn gather_tokens(&self, idx: &[usize]) -> TensorI32 {
+        let t = self.seq_len;
+        let mut data = Vec::with_capacity(idx.len() * t);
+        for &i in idx {
+            let row = self.tokens.slice_rows(i, i + 1).expect("gather index");
+            data.extend_from_slice(row.data());
+        }
+        TensorI32::new(vec![idx.len(), t], data).expect("gather shape")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use byteorder::WriteBytesExt;
+
+    pub(crate) fn fake_dataset_bytes(n: usize, t: usize, c: usize) -> Vec<u8> {
+        let mut f = Vec::new();
+        f.write_u32::<LittleEndian>(DATA_MAGIC).unwrap();
+        f.write_u32::<LittleEndian>(FORMAT_VERSION).unwrap();
+        f.write_u32::<LittleEndian>(n as u32).unwrap();
+        f.write_u32::<LittleEndian>(t as u32).unwrap();
+        f.write_u32::<LittleEndian>(c as u32).unwrap();
+        for i in 0..n * t {
+            f.write_i32::<LittleEndian>((i % 100) as i32).unwrap();
+        }
+        for i in 0..n {
+            f.write_i32::<LittleEndian>((i % c) as i32).unwrap();
+        }
+        for i in 0..n {
+            f.write_i32::<LittleEndian>((i % 5) as i32).unwrap();
+        }
+        f
+    }
+
+    fn temp(bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "splitee_d_{}_{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = temp(&fake_dataset_bytes(10, 4, 3));
+        let d = Dataset::load(&path, "test").unwrap();
+        assert_eq!(d.len(), 10);
+        assert_eq!(d.seq_len, 4);
+        assert_eq!(d.n_classes, 3);
+        assert_eq!(d.tokens.shape(), &[10, 4]);
+        assert_eq!(d.labels[4], 1);
+        assert_eq!(d.sample_tokens(2).shape(), &[1, 4]);
+        assert_eq!(d.range_tokens(2, 5).shape(), &[3, 4]);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn gather_matches_slices() {
+        let path = temp(&fake_dataset_bytes(6, 3, 2));
+        let d = Dataset::load(&path, "test").unwrap();
+        let g = d.gather_tokens(&[4, 0, 2]);
+        assert_eq!(g.shape(), &[3, 3]);
+        assert_eq!(g.slice_rows(0, 1).unwrap(), d.sample_tokens(4));
+        assert_eq!(g.slice_rows(1, 2).unwrap(), d.sample_tokens(0));
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = fake_dataset_bytes(2, 2, 2);
+        bytes[0] ^= 0xFF;
+        let path = temp(&bytes);
+        assert!(Dataset::load(&path, "x").is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut bytes = fake_dataset_bytes(4, 4, 2);
+        bytes.truncate(bytes.len() - 3);
+        let path = temp(&bytes);
+        assert!(Dataset::load(&path, "x").is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_out_of_range_labels() {
+        let n = 2;
+        let t = 2;
+        let mut f = Vec::new();
+        f.write_u32::<LittleEndian>(DATA_MAGIC).unwrap();
+        f.write_u32::<LittleEndian>(FORMAT_VERSION).unwrap();
+        f.write_u32::<LittleEndian>(n).unwrap();
+        f.write_u32::<LittleEndian>(t).unwrap();
+        f.write_u32::<LittleEndian>(2).unwrap();
+        for _ in 0..n * t {
+            f.write_i32::<LittleEndian>(0).unwrap();
+        }
+        f.write_i32::<LittleEndian>(0).unwrap();
+        f.write_i32::<LittleEndian>(5).unwrap(); // label out of range
+        for _ in 0..n {
+            f.write_i32::<LittleEndian>(0).unwrap();
+        }
+        let path = temp(&f);
+        assert!(Dataset::load(&path, "x").is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

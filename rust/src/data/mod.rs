@@ -1,0 +1,10 @@
+//! Dataset substrate: binary readers for the AOT-exported corpora, online
+//! sample streams, and a rust-side synthetic generator for tests that must
+//! run without artifacts.
+
+pub mod format;
+pub mod stream;
+pub mod synth;
+
+pub use format::Dataset;
+pub use stream::SampleStream;

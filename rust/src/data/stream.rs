@@ -1,0 +1,116 @@
+//! Online sample stream: the paper's setting feeds samples one by one, in a
+//! random order that is reshuffled per repetition.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// A shuffled pass over a dataset, yielding sample indices online.
+#[derive(Debug, Clone)]
+pub struct SampleStream {
+    order: Vec<usize>,
+    pos: usize,
+}
+
+impl SampleStream {
+    /// Shuffled stream over the whole dataset.
+    pub fn shuffled(dataset: &Dataset, rng: &mut Rng) -> SampleStream {
+        SampleStream { order: rng.permutation(dataset.len()), pos: 0 }
+    }
+
+    /// In-order stream (for deterministic tests).
+    pub fn sequential(n: usize) -> SampleStream {
+        SampleStream { order: (0..n).collect(), pos: 0 }
+    }
+
+    /// Stream over an explicit index set.
+    pub fn from_order(order: Vec<usize>) -> SampleStream {
+        SampleStream { order, pos: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.order.len() - self.pos
+    }
+
+    /// Peek the next `k` indices without consuming (for batching).
+    pub fn peek(&self, k: usize) -> &[usize] {
+        &self.order[self.pos..(self.pos + k).min(self.order.len())]
+    }
+
+    /// Consume `k` indices.
+    pub fn take_n(&mut self, k: usize) -> &[usize] {
+        let lo = self.pos;
+        self.pos = (self.pos + k).min(self.order.len());
+        &self.order[lo..self.pos]
+    }
+}
+
+impl Iterator for SampleStream {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.pos < self.order.len() {
+            let i = self.order[self.pos];
+            self.pos += 1;
+            Some(i)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_yields_in_order() {
+        let s = SampleStream::sequential(5);
+        assert_eq!(s.collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shuffled_is_a_permutation_and_seed_dependent() {
+        let mut rng1 = Rng::new(1);
+        let mut rng2 = Rng::new(1);
+        let mut rng3 = Rng::new(2);
+        let d = fake_dataset(100);
+        let a: Vec<_> = SampleStream::shuffled(&d, &mut rng1).collect();
+        let b: Vec<_> = SampleStream::shuffled(&d, &mut rng2).collect();
+        let c: Vec<_> = SampleStream::shuffled(&d, &mut rng3).collect();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peek_take_consume() {
+        let mut s = SampleStream::sequential(6);
+        assert_eq!(s.peek(3), &[0, 1, 2]);
+        assert_eq!(s.take_n(2), &[0, 1]);
+        assert_eq!(s.remaining(), 4);
+        assert_eq!(s.take_n(10), &[2, 3, 4, 5]);
+        assert_eq!(s.remaining(), 0);
+        assert!(s.next().is_none());
+    }
+
+    fn fake_dataset(n: usize) -> Dataset {
+        Dataset {
+            name: "fake".into(),
+            seq_len: 2,
+            n_classes: 2,
+            tokens: crate::tensor::TensorI32::zeros(vec![n, 2]),
+            labels: vec![0; n],
+            difficulty: vec![0; n],
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Rust-side synthetic *confidence profiles* for tests and benches that must
+//! run without AOT artifacts (unit tests, property tests, policy benches).
+//!
+//! This does NOT replace the real model — it generates per-sample per-layer
+//! (confidence, correctness) matrices with the same qualitative structure the
+//! trained multi-exit encoder produces: confidence and accuracy grow with
+//! depth, easy samples saturate early, a configurable share is confidently
+//! wrong at shallow exits (the QQP anomaly).
+
+use crate::util::rng::Rng;
+
+/// Synthetic per-sample, per-layer exit observations.
+#[derive(Debug, Clone)]
+pub struct SynthProfile {
+    pub n_layers: usize,
+    /// [N][L] confidence in the prediction at each exit
+    pub conf: Vec<Vec<f32>>,
+    /// [N][L] whether the exit's prediction is correct
+    pub correct: Vec<Vec<bool>>,
+    /// [N] ground-truth difficulty class (0 easy, 1 medium, 2 hard, 3 trap)
+    pub kind: Vec<u8>,
+}
+
+/// Mixture weights for the synthetic profile generator.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthMix {
+    pub easy: f64,
+    pub medium: f64,
+    pub hard: f64,
+    /// "trap" samples: confidently wrong at shallow exits (QQP-like)
+    pub trap: f64,
+}
+
+impl Default for SynthMix {
+    fn default() -> Self {
+        SynthMix { easy: 0.45, medium: 0.3, hard: 0.15, trap: 0.1 }
+    }
+}
+
+/// Logistic saturation helper.
+fn sat(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl SynthProfile {
+    pub fn generate(n: usize, n_layers: usize, mix: SynthMix, rng: &mut Rng) -> SynthProfile {
+        let weights = [mix.easy, mix.medium, mix.hard, mix.trap];
+        let mut conf = Vec::with_capacity(n);
+        let mut correct = Vec::with_capacity(n);
+        let mut kind = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = rng.weighted(&weights) as u8;
+            let (mut cs, mut os) = (Vec::with_capacity(n_layers), Vec::with_capacity(n_layers));
+            // Depth at which this sample's signal is resolved.
+            let resolve = match k {
+                0 => 1.0 + rng.next_f64() * 2.0,       // easy: layer ~1-3
+                1 => 3.0 + rng.next_f64() * 4.0,       // medium: layer ~3-7
+                2 => 7.0 + rng.next_f64() * 6.0,       // hard: layer ~7-13
+                _ => 5.0 + rng.next_f64() * 4.0,       // trap: resolved mid-deep
+            };
+            for l in 0..n_layers {
+                let depth = (l + 1) as f64;
+                let noise = rng.normal() * 0.04;
+                let c = match k {
+                    // confidence rises as depth crosses the resolve point
+                    0 | 1 | 2 => 0.5 + 0.49 * sat(1.4 * (depth - resolve)) + noise,
+                    // trap: *high* confidence early (wrong), dip, then correct
+                    _ => {
+                        if depth < resolve {
+                            0.85 + noise
+                        } else {
+                            0.55 + 0.4 * sat(1.2 * (depth - resolve)) + noise
+                        }
+                    }
+                };
+                let c = c.clamp(0.5, 0.999) as f32;
+                let p_correct = match k {
+                    _ if k < 3 => sat(2.0 * (depth - resolve) + 1.0),
+                    _ => {
+                        if depth < resolve {
+                            0.1 // confidently wrong
+                        } else {
+                            sat(1.5 * (depth - resolve) + 0.5)
+                        }
+                    }
+                };
+                cs.push(c);
+                os.push(rng.chance(p_correct));
+            }
+            conf.push(cs);
+            correct.push(os);
+            kind.push(k);
+        }
+        SynthProfile { n_layers, conf, correct, kind }
+    }
+
+    pub fn len(&self) -> usize {
+        self.kind.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kind.is_empty()
+    }
+
+    /// Accuracy at a fixed exit layer (0-based) across all samples.
+    pub fn accuracy_at(&self, layer: usize) -> f64 {
+        let hits = self.correct.iter().filter(|c| c[layer]).count();
+        hits as f64 / self.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> SynthProfile {
+        let mut rng = Rng::new(42);
+        SynthProfile::generate(4000, 12, SynthMix::default(), &mut rng)
+    }
+
+    #[test]
+    fn shapes() {
+        let p = profile();
+        assert_eq!(p.len(), 4000);
+        assert_eq!(p.conf[0].len(), 12);
+        assert_eq!(p.correct[0].len(), 12);
+    }
+
+    #[test]
+    fn confidence_in_valid_range() {
+        let p = profile();
+        for cs in &p.conf {
+            for &c in cs {
+                assert!((0.5..=1.0).contains(&c));
+            }
+        }
+    }
+
+    #[test]
+    fn accuracy_grows_with_depth() {
+        let p = profile();
+        let first = p.accuracy_at(0);
+        let last = p.accuracy_at(11);
+        assert!(last > first + 0.15, "first {first}, last {last}");
+        assert!(last > 0.85, "deep accuracy {last}");
+    }
+
+    #[test]
+    fn trap_samples_confidently_wrong_early() {
+        let p = profile();
+        let traps: Vec<usize> = (0..p.len()).filter(|&i| p.kind[i] == 3).collect();
+        assert!(!traps.is_empty());
+        let early_conf: f64 =
+            traps.iter().map(|&i| p.conf[i][0] as f64).sum::<f64>() / traps.len() as f64;
+        let early_acc: f64 = traps.iter().filter(|&&i| p.correct[i][0]).count() as f64
+            / traps.len() as f64;
+        assert!(early_conf > 0.75, "trap early confidence {early_conf}");
+        assert!(early_acc < 0.3, "trap early accuracy {early_acc}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = SynthProfile::generate(100, 12, SynthMix::default(), &mut r1);
+        let b = SynthProfile::generate(100, 12, SynthMix::default(), &mut r2);
+        assert_eq!(a.conf, b.conf);
+        assert_eq!(a.correct, b.correct);
+    }
+}

@@ -1,0 +1,152 @@
+//! Ablations over the design choices DESIGN.md section 5 calls out:
+//! exploration beta, cost weight mu, exit threshold alpha (including the
+//! adaptive-threshold extension), and the side-observation depth.
+
+use anyhow::Result;
+
+use crate::config::{Manifest, Settings};
+use crate::cost::CostModel;
+use crate::experiments::cache::ConfidenceCache;
+use crate::experiments::report::{write_results, Table};
+use crate::experiments::runner::run_policy_repeated;
+use crate::policy::{AdaptiveThresholdPolicy, PerSamplePolicy, Policy, SplitEePolicy,
+                    SplitEeSPolicy};
+use crate::runtime::Runtime;
+
+pub const BETA_SWEEP: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
+pub const MU_SWEEP: [f64; 5] = [0.02, 0.05, 0.1, 0.2, 0.5];
+pub const ALPHA_SWEEP: [f64; 5] = [0.7, 0.8, 0.85, 0.9, 0.95];
+
+fn eval(
+    cache: &ConfidenceCache,
+    policy: &mut dyn Policy,
+    cm: &CostModel,
+    reps: usize,
+    seed: u64,
+) -> (f64, f64, f64) {
+    let r = run_policy_repeated(cache, policy, cm, reps, seed);
+    (r.mean.acc_pct(), r.mean.cost_1e4(), r.mean.offload_rate)
+}
+
+/// Which ablation to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Which {
+    Beta,
+    Mu,
+    Alpha,
+    Side,
+    All,
+}
+
+impl Which {
+    pub fn parse(s: &str) -> Option<Which> {
+        match s {
+            "beta" => Some(Which::Beta),
+            "mu" => Some(Which::Mu),
+            "alpha" => Some(Which::Alpha),
+            "side" => Some(Which::Side),
+            "all" => Some(Which::All),
+            _ => None,
+        }
+    }
+}
+
+pub fn run(
+    manifest: &Manifest,
+    runtime: &Runtime,
+    settings: &Settings,
+    which: Which,
+    dataset: &str,
+) -> Result<String> {
+    let l = manifest.model.n_layers;
+    let task = manifest.source_task(dataset)?;
+    let cache = ConfidenceCache::load_or_build(manifest, runtime, dataset, "elasticbert")?;
+    let mut rendered = format!("Ablations on {dataset} (reps = {})\n", settings.reps);
+
+    if matches!(which, Which::Beta | Which::All) {
+        let mut t = Table::new(&["beta", "acc %", "cost 1e4", "offload"]);
+        for &beta in &BETA_SWEEP {
+            let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
+            let mut p = SplitEePolicy::new(l, task.alpha, beta);
+            let (a, c, o) = eval(&cache, &mut p, &cm, settings.reps, settings.seed);
+            t.row(vec![format!("{beta}"), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        }
+        rendered.push_str(&format!("\n[beta sweep — SplitEE exploration]\n{}", t.render()));
+    }
+
+    if matches!(which, Which::Mu | Which::All) {
+        let mut t = Table::new(&["mu", "acc %", "cost 1e4", "offload"]);
+        for &mu in &MU_SWEEP {
+            let cm = CostModel::paper(settings.offload_cost, mu, l);
+            let mut p = SplitEePolicy::new(l, task.alpha, settings.beta);
+            let (a, c, o) = eval(&cache, &mut p, &cm, settings.reps, settings.seed);
+            t.row(vec![format!("{mu}"), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        }
+        rendered.push_str(&format!("\n[mu sweep — cost weight in eq. 1]\n{}", t.render()));
+    }
+
+    if matches!(which, Which::Alpha | Which::All) {
+        let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
+        let mut t = Table::new(&["alpha", "acc %", "cost 1e4", "offload"]);
+        for &alpha in &ALPHA_SWEEP {
+            let mut p = SplitEePolicy::new(l, alpha, settings.beta);
+            let (a, c, o) = eval(&cache, &mut p, &cm, settings.reps, settings.seed);
+            t.row(vec![format!("{alpha}"), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        }
+        // future-work extensions for comparison
+        let mut at = AdaptiveThresholdPolicy::new(l, settings.beta);
+        let (a, c, o) = eval(&cache, &mut at, &cm, settings.reps, settings.seed);
+        t.row(vec!["adaptive".into(), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        let mut ps = PerSamplePolicy::new(l, task.alpha, settings.beta);
+        let (a, c, o) = eval(&cache, &mut ps, &cm, settings.reps, settings.seed);
+        t.row(vec!["per-sample".into(), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        rendered.push_str(&format!(
+            "\n[alpha sweep — exit threshold; calibrated value {:.2};\n adaptive = learned-threshold extension, per-sample = per-sample split extension]\n{}",
+            task.alpha,
+            t.render()
+        ));
+    }
+
+    if matches!(which, Which::Side | Which::All) {
+        let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
+        let mut t = Table::new(&["variant", "acc %", "cost 1e4", "offload"]);
+        let mut se = SplitEePolicy::new(l, task.alpha, settings.beta);
+        let (a, c, o) = eval(&cache, &mut se, &cm, settings.reps, settings.seed);
+        t.row(vec!["SplitEE (no side info)".into(), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        let mut ss = SplitEeSPolicy::new(l, task.alpha, settings.beta);
+        let (a, c, o) = eval(&cache, &mut ss, &cm, settings.reps, settings.seed);
+        t.row(vec!["SplitEE-S (full side info)".into(), format!("{a:.2}"), format!("{c:.2}"), format!("{o:.3}")]);
+        rendered.push_str(&format!(
+            "\n[side observations — inference cost vs convergence (sec. 5.5)]\n{}",
+            t.render()
+        ));
+    }
+
+    write_results(&settings.results_dir, &format!("ablations_{dataset}.txt"), &rendered)?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn which_parse() {
+        assert_eq!(Which::parse("beta"), Some(Which::Beta));
+        assert_eq!(Which::parse("all"), Some(Which::All));
+        assert!(Which::parse("nope").is_none());
+    }
+
+    /// Higher mu weights cost more -> cheaper operating points.
+    #[test]
+    fn mu_controls_cost_on_synthetic() {
+        let cache = ConfidenceCache::synthetic(4000, 12, 61);
+        let mut lo = SplitEePolicy::new(12, 0.85, 1.0);
+        let mut hi = SplitEePolicy::new(12, 0.85, 1.0);
+        let cm_lo = CostModel::paper(5.0, 0.02, 12);
+        let cm_hi = CostModel::paper(5.0, 0.5, 12);
+        let (_, c_lo, _) = eval(&cache, &mut lo, &cm_lo, 3, 1);
+        let (_, c_hi, _) = eval(&cache, &mut hi, &cm_hi, 3, 1);
+        assert!(c_hi <= c_lo + 0.05, "mu=0.5 cost {c_hi} vs mu=0.02 cost {c_lo}");
+    }
+}

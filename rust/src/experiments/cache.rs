@@ -1,0 +1,378 @@
+//! Confidence cache: per-sample, per-exit observations for one (dataset,
+//! training-style) pair, produced by the real PJRT model and persisted to
+//! `artifacts/cache/{dataset}_{style}.bin`.
+//!
+//! Binary format SPLC (little-endian):
+//!
+//! ```text
+//!     u32 magic = 0x53504C43      u32 version = 1
+//!     u32 n_layers, u32 n_samples, u32 n_classes
+//!     f32 conf[L * N]     (layer-major)
+//!     f32 ent[L * N]
+//!     i32 pred[L * N]
+//!     i32 labels[N]
+//!     i32 difficulty[N]
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
+
+use crate::config::Manifest;
+use crate::data::Dataset;
+use crate::model::MultiExitModel;
+use crate::runtime::Runtime;
+
+pub const CACHE_MAGIC: u32 = 0x53504C43;
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Cached per-exit observations for a whole dataset.
+#[derive(Debug, Clone)]
+pub struct ConfidenceCache {
+    pub dataset: String,
+    pub style: String,
+    pub n_layers: usize,
+    pub n_samples: usize,
+    pub n_classes: usize,
+    /// [L * N] layer-major confidence
+    conf: Vec<f32>,
+    /// [L * N] layer-major entropy
+    ent: Vec<f32>,
+    /// [L * N] layer-major predictions
+    pred: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub difficulty: Vec<i32>,
+}
+
+impl ConfidenceCache {
+    /// Confidence profile of sample `i` across layers: returns a freshly
+    /// assembled [L] vector (layer-major storage favours the builders; the
+    /// per-sample view is what policies consume).
+    pub fn sample_conf(&self, i: usize) -> Vec<f32> {
+        (0..self.n_layers).map(|l| self.conf[l * self.n_samples + i]).collect()
+    }
+
+    pub fn sample_ent(&self, i: usize) -> Vec<f32> {
+        (0..self.n_layers).map(|l| self.ent[l * self.n_samples + i]).collect()
+    }
+
+    #[inline]
+    pub fn conf_at(&self, layer0: usize, i: usize) -> f32 {
+        self.conf[layer0 * self.n_samples + i]
+    }
+
+    #[inline]
+    pub fn ent_at(&self, layer0: usize, i: usize) -> f32 {
+        self.ent[layer0 * self.n_samples + i]
+    }
+
+    #[inline]
+    pub fn pred_at(&self, layer0: usize, i: usize) -> i32 {
+        self.pred[layer0 * self.n_samples + i]
+    }
+
+    /// Accuracy of always exiting at `layer` (1-based).
+    pub fn accuracy_at(&self, layer_1based: usize) -> f64 {
+        let l = layer_1based - 1;
+        let hits = (0..self.n_samples)
+            .filter(|&i| self.pred_at(l, i) == self.labels[i])
+            .count();
+        hits as f64 / self.n_samples.max(1) as f64
+    }
+
+    /// Build by running the full model over the dataset (one-time cost).
+    pub fn build(
+        model: &MultiExitModel,
+        dataset: &Dataset,
+        style: &str,
+        log_progress: bool,
+    ) -> Result<ConfidenceCache> {
+        let l = model.n_layers();
+        let n = dataset.len();
+        let t0 = Instant::now();
+        let mut conf = vec![0f32; l * n];
+        let mut ent = vec![0f32; l * n];
+        let mut pred = vec![0i32; l * n];
+        let chunk = 1024usize;
+        let mut done = 0usize;
+        while done < n {
+            let hi = (done + chunk).min(n);
+            let tokens = dataset.range_tokens(done, hi);
+            let outs = model.forward_all_exits(&tokens)?;
+            for (layer, out) in outs.iter().enumerate() {
+                let base = layer * n + done;
+                conf[base..base + (hi - done)].copy_from_slice(&out.conf);
+                ent[base..base + (hi - done)].copy_from_slice(&out.ent);
+                for (j, &p) in out.pred.iter().enumerate() {
+                    pred[base + j] = p as i32;
+                }
+            }
+            done = hi;
+            if log_progress {
+                log::info!(
+                    "cache {}/{}: {done}/{n} samples ({:.0}/s)",
+                    dataset.name,
+                    style,
+                    done as f64 / t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        Ok(ConfidenceCache {
+            dataset: dataset.name.clone(),
+            style: style.to_string(),
+            n_layers: l,
+            n_samples: n,
+            n_classes: dataset.n_classes,
+            conf,
+            ent,
+            pred,
+            labels: dataset.labels.clone(),
+            difficulty: dataset.difficulty.clone(),
+        })
+    }
+
+    /// On-disk location for a (dataset, style) cache.
+    pub fn path(manifest: &Manifest, dataset: &str, style: &str) -> PathBuf {
+        manifest.root.join("cache").join(format!("{dataset}_{style}.bin"))
+    }
+
+    /// Load from disk, or build via the model and persist.
+    pub fn load_or_build(
+        manifest: &Manifest,
+        runtime: &Runtime,
+        dataset_name: &str,
+        style: &str,
+    ) -> Result<ConfidenceCache> {
+        let path = Self::path(manifest, dataset_name, style);
+        if path.exists() {
+            let c = Self::read(&path, dataset_name, style)?;
+            log::debug!("cache hit {path:?} ({} samples)", c.n_samples);
+            return Ok(c);
+        }
+        let info = manifest.dataset(dataset_name)?;
+        let source = info
+            .source
+            .clone()
+            .unwrap_or_else(|| dataset_name.to_string());
+        log::info!("building cache for {dataset_name} [{style}] (model {source})");
+        let model = MultiExitModel::load(manifest, runtime, &source, style)?;
+        let data = Dataset::load(&manifest.root.join(&info.file), dataset_name)?;
+        let cache = Self::build(&model, &data, style, true)?;
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        cache.write(&path)?;
+        Ok(cache)
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut f = Vec::with_capacity(16 + self.conf.len() * 12);
+        f.write_u32::<LittleEndian>(CACHE_MAGIC)?;
+        f.write_u32::<LittleEndian>(FORMAT_VERSION)?;
+        f.write_u32::<LittleEndian>(self.n_layers as u32)?;
+        f.write_u32::<LittleEndian>(self.n_samples as u32)?;
+        f.write_u32::<LittleEndian>(self.n_classes as u32)?;
+        for &v in &self.conf {
+            f.write_f32::<LittleEndian>(v)?;
+        }
+        for &v in &self.ent {
+            f.write_f32::<LittleEndian>(v)?;
+        }
+        for &v in &self.pred {
+            f.write_i32::<LittleEndian>(v)?;
+        }
+        for &v in &self.labels {
+            f.write_i32::<LittleEndian>(v)?;
+        }
+        for &v in &self.difficulty {
+            f.write_i32::<LittleEndian>(v)?;
+        }
+        std::fs::write(path, f).with_context(|| format!("writing cache {path:?}"))
+    }
+
+    pub fn read(path: &Path, dataset: &str, style: &str) -> Result<ConfidenceCache> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading cache {path:?}"))?;
+        let mut r = std::io::Cursor::new(&bytes);
+        let magic = r.read_u32::<LittleEndian>()?;
+        if magic != CACHE_MAGIC {
+            bail!("{path:?}: bad cache magic {magic:#x}");
+        }
+        let version = r.read_u32::<LittleEndian>()?;
+        if version != FORMAT_VERSION {
+            bail!("{path:?}: unsupported cache version {version}");
+        }
+        let l = r.read_u32::<LittleEndian>()? as usize;
+        let n = r.read_u32::<LittleEndian>()? as usize;
+        let c = r.read_u32::<LittleEndian>()? as usize;
+        let mut conf = vec![0f32; l * n];
+        r.read_f32_into::<LittleEndian>(&mut conf).context("conf")?;
+        let mut ent = vec![0f32; l * n];
+        r.read_f32_into::<LittleEndian>(&mut ent).context("ent")?;
+        let mut pred = vec![0i32; l * n];
+        r.read_i32_into::<LittleEndian>(&mut pred).context("pred")?;
+        let mut labels = vec![0i32; n];
+        r.read_i32_into::<LittleEndian>(&mut labels).context("labels")?;
+        let mut difficulty = vec![0i32; n];
+        r.read_i32_into::<LittleEndian>(&mut difficulty)
+            .context("difficulty")?;
+        if (r.position() as usize) != bytes.len() {
+            bail!("{path:?}: trailing bytes");
+        }
+        Ok(ConfidenceCache {
+            dataset: dataset.to_string(),
+            style: style.to_string(),
+            n_layers: l,
+            n_samples: n,
+            n_classes: c,
+            conf,
+            ent,
+            pred,
+            labels,
+            difficulty,
+        })
+    }
+
+    /// Construct directly from dense arrays (tests, synthetic harnesses).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        dataset: &str,
+        style: &str,
+        n_layers: usize,
+        n_samples: usize,
+        n_classes: usize,
+        conf: Vec<f32>,
+        ent: Vec<f32>,
+        pred: Vec<i32>,
+        labels: Vec<i32>,
+        difficulty: Vec<i32>,
+    ) -> Result<ConfidenceCache> {
+        if conf.len() != n_layers * n_samples
+            || ent.len() != n_layers * n_samples
+            || pred.len() != n_layers * n_samples
+            || labels.len() != n_samples
+            || difficulty.len() != n_samples
+        {
+            bail!("cache arrays inconsistent with {n_layers} x {n_samples}");
+        }
+        Ok(ConfidenceCache {
+            dataset: dataset.to_string(),
+            style: style.to_string(),
+            n_layers,
+            n_samples,
+            n_classes,
+            conf,
+            ent,
+            pred,
+            labels,
+            difficulty,
+        })
+    }
+
+    /// Synthetic cache from the rust-side profile generator (tests/benches
+    /// without artifacts).
+    pub fn synthetic(n: usize, n_layers: usize, seed: u64) -> ConfidenceCache {
+        use crate::data::synth::{SynthMix, SynthProfile};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let p = SynthProfile::generate(n, n_layers, SynthMix::default(), &mut rng);
+        let mut conf = vec![0f32; n_layers * n];
+        let mut ent = vec![0f32; n_layers * n];
+        let mut pred = vec![0i32; n_layers * n];
+        let labels = vec![1i32; n];
+        for i in 0..n {
+            for l in 0..n_layers {
+                let c = p.conf[i][l];
+                conf[l * n + i] = c;
+                // entropy consistent with a two-class max-prob c
+                let c64 = c as f64;
+                let h = -(c64 * c64.ln() + (1.0 - c64).max(1e-9) * (1.0 - c64).max(1e-9).ln());
+                ent[l * n + i] = h as f32;
+                pred[l * n + i] = if p.correct[i][l] { 1 } else { 0 };
+            }
+        }
+        ConfidenceCache {
+            dataset: "synthetic".into(),
+            style: "synthetic".into(),
+            n_layers,
+            n_samples: n,
+            n_classes: 2,
+            conf,
+            ent,
+            pred,
+            labels,
+            difficulty: p.kind.iter().map(|&k| k as i32).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_on_disk() {
+        let c = ConfidenceCache::synthetic(50, 12, 3);
+        let path = std::env::temp_dir().join(format!(
+            "splitee_cache_{}_{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        c.write(&path).unwrap();
+        let back = ConfidenceCache::read(&path, "synthetic", "synthetic").unwrap();
+        assert_eq!(back.n_samples, 50);
+        assert_eq!(back.n_layers, 12);
+        for i in (0..50).step_by(7) {
+            assert_eq!(back.sample_conf(i), c.sample_conf(i));
+            assert_eq!(back.sample_ent(i), c.sample_ent(i));
+        }
+        assert_eq!(back.labels, c.labels);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn read_rejects_corruption() {
+        let c = ConfidenceCache::synthetic(10, 4, 1);
+        let path = std::env::temp_dir().join(format!(
+            "splitee_cache_bad_{}_{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        c.write(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ConfidenceCache::read(&path, "x", "y").is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn accuracy_at_grows_with_depth_on_synthetic() {
+        let c = ConfidenceCache::synthetic(3000, 12, 7);
+        assert!(c.accuracy_at(12) > c.accuracy_at(1) + 0.1);
+    }
+
+    #[test]
+    fn from_parts_validates_lengths() {
+        assert!(ConfidenceCache::from_parts(
+            "d", "s", 2, 3, 2,
+            vec![0.5; 6], vec![0.1; 6], vec![0; 6], vec![0; 3], vec![0; 3]
+        )
+        .is_ok());
+        assert!(ConfidenceCache::from_parts(
+            "d", "s", 2, 3, 2,
+            vec![0.5; 5], vec![0.1; 6], vec![0; 6], vec![0; 3], vec![0; 3]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn layer_major_accessors_agree() {
+        let c = ConfidenceCache::synthetic(20, 6, 11);
+        for i in 0..20 {
+            let sc = c.sample_conf(i);
+            for l in 0..6 {
+                assert_eq!(sc[l], c.conf_at(l, i));
+            }
+        }
+    }
+}

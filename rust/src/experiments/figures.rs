@@ -1,0 +1,140 @@
+//! Figures 3-6: accuracy and cost of SplitEE / SplitEE-S as the offloading
+//! cost sweeps `o ∈ {1..5} lambda` across every evaluation dataset.
+
+use anyhow::Result;
+
+use crate::config::{Manifest, Settings};
+use crate::cost::CostModel;
+use crate::experiments::cache::ConfidenceCache;
+use crate::experiments::report::{write_results, Table};
+use crate::experiments::runner::run_policy_repeated;
+use crate::policy::{Policy, SplitEePolicy, SplitEeSPolicy};
+use crate::runtime::Runtime;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub dataset: String,
+    pub algo: String,
+    pub offload: f64,
+    pub acc_pct: f64,
+    pub cost_1e4: f64,
+    pub offload_rate: f64,
+}
+
+/// The offload costs of the paper's sweep.
+pub const OFFLOAD_SWEEP: [f64; 5] = [1.0, 2.0, 3.0, 4.0, 5.0];
+
+/// Run the sweep for one dataset and one algorithm.
+pub fn sweep_dataset(
+    manifest: &Manifest,
+    cache: &ConfidenceCache,
+    dataset: &str,
+    algo: &str,
+    settings: &Settings,
+) -> Result<Vec<SweepPoint>> {
+    let task = manifest.source_task(dataset)?;
+    let l = manifest.model.n_layers;
+    let mut out = Vec::new();
+    for &o in &OFFLOAD_SWEEP {
+        let cm = CostModel::paper(o, settings.mu, l);
+        let mut policy: Box<dyn Policy> = match algo {
+            "splitee" => Box::new(SplitEePolicy::new(l, task.alpha, settings.beta)),
+            "splitee-s" => Box::new(SplitEeSPolicy::new(l, task.alpha, settings.beta)),
+            other => anyhow::bail!("unknown algo {other:?}"),
+        };
+        let rr = run_policy_repeated(cache, policy.as_mut(), &cm, settings.reps, settings.seed);
+        out.push(SweepPoint {
+            dataset: dataset.to_string(),
+            algo: algo.to_string(),
+            offload: o,
+            acc_pct: rr.mean.acc_pct(),
+            cost_1e4: rr.mean.cost_1e4(),
+            offload_rate: rr.mean.offload_rate,
+        });
+    }
+    Ok(out)
+}
+
+/// Run figures 3-6 (both algorithms, all datasets) and render.
+pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+    let mut rendered = String::new();
+    let mut csv = Table::new(&["figure", "algo", "dataset", "o", "acc_pct", "cost_1e4", "offload_rate"]);
+    for (algo, acc_fig, cost_fig) in
+        [("splitee", "fig3", "fig4"), ("splitee-s", "fig5", "fig6")]
+    {
+        for dataset in manifest.eval_datasets() {
+            log::info!("figures: {algo} on {dataset}");
+            let cache =
+                ConfidenceCache::load_or_build(manifest, runtime, &dataset, "elasticbert")?;
+            let points = sweep_dataset(manifest, &cache, &dataset, algo, settings)?;
+            let mut t = Table::new(&["o (lambda)", "accuracy %", "cost (1e4 lambda)", "offload %"]);
+            for p in &points {
+                t.row(vec![
+                    format!("{:.0}", p.offload),
+                    format!("{:.2}", p.acc_pct),
+                    format!("{:.2}", p.cost_1e4),
+                    format!("{:.1}", 100.0 * p.offload_rate),
+                ]);
+                csv.row(vec![
+                    format!("{acc_fig}/{cost_fig}"),
+                    p.algo.clone(),
+                    p.dataset.clone(),
+                    format!("{:.0}", p.offload),
+                    format!("{:.3}", p.acc_pct),
+                    format!("{:.3}", p.cost_1e4),
+                    format!("{:.4}", p.offload_rate),
+                ]);
+            }
+            rendered.push_str(&format!(
+                "\n[{acc_fig} acc / {cost_fig} cost] {algo} on {dataset}\n{}",
+                t.render()
+            ));
+        }
+    }
+    write_results(&settings.results_dir, "figures_3_6.txt", &rendered)?;
+    write_results(&settings.results_dir, "figures_3_6.csv", &csv.to_csv())?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner::run_policy_repeated;
+
+    /// Figure 4/6 shape: total cost rises with the offload price.
+    #[test]
+    fn cost_monotone_in_offload_price_on_synthetic() {
+        let cache = ConfidenceCache::synthetic(4000, 12, 21);
+        let mut costs = Vec::new();
+        for &o in &OFFLOAD_SWEEP {
+            let cm = CostModel::paper(o, 0.1, 12);
+            let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+            let rr = run_policy_repeated(&cache, &mut p, &cm, 3, 7);
+            costs.push(rr.mean.total_cost);
+        }
+        // allow small bandit noise but require an overall upward trend
+        assert!(
+            costs[4] > costs[0],
+            "cost should rise with o: {costs:?}"
+        );
+    }
+
+    /// Higher o pushes the bandit to offload less (deeper splits / more
+    /// exits) — the mechanism behind the paper's accuracy-vs-o discussion.
+    #[test]
+    fn offload_rate_falls_with_offload_price_on_synthetic() {
+        let cache = ConfidenceCache::synthetic(4000, 12, 23);
+        let mut rates = Vec::new();
+        for &o in &[1.0, 5.0] {
+            let cm = CostModel::paper(o, 0.1, 12);
+            let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+            let rr = run_policy_repeated(&cache, &mut p, &cm, 3, 11);
+            rates.push(rr.mean.offload_rate);
+        }
+        assert!(
+            rates[1] <= rates[0] + 0.02,
+            "offload rate should not grow with o: {rates:?}"
+        );
+    }
+}

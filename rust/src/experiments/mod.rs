@@ -1,0 +1,28 @@
+//! Experiment harness: regenerates every table and figure of the paper.
+//!
+//! | paper artifact | module | CLI |
+//! |----------------|--------|-----|
+//! | Table 1 (dataset sizes)        | [`report`]  | `splitee table1` |
+//! | Table 2 (acc + cost, o = 5)    | [`table2`]  | `splitee table2` |
+//! | Figures 3-6 (sweep o)          | [`figures`] | `splitee figures` |
+//! | Figure 7 (cumulative regret)   | [`regret`]  | `splitee regret` |
+//! | section 5.4 (beyond-layer-6)   | [`sec5_4`]  | `splitee sec54` |
+//! | ablations (beta, mu, alpha...) | [`ablations`] | `splitee ablations` |
+//!
+//! The harness evaluates policies on **confidence caches**: one full forward
+//! pass per dataset through the PJRT `prefix_full` graph records every
+//! exit's (confidence, entropy, prediction) per sample; bandit repetitions
+//! then replay shuffles of the cache.  This mirrors the paper's released
+//! evaluation (precomputed logits) and makes 20-repetition sweeps tractable.
+
+pub mod ablations;
+pub mod cache;
+pub mod figures;
+pub mod regret;
+pub mod report;
+pub mod runner;
+pub mod sec5_4;
+pub mod table2;
+
+pub use cache::ConfidenceCache;
+pub use runner::{EvalResult, run_policy_once};

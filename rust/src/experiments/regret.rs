@@ -1,0 +1,217 @@
+//! Figure 7 — expected cumulative regret (paper eq. 3) with 95% CIs over 20
+//! reshuffled repetitions, for SplitEE, SplitEE-S and the Random baseline.
+//!
+//! Regret per round is `r(i*) − r(i_t)` where `i*` is the oracle split layer
+//! maximising the dataset's expected reward (computed from the cache, eq. 2)
+//! and both rewards are evaluated on the *same* sample the policy saw.
+
+use anyhow::Result;
+
+use crate::config::{Manifest, Settings};
+use crate::cost::CostModel;
+use crate::experiments::cache::ConfidenceCache;
+use crate::experiments::report::{write_results, Table};
+use crate::policy::{oracle_split, reward_for_split, Policy, RandomExitPolicy,
+                    SplitEePolicy, SplitEeSPolicy};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Mean cumulative-regret curve with a CI band.
+#[derive(Debug, Clone)]
+pub struct RegretCurve {
+    pub algo: String,
+    pub dataset: String,
+    /// (round, mean cumulative regret, 95% CI half-width)
+    pub points: Vec<(usize, f64, f64)>,
+    pub oracle_arm: usize,
+    pub final_mean: f64,
+}
+
+/// Run regret curves with an explicit exit threshold alpha.
+#[allow(clippy::too_many_arguments)]
+pub fn regret_curves_with_alpha(
+    cache: &ConfidenceCache,
+    algo_name: &str,
+    make_policy: &mut dyn FnMut() -> Box<dyn Policy>,
+    cm: &CostModel,
+    alpha: f64,
+    reps: usize,
+    seed: u64,
+    resolution: usize,
+) -> RegretCurve {
+    let probe = make_policy();
+    let side = probe.uses_side_info();
+    drop(probe);
+    let profiles: Vec<(Vec<f32>, Vec<f32>)> = (0..cache.n_samples)
+        .map(|i| (cache.sample_conf(i), cache.sample_ent(i)))
+        .collect();
+    let (oracle_arm, _means) = oracle_split(&profiles, cm, alpha, side);
+
+    let n = cache.n_samples;
+    let mut root = Rng::new(seed);
+    // per-rep downsampled curves
+    let mut curves: Vec<Vec<f64>> = Vec::with_capacity(reps);
+    let step = (n as f64 / resolution as f64).max(1.0);
+    let mut rounds: Vec<usize> = Vec::new();
+    {
+        let mut x = step;
+        while (x as usize) <= n {
+            rounds.push(x as usize);
+            x += step;
+        }
+        if rounds.last() != Some(&n) {
+            rounds.push(n);
+        }
+    }
+    for rep in 0..reps {
+        let mut rng = root.fork(rep as u64);
+        let order = rng.permutation(n);
+        let mut policy = make_policy();
+        let mut cum = 0.0;
+        let mut curve = Vec::with_capacity(rounds.len());
+        let mut next_idx = 0usize;
+        for (t, &i) in order.iter().enumerate() {
+            let (conf, ent) = &profiles[i];
+            let view = crate::policy::SampleView { conf, ent };
+            let o = policy.decide(&view, cm);
+            let r_opt = reward_for_split(&view, cm, oracle_arm, alpha, side);
+            cum += r_opt - o.reward;
+            if next_idx < rounds.len() && t + 1 == rounds[next_idx] {
+                curve.push(cum);
+                next_idx += 1;
+            }
+        }
+        curves.push(curve);
+    }
+
+    let mut points = Vec::with_capacity(rounds.len());
+    for (k, &round) in rounds.iter().enumerate() {
+        let vals: Vec<f64> = curves.iter().map(|c| c[k]).collect();
+        points.push((round, stats::mean(&vals), stats::ci95_half_width(&vals)));
+    }
+    let final_mean = points.last().map(|p| p.1).unwrap_or(0.0);
+    RegretCurve {
+        algo: algo_name.to_string(),
+        dataset: cache.dataset.clone(),
+        points,
+        oracle_arm,
+        final_mean,
+    }
+}
+
+/// Run figure 7 for all datasets.
+pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+    let mut rendered = String::new();
+    let mut csv = Table::new(&["dataset", "algo", "round", "mean_cum_regret", "ci95"]);
+    let l = manifest.model.n_layers;
+    let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
+    for dataset in manifest.eval_datasets() {
+        log::info!("regret: dataset {dataset}");
+        let task = manifest.source_task(&dataset)?;
+        let alpha = task.alpha;
+        let beta = settings.beta;
+        let cache = ConfidenceCache::load_or_build(manifest, runtime, &dataset, "elasticbert")?;
+
+        let seed = settings.seed ^ 0xF16_7;
+        let mut algos: Vec<(&str, Box<dyn FnMut() -> Box<dyn Policy>>)> = vec![
+            ("SplitEE", Box::new(move || Box::new(SplitEePolicy::new(l, alpha, beta)))),
+            ("SplitEE-S", Box::new(move || Box::new(SplitEeSPolicy::new(l, alpha, beta)))),
+            ("Random", Box::new(move || Box::new(RandomExitPolicy::new(alpha, 0xDEAD)))),
+        ];
+        let mut summary = Table::new(&["algo", "oracle i*", "final regret", "ci95", "half-point round"]);
+        for (name, make) in algos.iter_mut() {
+            let curve = regret_curves_with_alpha(
+                &cache, name, make.as_mut(), &cm, alpha, settings.reps, seed, 50,
+            );
+            // the round by which half the final regret is accumulated — a
+            // saturation proxy (paper: SplitEE ~2000, SplitEE-S ~1000)
+            let half = curve
+                .points
+                .iter()
+                .find(|(_, m, _)| *m >= curve.final_mean / 2.0)
+                .map(|(r, _, _)| *r)
+                .unwrap_or(0);
+            summary.row(vec![
+                curve.algo.clone(),
+                format!("{}", curve.oracle_arm),
+                format!("{:.1}", curve.final_mean),
+                format!("{:.1}", curve.points.last().map(|p| p.2).unwrap_or(0.0)),
+                format!("{half}"),
+            ]);
+            for (round, mean, ci) in &curve.points {
+                csv.row(vec![
+                    dataset.clone(),
+                    curve.algo.clone(),
+                    format!("{round}"),
+                    format!("{mean:.3}"),
+                    format!("{ci:.3}"),
+                ]);
+            }
+        }
+        rendered.push_str(&format!("\n[fig7] {dataset}\n{}", summary.render()));
+    }
+    write_results(&settings.results_dir, "figure7_regret.txt", &rendered)?;
+    write_results(&settings.results_dir, "figure7_regret.csv", &csv.to_csv())?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitee_regret_sublinear_and_below_random() {
+        let cache = ConfidenceCache::synthetic(6000, 12, 31);
+        let cm = CostModel::paper(5.0, 0.1, 12);
+        let alpha = 0.85;
+        let mut mk_se: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(move || Box::new(SplitEePolicy::new(12, alpha, 1.0)));
+        let mut mk_rand: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(move || Box::new(RandomExitPolicy::new(alpha, 1)));
+        let se = regret_curves_with_alpha(&cache, "SplitEE", mk_se.as_mut(), &cm, alpha, 3, 5, 30);
+        let rd = regret_curves_with_alpha(&cache, "Random", mk_rand.as_mut(), &cm, alpha, 3, 5, 30);
+        assert!(se.final_mean < rd.final_mean * 0.6,
+                "SplitEE {:.1} vs Random {:.1}", se.final_mean, rd.final_mean);
+        // sublinear: second half adds less than the first half
+        let half = se.points[se.points.len() / 2].1;
+        assert!(se.final_mean - half < half * 1.2,
+                "curve not flattening: half {half:.1} final {:.1}", se.final_mean);
+    }
+
+    #[test]
+    fn splitee_s_saturates_no_later_than_splitee() {
+        let cache = ConfidenceCache::synthetic(5000, 12, 37);
+        let cm = CostModel::paper(5.0, 0.1, 12);
+        let alpha = 0.85;
+        let mut mk_se: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(move || Box::new(SplitEePolicy::new(12, alpha, 1.0)));
+        let mut mk_ss: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(move || Box::new(SplitEeSPolicy::new(12, alpha, 1.0)));
+        let se = regret_curves_with_alpha(&cache, "SplitEE", mk_se.as_mut(), &cm, alpha, 4, 9, 40);
+        let ss = regret_curves_with_alpha(&cache, "SplitEE-S", mk_ss.as_mut(), &cm, alpha, 4, 9, 40);
+        // figure-7 claim: side observations reduce cumulative regret
+        assert!(
+            ss.final_mean < se.final_mean,
+            "SplitEE-S {:.1} !< SplitEE {:.1}",
+            ss.final_mean,
+            se.final_mean
+        );
+    }
+
+    #[test]
+    fn oracle_policy_has_zero_regret() {
+        use crate::policy::FixedSplitPolicy;
+        let cache = ConfidenceCache::synthetic(2000, 12, 41);
+        let cm = CostModel::paper(5.0, 0.1, 12);
+        let alpha = 0.85;
+        let profiles: Vec<(Vec<f32>, Vec<f32>)> = (0..cache.n_samples)
+            .map(|i| (cache.sample_conf(i), cache.sample_ent(i)))
+            .collect();
+        let (oracle, _) = oracle_split(&profiles, &cm, alpha, false);
+        let mut mk: Box<dyn FnMut() -> Box<dyn Policy>> =
+            Box::new(move || Box::new(FixedSplitPolicy::new(oracle, alpha)));
+        let curve = regret_curves_with_alpha(&cache, "Oracle", mk.as_mut(), &cm, alpha, 2, 3, 20);
+        assert!(curve.final_mean.abs() < 1e-6, "oracle regret {}", curve.final_mean);
+    }
+}

@@ -1,0 +1,148 @@
+//! Report formatting: paper-style tables + CSV/JSON dumps under `results/`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{:<width$}", c, width = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (cols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    /// CSV serialisation.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a results file, creating the directory.
+pub fn write_results(dir: &Path, name: &str, contents: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, contents)?;
+    log::info!("wrote {path:?}");
+    Ok(())
+}
+
+/// Write a JSON results file.
+pub fn write_json(dir: &Path, name: &str, value: &Json) -> Result<()> {
+    write_results(dir, name, &value.to_string())
+}
+
+/// Format a signed delta in accuracy points the way the paper's Table 2 does.
+pub fn fmt_acc_delta(delta_points: f64) -> String {
+    if delta_points >= 0.0 {
+        format!("+{delta_points:.1}")
+    } else {
+        format!("{delta_points:.1}")
+    }
+}
+
+/// Format a relative cost delta (negative = cheaper), paper-style.
+pub fn fmt_cost_delta(frac: f64) -> String {
+    format!("{:+.1}%", 100.0 * frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["model", "acc"]);
+        t.row(vec!["Final-exit".into(), "83.4".into()]);
+        t.row(vec!["SplitEE".into(), "-1.3".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[2].starts_with("Final-exit"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_wrong_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new(&["name", "v"]);
+        t.row(vec!["a,b".into(), "say \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"a,b\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn delta_formatting() {
+        assert_eq!(fmt_acc_delta(-1.34), "-1.3");
+        assert_eq!(fmt_acc_delta(0.05), "+0.1");
+        assert_eq!(fmt_cost_delta(-0.666), "-66.6%");
+        assert_eq!(fmt_cost_delta(0.031), "+3.1%");
+    }
+}

@@ -1,0 +1,92 @@
+//! Section 5.4 — "Need for offloading": the fraction of samples the no-offload
+//! cascades process beyond the 6th layer, where on-device compute already
+//! exceeds the worst-case offloading cost (the paper measures DeeBERT 51%,
+//! ElasticBERT 35%).
+
+use anyhow::Result;
+
+use crate::config::{Manifest, Settings};
+use crate::cost::CostModel;
+use crate::experiments::cache::ConfidenceCache;
+use crate::experiments::report::{write_results, Table};
+use crate::experiments::runner::run_policy_repeated;
+use crate::policy::{DeeBertPolicy, ElasticBertPolicy, SplitEePolicy};
+use crate::runtime::Runtime;
+
+pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+    let l = manifest.model.n_layers;
+    let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
+    let mut table = Table::new(&[
+        "dataset",
+        "DeeBERT >6 %",
+        "ElasticBERT >6 %",
+        "SplitEE >6 %",
+        "SplitEE offload %",
+    ]);
+    let mut sums = [0.0f64; 3];
+    let mut count = 0.0;
+    for dataset in manifest.eval_datasets() {
+        let task = manifest.source_task(&dataset)?;
+        let eb = ConfidenceCache::load_or_build(manifest, runtime, &dataset, "elasticbert")?;
+        let db = ConfidenceCache::load_or_build(manifest, runtime, &dataset, "deebert")?;
+
+        let mut deebert = DeeBertPolicy::new(task.tau);
+        let r_db = run_policy_repeated(&db, &mut deebert, &cm, 1, settings.seed).mean;
+        let mut elastic = ElasticBertPolicy::new(task.alpha);
+        let r_eb = run_policy_repeated(&eb, &mut elastic, &cm, 1, settings.seed).mean;
+        let mut splitee = SplitEePolicy::new(l, task.alpha, settings.beta);
+        let r_se =
+            run_policy_repeated(&eb, &mut splitee, &cm, settings.reps, settings.seed).mean;
+
+        sums[0] += r_db.beyond_6_rate;
+        sums[1] += r_eb.beyond_6_rate;
+        sums[2] += r_se.beyond_6_rate;
+        count += 1.0;
+        table.row(vec![
+            dataset.clone(),
+            format!("{:.1}", 100.0 * r_db.beyond_6_rate),
+            format!("{:.1}", 100.0 * r_eb.beyond_6_rate),
+            format!("{:.1}", 100.0 * r_se.beyond_6_rate),
+            format!("{:.1}", 100.0 * r_se.offload_rate),
+        ]);
+    }
+    table.row(vec![
+        "MEAN".into(),
+        format!("{:.1}", 100.0 * sums[0] / count),
+        format!("{:.1}", 100.0 * sums[1] / count),
+        format!("{:.1}", 100.0 * sums[2] / count),
+        String::new(),
+    ]);
+    let rendered = format!(
+        "Section 5.4 — samples processed on-device beyond layer 6\n\
+         (paper: DeeBERT 51%, ElasticBERT 35%; processing past layer 6 costs\n\
+         more than the worst-case offload o = 5 lambda)\n{}",
+        table.render()
+    );
+    write_results(&settings.results_dir, "sec5_4_beyond6.txt", &rendered)?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::runner::run_policy_repeated;
+
+    /// SplitEE's offload option keeps deep on-device processing far below the
+    /// no-offload cascades on hard-heavy profiles.
+    #[test]
+    fn splitee_processes_less_deep_than_cascades() {
+        let cache = ConfidenceCache::synthetic(4000, 12, 51);
+        let cm = CostModel::paper(5.0, 0.1, 12);
+        let mut deebert = DeeBertPolicy::new(0.25);
+        let db = run_policy_repeated(&cache, &mut deebert, &cm, 1, 0).mean;
+        let mut splitee = SplitEePolicy::new(12, 0.85, 1.0);
+        let se = run_policy_repeated(&cache, &mut splitee, &cm, 3, 0).mean;
+        assert!(
+            se.beyond_6_rate < db.beyond_6_rate,
+            "SplitEE {:.2} !< DeeBERT {:.2}",
+            se.beyond_6_rate,
+            db.beyond_6_rate
+        );
+    }
+}

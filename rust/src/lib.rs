@@ -1,0 +1,44 @@
+//! # SplitEE — Early Exit in Deep Neural Networks with Split Computing
+//!
+//! Production reproduction of *SplitEE* (Bajpai, Trivedi, Yadav, Hanawal,
+//! 2023): a multi-armed-bandit coordinator that learns, online and without
+//! labels, **where to split** a multi-exit DNN between an edge device and the
+//! cloud, and decides **per sample** whether to exit at the split layer or
+//! offload.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **L1** — Pallas kernels (attention / ffn / exit head), authored in
+//!   `python/compile/kernels/`, validated against a pure-jnp oracle;
+//! * **L2** — the multi-exit JAX encoder, AOT-lowered to HLO-text artifacts
+//!   (`make artifacts`; python never runs on the request path);
+//! * **L3** — this crate: the PJRT [`runtime`], the multi-exit [`model`]
+//!   executor, the [`policy`] zoo (SplitEE, SplitEE-S and the paper's
+//!   baselines), the edge/cloud [`sim`]ulator, the serving [`coordinator`]
+//!   and the [`experiments`] harness that regenerates every table and figure
+//!   of the paper.
+//!
+//! Quick start (after `make artifacts && cargo build --release`):
+//!
+//! ```text
+//! splitee table2             # paper Table 2
+//! splitee figures            # paper Figures 3-6
+//! splitee regret             # paper Figure 7
+//! splitee serve --dataset imdb --requests 200
+//! ```
+
+pub mod bandit;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod experiments;
+pub mod model;
+pub mod policy;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod util;
+
+pub use config::{Manifest, Settings};

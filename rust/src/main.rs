@@ -1,0 +1,303 @@
+//! `splitee` — leader binary: experiments, serving, and artifact checks.
+//!
+//! ```text
+//! splitee check                      verify artifacts load + run
+//! splitee cache [--datasets a,b]     build confidence caches
+//! splitee table1                     paper Table 1 (dataset inventory)
+//! splitee table2 [--o 5 --reps 20]   paper Table 2
+//! splitee figures                    paper Figures 3-6 (sweep o)
+//! splitee regret                     paper Figure 7 (cumulative regret)
+//! splitee sec54                      paper section 5.4 analysis
+//! splitee ablations --which beta     beta/mu/alpha/side ablations
+//! splitee serve --dataset imdb       live co-inference serving demo
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use splitee::config::{Manifest, Settings};
+use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+use splitee::coordinator::service::PolicyKind;
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::data::{Dataset, SampleStream};
+use splitee::experiments::{ablations, figures, regret, report, sec5_4, table2,
+                           ConfidenceCache};
+use splitee::model::MultiExitModel;
+use splitee::runtime::Runtime;
+use splitee::sim::LinkSim;
+use splitee::util::args::Args;
+use splitee::util::logging;
+use splitee::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let verbosity = if args.has("quiet") { 0 } else if args.has("debug") { 2 } else { 1 };
+    logging::init(verbosity);
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let settings = Settings::from_args(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sub = args.subcommand.as_deref().unwrap_or("help");
+    match sub {
+        "check" => check(&settings),
+        "cache" => cache(args, &settings),
+        "table1" => table1(&settings),
+        "table2" => {
+            let (manifest, runtime) = open(&settings)?;
+            let out = table2::run(&manifest, &runtime, &settings)?;
+            println!("{out}");
+            Ok(())
+        }
+        "figures" => {
+            let (manifest, runtime) = open(&settings)?;
+            let out = figures::run(&manifest, &runtime, &settings)?;
+            println!("{out}");
+            Ok(())
+        }
+        "regret" => {
+            let (manifest, runtime) = open(&settings)?;
+            let out = regret::run(&manifest, &runtime, &settings)?;
+            println!("{out}");
+            Ok(())
+        }
+        "sec54" => {
+            let (manifest, runtime) = open(&settings)?;
+            let out = sec5_4::run(&manifest, &runtime, &settings)?;
+            println!("{out}");
+            Ok(())
+        }
+        "ablations" => {
+            let (manifest, runtime) = open(&settings)?;
+            let which = ablations::Which::parse(args.get_or("which", "all"))
+                .context("--which must be beta|mu|alpha|side|all")?;
+            let dataset = args.get_or("dataset", "imdb").to_string();
+            let out = ablations::run(&manifest, &runtime, &settings, which, &dataset)?;
+            println!("{out}");
+            Ok(())
+        }
+        "serve" => serve(args, &settings),
+        "help" | _ => {
+            println!("{}", HELP);
+            if sub != "help" {
+                bail!("unknown subcommand {sub:?}");
+            }
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+splitee — SplitEE: Early Exit in DNNs with Split Computing (reproduction)
+
+USAGE: splitee <subcommand> [flags]
+
+Subcommands
+  check        verify artifacts: load manifest, compile graphs, run a sample
+  cache        build confidence caches for all eval datasets
+  table1       dataset inventory (paper Table 1)
+  table2       main results (paper Table 2)
+  figures      accuracy/cost vs offloading cost (paper Figures 3-6)
+  regret       cumulative regret curves (paper Figure 7)
+  sec54        beyond-layer-6 analysis (paper section 5.4)
+  ablations    --which beta|mu|alpha|side|all [--dataset imdb]
+  serve        live co-inference serving
+               [--dataset imdb] [--requests 200] [--policy splitee|splitee-s|
+                fixed:K|final] [--network wifi|5g|4g|3g] [--listen ADDR]
+
+Common flags
+  --artifacts DIR   artifact directory (default: artifacts)
+  --results DIR     results directory  (default: results)
+  --o N             offloading cost in lambda units (default: 5)
+  --mu X            cost weight in the reward (default: 0.1)
+  --beta X          UCB exploration (default: 1.0)
+  --reps N          experiment repetitions (default: 20)
+  --seed N          master seed
+  --quiet / --debug verbosity
+";
+
+fn open(settings: &Settings) -> Result<(Manifest, Runtime)> {
+    let manifest = Manifest::load(&settings.artifacts_dir)?;
+    let runtime = Runtime::cpu()?;
+    log::info!(
+        "platform {} | model {}L d={} | {} tasks, {} datasets",
+        runtime.client().platform_name(),
+        manifest.model.n_layers,
+        manifest.model.d_model,
+        manifest.tasks.len(),
+        manifest.datasets.len()
+    );
+    Ok((manifest, runtime))
+}
+
+/// `splitee check` — end-to-end artifact sanity: compile + run one sample
+/// through every graph and compare the layered path to prefix_full.
+fn check(settings: &Settings) -> Result<()> {
+    let (manifest, runtime) = open(settings)?;
+    let mut failures = 0;
+    for (task_name, task) in &manifest.tasks {
+        for style in task.weights.keys() {
+            let model = MultiExitModel::load(&manifest, &runtime, task_name, style)?;
+            // one synthetic sample through the layered path
+            let tokens = splitee::tensor::TensorI32::new(
+                vec![1, manifest.model.seq_len],
+                (0..manifest.model.seq_len as i32)
+                    .map(|i| i % manifest.model.vocab as i32)
+                    .collect(),
+            )
+            .map_err(|e| anyhow::anyhow!(e))?;
+            let (_h, out) = model.run_split(&tokens, manifest.model.n_layers - 1)?;
+            let all = model.forward_all_exits(&tokens)?;
+            let diff = (all[manifest.model.n_layers - 1].conf[0] - out.conf[0]).abs();
+            let ok = diff < 1e-3;
+            if !ok {
+                failures += 1;
+            }
+            println!(
+                "{task_name}/{style}: layered final conf {:.4} vs prefix_full {:.4} ({})",
+                out.conf[0],
+                all[manifest.model.n_layers - 1].conf[0],
+                if ok { "OK" } else { "MISMATCH" }
+            );
+        }
+    }
+    if failures > 0 {
+        bail!("{failures} artifact checks failed");
+    }
+    println!("all artifact checks passed ({} modules compiled)", runtime.cached_count());
+    Ok(())
+}
+
+/// `splitee cache` — pre-build every confidence cache.
+fn cache(args: &Args, settings: &Settings) -> Result<()> {
+    let (manifest, runtime) = open(settings)?;
+    let datasets = args
+        .get_list("datasets")
+        .unwrap_or_else(|| manifest.eval_datasets());
+    for d in &datasets {
+        for style in ["elasticbert", "deebert"] {
+            let t0 = std::time::Instant::now();
+            let c = ConfidenceCache::load_or_build(&manifest, &runtime, d, style)?;
+            println!(
+                "{d}/{style}: {} samples x {} layers ({:.1}s)",
+                c.n_samples,
+                c.n_layers,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `splitee table1` — dataset inventory (paper Table 1).
+fn table1(settings: &Settings) -> Result<()> {
+    let manifest = Manifest::load(&settings.artifacts_dir)?;
+    let mut t = report::Table::new(&[
+        "E. Data", "#Samples", "(paper)", "FT Data", "#Samples", "(paper)", "classes",
+    ]);
+    for name in manifest.eval_datasets() {
+        let d = manifest.dataset(&name)?;
+        let src = manifest.source_task(&name)?;
+        let src_d = manifest.dataset(&src.name)?;
+        t.row(vec![
+            d.paper_name.clone(),
+            format!("{}", d.samples),
+            format!("{}", d.paper_samples),
+            src_d.paper_name.clone(),
+            format!("{}", src_d.samples),
+            format!("{}", src_d.paper_samples),
+            format!("{}", d.classes),
+        ]);
+    }
+    println!("Table 1 — dataset inventory (sizes scaled to this testbed; see DESIGN.md)");
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `splitee serve` — live serving through router -> batcher -> service with
+/// the co-inference simulator, driven by a dataset replay workload.
+fn serve(args: &Args, settings: &Settings) -> Result<()> {
+    let (manifest, runtime) = open(settings)?;
+    let dataset_name = args.get_or("dataset", "imdb").to_string();
+    let info = manifest.dataset(&dataset_name)?.clone();
+    let task = manifest.source_task(&dataset_name)?.clone();
+    let n_requests = args.get_num("requests", 200usize).map_err(anyhow::Error::msg)?;
+    let policy = match args.get_or("policy", "splitee") {
+        "splitee" => PolicyKind::SplitEe,
+        "splitee-s" => PolicyKind::SplitEeS,
+        "final" => PolicyKind::FinalExit,
+        other => {
+            if let Some(k) = other.strip_prefix("fixed:") {
+                PolicyKind::Fixed(k.parse().context("fixed:K")?)
+            } else {
+                bail!("unknown policy {other:?}");
+            }
+        }
+    };
+    let network = NetworkProfile::by_name(args.get_or("network", "3g"))
+        .context("--network must be wifi|5g|4g|3g")?;
+
+    let model = Arc::new(MultiExitModel::load(
+        &manifest, &runtime, &task.name, "elasticbert",
+    )?);
+    let dataset = Dataset::load(&manifest.root.join(&info.file), &dataset_name)?;
+    let cm = CostModel::paper(network.offload_lambda, settings.mu, model.n_layers());
+    let link = LinkSim::new(network, settings.seed ^ 0x11);
+    let config = ServiceConfig {
+        policy,
+        alpha: task.alpha,
+        beta: settings.beta,
+        batcher: BatcherConfig {
+            batch_sizes: manifest.batch_sizes.clone(),
+            max_wait: std::time::Duration::from_millis(4),
+        },
+    };
+
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+
+    // workload generator thread: replay shuffled dataset samples
+    let producer = {
+        let router = Arc::clone(&router);
+        let mut rng = Rng::new(settings.seed);
+        let stream: Vec<usize> =
+            SampleStream::shuffled(&dataset, &mut rng).take(n_requests).collect();
+        let tokens: Vec<_> = stream.iter().map(|&i| dataset.sample_tokens(i)).collect();
+        std::thread::spawn(move || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            for t in tokens {
+                if router.submit(t, tx.clone()).is_none() {
+                    break;
+                }
+            }
+            drop(tx);
+            // drain replies (the service loop also records metrics)
+            let mut got = 0usize;
+            while rx.recv().is_ok() {
+                got += 1;
+            }
+            router.shutdown();
+            got
+        })
+    };
+
+    let batcher_config = config.batcher.clone();
+    service.run(Arc::clone(&router), batcher_config)?;
+    let got = producer.join().expect("producer join");
+
+    println!("— serving report ({dataset_name}, policy {:?}, network {:?}) —",
+             args.get_or("policy", "splitee"), args.get_or("network", "3g"));
+    println!("{}", service.metrics.report());
+    if let Some((best, arms)) = service.bandit_summary() {
+        println!("bandit: best empirical split = layer {best}");
+        for (i, (n, q)) in arms.iter().enumerate() {
+            println!("  L{:<2} pulls {:<6} Q {:+.4}", i + 1, n, q);
+        }
+    }
+    anyhow::ensure!(got == n_requests, "expected {n_requests} replies, got {got}");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Multi-exit model execution on top of the PJRT runtime.
+//!
+//! [`MultiExitModel`] binds one trained task's weights to the compiled
+//! `embed` / `block` / `exit_head` graphs and exposes the layer-by-layer
+//! operations the coordinator needs for true early-exit serving: run blocks
+//! up to the split layer on the "edge", evaluate the exit head there, and —
+//! if offloading — continue through the remaining blocks on the "cloud".
+
+pub mod multi_exit;
+pub mod weights;
+
+pub use multi_exit::{ExitOutput, MultiExitModel};
+pub use weights::ModelWeights;
+
+/// Plan how to cover `n` samples with the compiled batch sizes.
+///
+/// Greedy: use the largest compiled batch that fits the remainder; when the
+/// remainder is smaller than every compiled batch, use the smallest compiled
+/// batch and pad.  Returns (batch size, real rows) pairs.
+pub fn plan_batches(n: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
+    assert!(!sizes.is_empty(), "no compiled batch sizes");
+    let mut sorted = sizes.to_vec();
+    sorted.sort_unstable();
+    let mut out = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        let fit = sorted.iter().rev().find(|&&b| b <= left);
+        match fit {
+            Some(&b) => {
+                out.push((b, b));
+                left -= b;
+            }
+            None => {
+                out.push((sorted[0], left));
+                left = 0;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_exact_fit() {
+        assert_eq!(plan_batches(16, &[1, 8]), vec![(8, 8), (8, 8)]);
+    }
+
+    #[test]
+    fn plan_with_padding_tail() {
+        assert_eq!(plan_batches(10, &[1, 8]), vec![(8, 8), (1, 1), (1, 1)]);
+        assert_eq!(plan_batches(3, &[8]), vec![(8, 3)]);
+    }
+
+    #[test]
+    fn plan_zero() {
+        assert!(plan_batches(0, &[1, 8]).is_empty());
+    }
+
+    #[test]
+    fn plan_covers_all_rows() {
+        for n in 0..50 {
+            for sizes in [&[1usize, 8][..], &[8][..], &[1][..], &[4, 32][..]] {
+                let plan = plan_batches(n, sizes);
+                let total: usize = plan.iter().map(|(_, real)| real).sum();
+                assert_eq!(total, n, "n={n} sizes={sizes:?}");
+                for (b, real) in plan {
+                    assert!(real <= b);
+                    assert!(sizes.contains(&b));
+                }
+            }
+        }
+    }
+}

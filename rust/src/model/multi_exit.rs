@@ -1,0 +1,419 @@
+//! The multi-exit encoder bound to trained weights, executing compiled
+//! PJRT graphs layer by layer.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::weights::ModelWeights;
+use super::plan_batches;
+use crate::config::Manifest;
+use crate::runtime::executable::Arg;
+use crate::runtime::{Executable, Runtime};
+use crate::tensor::{TensorF32, TensorI32};
+
+/// Output of one exit head over a batch.
+#[derive(Debug, Clone)]
+pub struct ExitOutput {
+    /// class probabilities [B, C]
+    pub probs: TensorF32,
+    /// max-probability confidence per sample (the paper's C_i)
+    pub conf: Vec<f32>,
+    /// prediction entropy per sample in nats (DeeBERT's measure)
+    pub ent: Vec<f32>,
+    /// argmax class per sample
+    pub pred: Vec<usize>,
+}
+
+impl ExitOutput {
+    fn from_tensors(probs: TensorF32, conf: TensorF32, ent: TensorF32) -> Result<ExitOutput> {
+        let pred = probs.argmax_rows().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(ExitOutput {
+            pred,
+            conf: conf.data().to_vec(),
+            ent: ent.data().to_vec(),
+            probs,
+        })
+    }
+
+    fn truncate(&mut self, n: usize) {
+        if self.conf.len() > n {
+            self.probs = self.probs.slice_rows(0, n).expect("truncate probs");
+            self.conf.truncate(n);
+            self.ent.truncate(n);
+            self.pred.truncate(n);
+        }
+    }
+
+    fn append(&mut self, other: &ExitOutput) {
+        self.probs =
+            TensorF32::concat_rows(&[&self.probs, &other.probs]).expect("concat probs");
+        self.conf.extend_from_slice(&other.conf);
+        self.ent.extend_from_slice(&other.ent);
+        self.pred.extend_from_slice(&other.pred);
+    }
+
+    pub fn len(&self) -> usize {
+        self.conf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conf.is_empty()
+    }
+}
+
+/// One trained multi-exit model, ready to execute layer by layer.
+///
+/// The same compiled `block` executable serves all layers (weights are
+/// arguments), mirroring the paper's hardware-reuse motivation: one physical
+/// module re-run per layer.
+pub struct MultiExitModel {
+    pub task: String,
+    pub style: String,
+    weights: Arc<ModelWeights>,
+    embed: BTreeMap<usize, Arc<Executable>>,
+    block: BTreeMap<usize, Arc<Executable>>,
+    head: BTreeMap<usize, Arc<Executable>>,
+    prefix_full: Option<(usize, Arc<Executable>)>,
+    /// Weight tensors pre-converted to XLA literals — skips the host copy on
+    /// every layer execution (L3 perf pass; disable for A/B measurement with
+    /// SPLITEE_NO_LITERAL_CACHE=1).
+    lits: Option<LitCache>,
+    batch_sizes: Vec<usize>,
+    n_layers: usize,
+    seq_len: usize,
+}
+
+struct LitCache {
+    embed: Vec<xla::Literal>,
+    blocks: Vec<Vec<xla::Literal>>,
+    heads: Vec<Vec<xla::Literal>>,
+    prefix: Vec<xla::Literal>,
+}
+
+// SAFETY: the literal cache is immutable after construction and literals are
+// plain host buffers; the PJRT CPU executables are internally synchronized.
+// The model is only ever used behind `Arc` with `&self` access.
+unsafe impl Send for MultiExitModel {}
+unsafe impl Sync for MultiExitModel {}
+
+fn build_lit_cache(weights: &ModelWeights) -> anyhow::Result<LitCache> {
+    use crate::runtime::literal::literal_f32;
+    let conv = |ts: &[crate::tensor::TensorF32]| -> anyhow::Result<Vec<xla::Literal>> {
+        ts.iter().map(literal_f32).collect()
+    };
+    Ok(LitCache {
+        embed: conv(&weights.embed)?,
+        blocks: weights.blocks.iter().map(|b| conv(b)).collect::<anyhow::Result<_>>()?,
+        heads: weights.heads.iter().map(|h| conv(h)).collect::<anyhow::Result<_>>()?,
+        prefix: {
+            let mut all = conv(&weights.embed)?;
+            for b in &weights.blocks {
+                all.extend(conv(b)?);
+            }
+            for h in &weights.heads {
+                all.extend(conv(h)?);
+            }
+            all
+        },
+    })
+}
+
+impl MultiExitModel {
+    /// Load a task's trained model (`style` is "elasticbert" or "deebert").
+    pub fn load(manifest: &Manifest, runtime: &Runtime, task: &str, style: &str) -> Result<Self> {
+        let info = manifest.task(task)?;
+        let weights = ModelWeights::load(
+            &manifest.weights_path(task, style)?,
+            manifest.model.n_layers,
+        )?;
+        if weights.n_classes != info.classes {
+            bail!(
+                "weights for {task} have {} classes, manifest says {}",
+                weights.n_classes,
+                info.classes
+            );
+        }
+        let head_graph = format!("head_c{}", info.classes);
+        let mut embed = BTreeMap::new();
+        let mut block = BTreeMap::new();
+        let mut head = BTreeMap::new();
+        for &b in &manifest.batch_sizes {
+            embed.insert(b, runtime.load(&manifest.hlo_path("embed", b)?)?);
+            block.insert(b, runtime.load(&manifest.hlo_path("block", b)?)?);
+            head.insert(b, runtime.load(&manifest.hlo_path(&head_graph, b)?)?);
+        }
+        let prefix_graph = format!("prefix_full_c{}", info.classes);
+        let prefix_full = match manifest.hlo_path(&prefix_graph, manifest.cache_batch) {
+            Ok(path) => Some((manifest.cache_batch, runtime.load(&path)?)),
+            Err(_) => None,
+        };
+        let weights = Arc::new(weights);
+        let lits = if std::env::var("SPLITEE_NO_LITERAL_CACHE").is_ok() {
+            None
+        } else {
+            Some(build_lit_cache(&weights)?)
+        };
+        Ok(MultiExitModel {
+            task: task.to_string(),
+            style: style.to_string(),
+            weights,
+            embed,
+            block,
+            head,
+            prefix_full,
+            lits,
+            batch_sizes: manifest.batch_sizes.clone(),
+            n_layers: manifest.model.n_layers,
+            seq_len: manifest.model.seq_len,
+        })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.weights.n_classes
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn batch_sizes(&self) -> &[usize] {
+        &self.batch_sizes
+    }
+
+    /// Largest compiled batch size.
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.iter().max().unwrap()
+    }
+
+    fn pick_exec<'a>(
+        table: &'a BTreeMap<usize, Arc<Executable>>,
+        batch: usize,
+    ) -> Result<&'a Arc<Executable>> {
+        table
+            .get(&batch)
+            .with_context(|| format!("no executable compiled for batch {batch}"))
+    }
+
+    /// Embedding: tokens [B, T] -> hidden [B, T, D].  B must be a compiled
+    /// batch size (callers batch via [`plan_batches`]).
+    pub fn embed(&self, tokens: &TensorI32) -> Result<TensorF32> {
+        let b = tokens.shape()[0];
+        let exe = Self::pick_exec(&self.embed, b)?;
+        let mut args = vec![Arg::I32(tokens)];
+        match &self.lits {
+            Some(l) => args.extend(l.embed.iter().map(Arg::Lit)),
+            None => args.extend(self.weights.embed.iter().map(Arg::F32)),
+        }
+        let mut out = exe.run_f32(&args)?;
+        Ok(out.remove(0))
+    }
+
+    /// One transformer block: hidden [B, T, D] -> hidden [B, T, D].
+    /// `layer` is 0-based.
+    pub fn block(&self, h: &TensorF32, layer: usize) -> Result<TensorF32> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        }
+        let b = h.shape()[0];
+        let exe = Self::pick_exec(&self.block, b)?;
+        let mut args = vec![Arg::F32(h)];
+        match &self.lits {
+            Some(l) => args.extend(l.blocks[layer].iter().map(Arg::Lit)),
+            None => args.extend(self.weights.blocks[layer].iter().map(Arg::F32)),
+        }
+        let mut out = exe.run_f32(&args)?;
+        Ok(out.remove(0))
+    }
+
+    /// Exit head after `layer` (0-based): hidden -> (probs, conf, ent, pred).
+    pub fn exit_head(&self, h: &TensorF32, layer: usize) -> Result<ExitOutput> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        }
+        let b = h.shape()[0];
+        let exe = Self::pick_exec(&self.head, b)?;
+        let mut args = vec![Arg::F32(h)];
+        match &self.lits {
+            Some(l) => args.extend(l.heads[layer].iter().map(Arg::Lit)),
+            None => args.extend(self.weights.heads[layer].iter().map(Arg::F32)),
+        }
+        let mut out = exe.run_f32(&args)?;
+        if out.len() != 3 {
+            bail!("exit head returned {} outputs, expected 3", out.len());
+        }
+        let ent = out.pop().unwrap();
+        let conf = out.pop().unwrap();
+        let probs = out.pop().unwrap();
+        ExitOutput::from_tensors(probs, conf, ent)
+    }
+
+    /// Run embed + blocks `0..=layer` (0-based).  Returns the hidden state at
+    /// the split point.  This is the "edge device" share of the computation.
+    pub fn forward_to(&self, tokens: &TensorI32, layer: usize) -> Result<TensorF32> {
+        let mut h = self.embed(tokens)?;
+        for l in 0..=layer {
+            h = self.block(&h, l)?;
+        }
+        Ok(h)
+    }
+
+    /// Continue from the hidden state after `from_layer` (0-based, already
+    /// executed) through the final block.  This is the "cloud" share after an
+    /// offload.
+    pub fn forward_rest(&self, h: &TensorF32, from_layer: usize) -> Result<TensorF32> {
+        let mut h = h.clone();
+        for l in (from_layer + 1)..self.n_layers {
+            h = self.block(&h, l)?;
+        }
+        Ok(h)
+    }
+
+    /// Full forward through every exit at once via the fused `prefix_full`
+    /// graph.  tokens [B, T] with any B — batching/padding handled here.
+    /// Returns per-layer outputs, outer index = layer.
+    pub fn forward_all_exits(&self, tokens: &TensorI32) -> Result<Vec<ExitOutput>> {
+        let (cache_b, exe) = self
+            .prefix_full
+            .as_ref()
+            .context("prefix_full graph not in manifest")?;
+        let n = tokens.shape()[0];
+        let mut per_layer: Vec<Option<ExitOutput>> = vec![None; self.n_layers];
+        let mut done = 0usize;
+        while done < n {
+            let real = (*cache_b).min(n - done);
+            let chunk = tokens
+                .slice_rows(done, done + real)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .pad_rows_to(*cache_b)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let mut args = vec![Arg::I32(&chunk)];
+            let flat;
+            match &self.lits {
+                Some(l) => args.extend(l.prefix.iter().map(Arg::Lit)),
+                None => {
+                    flat = self.weights.prefix_full_args();
+                    args.extend(flat.iter().map(|t| Arg::F32(t)));
+                }
+            }
+            let out = exe.run_f32(&args)?;
+            // output layout: (probs [L,B,C], conf [L,B], ent [L,B])
+            if out.len() != 3 {
+                bail!("prefix_full returned {} outputs, expected 3", out.len());
+            }
+            let (probs, conf, ent) = (&out[0], &out[1], &out[2]);
+            let c = probs.shape()[2];
+            for l in 0..self.n_layers {
+                let p = slice_layer(probs, l, real, c)?;
+                let cf = slice_layer_vec(conf, l, real)?;
+                let en = slice_layer_vec(ent, l, real)?;
+                let mut eo = ExitOutput::from_tensors(
+                    p,
+                    TensorF32::new(vec![real], cf).map_err(|e| anyhow::anyhow!(e))?,
+                    TensorF32::new(vec![real], en).map_err(|e| anyhow::anyhow!(e))?,
+                )?;
+                eo.truncate(real);
+                match &mut per_layer[l] {
+                    Some(acc) => acc.append(&eo),
+                    slot => *slot = Some(eo),
+                }
+            }
+            done += real;
+        }
+        Ok(per_layer.into_iter().map(|o| o.expect("layer filled")).collect())
+    }
+
+    /// Convenience single-pass serving call used by examples and tests: run
+    /// to `split` (0-based), evaluate its exit head, and return both the exit
+    /// output and the hidden state (for a possible offload continuation).
+    pub fn run_split(
+        &self,
+        tokens: &TensorI32,
+        split: usize,
+    ) -> Result<(TensorF32, ExitOutput)> {
+        let h = self.forward_to(tokens, split)?;
+        let out = self.exit_head(&h, split)?;
+        Ok((h, out))
+    }
+
+    /// Cover `n` rows with compiled batch sizes (see [`plan_batches`]).
+    pub fn batch_plan(&self, n: usize) -> Vec<(usize, usize)> {
+        plan_batches(n, &self.batch_sizes)
+    }
+}
+
+/// Slice layer `l` out of a stacked [L, B, C] tensor, keeping `real` rows.
+fn slice_layer(t: &TensorF32, l: usize, real: usize, c: usize) -> Result<TensorF32> {
+    let b = t.shape()[1];
+    let start = l * b * c;
+    let data = &t.data()[start..start + real * c];
+    TensorF32::new(vec![real, c], data.to_vec()).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// Slice layer `l` out of a stacked [L, B] tensor, keeping `real` entries.
+fn slice_layer_vec(t: &TensorF32, l: usize, real: usize) -> Result<Vec<f32>> {
+    let b = t.shape()[1];
+    let start = l * b;
+    Ok(t.data()[start..start + real].to_vec())
+}
+
+impl std::fmt::Debug for MultiExitModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MultiExitModel")
+            .field("task", &self.task)
+            .field("style", &self.style)
+            .field("layers", &self.n_layers)
+            .field("classes", &self.weights.n_classes)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_output_truncate_and_append() {
+        let probs = TensorF32::new(vec![3, 2], vec![0.9, 0.1, 0.2, 0.8, 0.6, 0.4]).unwrap();
+        let conf = TensorF32::new(vec![3], vec![0.9, 0.8, 0.6]).unwrap();
+        let ent = TensorF32::new(vec![3], vec![0.3, 0.5, 0.67]).unwrap();
+        let mut eo = ExitOutput::from_tensors(probs, conf, ent).unwrap();
+        assert_eq!(eo.pred, vec![0, 1, 0]);
+        eo.truncate(2);
+        assert_eq!(eo.len(), 2);
+        assert_eq!(eo.pred, vec![0, 1]);
+
+        let other = ExitOutput::from_tensors(
+            TensorF32::new(vec![1, 2], vec![0.3, 0.7]).unwrap(),
+            TensorF32::new(vec![1], vec![0.7]).unwrap(),
+            TensorF32::new(vec![1], vec![0.61]).unwrap(),
+        )
+        .unwrap();
+        eo.append(&other);
+        assert_eq!(eo.len(), 3);
+        assert_eq!(eo.pred, vec![0, 1, 1]);
+        assert_eq!(eo.probs.shape(), &[3, 2]);
+    }
+
+    #[test]
+    fn slice_layer_helpers() {
+        // L=2, B=2, C=2 stacked tensor
+        let t = TensorF32::new(
+            vec![2, 2, 2],
+            vec![1., 2., 3., 4., 5., 6., 7., 8.],
+        )
+        .unwrap();
+        let l1 = slice_layer(&t, 1, 2, 2).unwrap();
+        assert_eq!(l1.data(), &[5., 6., 7., 8.]);
+        let l0_partial = slice_layer(&t, 0, 1, 2).unwrap();
+        assert_eq!(l0_partial.data(), &[1., 2.]);
+
+        let v = TensorF32::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(slice_layer_vec(&v, 1, 2).unwrap(), vec![4., 5.]);
+    }
+}

@@ -1,0 +1,284 @@
+//! Trained-weights loader (SPLW binary format written by
+//! `python/compile/export.py` — keep the layout in sync).
+//!
+//! Format (little-endian):
+//!
+//! ```text
+//!     u32 magic = 0x53504C57 ("SPLW")    u32 version = 1
+//!     u32 n_tensors
+//!     per tensor:
+//!         u16 name_len, name bytes (utf-8)
+//!         u8 dtype (0 = f32, 1 = i32)
+//!         u8 ndim, u32 dims[ndim]
+//!         raw data (numel * 4 bytes)
+//! ```
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+use crate::tensor::TensorF32;
+
+pub const WEIGHTS_MAGIC: u32 = 0x53504C57;
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Parameter argument order of one transformer block — must match
+/// `python/compile/common.py::BLOCK_PARAM_ORDER`.
+pub const BLOCK_PARAM_ORDER: [&str; 16] = [
+    "ln1_g", "ln1_b",
+    "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+    "ln2_g", "ln2_b",
+    "w1", "b1", "w2", "b2",
+];
+
+/// Exit-head argument order — must match `HEAD_PARAM_ORDER`.
+pub const HEAD_PARAM_ORDER: [&str; 4] = ["ln_g", "ln_b", "wc", "bc"];
+
+/// Embedding argument order — must match `EMBED_PARAM_ORDER`.
+pub const EMBED_PARAM_ORDER: [&str; 4] = ["tok", "pos", "ln_g", "ln_b"];
+
+/// All parameters of one trained multi-exit model, pre-sliced into the
+/// argument lists each compiled graph expects.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub n_layers: usize,
+    pub n_classes: usize,
+    /// embed graph args, canonical order
+    pub embed: Vec<TensorF32>,
+    /// block graph args per layer, canonical order
+    pub blocks: Vec<Vec<TensorF32>>,
+    /// head graph args per layer, canonical order
+    pub heads: Vec<Vec<TensorF32>>,
+}
+
+impl ModelWeights {
+    /// Load from a SPLW file.  `n_layers` comes from the manifest.
+    pub fn load(path: &Path, n_layers: usize) -> Result<ModelWeights> {
+        let raw = read_raw(path)?;
+        Self::from_map(raw, n_layers)
+    }
+
+    fn from_map(mut raw: BTreeMap<String, TensorF32>, n_layers: usize) -> Result<ModelWeights> {
+        let mut take = |name: String| -> Result<TensorF32> {
+            raw.remove(&name)
+                .with_context(|| format!("weights file missing tensor {name:?}"))
+        };
+        let embed = EMBED_PARAM_ORDER
+            .iter()
+            .map(|k| take(format!("embed.{k}")))
+            .collect::<Result<Vec<_>>>()?;
+        let mut blocks = Vec::with_capacity(n_layers);
+        let mut heads = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            blocks.push(
+                BLOCK_PARAM_ORDER
+                    .iter()
+                    .map(|k| take(format!("block{i}.{k}")))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+            heads.push(
+                HEAD_PARAM_ORDER
+                    .iter()
+                    .map(|k| take(format!("head{i}.{k}")))
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        if !raw.is_empty() {
+            bail!(
+                "weights file has {} unexpected tensors (e.g. {:?}) — wrong n_layers?",
+                raw.len(),
+                raw.keys().next()
+            );
+        }
+        // n_classes from the classifier shape [D, C]
+        let wc = &heads[0][2];
+        if wc.ndim() != 2 {
+            bail!("head0.wc must be 2-D, got shape {:?}", wc.shape());
+        }
+        let n_classes = wc.shape()[1];
+        Ok(ModelWeights { n_layers, n_classes, embed, blocks, heads })
+    }
+
+    /// Flat argument list for the `prefix_full` graph: embed params, then all
+    /// block params, then all head params (matches the AOT flat order).
+    pub fn prefix_full_args(&self) -> Vec<&TensorF32> {
+        let mut out: Vec<&TensorF32> = self.embed.iter().collect();
+        for b in &self.blocks {
+            out.extend(b.iter());
+        }
+        for h in &self.heads {
+            out.extend(h.iter());
+        }
+        out
+    }
+}
+
+/// Read the raw name -> tensor map (f32 only; the format also allows i32 but
+/// model weights are all f32).
+pub fn read_raw(path: &Path) -> Result<BTreeMap<String, TensorF32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading weights {path:?}"))?;
+    let mut r = std::io::Cursor::new(&bytes);
+    let magic = r.read_u32::<LittleEndian>().context("magic")?;
+    if magic != WEIGHTS_MAGIC {
+        bail!("{path:?}: bad magic {magic:#x} (expected SPLW)");
+    }
+    let version = r.read_u32::<LittleEndian>()?;
+    if version != FORMAT_VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let n = r.read_u32::<LittleEndian>()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        let name_len = r.read_u16::<LittleEndian>()? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("tensor name utf-8")?;
+        let dtype = r.read_u8()?;
+        if dtype != 0 {
+            bail!("{path:?}: tensor {name:?} has non-f32 dtype {dtype}");
+        }
+        let ndim = r.read_u8()? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(r.read_u32::<LittleEndian>()? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        let mut data = vec![0f32; numel];
+        r.read_f32_into::<LittleEndian>(&mut data)
+            .with_context(|| format!("tensor {name:?} data truncated"))?;
+        out.insert(
+            name,
+            TensorF32::new(dims, data).map_err(|e| anyhow::anyhow!(e))?,
+        );
+    }
+    if (r.position() as usize) != bytes.len() {
+        bail!("{path:?}: {} trailing bytes", bytes.len() - r.position() as usize);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use byteorder::WriteBytesExt;
+    use std::io::Write;
+
+    fn write_tensor(buf: &mut Vec<u8>, name: &str, dims: &[u32], data: &[f32]) {
+        buf.write_u16::<LittleEndian>(name.len() as u16).unwrap();
+        buf.write_all(name.as_bytes()).unwrap();
+        buf.write_u8(0).unwrap();
+        buf.write_u8(dims.len() as u8).unwrap();
+        for &d in dims {
+            buf.write_u32::<LittleEndian>(d).unwrap();
+        }
+        for &v in data {
+            buf.write_f32::<LittleEndian>(v).unwrap();
+        }
+    }
+
+    fn tiny_weights_file(n_layers: usize, classes: usize) -> Vec<u8> {
+        let d = 4usize;
+        let f = 8usize;
+        let mut body = Vec::new();
+        let mut count = 0u32;
+        let mut emit = |name: String, dims: Vec<u32>| {
+            let numel: usize = dims.iter().map(|&x| x as usize).product();
+            write_tensor(&mut body, &name, &dims, &vec![0.5; numel]);
+            count += 1;
+        };
+        emit("embed.tok".into(), vec![16, d as u32]);
+        emit("embed.pos".into(), vec![8, d as u32]);
+        emit("embed.ln_g".into(), vec![d as u32]);
+        emit("embed.ln_b".into(), vec![d as u32]);
+        for i in 0..n_layers {
+            for k in BLOCK_PARAM_ORDER {
+                let dims = match k {
+                    "wq" | "wk" | "wv" | "wo" => vec![d as u32, d as u32],
+                    "w1" => vec![d as u32, f as u32],
+                    "w2" => vec![f as u32, d as u32],
+                    "b1" => vec![f as u32],
+                    _ => vec![d as u32],
+                };
+                emit(format!("block{i}.{k}"), dims);
+            }
+            for k in HEAD_PARAM_ORDER {
+                let dims = match k {
+                    "wc" => vec![d as u32, classes as u32],
+                    "bc" => vec![classes as u32],
+                    _ => vec![d as u32],
+                };
+                emit(format!("head{i}.{k}"), dims);
+            }
+        }
+        let mut file = Vec::new();
+        file.write_u32::<LittleEndian>(WEIGHTS_MAGIC).unwrap();
+        file.write_u32::<LittleEndian>(FORMAT_VERSION).unwrap();
+        file.write_u32::<LittleEndian>(count).unwrap();
+        file.extend_from_slice(&body);
+        file
+    }
+
+    fn temp_file(bytes: &[u8]) -> std::path::PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "splitee_w_{}_{:?}.bin",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn load_valid_file() {
+        let path = temp_file(&tiny_weights_file(2, 3));
+        let w = ModelWeights::load(&path, 2).unwrap();
+        assert_eq!(w.n_layers, 2);
+        assert_eq!(w.n_classes, 3);
+        assert_eq!(w.embed.len(), 4);
+        assert_eq!(w.blocks.len(), 2);
+        assert_eq!(w.blocks[0].len(), 16);
+        assert_eq!(w.heads[1].len(), 4);
+        assert_eq!(w.prefix_full_args().len(), 4 + 2 * 16 + 2 * 4);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = tiny_weights_file(1, 2);
+        bytes[0] = 0;
+        let path = temp_file(&bytes);
+        assert!(ModelWeights::load(&path, 1).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_layer_count() {
+        let path = temp_file(&tiny_weights_file(2, 2));
+        // asking for more layers than present -> missing tensor error
+        assert!(ModelWeights::load(&path, 3).is_err());
+        // asking for fewer -> leftover tensor error
+        assert!(ModelWeights::load(&path, 1).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut bytes = tiny_weights_file(1, 2);
+        bytes.truncate(bytes.len() - 10);
+        let path = temp_file(&bytes);
+        assert!(ModelWeights::load(&path, 1).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = tiny_weights_file(1, 2);
+        bytes.extend_from_slice(&[0u8; 4]);
+        let path = temp_file(&bytes);
+        assert!(ModelWeights::load(&path, 1).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+}

@@ -1,0 +1,238 @@
+//! Paper section 7 (future work) extensions, implemented as first-class
+//! policies:
+//!
+//! * [`AdaptiveThresholdPolicy`] — the exit threshold `alpha` is *learned*
+//!   online instead of fixed by offline validation: a small grid of candidate
+//!   thresholds forms a second bandit layered over the split-layer bandit.
+//! * [`PerSamplePolicy`] — the split is adapted *per sample*: a cheap
+//!   difficulty probe (confidence at the first exit) buckets samples, and an
+//!   independent UCB learns the best split per bucket.
+
+use super::{Outcome, Policy, SampleView};
+use crate::bandit::Ucb;
+use crate::cost::CostModel;
+
+/// SplitEE with an online-learned exit threshold (future-work extension 1).
+///
+/// Two-level bandit: an outer UCB picks `alpha` from a grid, the inner UCB
+/// picks the split layer; both update from the same realised reward.
+#[derive(Debug, Clone)]
+pub struct AdaptiveThresholdPolicy {
+    layer_ucb: Ucb,
+    alpha_ucb: Ucb,
+    alphas: Vec<f64>,
+    last_alpha_arm: usize,
+}
+
+impl AdaptiveThresholdPolicy {
+    pub fn new(n_layers: usize, beta: f64) -> AdaptiveThresholdPolicy {
+        let alphas = vec![0.70, 0.80, 0.85, 0.90, 0.95];
+        AdaptiveThresholdPolicy {
+            layer_ucb: Ucb::new(n_layers, beta),
+            alpha_ucb: Ucb::new(alphas.len(), beta),
+            alphas,
+            last_alpha_arm: 0,
+        }
+    }
+
+    pub fn current_alpha(&self) -> f64 {
+        self.alphas[self.last_alpha_arm]
+    }
+}
+
+impl Policy for AdaptiveThresholdPolicy {
+    fn name(&self) -> String {
+        "SplitEE-AT".into()
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let alpha_arm = self.alpha_ucb.choose();
+        self.last_alpha_arm = alpha_arm;
+        let alpha = self.alphas[alpha_arm];
+        let split = self.layer_ucb.choose() + 1;
+        let conf_i = s.conf[split - 1] as f64;
+        let exited = conf_i >= alpha || split == l;
+        let (infer_layer, offloaded, reward) = if exited {
+            (split, false, cm.reward_exit(split, conf_i, false))
+        } else {
+            (l, true, cm.reward_offload(split, s.conf[l - 1] as f64, false))
+        };
+        self.layer_ucb.update(split - 1, reward);
+        self.alpha_ucb.update(alpha_arm, reward);
+        Outcome {
+            split,
+            infer_layer,
+            offloaded,
+            cost: cm.total_cost(split, offloaded, false),
+            reward,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.layer_ucb.reset();
+        self.alpha_ucb.reset();
+        self.last_alpha_arm = 0;
+    }
+}
+
+/// Per-sample adaptive split (future-work extension 2).
+///
+/// The confidence of the *first* exit is observed for every sample anyway
+/// (its head is the cheapest probe: `lambda1 + lambda2`).  Samples are
+/// bucketed by that probe confidence, and an independent split-layer UCB is
+/// learned per bucket, so "easy-looking" samples can take shallow splits
+/// while "hard-looking" samples go deep or offload.
+#[derive(Debug, Clone)]
+pub struct PerSamplePolicy {
+    buckets: Vec<Ucb>,
+    /// probe-confidence bucket edges
+    edges: Vec<f64>,
+    pub alpha: f64,
+}
+
+impl PerSamplePolicy {
+    pub fn new(n_layers: usize, alpha: f64, beta: f64) -> PerSamplePolicy {
+        let edges = vec![0.6, 0.75, 0.9];
+        PerSamplePolicy {
+            buckets: (0..edges.len() + 1).map(|_| Ucb::new(n_layers, beta)).collect(),
+            edges,
+            alpha,
+        }
+    }
+
+    fn bucket_of(&self, probe_conf: f64) -> usize {
+        self.edges.iter().take_while(|&&e| probe_conf >= e).count()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+impl Policy for PerSamplePolicy {
+    fn name(&self) -> String {
+        "SplitEE-PS".into()
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let probe = s.conf[0] as f64; // layer-1 head is the probe
+        let b = self.bucket_of(probe);
+        let split = (self.buckets[b].choose() + 1).max(1);
+        let conf_i = s.conf[split - 1] as f64;
+        let exited = conf_i >= self.alpha || split == l;
+        // The probe head is an extra lambda2 unless the split *is* layer 1.
+        let probe_extra = if split == 1 { 0.0 } else { cm.lambda2 };
+        let (infer_layer, offloaded, reward) = if exited {
+            (split, false, cm.reward_exit(split, conf_i, false) - cm.mu * probe_extra)
+        } else {
+            (
+                l,
+                true,
+                cm.reward_offload(split, s.conf[l - 1] as f64, false) - cm.mu * probe_extra,
+            )
+        };
+        self.buckets[b].update(split - 1, reward);
+        Outcome {
+            split,
+            infer_layer,
+            offloaded,
+            cost: cm.total_cost(split, offloaded, false) + probe_extra,
+            reward,
+        }
+    }
+
+    fn reset(&mut self) {
+        for b in &mut self.buckets {
+            b.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthMix, SynthProfile};
+    use crate::util::rng::Rng;
+
+    fn cm() -> CostModel {
+        CostModel::paper(5.0, 0.1, 12)
+    }
+
+    fn run<P: Policy>(p: &mut P, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Rng::new(seed);
+        let profile = SynthProfile::generate(n, 12, SynthMix::default(), &mut rng);
+        let ent = vec![0.0f32; 12];
+        let c = cm();
+        let mut cost = 0.0;
+        let mut acc = 0.0;
+        for i in 0..profile.len() {
+            let s = SampleView { conf: &profile.conf[i], ent: &ent };
+            let o = p.decide(&s, &c);
+            cost += o.cost;
+            if profile.correct[i][o.infer_layer - 1] {
+                acc += 1.0;
+            }
+        }
+        (acc / n as f64, cost / n as f64)
+    }
+
+    #[test]
+    fn adaptive_threshold_runs_and_learns() {
+        let mut p = AdaptiveThresholdPolicy::new(12, 1.0);
+        let (acc, cost) = run(&mut p, 4000, 11);
+        assert!(acc > 0.7, "acc {acc}");
+        assert!(cost < 12.0, "cost {cost}");
+        assert!((0.5..=1.0).contains(&p.current_alpha()));
+    }
+
+    #[test]
+    fn per_sample_buckets_split_independently() {
+        let mut p = PerSamplePolicy::new(12, 0.85, 1.0);
+        assert_eq!(p.n_buckets(), 4);
+        assert_eq!(p.bucket_of(0.5), 0);
+        assert_eq!(p.bucket_of(0.65), 1);
+        assert_eq!(p.bucket_of(0.8), 2);
+        assert_eq!(p.bucket_of(0.95), 3);
+        let (acc, cost) = run(&mut p, 4000, 13);
+        assert!(acc > 0.7, "acc {acc}");
+        assert!(cost < 12.0, "cost {cost}");
+    }
+
+    #[test]
+    fn per_sample_cheaper_than_final_exit_on_easy_heavy_mix() {
+        let mut rng = Rng::new(17);
+        let profile = SynthProfile::generate(
+            3000,
+            12,
+            SynthMix { easy: 0.8, medium: 0.1, hard: 0.05, trap: 0.05 },
+            &mut rng,
+        );
+        let ent = vec![0.0f32; 12];
+        let c = cm();
+        let mut p = PerSamplePolicy::new(12, 0.85, 1.0);
+        let mut cost = 0.0;
+        for i in 0..profile.len() {
+            let s = SampleView { conf: &profile.conf[i], ent: &ent };
+            cost += p.decide(&s, &c).cost;
+        }
+        let mean = cost / profile.len() as f64;
+        assert!(mean < 0.6 * c.final_exit_cost(), "mean cost {mean}");
+    }
+
+    #[test]
+    fn reset_clears_all_buckets() {
+        let mut p = PerSamplePolicy::new(12, 0.85, 1.0);
+        let conf = vec![0.9f32; 12];
+        let ent = vec![0.0f32; 12];
+        let c = cm();
+        for _ in 0..30 {
+            p.decide(&SampleView { conf: &conf, ent: &ent }, &c);
+        }
+        p.reset();
+        for b in 0..p.n_buckets() {
+            assert_eq!(p.buckets[b].t, 0);
+        }
+    }
+}

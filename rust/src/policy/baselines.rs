@@ -1,0 +1,302 @@
+//! Baselines from paper section 5.3: DeeBERT, ElasticBERT, Random selection,
+//! Final exit — plus Fixed-split (the oracle arm replayed, used for regret).
+
+use super::{Outcome, Policy, SampleView};
+use crate::cost::CostModel;
+use crate::util::rng::Rng;
+
+/// DeeBERT: entropy-threshold cascade.  Processes layer by layer, exits at
+/// the first layer whose prediction entropy is `<= tau`; never offloads
+/// (the model runs fully on-device), so a never-confident sample pays the
+/// whole `lambda * L`.
+#[derive(Debug, Clone)]
+pub struct DeeBertPolicy {
+    /// entropy threshold (calibrated on source validation data)
+    pub tau: f64,
+}
+
+impl DeeBertPolicy {
+    pub fn new(tau: f64) -> DeeBertPolicy {
+        DeeBertPolicy { tau }
+    }
+}
+
+impl Policy for DeeBertPolicy {
+    fn name(&self) -> String {
+        "DeeBERT".into()
+    }
+
+    fn uses_side_info(&self) -> bool {
+        true // evaluates every exit on the way up
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let exit = (1..=l)
+            .find(|&i| (s.ent[i - 1] as f64) <= self.tau)
+            .unwrap_or(l);
+        Outcome {
+            split: exit,
+            infer_layer: exit,
+            offloaded: false,
+            cost: cm.compute_cost_cascade(exit),
+            reward: 0.0, // not a bandit; reward not defined by the paper here
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// ElasticBERT: confidence-threshold cascade (max-prob `>= alpha`), again
+/// fully on-device with no offload option.
+#[derive(Debug, Clone)]
+pub struct ElasticBertPolicy {
+    pub alpha: f64,
+}
+
+impl ElasticBertPolicy {
+    pub fn new(alpha: f64) -> ElasticBertPolicy {
+        ElasticBertPolicy { alpha }
+    }
+}
+
+impl Policy for ElasticBertPolicy {
+    fn name(&self) -> String {
+        "ElasticBERT".into()
+    }
+
+    fn uses_side_info(&self) -> bool {
+        true
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let exit = (1..=l)
+            .find(|&i| (s.conf[i - 1] as f64) >= self.alpha)
+            .unwrap_or(l);
+        Outcome {
+            split: exit,
+            infer_layer: exit,
+            offloaded: false,
+            cost: cm.compute_cost_cascade(exit),
+            reward: 0.0,
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Random selection (paper 5.3): uniform random split layer, then the same
+/// exit-or-offload rule as SplitEE.
+#[derive(Debug)]
+pub struct RandomExitPolicy {
+    pub alpha: f64,
+    rng: Rng,
+    seed: u64,
+}
+
+impl RandomExitPolicy {
+    pub fn new(alpha: f64, seed: u64) -> RandomExitPolicy {
+        RandomExitPolicy { alpha, rng: Rng::new(seed), seed }
+    }
+}
+
+impl Policy for RandomExitPolicy {
+    fn name(&self) -> String {
+        "Random-exit".into()
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let split = 1 + self.rng.below(l as u64) as usize;
+        let conf_i = s.conf[split - 1] as f64;
+        let exited = conf_i >= self.alpha || split == l;
+        let (infer_layer, offloaded, reward) = if exited {
+            (split, false, cm.reward_exit(split, conf_i, false))
+        } else {
+            (l, true, cm.reward_offload(split, s.conf[l - 1] as f64, false))
+        };
+        Outcome {
+            split,
+            infer_layer,
+            offloaded,
+            cost: cm.total_cost(split, offloaded, false),
+            reward,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+/// Final exit: every sample through all L layers (the benchmark row all
+/// deltas in Table 2 are relative to).
+#[derive(Debug, Clone, Default)]
+pub struct FinalExitPolicy;
+
+impl Policy for FinalExitPolicy {
+    fn name(&self) -> String {
+        "Final-exit".into()
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        Outcome {
+            split: l,
+            infer_layer: l,
+            offloaded: false,
+            cost: cm.final_exit_cost(),
+            reward: cm.reward_exit(l, s.conf[l - 1] as f64, false),
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+/// Fixed split layer with SplitEE's exit-or-offload rule.  With the oracle
+/// arm this is the policy regret is measured against (paper eq. 3); it also
+/// backs the `--fixed-split` serving mode.
+#[derive(Debug, Clone)]
+pub struct FixedSplitPolicy {
+    /// 1-based split layer
+    pub split: usize,
+    pub alpha: f64,
+    pub side_info: bool,
+}
+
+impl FixedSplitPolicy {
+    pub fn new(split: usize, alpha: f64) -> FixedSplitPolicy {
+        FixedSplitPolicy { split, alpha, side_info: false }
+    }
+}
+
+impl Policy for FixedSplitPolicy {
+    fn name(&self) -> String {
+        format!("Fixed-split({})", self.split)
+    }
+
+    fn uses_side_info(&self) -> bool {
+        self.side_info
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let split = self.split.min(l);
+        let conf_i = s.conf[split - 1] as f64;
+        let exited = conf_i >= self.alpha || split == l;
+        let (infer_layer, offloaded, reward) = if exited {
+            (split, false, cm.reward_exit(split, conf_i, self.side_info))
+        } else {
+            (
+                l,
+                true,
+                cm.reward_offload(split, s.conf[l - 1] as f64, self.side_info),
+            )
+        };
+        Outcome {
+            split,
+            infer_layer,
+            offloaded,
+            cost: cm.total_cost(split, offloaded, self.side_info),
+            reward,
+        }
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::paper(5.0, 0.1, 12)
+    }
+
+    fn view<'a>(conf: &'a [f32], ent: &'a [f32]) -> SampleView<'a> {
+        SampleView { conf, ent }
+    }
+
+    #[test]
+    fn deebert_exits_at_first_low_entropy() {
+        let conf = vec![0.6f32; 12];
+        let mut ent = vec![0.6f32; 12];
+        ent[4] = 0.1;
+        let mut p = DeeBertPolicy::new(0.2);
+        let o = p.decide(&view(&conf, &ent), &cm());
+        assert_eq!(o.infer_layer, 5);
+        assert!(!o.offloaded);
+        assert!((o.cost - cm().compute_cost_cascade(5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deebert_never_confident_pays_full_depth() {
+        let conf = vec![0.6f32; 12];
+        let ent = vec![0.69f32; 12];
+        let mut p = DeeBertPolicy::new(0.2);
+        let o = p.decide(&view(&conf, &ent), &cm());
+        assert_eq!(o.infer_layer, 12);
+        assert!((o.cost - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elasticbert_exits_at_first_confident() {
+        let mut conf = vec![0.6f32; 12];
+        conf[2] = 0.95;
+        let ent = vec![0.3f32; 12];
+        let mut p = ElasticBertPolicy::new(0.9);
+        let o = p.decide(&view(&conf, &ent), &cm());
+        assert_eq!(o.infer_layer, 3);
+        assert!((o.cost - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_exit_spans_layers_and_is_seed_deterministic() {
+        let conf = vec![0.95f32; 12];
+        let ent = vec![0.1f32; 12];
+        let c = cm();
+        let mut p1 = RandomExitPolicy::new(0.9, 7);
+        let mut p2 = RandomExitPolicy::new(0.9, 7);
+        let s1: Vec<usize> = (0..100).map(|_| p1.decide(&view(&conf, &ent), &c).split).collect();
+        let s2: Vec<usize> = (0..100).map(|_| p2.decide(&view(&conf, &ent), &c).split).collect();
+        assert_eq!(s1, s2);
+        let distinct: std::collections::BTreeSet<_> = s1.iter().collect();
+        assert!(distinct.len() >= 8, "random policy too narrow: {distinct:?}");
+    }
+
+    #[test]
+    fn final_exit_constant_cost() {
+        let conf = vec![0.7f32; 12];
+        let ent = vec![0.3f32; 12];
+        let mut p = FinalExitPolicy;
+        let o = p.decide(&view(&conf, &ent), &cm());
+        assert_eq!(o.infer_layer, 12);
+        assert!((o.cost - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_split_offloads_when_unsure() {
+        let mut conf = vec![0.5f32; 12];
+        conf[11] = 0.98;
+        let ent = vec![0.3f32; 12];
+        let mut p = FixedSplitPolicy::new(4, 0.9);
+        let o = p.decide(&view(&conf, &ent), &cm());
+        assert_eq!(o.split, 4);
+        assert!(o.offloaded);
+        assert_eq!(o.infer_layer, 12);
+        assert!((o.cost - (cm().compute_cost_splitee(4) + 5.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_reset_replays_sequence() {
+        let conf = vec![0.95f32; 12];
+        let ent = vec![0.1f32; 12];
+        let c = cm();
+        let mut p = RandomExitPolicy::new(0.9, 3);
+        let a: Vec<usize> = (0..20).map(|_| p.decide(&view(&conf, &ent), &c).split).collect();
+        p.reset();
+        let b: Vec<usize> = (0..20).map(|_| p.decide(&view(&conf, &ent), &c).split).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,191 @@
+//! The policy zoo: SplitEE, SplitEE-S and every baseline the paper compares
+//! against (section 5.3), plus the future-work extensions (section 7).
+//!
+//! A policy consumes one sample at a time — the paper's online, unsupervised
+//! setting.  It sees only per-exit **confidence/entropy** observations (never
+//! labels) through [`SampleView`], decides where to split and whether to
+//! exit or offload, and returns an [`Outcome`] with the layer whose
+//! prediction is used plus the accumulated cost in lambda units.
+
+pub mod adaptive;
+pub mod baselines;
+pub mod splitee;
+
+pub use adaptive::{AdaptiveThresholdPolicy, PerSamplePolicy};
+pub use baselines::{DeeBertPolicy, ElasticBertPolicy, FinalExitPolicy, FixedSplitPolicy,
+                    RandomExitPolicy};
+pub use splitee::{SplitEePolicy, SplitEeSPolicy};
+
+use crate::cost::CostModel;
+
+/// Per-sample observation surface: what the exits *would* report at each
+/// layer.  Policies may only read the entries their cost accounting pays for
+/// (SplitEE reads one layer; cascades read a prefix) — the experiment driver
+/// hands the full profile and trusts the policy's declared cost, exactly as
+/// the paper's released evaluation does with precomputed logits.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleView<'a> {
+    /// max-probability confidence per layer [L]
+    pub conf: &'a [f32],
+    /// prediction entropy per layer [L]
+    pub ent: &'a [f32],
+}
+
+impl<'a> SampleView<'a> {
+    pub fn n_layers(&self) -> usize {
+        self.conf.len()
+    }
+}
+
+/// What happened to one sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    /// 1-based layer chosen as the split point (== exit layer for cascades)
+    pub split: usize,
+    /// 1-based layer whose prediction is the final answer
+    /// (== split when exited on-device, == L when offloaded)
+    pub infer_layer: usize,
+    /// whether the sample was offloaded to the cloud
+    pub offloaded: bool,
+    /// total cost accumulated, lambda units (computation + offload)
+    pub cost: f64,
+    /// the paper's reward (eq. 1) for the split decision
+    pub reward: f64,
+}
+
+/// An online split/exit policy.
+pub trait Policy: Send {
+    /// Display name (matches the paper's table rows).
+    fn name(&self) -> String;
+
+    /// Process one sample.
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome;
+
+    /// Forget all learned state (new repetition).
+    fn reset(&mut self);
+
+    /// Whether the variant pays the per-exit inference cost at every layer
+    /// up to the split (SplitEE-S, cascades) or only at the split (SplitEE).
+    fn uses_side_info(&self) -> bool {
+        false
+    }
+}
+
+/// Compute the paper's reward (eq. 1) for splitting at `layer` (1-based)
+/// given the sample's confidence profile — shared by policies and by the
+/// experiment harness (oracle/regret computation).
+pub fn reward_for_split(
+    s: &SampleView<'_>,
+    cm: &CostModel,
+    layer: usize,
+    alpha: f64,
+    side_info: bool,
+) -> f64 {
+    let l = s.n_layers();
+    let conf_i = s.conf[layer - 1] as f64;
+    if conf_i >= alpha || layer == l {
+        cm.reward_exit(layer, conf_i, side_info)
+    } else {
+        cm.reward_offload(layer, s.conf[l - 1] as f64, side_info)
+    }
+}
+
+/// The expected-optimal split layer over a set of samples: evaluates
+/// `mean r(i)` for every arm and returns the (1-based) argmax.  Used by the
+/// experiment harness to compute regret against the oracle (paper eq. 2/3).
+pub fn oracle_split(
+    profiles: &[(Vec<f32>, Vec<f32>)],
+    cm: &CostModel,
+    alpha: f64,
+    side_info: bool,
+) -> (usize, Vec<f64>) {
+    let l = profiles
+        .first()
+        .map(|(c, _)| c.len())
+        .expect("oracle needs at least one sample");
+    let mut means = vec![0.0f64; l];
+    for (conf, ent) in profiles {
+        let view = SampleView { conf, ent };
+        for layer in 1..=l {
+            means[layer - 1] += reward_for_split(&view, cm, layer, alpha, side_info);
+        }
+    }
+    for m in &mut means {
+        *m /= profiles.len() as f64;
+    }
+    let best = means
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i + 1)
+        .unwrap();
+    (best, means)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cm() -> CostModel {
+        CostModel::paper(5.0, 0.1, 12)
+    }
+
+    #[test]
+    fn reward_exit_branch_when_confident() {
+        let conf = vec![0.9f32; 12];
+        let ent = vec![0.1f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let r = reward_for_split(&s, &cm(), 3, 0.8, false);
+        assert!((r - cm().reward_exit(3, 0.9f32 as f64, false)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reward_offload_branch_when_unsure() {
+        let mut conf = vec![0.6f32; 12];
+        conf[11] = 0.95;
+        let ent = vec![0.5f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let r = reward_for_split(&s, &cm(), 3, 0.8, false);
+        assert!((r - cm().reward_offload(3, 0.95f32 as f64, false)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn last_layer_always_exits() {
+        let conf = vec![0.5f32; 12];
+        let ent = vec![0.5f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let r = reward_for_split(&s, &cm(), 12, 0.9, false);
+        assert!((r - cm().reward_exit(12, 0.5f32 as f64, false)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oracle_prefers_cheap_confident_layer() {
+        // all layers confident -> earliest layer has the best reward
+        let profiles: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..50).map(|_| (vec![0.95f32; 12], vec![0.1f32; 12])).collect();
+        let (best, means) = oracle_split(&profiles, &cm(), 0.8, false);
+        assert_eq!(best, 1);
+        assert!(means[0] > means[11]);
+    }
+
+    #[test]
+    fn oracle_offloads_from_shallow_when_never_confident_early() {
+        // Shallow exits never clear the threshold, so every split below the
+        // confident region offloads and reaches C_L; the cheapest such split
+        // is the shallowest (gamma grows with depth while the offload price
+        // is flat) — the oracle must pick layer 1, not burn compute.
+        let profiles: Vec<(Vec<f32>, Vec<f32>)> = (0..50)
+            .map(|_| {
+                let mut c = vec![0.55f32; 12];
+                for l in 7..12 {
+                    c[l] = 0.97;
+                }
+                (c, vec![0.3f32; 12])
+            })
+            .collect();
+        let (best, means) = oracle_split(&profiles, &cm(), 0.9, false);
+        assert_eq!(best, 1, "means {means:?}");
+        // and exiting deep is strictly worse than offloading from layer 1
+        assert!(means[0] > means[11]);
+    }
+}

@@ -1,0 +1,308 @@
+//! SplitEE (Algorithm 1) and SplitEE-S (section 4.2): UCB over split layers
+//! with the exit-or-offload rule at the chosen layer.
+
+use super::{Outcome, Policy, SampleView};
+use crate::bandit::Ucb;
+use crate::cost::CostModel;
+
+/// SplitEE: inference only at the chosen split layer (cost `lambda1*i +
+/// lambda2`); one arm updated per sample.
+#[derive(Debug, Clone)]
+pub struct SplitEePolicy {
+    ucb: Ucb,
+    /// exit threshold alpha (calibrated on source validation data)
+    pub alpha: f64,
+}
+
+impl SplitEePolicy {
+    pub fn new(n_layers: usize, alpha: f64, beta: f64) -> SplitEePolicy {
+        SplitEePolicy { ucb: Ucb::new(n_layers, beta), alpha }
+    }
+
+    /// Access to the bandit state (used by the live serving coordinator and
+    /// by convergence reporting).
+    pub fn ucb(&self) -> &Ucb {
+        &self.ucb
+    }
+
+    /// Serving-path API: pick the next split layer (1-based).
+    pub fn choose_split(&mut self) -> usize {
+        self.ucb.choose() + 1
+    }
+
+    /// Serving-path API: record the realised reward for a split layer.
+    pub fn record(&mut self, split_1based: usize, reward: f64) {
+        self.ucb.update(split_1based - 1, reward);
+    }
+}
+
+impl Policy for SplitEePolicy {
+    fn name(&self) -> String {
+        "SplitEE".into()
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let split = self.ucb.choose() + 1; // 1-based
+        let conf_i = s.conf[split - 1] as f64;
+        let exited = conf_i >= self.alpha || split == l;
+        let (infer_layer, offloaded, reward) = if exited {
+            (split, false, cm.reward_exit(split, conf_i, false))
+        } else {
+            let conf_l = s.conf[l - 1] as f64;
+            (l, true, cm.reward_offload(split, conf_l, false))
+        };
+        self.ucb.update(split - 1, reward);
+        Outcome {
+            split,
+            infer_layer,
+            offloaded,
+            cost: cm.total_cost(split, offloaded, false),
+            reward,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ucb.reset();
+    }
+}
+
+/// SplitEE-S: evaluates every exit head up to the chosen split layer and
+/// updates all those arms from side observations (cost `lambda*i`).
+#[derive(Debug, Clone)]
+pub struct SplitEeSPolicy {
+    ucb: Ucb,
+    pub alpha: f64,
+    /// running mean of observed final-layer confidence — used to impute
+    /// C_L for side-arm updates when the actual sample exited on-device and
+    /// the final layer was therefore never computed.  With cached profiles
+    /// (the paper's offline-logit evaluation) the true C_L is always
+    /// available and this estimate is unused.
+    mean_conf_final: f64,
+    n_conf_final: u64,
+}
+
+impl SplitEeSPolicy {
+    pub fn new(n_layers: usize, alpha: f64, beta: f64) -> SplitEeSPolicy {
+        SplitEeSPolicy { ucb: Ucb::new(n_layers, beta), alpha, mean_conf_final: 0.9, n_conf_final: 0 }
+    }
+
+    pub fn ucb(&self) -> &Ucb {
+        &self.ucb
+    }
+
+    pub fn choose_split(&mut self) -> usize {
+        self.ucb.choose() + 1
+    }
+
+    /// Serving-path update: confidences for layers `1..=split` plus the
+    /// final-layer confidence if it was observed (offload happened).
+    pub fn record_prefix(
+        &mut self,
+        cm: &CostModel,
+        conf_prefix: &[f32],
+        conf_final: Option<f64>,
+    ) {
+        if let Some(cl) = conf_final {
+            self.n_conf_final += 1;
+            self.mean_conf_final += (cl - self.mean_conf_final) / self.n_conf_final as f64;
+        }
+        let l = self.ucb.k();
+        for (j0, &cj) in conf_prefix.iter().enumerate() {
+            let layer = j0 + 1;
+            let cj = cj as f64;
+            let r = if cj >= self.alpha || layer == l {
+                cm.reward_exit(layer, cj, true)
+            } else {
+                let cl = conf_final.unwrap_or(self.mean_conf_final);
+                cm.reward_offload(layer, cl, true)
+            };
+            self.ucb.update(j0, r);
+        }
+    }
+}
+
+impl Policy for SplitEeSPolicy {
+    fn name(&self) -> String {
+        "SplitEE-S".into()
+    }
+
+    fn uses_side_info(&self) -> bool {
+        true
+    }
+
+    fn decide(&mut self, s: &SampleView<'_>, cm: &CostModel) -> Outcome {
+        let l = s.n_layers();
+        let split = self.ucb.choose() + 1;
+        let conf_i = s.conf[split - 1] as f64;
+        let exited = conf_i >= self.alpha || split == l;
+        let conf_l = s.conf[l - 1] as f64;
+        let (infer_layer, offloaded, reward) = if exited {
+            (split, false, cm.reward_exit(split, conf_i, true))
+        } else {
+            (l, true, cm.reward_offload(split, conf_l, true))
+        };
+        // Side observations: cached profiles expose the true C_L, matching
+        // the paper's offline-logit evaluation.
+        self.record_prefix(cm, &s.conf[..split], Some(conf_l));
+        Outcome {
+            split,
+            infer_layer,
+            offloaded,
+            cost: cm.total_cost(split, offloaded, true),
+            reward,
+        }
+    }
+
+    fn reset(&mut self) {
+        self.ucb.reset();
+        self.mean_conf_final = 0.9;
+        self.n_conf_final = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthMix, SynthProfile};
+    use crate::policy::oracle_split;
+    use crate::util::rng::Rng;
+
+    fn cm() -> CostModel {
+        CostModel::paper(5.0, 0.1, 12)
+    }
+
+    fn run_policy<P: Policy>(p: &mut P, profile: &SynthProfile, cm: &CostModel) -> Vec<Outcome> {
+        let ent_dummy = vec![0.0f32; profile.n_layers];
+        (0..profile.len())
+            .map(|i| {
+                let s = SampleView { conf: &profile.conf[i], ent: &ent_dummy };
+                p.decide(&s, cm)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn splitee_explores_all_arms_then_converges() {
+        let mut rng = Rng::new(1);
+        let profile = SynthProfile::generate(4000, 12, SynthMix::default(), &mut rng);
+        let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+        let outcomes = run_policy(&mut p, &profile, &cm());
+        // warm start: first 12 samples hit each layer once
+        let mut first: Vec<usize> = outcomes[..12].iter().map(|o| o.split).collect();
+        first.sort_unstable();
+        assert_eq!(first, (1..=12).collect::<Vec<_>>());
+        // convergence: the modal split over the last quarter dominates
+        let last = &outcomes[3000..];
+        let mut counts = [0usize; 13];
+        for o in last {
+            counts[o.split] += 1;
+        }
+        // the top-2 arms must dominate the last quarter of the stream
+        let mut sorted: Vec<usize> = counts.to_vec();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert!(sorted[0] + sorted[1] > last.len() / 2, "counts {counts:?}");
+    }
+
+    #[test]
+    fn splitee_converges_near_oracle() {
+        let mut rng = Rng::new(5);
+        let profile = SynthProfile::generate(8000, 12, SynthMix::default(), &mut rng);
+        let profiles: Vec<(Vec<f32>, Vec<f32>)> = profile
+            .conf
+            .iter()
+            .map(|c| (c.clone(), vec![0.0f32; 12]))
+            .collect();
+        let c = cm();
+        let (oracle, means) = oracle_split(&profiles, &c, 0.85, false);
+        let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+        let outcomes = run_policy(&mut p, &profile, &c);
+        let last = &outcomes[6000..];
+        let mut counts = vec![0usize; 13];
+        for o in last {
+            counts[o.split] += 1;
+        }
+        let modal = counts.iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0;
+        // the modal arm's mean reward must be within a small gap of optimal
+        let gap = means[oracle - 1] - means[modal - 1];
+        assert!(gap < 0.05, "oracle {oracle} modal {modal} gap {gap}");
+    }
+
+    #[test]
+    fn splitee_s_updates_prefix_arms() {
+        let mut p = SplitEeSPolicy::new(12, 0.85, 1.0);
+        let conf: Vec<f32> = (0..12).map(|i| 0.5 + 0.04 * i as f32).collect();
+        let ent = vec![0.0f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let o = p.decide(&s, &cm());
+        // every arm <= split has one update
+        for j in 0..o.split {
+            assert_eq!(p.ucb().arm(j).n, 1, "arm {j}");
+        }
+        for j in o.split..12 {
+            assert_eq!(p.ucb().arm(j).n, 0, "arm {j}");
+        }
+    }
+
+    #[test]
+    fn splitee_s_converges_faster_than_splitee() {
+        // The paper's figure-7 claim: side info accelerates convergence.
+        // Proxy: after the same number of samples, SplitEE-S has more total
+        // arm updates and its modal choice stabilises at least as well.
+        let mut rng = Rng::new(9);
+        let profile = SynthProfile::generate(1500, 12, SynthMix::default(), &mut rng);
+        let c = cm();
+        let mut a = SplitEePolicy::new(12, 0.85, 1.0);
+        let mut b = SplitEeSPolicy::new(12, 0.85, 1.0);
+        run_policy(&mut a, &profile, &c);
+        run_policy(&mut b, &profile, &c);
+        let updates_a: u64 = (0..12).map(|i| a.ucb().arm(i).n).sum();
+        let updates_b: u64 = (0..12).map(|i| b.ucb().arm(i).n).sum();
+        assert!(updates_b > updates_a * 2, "a={updates_a} b={updates_b}");
+    }
+
+    #[test]
+    fn cost_accounting_matches_variant() {
+        let c = cm();
+        let conf = vec![0.95f32; 12];
+        let ent = vec![0.0f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let mut a = SplitEePolicy::new(12, 0.85, 1.0);
+        let mut b = SplitEeSPolicy::new(12, 0.85, 1.0);
+        let oa = a.decide(&s, &c);
+        let ob = b.decide(&s, &c);
+        assert!((oa.cost - c.total_cost(oa.split, false, false)).abs() < 1e-12);
+        assert!((ob.cost - c.total_cost(ob.split, false, true)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offload_outcome_uses_final_layer() {
+        let c = cm();
+        let mut conf = vec![0.5f32; 12];
+        conf[11] = 0.99;
+        let ent = vec![0.0f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let mut p = SplitEePolicy::new(12, 0.9, 1.0);
+        // first choice is layer 1 (warm start) -> conf 0.5 < alpha -> offload
+        let o = p.decide(&s, &c);
+        assert_eq!(o.split, 1);
+        assert!(o.offloaded);
+        assert_eq!(o.infer_layer, 12);
+    }
+
+    #[test]
+    fn reset_restores_warm_start() {
+        let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+        let conf = vec![0.9f32; 12];
+        let ent = vec![0.0f32; 12];
+        let s = SampleView { conf: &conf, ent: &ent };
+        let c = cm();
+        for _ in 0..20 {
+            p.decide(&s, &c);
+        }
+        p.reset();
+        assert_eq!(p.ucb().t, 0);
+        let o = p.decide(&s, &c);
+        assert_eq!(o.split, 1); // warm start restarts at layer 1
+    }
+}

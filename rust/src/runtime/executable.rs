@@ -1,0 +1,173 @@
+//! Compiled-executable cache and typed execution.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::literal::{literal_f32, literal_i32, tensor_f32};
+use super::Client;
+use crate::tensor::{TensorF32, TensorI32};
+
+/// A positional argument to an executable.
+///
+/// `Lit` passes a pre-converted literal by reference — the weight-literal
+/// cache in [`crate::model::MultiExitModel`] uses it to avoid re-converting
+/// every weight tensor on every layer execution (the L3 perf pass measured
+/// this at ~2x on the per-block hot path; see EXPERIMENTS.md §Perf).
+#[derive(Clone)]
+pub enum Arg<'a> {
+    F32(&'a TensorF32),
+    I32(&'a TensorI32),
+    Lit(&'a xla::Literal),
+}
+
+impl std::fmt::Debug for Arg<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Arg::F32(t) => write!(f, "Arg::F32{:?}", t.shape()),
+            Arg::I32(t) => write!(f, "Arg::I32{:?}", t.shape()),
+            Arg::Lit(_) => write!(f, "Arg::Lit"),
+        }
+    }
+}
+
+/// One compiled HLO module, ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").field("name", &self.name).finish()
+    }
+}
+
+// The PJRT CPU executable is internally synchronized; the wrapper is used
+// behind `Arc` from the serving threads.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with positional args; returns the flattened output tuple.
+    ///
+    /// All our graphs are lowered with `return_tuple=True`, so the raw
+    /// output is a single tuple literal; this decomposes it.
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        // Convert tensor args once; borrow pre-converted literals directly.
+        let mut owned: Vec<xla::Literal> = Vec::new();
+        let mut slots: Vec<Option<&xla::Literal>> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::F32(t) => {
+                    owned.push(literal_f32(t).with_context(|| {
+                        format!("building f32 arg for {}", self.name)
+                    })?);
+                    slots.push(None);
+                }
+                Arg::I32(t) => {
+                    owned.push(literal_i32(t).with_context(|| {
+                        format!("building i32 arg for {}", self.name)
+                    })?);
+                    slots.push(None);
+                }
+                Arg::Lit(l) => slots.push(Some(l)),
+            }
+        }
+        let mut owned_it = owned.iter();
+        let literals: Vec<&xla::Literal> = slots
+            .into_iter()
+            .map(|s| s.unwrap_or_else(|| owned_it.next().expect("owned literal")))
+            .collect();
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        tuple
+            .decompose_tuple()
+            .with_context(|| format!("decomposing result of {}", self.name))
+    }
+
+    /// Execute and convert every output to an f32 tensor.
+    pub fn run_f32(&self, args: &[Arg<'_>]) -> Result<Vec<TensorF32>> {
+        self.run(args)?.iter().map(tensor_f32).collect()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Loads HLO-text artifacts, compiles them once, and caches the result.
+pub struct Runtime {
+    client: Client,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn new(client: Client) -> Runtime {
+        Runtime { client, cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// Create with a fresh CPU client.
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime::new(Client::cpu()?))
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(path) {
+            return Ok(hit.clone());
+        }
+        if !path.exists() {
+            bail!("HLO artifact {path:?} not found — run `make artifacts`");
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .raw()
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        log::debug!(
+            "compiled {name} in {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        let arc = std::sync::Arc::new(Executable { exe, name });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(path.to_path_buf(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Number of compiled modules held in the cache.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("client", &self.client)
+            .field("cached", &self.cached_count())
+            .finish()
+    }
+}

@@ -1,0 +1,81 @@
+//! Host tensor <-> XLA literal conversion.
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::{TensorF32, TensorI32};
+
+/// f32 tensor -> literal with the tensor's shape.
+pub fn literal_f32(t: &TensorF32) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .context("reshaping f32 literal")
+}
+
+/// i32 tensor -> literal with the tensor's shape.
+pub fn literal_i32(t: &TensorI32) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(t.data())
+        .reshape(&dims)
+        .context("reshaping i32 literal")
+}
+
+/// literal -> f32 tensor (shape taken from the literal).
+pub fn tensor_f32(lit: &xla::Literal) -> Result<TensorF32> {
+    let shape = literal_dims(lit)?;
+    let data = lit.to_vec::<f32>().context("reading f32 literal")?;
+    TensorF32::new(shape, data).map_err(|e| anyhow::anyhow!(e))
+}
+
+/// literal -> i32 tensor.
+pub fn tensor_i32(lit: &xla::Literal) -> Result<TensorI32> {
+    let shape = literal_dims(lit)?;
+    let data = lit.to_vec::<i32>().context("reading i32 literal")?;
+    TensorI32::new(shape, data).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn literal_dims(lit: &xla::Literal) -> Result<Vec<usize>> {
+    match lit.shape().context("literal shape")? {
+        xla::Shape::Array(a) => Ok(a.dims().iter().map(|&d| d as usize).collect()),
+        other => bail!("expected array literal, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise the conversion layer without a PJRT client;
+    // Literal construction is pure host-side XLA.
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = TensorF32::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let lit = literal_f32(&t).unwrap();
+        let back = tensor_f32(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = TensorI32::new(vec![4], vec![7, -1, 0, 42]).unwrap();
+        let lit = literal_i32(&t).unwrap();
+        let back = tensor_i32(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn wrong_dtype_read_fails() {
+        let t = TensorF32::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let lit = literal_f32(&t).unwrap();
+        assert!(tensor_i32(&lit).is_err());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = TensorF32::scalar(3.5);
+        let lit = literal_f32(&t).unwrap();
+        let back = tensor_f32(&lit).unwrap();
+        assert_eq!(back.data(), &[3.5]);
+    }
+}

@@ -1,0 +1,55 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
+//! request path.
+//!
+//! This is the only module that touches the `xla` crate.  Everything above it
+//! (model, coordinator, experiments) works with host [`TensorF32`]/
+//! [`TensorI32`] values.  Pattern follows /opt/xla-example/load_hlo:
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`.
+//!
+//! [`TensorF32`]: crate::tensor::TensorF32
+//! [`TensorI32`]: crate::tensor::TensorI32
+
+pub mod executable;
+pub mod literal;
+
+pub use executable::{Executable, Runtime};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client.  Creating a client is expensive (plugin init), so
+/// one is shared per process.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    /// Create the process-wide CPU client.
+    pub fn cpu() -> Result<Client> {
+        Ok(Client { inner: Arc::new(xla::PjRtClient::cpu()?) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    pub(crate) fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client")
+            .field("platform", &self.platform_name())
+            .field("devices", &self.device_count())
+            .finish()
+    }
+}

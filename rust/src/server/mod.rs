@@ -1,0 +1,96 @@
+//! TCP front-end: a line-oriented protocol over the coordinator.
+//!
+//! Protocol (one request per line):
+//!
+//! ```text
+//!     -> 12,907,34,...,101\n          (seq_len comma-separated token ids)
+//!     <- {"id":0,"pred":1,"conf":0.93,"layer":4,"offloaded":false,
+//!         "latency_ms":2.41}\n
+//! ```
+//!
+//! Malformed lines get `{"error": "..."}` and the connection stays open.
+//! Used by `splitee serve --listen <addr>` and the `serve_stream` example's
+//! `--tcp` mode.
+
+pub mod protocol;
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::router::Router;
+use crate::tensor::TensorI32;
+use protocol::{format_error, format_response, parse_tokens};
+
+/// Serve connections until `max_requests` have been answered (None = forever).
+/// The compute loop runs elsewhere (a `Service::run` thread on the same
+/// router); this function only handles socket I/O.
+pub fn serve_tcp(
+    listener: TcpListener,
+    router: Arc<Router>,
+    seq_len: usize,
+    max_requests: Option<usize>,
+) -> Result<usize> {
+    let mut answered = 0usize;
+    listener.set_nonblocking(false).ok();
+    loop {
+        if let Some(maxr) = max_requests {
+            if answered >= maxr {
+                return Ok(answered);
+            }
+        }
+        let (stream, peer) = listener.accept().context("accept")?;
+        log::info!("connection from {peer}");
+        match handle_connection(stream, &router, seq_len, max_requests.map(|m| m - answered)) {
+            Ok(n) => answered += n,
+            Err(e) => log::warn!("connection error: {e:#}"),
+        }
+        if !router.is_accepting() {
+            return Ok(answered);
+        }
+    }
+}
+
+/// Handle one client connection; returns the number of answered requests.
+pub fn handle_connection(
+    stream: TcpStream,
+    router: &Router,
+    seq_len: usize,
+    budget: Option<usize>,
+) -> Result<usize> {
+    let mut writer = stream.try_clone().context("clone stream")?;
+    let reader = BufReader::new(stream);
+    let mut answered = 0usize;
+    for line in reader.lines() {
+        let line = line.context("read line")?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if line.trim() == "quit" {
+            break;
+        }
+        match parse_tokens(&line, seq_len) {
+            Ok(tokens) => {
+                let (tx, rx) = mpsc::channel();
+                let Some(_id) = router.submit(TensorI32::new(vec![1, seq_len], tokens)
+                    .map_err(|e| anyhow::anyhow!(e))?, tx) else {
+                    writer.write_all(format_error("server shutting down").as_bytes())?;
+                    break;
+                };
+                let resp = rx.recv().context("reply channel closed")?;
+                writer.write_all(format_response(&resp).as_bytes())?;
+                answered += 1;
+                if budget.map(|b| answered >= b).unwrap_or(false) {
+                    break;
+                }
+            }
+            Err(msg) => {
+                writer.write_all(format_error(&msg).as_bytes())?;
+            }
+        }
+    }
+    Ok(answered)
+}

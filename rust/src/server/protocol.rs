@@ -1,0 +1,92 @@
+//! Wire format of the TCP front-end.
+
+use crate::coordinator::router::Response;
+use crate::util::json::Json;
+
+/// Parse a comma-separated token line; must have exactly `seq_len` ids.
+pub fn parse_tokens(line: &str, seq_len: usize) -> Result<Vec<i32>, String> {
+    let parts: Vec<&str> = line.trim().split(',').collect();
+    if parts.len() != seq_len {
+        return Err(format!("expected {seq_len} tokens, got {}", parts.len()));
+    }
+    parts
+        .iter()
+        .map(|p| {
+            p.trim()
+                .parse::<i32>()
+                .map_err(|e| format!("bad token {p:?}: {e}"))
+                .and_then(|v| {
+                    if v < 0 {
+                        Err(format!("negative token {v}"))
+                    } else {
+                        Ok(v)
+                    }
+                })
+        })
+        .collect()
+}
+
+/// Serialise a served response as a JSON line.
+pub fn format_response(r: &Response) -> String {
+    let j = Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("pred", Json::Num(r.prediction as f64)),
+        ("conf", Json::Num(r.confidence as f64)),
+        ("layer", Json::Num(r.infer_layer as f64)),
+        ("offloaded", Json::Bool(r.offloaded)),
+        ("latency_ms", Json::Num((r.latency_ms * 1000.0).round() / 1000.0)),
+    ]);
+    format!("{j}\n")
+}
+
+/// Serialise an error as a JSON line.
+pub fn format_error(msg: &str) -> String {
+    format!("{}\n", Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn parse_valid_line() {
+        assert_eq!(parse_tokens("1, 2,3 ,4", 4).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parse_rejects_wrong_arity() {
+        assert!(parse_tokens("1,2,3", 4).is_err());
+        assert!(parse_tokens("", 4).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage_and_negative() {
+        assert!(parse_tokens("1,x,3,4", 4).is_err());
+        assert!(parse_tokens("1,-2,3,4", 4).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let r = Response {
+            id: 7,
+            prediction: 1,
+            confidence: 0.93,
+            infer_layer: 4,
+            offloaded: true,
+            latency_ms: 2.4567,
+        };
+        let line = format_response(&r);
+        let v = json::parse(line.trim()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(v.get("layer").unwrap().as_i64().unwrap(), 4);
+        assert!(v.get("offloaded").unwrap().as_bool().unwrap());
+        assert!((v.get("latency_ms").unwrap().as_f64().unwrap() - 2.457).abs() < 1e-9);
+    }
+
+    #[test]
+    fn error_line_is_json() {
+        let v = json::parse(format_error("boom \"x\"").trim()).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "boom \"x\"");
+    }
+}

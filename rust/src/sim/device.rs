@@ -1,0 +1,89 @@
+//! Edge-device and cloud compute models.
+//!
+//! Both wrap the *same* real PJRT computation; they differ in the simulated
+//! wall-clock scale factor (an edge NPU is slower than a cloud GPU) and in
+//! the energy accounting.  The scale factors only affect reported serving
+//! latency — all paper tables/figures are in lambda units and come from the
+//! cost model, not from here.
+
+/// Compute-speed and energy model of the edge device.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeSim {
+    /// simulated slowdown relative to the host CPU executing the block
+    pub compute_scale: f64,
+    /// energy per lambda unit of on-device computation (abstract joules)
+    pub energy_per_lambda: f64,
+    /// energy per offloaded payload transmission (abstract joules)
+    pub energy_per_offload: f64,
+}
+
+impl Default for EdgeSim {
+    fn default() -> Self {
+        // A mobile NPU runs this tiny encoder slower than a server CPU core;
+        // 4x is a representative gap for int8-less f32 inference.
+        EdgeSim { compute_scale: 4.0, energy_per_lambda: 1.0, energy_per_offload: 2.5 }
+    }
+}
+
+impl EdgeSim {
+    /// Simulated on-device latency for a real measured host duration.
+    pub fn simulated_ms(&self, real_host_ms: f64) -> f64 {
+        real_host_ms * self.compute_scale
+    }
+
+    /// Battery drain of processing `gamma` lambda units + optional offload.
+    pub fn energy(&self, gamma: f64, offloaded: bool) -> f64 {
+        gamma * self.energy_per_lambda
+            + if offloaded { self.energy_per_offload } else { 0.0 }
+    }
+}
+
+/// Compute-speed model of the cloud worker.
+#[derive(Debug, Clone, Copy)]
+pub struct CloudSim {
+    /// simulated speedup relative to the host CPU (a GPU runs the remaining
+    /// layers much faster)
+    pub compute_scale: f64,
+    /// fixed service overhead per offloaded request (queueing, batching), ms
+    pub service_overhead_ms: f64,
+}
+
+impl Default for CloudSim {
+    fn default() -> Self {
+        CloudSim { compute_scale: 0.25, service_overhead_ms: 1.0 }
+    }
+}
+
+impl CloudSim {
+    pub fn simulated_ms(&self, real_host_ms: f64) -> f64 {
+        real_host_ms * self.compute_scale + self.service_overhead_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_slower_than_host_cloud_faster() {
+        let e = EdgeSim::default();
+        let c = CloudSim::default();
+        assert!(e.simulated_ms(10.0) > 10.0);
+        assert!(c.simulated_ms(10.0) < 10.0 + c.service_overhead_ms + 10.0);
+        assert!(c.simulated_ms(10.0) >= c.service_overhead_ms);
+    }
+
+    #[test]
+    fn energy_charges_offload() {
+        let e = EdgeSim::default();
+        let stay = e.energy(3.0, false);
+        let off = e.energy(3.0, true);
+        assert!((off - stay - e.energy_per_offload).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_proportional_to_gamma() {
+        let e = EdgeSim::default();
+        assert!((e.energy(6.0, false) - 2.0 * e.energy(3.0, false)).abs() < 1e-12);
+    }
+}

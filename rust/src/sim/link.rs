@@ -1,0 +1,119 @@
+//! Edge->cloud uplink simulator: latency, jitter, retransmissions, outages.
+//!
+//! Wraps a [`NetworkProfile`] with stochastic behaviour for the serving
+//! simulator and for failure-injection tests (the paper's related work — LEE
+//! / DEE — motivates exactly the service-outage scenario; SplitEE degrades
+//! to on-device final exit when the link reports an outage).
+
+use crate::cost::NetworkProfile;
+use crate::util::rng::Rng;
+
+/// Outcome of one simulated transfer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TransferResult {
+    /// delivered after `ms` (including any retransmissions)
+    Delivered { ms: f64, retries: u32 },
+    /// the link is in outage; the caller must fall back to on-device inference
+    Outage,
+}
+
+/// Stochastic uplink.
+#[derive(Debug)]
+pub struct LinkSim {
+    pub profile: NetworkProfile,
+    /// multiplicative jitter spread (0.1 -> +-10%)
+    pub jitter: f64,
+    /// probability the link is in outage for a given transfer
+    pub outage_rate: f64,
+    /// maximum retransmissions before declaring an outage
+    pub max_retries: u32,
+    rng: Rng,
+}
+
+impl LinkSim {
+    pub fn new(profile: NetworkProfile, seed: u64) -> LinkSim {
+        LinkSim { profile, jitter: 0.1, outage_rate: 0.0, max_retries: 3, rng: Rng::new(seed) }
+    }
+
+    /// Simulate transferring `payload_bytes` to the cloud.
+    pub fn transfer(&mut self, payload_bytes: usize) -> TransferResult {
+        if self.outage_rate > 0.0 && self.rng.chance(self.outage_rate) {
+            return TransferResult::Outage;
+        }
+        let base = self.profile.transfer_ms(payload_bytes);
+        let mut total = 0.0;
+        let mut retries = 0;
+        loop {
+            let jitter = 1.0 + self.jitter * (2.0 * self.rng.next_f64() - 1.0);
+            total += base * jitter.max(0.1);
+            if !self.rng.chance(self.profile.loss_rate) {
+                return TransferResult::Delivered { ms: total, retries };
+            }
+            retries += 1;
+            if retries > self.max_retries {
+                return TransferResult::Outage;
+            }
+        }
+    }
+
+    /// Payload size of offloading split-layer activations: [T, D] f32 plus a
+    /// small header.  (The paper notes `o` depends on the *input* size and
+    /// the network; we ship the hidden state like SPINN-style splits.)
+    pub fn activation_payload(seq_len: usize, d_model: usize) -> usize {
+        seq_len * d_model * 4 + 64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delivery_time_near_profile() {
+        let mut link = LinkSim::new(NetworkProfile::wifi(), 1);
+        let payload = LinkSim::activation_payload(32, 64);
+        let base = link.profile.transfer_ms(payload);
+        for _ in 0..100 {
+            match link.transfer(payload) {
+                TransferResult::Delivered { ms, .. } => {
+                    assert!(ms > base * 0.85 && ms < base * 4.0, "ms {ms} base {base}");
+                }
+                TransferResult::Outage => panic!("wifi should not outage here"),
+            }
+        }
+    }
+
+    #[test]
+    fn outage_rate_one_always_fails() {
+        let mut link = LinkSim::new(NetworkProfile::wifi(), 2);
+        link.outage_rate = 1.0;
+        assert_eq!(link.transfer(100), TransferResult::Outage);
+    }
+
+    #[test]
+    fn lossy_link_retries() {
+        let mut link = LinkSim::new(NetworkProfile::three_g(), 3);
+        link.profile.loss_rate = 0.5;
+        let mut saw_retry = false;
+        for _ in 0..200 {
+            if let TransferResult::Delivered { retries, .. } = link.transfer(1000) {
+                if retries > 0 {
+                    saw_retry = true;
+                }
+            }
+        }
+        assert!(saw_retry, "expected at least one retransmission");
+    }
+
+    #[test]
+    fn hopeless_link_becomes_outage() {
+        let mut link = LinkSim::new(NetworkProfile::three_g(), 4);
+        link.profile.loss_rate = 1.0;
+        assert_eq!(link.transfer(1000), TransferResult::Outage);
+    }
+
+    #[test]
+    fn payload_accounts_activation_size() {
+        assert_eq!(LinkSim::activation_payload(32, 64), 32 * 64 * 4 + 64);
+    }
+}

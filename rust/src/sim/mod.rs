@@ -1,0 +1,16 @@
+//! Edge–cloud co-inference simulator.
+//!
+//! The paper's deployment (figure 1) runs layers `1..=i` on a mobile device,
+//! ships the split-layer activations over a mobile network, and finishes on
+//! a GPU cloud.  This module reproduces that *timing and energy* behaviour
+//! around the real PJRT computation: the compute happens for real (CPU), and
+//! the simulator scales edge compute time, adds link latency from the
+//! [`NetworkProfile`], and accounts energy/cost per the paper's lambda model.
+
+pub mod device;
+pub mod link;
+pub mod pipeline;
+
+pub use device::{CloudSim, EdgeSim};
+pub use link::LinkSim;
+pub use pipeline::{CoInferencePipeline, SampleTrace};

@@ -1,0 +1,176 @@
+//! The full edge->link->cloud co-inference pipeline over the *real* model.
+//!
+//! This is the serving-path counterpart of the cached experiment harness:
+//! every block/head execution goes through PJRT, the split decision comes
+//! from a live policy, and the simulator layers edge/cloud timing and link
+//! behaviour on top.  Used by `splitee serve`, the examples and the E2E
+//! bench.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::device::{CloudSim, EdgeSim};
+use super::link::{LinkSim, TransferResult};
+use crate::cost::CostModel;
+use crate::model::MultiExitModel;
+use crate::tensor::TensorI32;
+
+/// Everything that happened to one request.
+#[derive(Debug, Clone)]
+pub struct SampleTrace {
+    /// 1-based split layer chosen by the policy
+    pub split: usize,
+    /// 1-based layer whose prediction was served
+    pub infer_layer: usize,
+    pub offloaded: bool,
+    /// the link failed and the sample fell back to full on-device inference
+    pub outage_fallback: bool,
+    pub prediction: usize,
+    pub confidence: f32,
+    /// simulated end-to-end latency (edge + link + cloud), ms
+    pub latency_ms: f64,
+    /// real host compute time spent in PJRT, ms
+    pub host_compute_ms: f64,
+    /// cost in lambda units (the paper's accounting)
+    pub cost_lambda: f64,
+    /// edge energy units consumed
+    pub energy: f64,
+    /// paper reward realised for the split decision
+    pub reward: f64,
+}
+
+/// Live co-inference executor for one model.
+pub struct CoInferencePipeline<'m> {
+    pub model: &'m MultiExitModel,
+    pub edge: EdgeSim,
+    pub cloud: CloudSim,
+    pub link: LinkSim,
+    pub cost: CostModel,
+    /// exit threshold alpha
+    pub alpha: f64,
+}
+
+impl<'m> CoInferencePipeline<'m> {
+    pub fn new(
+        model: &'m MultiExitModel,
+        link: LinkSim,
+        cost: CostModel,
+        alpha: f64,
+    ) -> CoInferencePipeline<'m> {
+        CoInferencePipeline {
+            model,
+            edge: EdgeSim::default(),
+            cloud: CloudSim::default(),
+            link,
+            cost,
+            alpha,
+        }
+    }
+
+    /// Serve one request (tokens [1, T] or [B, T] with a compiled B) at a
+    /// given split layer.  The exit-or-offload rule runs exactly as the
+    /// paper describes; `side_info` selects SplitEE-S-style per-layer head
+    /// evaluation on the way up.
+    pub fn serve(
+        &mut self,
+        tokens: &TensorI32,
+        split_1based: usize,
+        side_info: bool,
+    ) -> Result<SampleTrace> {
+        let l = self.model.n_layers();
+        let split = split_1based.clamp(1, l);
+
+        // ---- edge share: embed + blocks 0..split-1 (+ heads if side info)
+        let t0 = Instant::now();
+        let mut h = self.model.embed(tokens)?;
+        let mut prefix_conf: Vec<f32> = Vec::with_capacity(split);
+        for layer in 0..split {
+            h = self.model.block(&h, layer)?;
+            if side_info && layer + 1 < split {
+                let eo = self.model.exit_head(&h, layer)?;
+                prefix_conf.push(eo.conf[0]);
+            }
+        }
+        let exit_out = self.model.exit_head(&h, split - 1)?;
+        prefix_conf.push(exit_out.conf[0]);
+        let edge_host_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut host_compute_ms = edge_host_ms;
+        let mut latency_ms = self.edge.simulated_ms(edge_host_ms);
+
+        let conf_i = exit_out.conf[0] as f64;
+        let exited = conf_i >= self.alpha || split == l;
+
+        if exited {
+            let gamma = self.cost.gamma(split, side_info);
+            return Ok(SampleTrace {
+                split,
+                infer_layer: split,
+                offloaded: false,
+                outage_fallback: false,
+                prediction: exit_out.pred[0],
+                confidence: exit_out.conf[0],
+                latency_ms,
+                host_compute_ms,
+                cost_lambda: self.cost.total_cost(split, false, side_info),
+                energy: self.edge.energy(gamma, false),
+                reward: self.cost.reward_exit(split, conf_i, side_info),
+            });
+        }
+
+        // ---- offload: ship the split-layer activation over the link
+        let payload = LinkSim::activation_payload(self.model.seq_len(), h.shape()[2]);
+        match self.link.transfer(payload) {
+            TransferResult::Delivered { ms, .. } => {
+                latency_ms += ms;
+                let t1 = Instant::now();
+                let h_final = self.model.forward_rest(&h, split - 1)?;
+                let final_out = self.model.exit_head(&h_final, l - 1)?;
+                let cloud_host_ms = t1.elapsed().as_secs_f64() * 1e3;
+                host_compute_ms += cloud_host_ms;
+                latency_ms += self.cloud.simulated_ms(cloud_host_ms);
+                let gamma = self.cost.gamma(split, side_info);
+                Ok(SampleTrace {
+                    split,
+                    infer_layer: l,
+                    offloaded: true,
+                    outage_fallback: false,
+                    prediction: final_out.pred[0],
+                    confidence: final_out.conf[0],
+                    latency_ms,
+                    host_compute_ms,
+                    cost_lambda: self.cost.total_cost(split, true, side_info),
+                    energy: self.edge.energy(gamma, true),
+                    reward: self
+                        .cost
+                        .reward_offload(split, final_out.conf[0] as f64, side_info),
+                })
+            }
+            TransferResult::Outage => {
+                // Service outage (LEE/DEE scenario): degrade to full
+                // on-device inference — finish the remaining layers locally.
+                let t1 = Instant::now();
+                let h_final = self.model.forward_rest(&h, split - 1)?;
+                let final_out = self.model.exit_head(&h_final, l - 1)?;
+                let local_ms = t1.elapsed().as_secs_f64() * 1e3;
+                host_compute_ms += local_ms;
+                latency_ms += self.edge.simulated_ms(local_ms);
+                // cost: the full on-device depth, no offload charge
+                let gamma = self.cost.compute_cost_cascade(l);
+                Ok(SampleTrace {
+                    split,
+                    infer_layer: l,
+                    offloaded: false,
+                    outage_fallback: true,
+                    prediction: final_out.pred[0],
+                    confidence: final_out.conf[0],
+                    latency_ms,
+                    host_compute_ms,
+                    cost_lambda: gamma,
+                    energy: self.edge.energy(gamma, false),
+                    reward: self.cost.reward_exit(l, final_out.conf[0] as f64, side_info),
+                })
+            }
+        }
+    }
+}

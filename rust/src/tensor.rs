@@ -1,0 +1,261 @@
+//! Host-side tensors: the minimal shape-aware containers the coordinator
+//! moves between the data layer, the PJRT runtime and the policies.
+//!
+//! Only f32 and i32 are needed (matching the artifact formats).  These are
+//! deliberately simple row-major buffers — all real math happens inside the
+//! compiled XLA executables; the host only slices, batches and pads.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum TensorError {
+    #[error("shape {shape:?} implies {expected} elements, buffer has {actual}")]
+    ShapeMismatch { shape: Vec<usize>, expected: usize, actual: usize },
+    #[error("index {index:?} out of bounds for shape {shape:?}")]
+    OutOfBounds { index: Vec<usize>, shape: Vec<usize> },
+    #[error("cannot {op} tensors of shapes {a:?} and {b:?}")]
+    Incompatible { op: &'static str, a: Vec<usize>, b: Vec<usize> },
+}
+
+/// Row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Row-major i32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+macro_rules! tensor_impl {
+    ($name:ident, $ty:ty) => {
+        impl $name {
+            pub fn new(shape: Vec<usize>, data: Vec<$ty>) -> Result<Self, TensorError> {
+                let expected: usize = shape.iter().product();
+                if expected != data.len() {
+                    return Err(TensorError::ShapeMismatch {
+                        shape,
+                        expected,
+                        actual: data.len(),
+                    });
+                }
+                Ok(Self { shape, data })
+            }
+
+            pub fn zeros(shape: Vec<usize>) -> Self {
+                let n: usize = shape.iter().product();
+                Self { shape, data: vec![<$ty>::default(); n] }
+            }
+
+            pub fn scalar(v: $ty) -> Self {
+                Self { shape: vec![], data: vec![v] }
+            }
+
+            pub fn shape(&self) -> &[usize] {
+                &self.shape
+            }
+
+            pub fn ndim(&self) -> usize {
+                self.shape.len()
+            }
+
+            pub fn len(&self) -> usize {
+                self.data.len()
+            }
+
+            pub fn is_empty(&self) -> bool {
+                self.data.is_empty()
+            }
+
+            pub fn data(&self) -> &[$ty] {
+                &self.data
+            }
+
+            pub fn data_mut(&mut self) -> &mut [$ty] {
+                &mut self.data
+            }
+
+            pub fn into_data(self) -> Vec<$ty> {
+                self.data
+            }
+
+            /// Flat offset of a multi-index.
+            pub fn offset(&self, index: &[usize]) -> Result<usize, TensorError> {
+                if index.len() != self.shape.len()
+                    || index.iter().zip(&self.shape).any(|(i, s)| i >= s)
+                {
+                    return Err(TensorError::OutOfBounds {
+                        index: index.to_vec(),
+                        shape: self.shape.clone(),
+                    });
+                }
+                let mut off = 0;
+                for (i, s) in index.iter().zip(&self.shape) {
+                    off = off * s + i;
+                }
+                Ok(off)
+            }
+
+            pub fn at(&self, index: &[usize]) -> Result<$ty, TensorError> {
+                Ok(self.data[self.offset(index)?])
+            }
+
+            /// Rows `lo..hi` along axis 0 as a new tensor.
+            pub fn slice_rows(&self, lo: usize, hi: usize) -> Result<Self, TensorError> {
+                if self.shape.is_empty() || hi > self.shape[0] || lo > hi {
+                    return Err(TensorError::OutOfBounds {
+                        index: vec![lo, hi],
+                        shape: self.shape.clone(),
+                    });
+                }
+                let row: usize = self.shape[1..].iter().product();
+                let mut shape = self.shape.clone();
+                shape[0] = hi - lo;
+                Ok(Self { shape, data: self.data[lo * row..hi * row].to_vec() })
+            }
+
+            /// Concatenate along axis 0 (all trailing dims must match).
+            pub fn concat_rows(parts: &[&Self]) -> Result<Self, TensorError> {
+                let first = parts.first().expect("concat of nothing");
+                let mut shape = first.shape.clone();
+                let mut data = Vec::new();
+                let mut rows = 0;
+                for p in parts {
+                    if p.shape[1..] != first.shape[1..] {
+                        return Err(TensorError::Incompatible {
+                            op: "concat",
+                            a: first.shape.clone(),
+                            b: p.shape.clone(),
+                        });
+                    }
+                    rows += p.shape[0];
+                    data.extend_from_slice(&p.data);
+                }
+                shape[0] = rows;
+                Ok(Self { shape, data })
+            }
+
+            /// Pad axis 0 up to `rows` by repeating the final row.
+            /// Used by the dynamic batcher to reach a compiled batch size —
+            /// repeating a real row keeps the padded lanes numerically tame.
+            pub fn pad_rows_to(&self, rows: usize) -> Result<Self, TensorError> {
+                if self.shape.is_empty() || self.shape[0] == 0 || rows < self.shape[0] {
+                    return Err(TensorError::OutOfBounds {
+                        index: vec![rows],
+                        shape: self.shape.clone(),
+                    });
+                }
+                let row: usize = self.shape[1..].iter().product();
+                let mut data = self.data.clone();
+                let last = self.data[(self.shape[0] - 1) * row..].to_vec();
+                for _ in self.shape[0]..rows {
+                    data.extend_from_slice(&last);
+                }
+                let mut shape = self.shape.clone();
+                shape[0] = rows;
+                Ok(Self { shape, data })
+            }
+        }
+    };
+}
+
+tensor_impl!(TensorF32, f32);
+tensor_impl!(TensorI32, i32);
+
+impl TensorF32 {
+    /// Row-wise argmax for a [N, C] tensor.
+    pub fn argmax_rows(&self) -> Result<Vec<usize>, TensorError> {
+        if self.ndim() != 2 {
+            return Err(TensorError::Incompatible {
+                op: "argmax_rows",
+                a: self.shape.clone(),
+                b: vec![],
+            });
+        }
+        let c = self.shape[1];
+        Ok(self
+            .data
+            .chunks_exact(c)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_shape() {
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = TensorF32::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]).unwrap(), 0.0);
+        assert_eq!(t.at(&[0, 2]).unwrap(), 2.0);
+        assert_eq!(t.at(&[1, 0]).unwrap(), 3.0);
+        assert!(t.at(&[2, 0]).is_err());
+        assert!(t.at(&[0]).is_err());
+    }
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = TensorI32::new(vec![4, 2], (0..8).collect()).unwrap();
+        let a = t.slice_rows(0, 1).unwrap();
+        let b = t.slice_rows(1, 4).unwrap();
+        assert_eq!(a.shape(), &[1, 2]);
+        assert_eq!(b.shape(), &[3, 2]);
+        let back = TensorI32::concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn concat_rejects_mismatched_columns() {
+        let a = TensorF32::zeros(vec![1, 2]);
+        let b = TensorF32::zeros(vec![1, 3]);
+        assert!(TensorF32::concat_rows(&[&a, &b]).is_err());
+    }
+
+    #[test]
+    fn pad_repeats_last_row() {
+        let t = TensorI32::new(vec![2, 2], vec![1, 2, 3, 4]).unwrap();
+        let p = t.pad_rows_to(4).unwrap();
+        assert_eq!(p.shape(), &[4, 2]);
+        assert_eq!(p.data(), &[1, 2, 3, 4, 3, 4, 3, 4]);
+        assert!(t.pad_rows_to(1).is_err());
+    }
+
+    #[test]
+    fn pad_noop_when_full() {
+        let t = TensorF32::zeros(vec![3, 2]);
+        assert_eq!(t.pad_rows_to(3).unwrap(), t);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = TensorF32::new(vec![2, 3], vec![0.1, 0.7, 0.2, 0.9, 0.05, 0.05]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+        assert!(TensorF32::zeros(vec![3]).argmax_rows().is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = TensorF32::scalar(5.0);
+        assert_eq!(t.ndim(), 0);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.at(&[]).unwrap(), 5.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Tiny command-line argument parser (the offline cache has no `clap`).
+//!
+//! Supports the subcommand + flags shape the `splitee` binary uses:
+//!
+//! ```text
+//! splitee <subcommand> [--flag value] [--switch] [positional ...]
+//! ```
+//!
+//! Flags may be `--name value` or `--name=value`.  Unknown flags are
+//! collected so each subcommand can validate against its own schema and
+//! print a helpful error.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Option<Result<T, String>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        self.get(key)
+            .map(|s| s.parse::<T>().map_err(|e| format!("--{key} {s:?}: {e}")))
+    }
+
+    /// Typed flag with default; malformed values are an error.
+    pub fn get_num<T: std::str::FromStr + Copy>(&self, key: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get_parse::<T>(key) {
+            None => Ok(default),
+            Some(r) => r,
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--datasets imdb,yelp`.
+    pub fn get_list(&self, key: &str) -> Option<Vec<String>> {
+        self.get(key)
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).filter(|x| !x.is_empty()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table2", "--reps", "20", "--verbose", "--out=results"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table2"));
+        assert_eq!(a.get("reps"), Some("20"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = parse(&["x", "--mu", "0.1", "--reps", "20"]);
+        assert_eq!(a.get_num::<f64>("mu", 0.5).unwrap(), 0.1);
+        assert_eq!(a.get_num::<usize>("reps", 1).unwrap(), 20);
+        assert_eq!(a.get_num::<usize>("absent", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn malformed_number_is_error() {
+        let a = parse(&["x", "--mu", "abc"]);
+        assert!(a.get_num::<f64>("mu", 0.5).is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["x", "--datasets", "imdb, yelp,qqp"]);
+        assert_eq!(a.get_list("datasets").unwrap(), vec!["imdb", "yelp", "qqp"]);
+        assert!(a.get_list("absent").is_none());
+    }
+
+    #[test]
+    fn positionals_follow_subcommand() {
+        let a = parse(&["serve", "input.bin", "out.bin", "--port", "9000"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["input.bin", "out.bin"]);
+        assert_eq!(a.get("port"), Some("9000"));
+    }
+
+    #[test]
+    fn trailing_switch_without_value() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.has("fast"));
+        assert!(a.flags.is_empty());
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse(&[]);
+        assert!(a.subcommand.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,196 @@
+//! Custom benchmark harness (the offline cache has no `criterion`).
+//!
+//! Usage from a `harness = false` bench target:
+//!
+//! ```text
+//!     let mut b = BenchSuite::new("policies");
+//!     b.bench("splitee_decide", 1_000, 100_000, || { ... });
+//!     b.finish();   // prints a table, saves + diffs vs the saved baseline
+//! ```
+//!
+//! Results are written to `results/bench_<suite>.json`; the next run prints
+//! the delta against the stored baseline so the perf pass (EXPERIMENTS.md
+//! section Perf) can track iteration-by-iteration changes.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// One measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    /// optional throughput annotation (items per iteration)
+    pub items_per_iter: Option<f64>,
+}
+
+/// A suite of benchmarks with baseline diffing.
+pub struct BenchSuite {
+    suite: String,
+    results: Vec<BenchResult>,
+    baseline_path: PathBuf,
+    baseline: Option<Json>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> BenchSuite {
+        let dir = std::env::var("SPLITEE_RESULTS").unwrap_or_else(|_| "results".into());
+        let baseline_path = PathBuf::from(dir).join(format!("bench_{suite}.json"));
+        let baseline = std::fs::read_to_string(&baseline_path)
+            .ok()
+            .and_then(|s| json::parse(&s).ok());
+        println!("== bench suite: {suite} ==");
+        BenchSuite { suite: suite.to_string(), results: Vec::new(), baseline_path, baseline }
+    }
+
+    /// Time `f` over `iters` iterations after `warmup` warmup iterations.
+    /// Batched timing (one clock read per iteration) — fine at the >1 µs
+    /// granularity of everything we measure.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, warmup: u64, iters: u64, mut f: F) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        self.push(name, iters, samples, None);
+    }
+
+    /// Like [`bench`], annotating each iteration as processing `items` items
+    /// (reports items/s).
+    pub fn bench_items<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: u64,
+        iters: u64,
+        items: f64,
+        mut f: F,
+    ) {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        self.push(name, iters, samples, Some(items));
+    }
+
+    fn push(&mut self, name: &str, iters: u64, samples: Vec<f64>, items: Option<f64>) {
+        let r = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: stats::mean(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p99_ns: stats::percentile(&samples, 99.0),
+            items_per_iter: items,
+        };
+        let base = self
+            .baseline
+            .as_ref()
+            .and_then(|b| b.opt(name))
+            .and_then(|e| e.get("mean_ns").ok().and_then(|v| v.as_f64().ok()));
+        let delta = match base {
+            Some(b) if b > 0.0 => format!(" ({:+.1}% vs baseline)", 100.0 * (r.mean_ns / b - 1.0)),
+            _ => String::new(),
+        };
+        let thr = items
+            .map(|it| format!("  {:>10.0} items/s", it / (r.mean_ns / 1e9)))
+            .unwrap_or_default();
+        println!(
+            "  {:<32} mean {}  p50 {}  p99 {}{thr}{delta}",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p99_ns),
+        );
+        self.results.push(r);
+    }
+
+    /// Print a footer and persist the results as the new baseline.
+    pub fn finish(self) {
+        let mut obj = std::collections::BTreeMap::new();
+        for r in &self.results {
+            let mut e = vec![
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("p50_ns", Json::Num(r.p50_ns)),
+                ("p99_ns", Json::Num(r.p99_ns)),
+                ("iters", Json::Num(r.iters as f64)),
+            ];
+            if let Some(it) = r.items_per_iter {
+                e.push(("items_per_iter", Json::Num(it)));
+            }
+            obj.insert(r.name.clone(), Json::obj(e));
+        }
+        if let Some(dir) = self.baseline_path.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(&self.baseline_path, Json::Obj(obj).to_string()) {
+            eprintln!("warning: could not save baseline: {e}");
+        }
+        println!(
+            "== {} done: {} benchmarks, baseline {} ==",
+            self.suite,
+            self.results.len(),
+            self.baseline_path.display()
+        );
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:7.1} ns")
+    } else if ns < 1e6 {
+        format!("{:7.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:7.2} ms", ns / 1e6)
+    } else {
+        format!("{:7.2} s ", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_persists() {
+        std::env::set_var("SPLITEE_RESULTS", std::env::temp_dir().join("splitee_bench_test").to_str().unwrap());
+        let mut suite = BenchSuite::new("selftest");
+        let mut x = 0u64;
+        suite.bench("noop_loop", 10, 50, || {
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(suite.results().len(), 1);
+        assert!(suite.results()[0].mean_ns > 0.0);
+        suite.finish();
+        // second run sees the baseline
+        let suite2 = BenchSuite::new("selftest");
+        assert!(suite2.baseline.is_some());
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,68 @@
+//! `log`-crate backend: leveled stderr logger with elapsed-time stamps.
+//!
+//! Installed once by the binary entrypoints (`main.rs`, examples, benches).
+//! Library code only ever uses the `log` macros, so embedders can swap in
+//! their own backend.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger.  `verbosity`: 0 = warn, 1 = info, 2 = debug, 3+ = trace.
+/// Safe to call more than once (subsequent calls only adjust the level).
+pub fn init(verbosity: u8) {
+    let level = match verbosity {
+        0 => LevelFilter::Warn,
+        1 => LevelFilter::Info,
+        2 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init(1);
+        init(2);
+        assert_eq!(log::max_level(), LevelFilter::Debug);
+        log::info!("logger smoke test");
+        init(0);
+        assert_eq!(log::max_level(), LevelFilter::Warn);
+    }
+}

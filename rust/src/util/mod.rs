@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo because the offline crate cache
+//! only carries the `xla` dependency closure (see DESIGN.md section 2):
+//! JSON, PRNG, CLI args, thread pool, statistics, logging, property testing.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

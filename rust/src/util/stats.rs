@@ -1,0 +1,294 @@
+//! Statistics helpers: summaries, confidence intervals, histograms.
+//!
+//! Used by the experiment harness (figure 7 plots mean cumulative regret with
+//! a 95 % confidence interval over 20 repetitions, exactly as the paper does)
+//! and by the serving metrics (latency percentiles).
+
+/// Mean of a slice (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation (0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Half-width of the 95 % normal-approximation confidence interval.
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    1.96 * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Percentile by linear interpolation, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (q / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Summary of a sample: mean, std, 95 % CI, extremes, percentiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        Summary {
+            n: xs.len(),
+            mean: mean(xs),
+            std_dev: std_dev(xs),
+            ci95: ci95_half_width(xs),
+            min: xs.iter().copied().fold(f64::INFINITY, f64::min),
+            max: xs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            p50: percentile(xs, 50.0),
+            p99: percentile(xs, 99.0),
+        }
+    }
+}
+
+/// Streaming (Welford) mean/variance accumulator — used on hot paths where
+/// storing every observation would allocate (e.g. per-request latency).
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Welford {
+        Welford::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), cheap enough for hot paths.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * growth^i, base * growth^(i+1))
+    base_us: f64,
+    growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl LatencyHistogram {
+    /// 64 log-spaced buckets from 1 µs up to ~17 s.
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            base_us: 1.0,
+            growth: 1.3,
+            counts: vec![0; 64],
+            total: 0,
+            sum_us: 0.0,
+            max_us: 0.0,
+        }
+    }
+
+    #[inline]
+    pub fn record_us(&mut self, us: f64) {
+        let idx = if us <= self.base_us {
+            0
+        } else {
+            ((us / self.base_us).ln() / self.growth.ln()).floor() as usize
+        }
+        .min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate percentile: upper edge of the bucket holding quantile `q`.
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q / 100.0 * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.base_us * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[3.0]), 0.0);
+        assert_eq!(ci95_half_width(&[3.0]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.5, 2.5, 3.5, 10.0, -1.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std_dev() - std_dev(&xs)).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_us(50.0);
+        let p90 = h.percentile_us(90.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p90 && p90 <= p99);
+        // bucket edges are approximate: p50 should be within a growth factor
+        assert!(p50 > 300.0 && p50 < 900.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_us(10.0);
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max_us() >= 1000.0);
+    }
+
+    #[test]
+    fn ci95_shrinks_with_n() {
+        let few: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let many: Vec<f64> = (0..1000).map(|i| (i % 10) as f64).collect();
+        assert!(ci95_half_width(&many) < ci95_half_width(&few));
+    }
+}

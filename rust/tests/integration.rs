@@ -1,0 +1,350 @@
+//! Integration tests over the real AOT artifacts: runtime -> model ->
+//! policies end-to-end, including the python-golden fixture cross-check.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (pass
+//! with a notice) when the artifact directory is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use splitee::config::Manifest;
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::data::Dataset;
+use splitee::experiments::ConfidenceCache;
+use splitee::model::MultiExitModel;
+use splitee::policy::{Policy, SampleView, SplitEePolicy};
+use splitee::runtime::Runtime;
+use splitee::sim::{CoInferencePipeline, LinkSim};
+use splitee::tensor::TensorI32;
+use splitee::util::json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn manifest() -> Option<&'static Manifest> {
+    static M: OnceLock<Option<Manifest>> = OnceLock::new();
+    M.get_or_init(|| {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+            return None;
+        }
+        Some(Manifest::load(&dir).expect("manifest parses"))
+    })
+    .as_ref()
+}
+
+// The PJRT wrapper's internal Rc makes the client thread-affine, so each
+// test builds its own Runtime rather than sharing a static one.
+fn fresh_runtime() -> Runtime {
+    Runtime::cpu().expect("PJRT CPU client")
+}
+
+#[test]
+fn manifest_inventory_complete() {
+    let Some(m) = manifest() else { return };
+    assert_eq!(m.model.n_layers, 12);
+    assert!(m.tasks.len() >= 4, "tasks: {:?}", m.tasks.keys());
+    assert!(m.eval_datasets().len() >= 5);
+    for t in m.tasks.values() {
+        assert!(t.alpha > 0.5 && t.alpha < 1.0, "{}: alpha {}", t.name, t.alpha);
+        assert!(t.tau > 0.0, "{}: tau {}", t.name, t.tau);
+        assert_eq!(t.val_acc_per_exit.len(), m.model.n_layers);
+    }
+}
+
+#[test]
+fn model_loads_and_runs_layer_by_layer() {
+    let Some(m) = manifest() else { return };
+    let model = MultiExitModel::load(m, &fresh_runtime(), "sst2", "elasticbert").unwrap();
+    let tokens = TensorI32::new(
+        vec![1, m.model.seq_len],
+        (0..m.model.seq_len as i32).collect(),
+    )
+    .unwrap();
+    let h = model.forward_to(&tokens, 3).unwrap();
+    assert_eq!(h.shape(), &[1, m.model.seq_len, m.model.d_model]);
+    let out = model.exit_head(&h, 3).unwrap();
+    assert_eq!(out.probs.shape(), &[1, model.n_classes()]);
+    let p: f32 = out.probs.data().iter().sum();
+    assert!((p - 1.0).abs() < 1e-4, "probs sum {p}");
+    assert!(out.conf[0] >= 1.0 / model.n_classes() as f32 - 1e-4);
+}
+
+#[test]
+fn layered_path_matches_prefix_full_graph() {
+    // The serving path (Pallas-kernel block/head graphs, layer by layer)
+    // and the cache path (fused jnp reference graph) must agree — this is
+    // the rust-side counterpart of the pytest pallas-vs-ref check.
+    let Some(m) = manifest() else { return };
+    let model = MultiExitModel::load(m, &fresh_runtime(), "sst2", "elasticbert").unwrap();
+    let tokens = TensorI32::new(
+        vec![1, m.model.seq_len],
+        (0..m.model.seq_len as i32).map(|i| (i * 7) % 1000).collect(),
+    )
+    .unwrap();
+    let all = model.forward_all_exits(&tokens).unwrap();
+    for layer in [0, 3, 7, 11] {
+        let (_h, out) = model.run_split(&tokens, layer).unwrap();
+        assert!(
+            (out.conf[0] - all[layer].conf[0]).abs() < 1e-3,
+            "layer {layer}: layered {} vs fused {}",
+            out.conf[0],
+            all[layer].conf[0]
+        );
+        assert_eq!(out.pred[0], all[layer].pred[0], "layer {layer} pred");
+    }
+}
+
+#[test]
+fn rust_outputs_match_python_golden_fixture() {
+    // aot.py exports per-layer (probs, conf, ent) computed by the python
+    // reference for 8 validation samples; the rust runtime must reproduce
+    // them through the compiled artifacts.
+    let Some(m) = manifest() else { return };
+    for task in ["sst2", "rte", "mnli", "mrpc"] {
+        let fx_path = artifacts_dir().join("fixtures").join(format!("{task}.json"));
+        let fx = json::parse(&std::fs::read_to_string(&fx_path).unwrap()).unwrap();
+        let tokens_rows = fx.get("tokens").unwrap().as_arr().unwrap();
+        let b = tokens_rows.len();
+        let t = tokens_rows[0].as_arr().unwrap().len();
+        let mut flat = Vec::with_capacity(b * t);
+        for row in tokens_rows {
+            for v in row.as_arr().unwrap() {
+                flat.push(v.as_i64().unwrap() as i32);
+            }
+        }
+        let tokens = TensorI32::new(vec![b, t], flat).unwrap();
+        let model = MultiExitModel::load(m, &fresh_runtime(), task, "elasticbert").unwrap();
+        let outs = model.forward_all_exits(&tokens).unwrap();
+        let conf_golden = fx.get("conf").unwrap().as_arr().unwrap();
+        let ent_golden = fx.get("ent").unwrap().as_arr().unwrap();
+        for layer in 0..m.model.n_layers {
+            let conf_l = conf_golden[layer].as_arr().unwrap();
+            let ent_l = ent_golden[layer].as_arr().unwrap();
+            for i in 0..b {
+                let want_c = conf_l[i].as_f64().unwrap();
+                let got_c = outs[layer].conf[i] as f64;
+                assert!(
+                    (want_c - got_c).abs() < 2e-3,
+                    "{task} layer {layer} sample {i}: conf python {want_c} vs rust {got_c}"
+                );
+                let want_e = ent_l[i].as_f64().unwrap();
+                let got_e = outs[layer].ent[i] as f64;
+                assert!(
+                    (want_e - got_e).abs() < 5e-3,
+                    "{task} layer {layer} sample {i}: ent python {want_e} vs rust {got_e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn datasets_load_and_match_manifest() {
+    let Some(m) = manifest() else { return };
+    for (name, info) in &m.datasets {
+        let d = Dataset::load(&m.root.join(&info.file), name).unwrap();
+        assert_eq!(d.len(), info.samples, "{name}");
+        assert_eq!(d.n_classes, info.classes, "{name}");
+        assert_eq!(d.seq_len, m.model.seq_len, "{name}");
+        assert!(d.tokens.data().iter().all(|&t| t >= 0 && (t as usize) < m.model.vocab));
+    }
+}
+
+#[test]
+fn batched_execution_matches_single() {
+    // The batcher pads to compiled sizes; padded execution must produce the
+    // same per-row numbers as one-by-one execution.
+    let Some(m) = manifest() else { return };
+    let model = MultiExitModel::load(m, &fresh_runtime(), "sst2", "elasticbert").unwrap();
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+    let batch = data.range_tokens(0, 8);
+    let (_h, out_batch) = model.run_split(&batch, 5).unwrap();
+    for i in 0..8 {
+        let single = data.sample_tokens(i);
+        let (_h1, out1) = model.run_split(&single, 5).unwrap();
+        assert!(
+            (out1.conf[0] - out_batch.conf[i]).abs() < 1e-4,
+            "row {i}: single {} vs batched {}",
+            out1.conf[0],
+            out_batch.conf[i]
+        );
+        assert_eq!(out1.pred[0], out_batch.pred[i], "row {i}");
+    }
+}
+
+#[test]
+fn splitee_end_to_end_beats_final_exit_cost() {
+    // The headline claim on real artifacts (small sample for test speed;
+    // the full numbers live in EXPERIMENTS.md).
+    let Some(m) = manifest() else { return };
+    let cache = ConfidenceCache::load_or_build(m, &fresh_runtime(), "imdb", "elasticbert").unwrap();
+    let task = m.source_task("imdb").unwrap();
+    let cm = CostModel::paper(5.0, 0.1, m.model.n_layers);
+    let mut policy = SplitEePolicy::new(m.model.n_layers, task.alpha, 1.0);
+    let mut cost = 0.0;
+    let mut hits = 0usize;
+    let n = cache.n_samples;
+    for i in 0..n {
+        let conf = cache.sample_conf(i);
+        let ent = cache.sample_ent(i);
+        let o = policy.decide(&SampleView { conf: &conf, ent: &ent }, &cm);
+        cost += o.cost;
+        hits += (cache.pred_at(o.infer_layer - 1, i) == cache.labels[i]) as usize;
+    }
+    let final_cost = cm.final_exit_cost() * n as f64;
+    let final_acc = cache.accuracy_at(m.model.n_layers);
+    let acc = hits as f64 / n as f64;
+    assert!(
+        cost < 0.55 * final_cost,
+        "cost reduction {:.1}% (want > 45%)",
+        100.0 * (1.0 - cost / final_cost)
+    );
+    assert!(
+        acc > final_acc - 0.02,
+        "accuracy {acc:.4} dropped more than 2 points below final-exit {final_acc:.4}"
+    );
+}
+
+#[test]
+fn co_inference_pipeline_serves_over_every_network() {
+    let Some(m) = manifest() else { return };
+    let model = MultiExitModel::load(m, &fresh_runtime(), "sst2", "elasticbert").unwrap();
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+    let task = m.source_task("imdb").unwrap();
+    for profile in NetworkProfile::all() {
+        let cm = CostModel::paper(profile.offload_lambda, 0.1, model.n_layers());
+        let link = LinkSim::new(profile, 3);
+        let mut pipe = CoInferencePipeline::new(&model, link, cm, task.alpha);
+        let trace = pipe.serve(&data.sample_tokens(0), 4, false).unwrap();
+        assert!(trace.latency_ms > 0.0);
+        assert!(trace.cost_lambda > 0.0);
+        assert!(trace.confidence > 0.0 && trace.confidence <= 1.0);
+    }
+}
+
+#[test]
+fn cache_roundtrip_through_disk_is_identity() {
+    let Some(m) = manifest() else { return };
+    let cache = ConfidenceCache::load_or_build(m, &fresh_runtime(), "scitail", "elasticbert").unwrap();
+    // load again — must come from disk and agree exactly
+    let again = ConfidenceCache::load_or_build(m, &fresh_runtime(), "scitail", "elasticbert").unwrap();
+    assert_eq!(cache.n_samples, again.n_samples);
+    for i in (0..cache.n_samples).step_by(997) {
+        assert_eq!(cache.sample_conf(i), again.sample_conf(i));
+    }
+}
+
+#[test]
+fn full_coordinator_round_trip_answers_every_request() {
+    // router -> batcher -> service over the real model; every submitted
+    // request gets exactly one reply and the metrics agree.
+    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+    use splitee::sim::LinkSim;
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let task = m.source_task("imdb").unwrap().clone();
+    let runtime = fresh_runtime();
+    let model = Arc::new(MultiExitModel::load(m, &runtime, &task.name, "elasticbert").unwrap());
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+    let n = 40usize;
+
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::four_g(), 11);
+    let config = ServiceConfig {
+        policy: PolicyKind::SplitEe,
+        alpha: task.alpha,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: m.batch_sizes.clone(),
+            max_wait: std::time::Duration::from_millis(2),
+        },
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+
+    let producer = {
+        let router = Arc::clone(&router);
+        let tokens: Vec<_> = (0..n).map(|i| data.sample_tokens(i)).collect();
+        std::thread::spawn(move || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let mut ids = Vec::new();
+            for t in tokens {
+                ids.push(router.submit(t, tx.clone()).expect("accepting"));
+            }
+            drop(tx);
+            let mut replies = Vec::new();
+            while let Ok(r) = rx.recv() {
+                replies.push(r.id);
+            }
+            router.shutdown();
+            (ids, replies)
+        })
+    };
+    service.run(Arc::clone(&router), config.batcher.clone()).unwrap();
+    let (mut ids, mut replies) = producer.join().unwrap();
+    ids.sort_unstable();
+    replies.sort_unstable();
+    assert_eq!(ids, replies, "every request answered exactly once");
+    assert_eq!(service.metrics.served, n as u64);
+    // the bandit actually learned something: one reward update per sample
+    let (_best, arms) = service.bandit_summary().unwrap();
+    let updates: u64 = arms.iter().map(|(p, _)| p).sum();
+    assert_eq!(updates, service.metrics.served, "one bandit update per sample");
+}
+
+#[test]
+fn service_outage_falls_back_on_device() {
+    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::{Batcher, BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+    use splitee::sim::LinkSim;
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let task = m.source_task("scitail").unwrap().clone();
+    let runtime = fresh_runtime();
+    let model = Arc::new(MultiExitModel::load(m, &runtime, &task.name, "elasticbert").unwrap());
+    let info = m.dataset("scitail").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "scitail").unwrap();
+
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let mut link = LinkSim::new(NetworkProfile::three_g(), 13);
+    link.outage_rate = 1.0; // total outage: every offload must fall back
+    let config = ServiceConfig {
+        policy: PolicyKind::Fixed(2), // shallow split -> many offload attempts
+        alpha: 1.1,                   // nothing can exit (conf <= 1 < alpha)
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: m.batch_sizes.clone(),
+            max_wait: std::time::Duration::from_millis(1),
+        },
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..8 {
+        router.submit(data.sample_tokens(i), tx.clone()).unwrap();
+    }
+    drop(tx);
+    router.shutdown();
+    let mut batcher = Batcher::new(Arc::clone(&router), config.batcher.clone());
+    while let Some(b) = batcher.next_batch() {
+        service.serve_batch(b).unwrap();
+    }
+    let mut got = 0;
+    while let Ok(resp) = rx.recv() {
+        assert!(!resp.offloaded, "outage must prevent offload");
+        assert_eq!(resp.infer_layer, model.n_layers(), "fallback runs to final layer");
+        got += 1;
+    }
+    assert_eq!(got, 8);
+    assert_eq!(service.metrics.outage_fallbacks, 8);
+}
