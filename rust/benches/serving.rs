@@ -1,9 +1,16 @@
 //! End-to-end serving bench: requests/s and per-request latency through
-//! router -> batcher -> service (the deliverable-(e) driver, timed).
-//! Needs `make artifacts`.
+//! router -> batcher -> the staged pipeline (the deliverable-(e) driver,
+//! timed).  Needs `make artifacts`.
+//!
+//! Besides the BenchSuite baseline (`results/bench_serving.json`), this
+//! writes `BENCH_serving.json` with headline req/s per policy plus the raw
+//! full-depth roofline, so successive PRs have a throughput trajectory to
+//! compare against (see ROADMAP "Open items" for the methodology).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use splitee::util::json::Json;
 
 use splitee::config::Manifest;
 use splitee::coordinator::service::PolicyKind;
@@ -77,7 +84,7 @@ fn main() {
     }
 
     // raw PJRT roofline for comparison: back-to-back full-depth batches of 8
-    {
+    let roofline_rps = {
         let tokens = data.range_tokens(0, 8);
         let t0 = Instant::now();
         let iters = 25;
@@ -90,6 +97,19 @@ fn main() {
             1.0 / per_req,
             per_req * 1e3
         );
+        1.0 / per_req
+    };
+
+    // headline throughput baseline for the perf trajectory across PRs
+    let mut baseline = std::collections::BTreeMap::new();
+    for r in suite.results() {
+        if let Some(items) = r.items_per_iter {
+            baseline.insert(format!("{}_rps", r.name), Json::Num(items / (r.mean_ns / 1e9)));
+        }
+    }
+    baseline.insert("raw_roofline_rps".to_string(), Json::Num(roofline_rps));
+    if let Err(e) = std::fs::write("BENCH_serving.json", Json::Obj(baseline).to_string()) {
+        eprintln!("warning: could not write BENCH_serving.json: {e}");
     }
 
     suite.finish();

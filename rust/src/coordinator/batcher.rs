@@ -68,24 +68,29 @@ impl Batcher {
             return Some(b);
         }
         let preferred = self.config.preferred();
-        let deadline = Instant::now() + self.config.max_wait;
 
         // Block for the first request (or shutdown).
         let mut got = self.router.pull(preferred);
         if got.is_empty() {
             return None; // shut down and drained
         }
-        // Top up until the preferred size or the deadline.
+        // Top up until the preferred size or the deadline.  The deadline
+        // starts when the first request is in hand — an idle stretch before
+        // it must not eat the top-up window (or sparse arrivals would each
+        // ship as padded single-row batches).  `pull_deadline` parks on the
+        // router's condvar instead of sleep-polling: arrivals wake it
+        // immediately, and a partial batch is emitted exactly at the
+        // deadline rather than up to a poll interval late.
+        let deadline = Instant::now() + self.config.max_wait;
         while got.len() < preferred && Instant::now() < deadline {
             if !self.router.is_accepting() && self.router.queued() == 0 {
                 break;
             }
-            let more = self.router.try_pull(preferred - got.len());
+            let more = self.router.pull_deadline(preferred - got.len(), deadline);
             if more.is_empty() {
-                std::thread::sleep(Duration::from_micros(200));
-            } else {
-                got.extend(more);
+                break; // deadline passed (or shut down and drained)
             }
+            got.extend(more);
         }
         self.pending = Self::form_all(got, &self.config.batch_sizes).into();
         self.pending.pop_front()
@@ -204,6 +209,30 @@ mod tests {
         assert_eq!(total, 20);
         // every id exactly once, in order
         assert_eq!(ids, (0..20).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn partial_batch_emitted_at_deadline() {
+        // With the router still accepting and fewer requests than the
+        // preferred size, the batcher must emit the partial batch at the
+        // `max_wait` deadline (condvar deadline wait, not a sleep-poll).
+        let router = Router::new(RouterConfig::default());
+        let mut batcher = Batcher::new(
+            Arc::clone(&router),
+            BatcherConfig { batch_sizes: vec![8], max_wait: Duration::from_millis(40) },
+        );
+        let (tx, _rx) = mpsc::channel();
+        for i in 0..3 {
+            router.submit(TensorI32::new(vec![1, 4], vec![i; 4]).unwrap(), tx.clone());
+        }
+        let t0 = Instant::now();
+        let b = batcher.next_batch().expect("partial batch at deadline");
+        let waited = t0.elapsed();
+        assert_eq!(b.real_len(), 3);
+        assert_eq!(b.padded_to, 8);
+        assert!(waited >= Duration::from_millis(30), "emitted too early: {waited:?}");
+        assert!(waited < Duration::from_millis(400), "emitted too late: {waited:?}");
+        router.shutdown();
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct ServingMetrics {
     pub outage_fallbacks: u64,
     pub batches: u64,
     pub padded_rows: u64,
+    /// accumulated simulated busy time of the pipeline's edge stage (ms)
+    pub edge_busy_ms: f64,
+    /// accumulated simulated busy time of the pipeline's cloud stage (ms)
+    pub cloud_busy_ms: f64,
 }
 
 impl ServingMetrics {
@@ -36,6 +40,8 @@ impl ServingMetrics {
             outage_fallbacks: 0,
             batches: 0,
             padded_rows: 0,
+            edge_busy_ms: 0.0,
+            cloud_busy_ms: 0.0,
         }
     }
 
@@ -68,6 +74,14 @@ impl ServingMetrics {
     pub fn record_batch(&mut self, real: usize, padded_to: usize) {
         self.batches += 1;
         self.padded_rows += (padded_to - real) as u64;
+    }
+
+    /// Record one batch's per-stage busy time.  The ratio of the smaller
+    /// total to the larger bounds how much the edge/cloud overlap of the
+    /// pipelined serve loop can hide.
+    pub fn record_stage_ms(&mut self, edge_ms: f64, cloud_ms: f64) {
+        self.edge_busy_ms += edge_ms;
+        self.cloud_busy_ms += cloud_ms;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -120,6 +134,10 @@ impl ServingMetrics {
             100.0 * self.offload_rate(),
             self.outage_fallbacks,
         ));
+        out.push_str(&format!(
+            "stages   edge busy {:.1} ms   cloud busy {:.1} ms\n",
+            self.edge_busy_ms, self.cloud_busy_ms,
+        ));
         out.push_str("exit layers: ");
         for (layer, &count) in self.per_layer.iter().enumerate().skip(1) {
             if count > 0 {
@@ -141,6 +159,10 @@ mod tests {
         m.record_request(3, false, false, 5.0, 0.5, 2.7, 2.7, );
         m.record_request(12, true, false, 20.0, 1.0, 7.6, 5.1);
         m.record_batch(2, 8);
+        m.record_stage_ms(3.0, 1.5);
+        m.record_stage_ms(2.0, 0.0);
+        assert!((m.edge_busy_ms - 5.0).abs() < 1e-12);
+        assert!((m.cloud_busy_ms - 1.5).abs() < 1e-12);
         assert_eq!(m.served, 2);
         assert_eq!(m.offloaded, 1);
         assert_eq!(m.per_layer[3], 1);

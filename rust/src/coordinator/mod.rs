@@ -1,17 +1,22 @@
 //! The serving coordinator — the system around the paper's algorithm.
 //!
-//! Request flow:
+//! Request flow (each `->` below is a pipeline stage boundary with a bounded
+//! channel; stages run concurrently, see `service` module docs):
 //!
 //! ```text
 //!     client -> Router (admission, backpressure)
-//!            -> Batcher (dynamic batching to compiled batch sizes)
-//!            -> Service (policy decides split; edge/cloud pipeline runs it)
-//!            -> reply channels
+//!            -> Batcher (dynamic batching to compiled batch sizes;
+//!               condvar deadline wait, no sleep-polling)
+//!            -> edge stage (embed + blocks to the split + exit head)
+//!            -> cloud stage (continuation for offloaded rows)
+//!            -> reply stage (link sim, bandit updates, metrics, replies)
 //! ```
 //!
 //! The split-layer decision is *distribution-level* (one bandit per
 //! deployment, as in the paper), so a whole batch shares the chosen split;
-//! the exit-or-offload decision is per sample.
+//! the exit-or-offload decision is per sample.  All bandit state lives in
+//! the reply stage and is updated in batch order, so the pipeline's
+//! decisions are identical to serial execution for a fixed arrival order.
 
 pub mod batcher;
 pub mod metrics;

@@ -117,15 +117,31 @@ impl Router {
         out
     }
 
-    /// Non-blocking variant for the batcher's timeout path.
-    pub fn try_pull(&self, max: usize) -> Vec<Request> {
+    /// Pull up to `max` requests, blocking until at least one is available,
+    /// the router is shut down, or `deadline` passes (then returns whatever
+    /// is queued, possibly nothing).  This is the batcher's top-up wait: a
+    /// condvar wait with a deadline instead of a sleep-poll loop, so a
+    /// request arriving mid-wait is picked up immediately and an empty queue
+    /// costs zero CPU.
+    pub fn pull_deadline(&self, max: usize, deadline: Instant) -> Vec<Request> {
         let mut st = self.state.lock().unwrap();
-        let n = st.queue.len().min(max.max(1));
-        let out: Vec<Request> = st.queue.drain(..n).collect();
-        if !out.is_empty() {
-            self.space.notify_all();
+        loop {
+            if !st.queue.is_empty() {
+                let n = st.queue.len().min(max.max(1));
+                let out: Vec<Request> = st.queue.drain(..n).collect();
+                self.space.notify_all();
+                return out;
+            }
+            if !st.accepting {
+                return Vec::new();
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            let (guard, _timeout) = self.items.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
         }
-        out
     }
 
     /// Stop accepting new requests and wake all waiters.
@@ -205,6 +221,32 @@ mod tests {
         assert!(!handle.is_finished(), "third submit should block");
         let _ = r.pull(1);
         assert_eq!(handle.join().unwrap(), Some(2));
+    }
+
+    #[test]
+    fn pull_deadline_times_out_empty_and_wakes_on_arrival() {
+        use std::time::Duration;
+        let r = Router::new(RouterConfig::default());
+        // empty queue: returns empty at the deadline, not before
+        let t0 = Instant::now();
+        let got = r.pull_deadline(4, Instant::now() + Duration::from_millis(30));
+        assert!(got.is_empty());
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "returned after {waited:?}");
+        assert!(waited < Duration::from_millis(500), "deadline overshot: {waited:?}");
+        // an arrival mid-wait wakes the puller well before the deadline
+        let r2 = Arc::clone(&r);
+        let puller = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let got = r2.pull_deadline(4, Instant::now() + Duration::from_secs(5));
+            (got.len(), t0.elapsed())
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let (tx, _rx) = mpsc::channel();
+        r.submit(tokens(), tx);
+        let (n, waited) = puller.join().unwrap();
+        assert_eq!(n, 1);
+        assert!(waited < Duration::from_secs(2), "woke after {waited:?}");
     }
 
     #[test]

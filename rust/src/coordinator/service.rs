@@ -5,7 +5,33 @@
 //! bandit's decision is distribution-level, exactly as in the paper — one
 //! deployment has one split); exit-or-offload is per sample; the bandit is
 //! updated once per sample with the realised reward.
+//!
+//! # Pipelined execution
+//!
+//! [`Service::run`] executes batches through a **staged pipeline**:
+//!
+//! ```text
+//!     batcher thread  ──►  edge stage  ──►  cloud stage  ──►  reply stage
+//!     (forms batches)      (embed +         (continuation     (link sim,
+//!                           blocks to        for offloaded     bandit updates,
+//!                           the split)       rows)             metrics, replies)
+//! ```
+//!
+//! Stages are connected by **bounded channels**, so batch formation (and its
+//! `max_wait` deadline) and reply delivery never block model compute, and the
+//! edge stage of batch *k+1* overlaps the cloud stage of batch *k*.  Policy
+//! semantics are unchanged: all bandit updates happen in the reply stage in
+//! batch order, and the split for batch *k+1* is released to the edge stage
+//! only after batch *k*'s updates are applied — the same decision sequence as
+//! the serial path for a fixed arrival order.  (Only the split-independent
+//! `embed` of batch *k+1* runs before its split is known; for fixed-split and
+//! final-exit policies the whole edge stage overlaps freely.)
+//!
+//! [`Service::run_serial`] keeps the single-threaded reference path; both
+//! paths share the same stage functions, so their per-request outputs are
+//! identical by construction (asserted by `tests/integration.rs`).
 
+use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -15,11 +41,16 @@ use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::router::{Response, Router};
 use crate::cost::CostModel;
-use crate::model::{plan_batches, MultiExitModel};
+use crate::model::{plan_batches, ExitOutput, MultiExitModel};
 use crate::policy::{SplitEePolicy, SplitEeSPolicy};
 use crate::sim::device::{CloudSim, EdgeSim};
 use crate::sim::link::{LinkSim, TransferResult};
 use crate::tensor::TensorF32;
+
+/// Bound on in-flight batches between adjacent pipeline stages.  Small on
+/// purpose: enough to keep every stage busy, shallow enough that queue wait
+/// stays visible as backpressure instead of hidden buffering.
+const PIPELINE_DEPTH: usize = 2;
 
 /// Which split policy drives the service.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -51,6 +82,260 @@ enum PolicyState {
     SplitEeS(SplitEeSPolicy),
     Fixed(usize),
     FinalExit,
+}
+
+impl PolicyState {
+    /// Next split layer (1-based) from the current bandit state.
+    fn choose_split(&mut self, n_layers: usize) -> usize {
+        match self {
+            PolicyState::SplitEe(p) => p.choose_split(),
+            PolicyState::SplitEeS(p) => p.choose_split(),
+            PolicyState::Fixed(k) => *k,
+            PolicyState::FinalExit => n_layers,
+        }
+    }
+
+    /// Split choice that needs no bandit state (fixed policies), if any.
+    /// When `Some`, the edge stage never has to wait on the reply stage.
+    fn static_split(&self, n_layers: usize) -> Option<usize> {
+        match self {
+            PolicyState::Fixed(k) => Some(*k),
+            PolicyState::FinalExit => Some(n_layers),
+            _ => None,
+        }
+    }
+}
+
+/// What the edge stage hands to the cloud stage for one batch.
+struct EdgeWork {
+    batch: Batch,
+    /// hidden state at the split layer (consumed by the cloud continuation)
+    h: TensorF32,
+    exit_out: ExitOutput,
+    /// per earlier layer, per row: exit-head confidences (SplitEE-S only)
+    prefix_conf: Vec<Vec<f32>>,
+    /// rows (by batch index) whose confidence fell below alpha
+    offload_rows: Vec<usize>,
+    split: usize,
+    edge_ms: f64,
+    /// activation payload size for the uplink simulator
+    payload: usize,
+}
+
+/// One offloaded row's final-layer result from the cloud continuation.
+struct CloudRow {
+    row: usize,
+    pred: usize,
+    conf: f32,
+    cloud_ms: f64,
+}
+
+/// Edge work plus cloud results, ready for the reply stage (the hidden
+/// state has been dropped — replies only need the head outputs).
+struct ReplyWork {
+    batch: Batch,
+    exit_out: ExitOutput,
+    prefix_conf: Vec<Vec<f32>>,
+    split: usize,
+    edge_ms: f64,
+    payload: usize,
+    cloud_out: Vec<CloudRow>,
+    /// total simulated cloud compute across this batch's offload chunks
+    cloud_busy_ms: f64,
+}
+
+/// Edge share: embed + blocks up to the split + the split's exit head, plus
+/// the per-row exit-or-offload decision.
+fn edge_stage(
+    model: &MultiExitModel,
+    edge: &EdgeSim,
+    alpha: f64,
+    side: bool,
+    n_layers: usize,
+    split: usize,
+    batch: Batch,
+) -> Result<EdgeWork> {
+    let t0 = Instant::now();
+    let h = model.embed(&batch.tokens)?;
+    let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
+    edge_stage_after_embed(model, edge, alpha, side, n_layers, split, batch, h, embed_ms)
+}
+
+/// The split-dependent part of the edge stage.  Separated so the pipelined
+/// path can run the split-independent `embed` before the previous batch's
+/// bandit updates have released this batch's split.
+#[allow(clippy::too_many_arguments)]
+fn edge_stage_after_embed(
+    model: &MultiExitModel,
+    edge: &EdgeSim,
+    alpha: f64,
+    side: bool,
+    n_layers: usize,
+    split: usize,
+    batch: Batch,
+    mut h: TensorF32,
+    embed_ms: f64,
+) -> Result<EdgeWork> {
+    let t0 = Instant::now();
+    let mut prefix_conf: Vec<Vec<f32>> = Vec::new(); // per layer, per row
+    for layer in 0..split {
+        h = model.block(&h, layer)?;
+        if side && layer + 1 < split {
+            prefix_conf.push(model.exit_head(&h, layer)?.conf);
+        }
+    }
+    let exit_out = model.exit_head(&h, split - 1)?;
+    let edge_ms = edge.simulated_ms(embed_ms + t0.elapsed().as_secs_f64() * 1e3);
+
+    // per-sample exit-or-offload
+    let n_real = batch.real_len();
+    let mut offload_rows: Vec<usize> = Vec::new();
+    for row in 0..n_real {
+        if (exit_out.conf[row] as f64) < alpha && split < n_layers {
+            offload_rows.push(row);
+        }
+    }
+    let payload = LinkSim::activation_payload(model.seq_len(), h.shape()[2]);
+    Ok(EdgeWork { batch, h, exit_out, prefix_conf, offload_rows, split, edge_ms, payload })
+}
+
+/// Cloud share: continue the offloaded rows from the split to the final
+/// layer.  The gather is one contiguous copy (`gather_rows`), not a per-row
+/// slice + concat.
+fn cloud_stage(model: &MultiExitModel, cloud: &CloudSim, work: EdgeWork) -> Result<ReplyWork> {
+    let l = model.n_layers();
+    let mut cloud_out: Vec<CloudRow> = Vec::with_capacity(work.offload_rows.len());
+    let mut cloud_busy_ms = 0.0;
+    if !work.offload_rows.is_empty() {
+        let gathered = work.h.gather_rows(&work.offload_rows)?;
+        let plan = plan_batches(work.offload_rows.len(), model.batch_sizes());
+        let mut done = 0usize;
+        for (bsz, real) in plan {
+            let chunk = gathered.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
+            let t1 = Instant::now();
+            let h_final = model.forward_rest(&chunk, work.split - 1)?;
+            let out = model.exit_head(&h_final, l - 1)?;
+            let cloud_ms = cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
+            cloud_busy_ms += cloud_ms;
+            for i in 0..real {
+                cloud_out.push(CloudRow {
+                    row: work.offload_rows[done + i],
+                    pred: out.pred[i],
+                    conf: out.conf[i],
+                    cloud_ms,
+                });
+            }
+            done += real;
+        }
+    }
+    let EdgeWork { batch, exit_out, prefix_conf, split, edge_ms, payload, .. } = work;
+    Ok(ReplyWork { batch, exit_out, prefix_conf, split, edge_ms, payload, cloud_out, cloud_busy_ms })
+}
+
+/// Reply share: uplink simulation for offloaded rows, reward computation,
+/// bandit updates, metrics and reply delivery.  Everything stateful lives
+/// here, in batch order — this is what keeps pipelined decisions identical
+/// to the serial path.
+#[allow(clippy::too_many_arguments)]
+fn reply_stage(
+    work: ReplyWork,
+    n_layers: usize,
+    side: bool,
+    cost: &CostModel,
+    edge: &EdgeSim,
+    cloud: &CloudSim,
+    link: &mut LinkSim,
+    policy: &mut PolicyState,
+    metrics: &mut ServingMetrics,
+) {
+    let l = n_layers;
+    let ReplyWork { batch, exit_out, prefix_conf, split, edge_ms, payload, cloud_out, cloud_busy_ms } =
+        work;
+    let n_real = batch.real_len();
+    metrics.record_batch(n_real, batch.padded_to);
+    metrics.record_stage_ms(edge_ms, cloud_busy_ms);
+
+    // (pred, conf, extra_latency_ms, outage) for rows that were offloaded
+    let mut final_by_row: Vec<Option<(usize, f32, f64, bool)>> = vec![None; n_real];
+    for cr in cloud_out {
+        match link.transfer(payload) {
+            TransferResult::Delivered { ms, .. } => {
+                final_by_row[cr.row] = Some((cr.pred, cr.conf, ms + cr.cloud_ms, false));
+            }
+            TransferResult::Outage => {
+                // fall back: the cloud result is unreachable; the edge must
+                // finish locally (same numbers, edge timing, no offload
+                // charge)
+                let local_ms = edge.simulated_ms(cr.cloud_ms / cloud.compute_scale.max(1e-9));
+                final_by_row[cr.row] = Some((cr.pred, cr.conf, local_ms, true));
+            }
+        }
+    }
+
+    for (row, req) in batch.requests.iter().enumerate() {
+        let queue_ms = batch
+            .formed_at
+            .duration_since(req.submitted_at)
+            .as_secs_f64()
+            * 1e3;
+        let (infer_layer, pred, conf, offloaded, outage, extra_ms) = match &final_by_row[row] {
+            Some((pred, conf, extra_ms, outage)) => {
+                (l, *pred, *conf, !*outage, *outage, *extra_ms)
+            }
+            None => (split, exit_out.pred[row], exit_out.conf[row], false, false, 0.0),
+        };
+        // Simulated service latency: queue-until-formed + simulated edge
+        // compute + simulated link/cloud extra.  Deliberately excludes
+        // wall-clock pipeline-channel residency (bounded by PIPELINE_DEPTH
+        // batches) — it models the deployed edge device, where no such
+        // pipeline exists, and stays comparable with the serial path.
+        let latency = queue_ms + edge_ms + extra_ms;
+        let (cost_l, energy, reward) = if outage {
+            let gamma = cost.compute_cost_cascade(l);
+            (gamma, edge.energy(gamma, false), cost.reward_exit(l, conf as f64, side))
+        } else if offloaded {
+            (
+                cost.total_cost(split, true, side),
+                edge.energy(cost.gamma(split, side), true),
+                cost.reward_offload(split, conf as f64, side),
+            )
+        } else {
+            (
+                cost.total_cost(split, false, side),
+                edge.energy(cost.gamma(split, side), false),
+                cost.reward_exit(split, exit_out.conf[row] as f64, side),
+            )
+        };
+
+        match policy {
+            PolicyState::SplitEe(p) => p.record(split, reward),
+            PolicyState::SplitEeS(p) => {
+                let mut prefix: Vec<f32> = prefix_conf.iter().map(|layer| layer[row]).collect();
+                prefix.push(exit_out.conf[row]);
+                let conf_final = offloaded.then_some(conf as f64);
+                p.record_prefix(cost, &prefix, conf_final);
+            }
+            _ => {}
+        }
+
+        metrics.record_request(
+            infer_layer,
+            offloaded,
+            outage,
+            latency,
+            queue_ms,
+            cost_l,
+            energy,
+        );
+        let _ = req.reply.send(Response {
+            id: req.id,
+            prediction: pred,
+            confidence: conf,
+            infer_layer,
+            offloaded,
+            latency_ms: latency,
+        });
+    }
 }
 
 /// The serving engine.
@@ -96,12 +381,8 @@ impl Service {
     }
 
     fn choose_split(&mut self) -> usize {
-        match &mut self.policy {
-            PolicyState::SplitEe(p) => p.choose_split(),
-            PolicyState::SplitEeS(p) => p.choose_split(),
-            PolicyState::Fixed(k) => *k,
-            PolicyState::FinalExit => self.model.n_layers(),
-        }
+        let l = self.model.n_layers();
+        self.policy.choose_split(l)
     }
 
     fn side_info(&self) -> bool {
@@ -109,7 +390,14 @@ impl Service {
     }
 
     /// Run the blocking serve loop until the router is shut down + drained.
+    /// Uses the staged pipeline; [`Service::run_serial`] is the
+    /// single-threaded reference with identical per-request behaviour.
     pub fn run(&mut self, router: Arc<Router>, batcher_config: BatcherConfig) -> Result<()> {
+        self.run_pipelined(router, batcher_config)
+    }
+
+    /// Single-threaded reference loop: form a batch, serve it, repeat.
+    pub fn run_serial(&mut self, router: Arc<Router>, batcher_config: BatcherConfig) -> Result<()> {
         let mut batcher = Batcher::new(router, batcher_config);
         while let Some(batch) = batcher.next_batch() {
             self.serve_batch(batch)?;
@@ -117,145 +405,133 @@ impl Service {
         Ok(())
     }
 
-    /// Serve one formed batch.
-    pub fn serve_batch(&mut self, batch: Batch) -> Result<()> {
+    /// Staged-pipeline serve loop (see the module docs for the stage graph
+    /// and the argument for why its decisions match the serial path).
+    pub fn run_pipelined(
+        &mut self,
+        router: Arc<Router>,
+        batcher_config: BatcherConfig,
+    ) -> Result<()> {
         let l = self.model.n_layers();
-        let n_real = batch.real_len();
-        let split = self.choose_split();
         let side = self.side_info();
-        self.metrics.record_batch(n_real, batch.padded_to);
+        let alpha = self.alpha;
+        let edge = self.edge;
+        let cloud = self.cloud;
+        let cost = self.cost;
+        let static_split = self.policy.static_split(l);
 
-        // ---- edge share (real PJRT compute on the padded batch)
-        let t0 = Instant::now();
-        let mut h = self.model.embed(&batch.tokens)?;
-        let mut prefix_conf: Vec<Vec<f32>> = Vec::new(); // per layer, per row
-        for layer in 0..split {
-            h = self.model.block(&h, layer)?;
-            if side && layer + 1 < split {
-                prefix_conf.push(self.model.exit_head(&h, layer)?.conf);
-            }
-        }
-        let exit_out = self.model.exit_head(&h, split - 1)?;
-        let edge_ms = self.edge.simulated_ms(t0.elapsed().as_secs_f64() * 1e3);
-
-        // ---- per-sample exit-or-offload
-        let mut offload_rows: Vec<usize> = Vec::new();
-        for row in 0..n_real {
-            let conf = exit_out.conf[row] as f64;
-            if conf < self.alpha && split < l {
-                offload_rows.push(row);
-            }
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(PIPELINE_DEPTH);
+        let (edge_tx, edge_rx) = mpsc::sync_channel::<EdgeWork>(PIPELINE_DEPTH);
+        let (cloud_tx, cloud_rx) = mpsc::sync_channel::<ReplyWork>(PIPELINE_DEPTH);
+        // split tokens: reply stage -> edge stage.  At most one token is in
+        // flight per batch; the seed token below covers the first batch.
+        let (split_tx, split_rx) = mpsc::channel::<usize>();
+        if static_split.is_none() {
+            let _ = split_tx.send(self.policy.choose_split(l));
         }
 
-        // ---- cloud share for the offloaded subset
-        let mut final_preds: Vec<(usize, usize, f32, f64, bool)> = Vec::new();
-        // (row, pred, conf, extra_latency_ms, outage)
-        if !offload_rows.is_empty() {
-            let payload = LinkSim::activation_payload(self.model.seq_len(), h.shape()[2]);
-            // gather offloaded rows of h into a contiguous tensor
-            let rows: Vec<TensorF32> = offload_rows
-                .iter()
-                .map(|&r| h.slice_rows(r, r + 1).expect("row slice"))
-                .collect();
-            let row_refs: Vec<&TensorF32> = rows.iter().collect();
-            let gathered = TensorF32::concat_rows(&row_refs).expect("gather");
-            let plan = plan_batches(offload_rows.len(), self.model.batch_sizes());
-            let mut done = 0usize;
-            for (bsz, real) in plan {
-                let chunk = gathered
-                    .slice_rows(done, done + real)
-                    .expect("chunk")
-                    .pad_rows_to(bsz)
-                    .expect("pad");
-                let t1 = Instant::now();
-                let h_final = self.model.forward_rest(&chunk, split - 1)?;
-                let out = self.model.exit_head(&h_final, l - 1)?;
-                let cloud_ms = self.cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
-                for i in 0..real {
-                    let row = offload_rows[done + i];
-                    match self.link.transfer(payload) {
-                        TransferResult::Delivered { ms, .. } => {
-                            final_preds.push((row, out.pred[i], out.conf[i], ms + cloud_ms, false));
-                        }
-                        TransferResult::Outage => {
-                            // fall back: the cloud result is unreachable; the
-                            // edge must finish locally (same numbers, edge
-                            // timing, no offload charge)
-                            let local_ms = self.edge.simulated_ms(cloud_ms / self.cloud.compute_scale.max(1e-9));
-                            final_preds.push((row, out.pred[i], out.conf[i], local_ms, true));
-                        }
+        let Service { model, policy, metrics, link, .. } = self;
+        let model_edge = Arc::clone(model);
+        let model_cloud = Arc::clone(model);
+        let router_batcher = Arc::clone(&router);
+
+        std::thread::scope(|s| -> Result<()> {
+            // ---- stage 1: batch formation (owns the max_wait deadline)
+            s.spawn(move || {
+                let mut batcher = Batcher::new(router_batcher, batcher_config);
+                while let Some(batch) = batcher.next_batch() {
+                    if batch_tx.send(batch).is_err() {
+                        break; // downstream stage is gone (error shutdown)
                     }
                 }
-                done += real;
-            }
-        }
-
-        // ---- replies + policy updates + metrics
-        let mut final_by_row = vec![None; n_real];
-        for (row, pred, conf, extra_ms, outage) in final_preds {
-            final_by_row[row] = Some((pred, conf, extra_ms, outage));
-        }
-        for (row, req) in batch.requests.iter().enumerate() {
-            let queue_ms = batch
-                .formed_at
-                .duration_since(req.submitted_at)
-                .as_secs_f64()
-                * 1e3;
-            let (infer_layer, pred, conf, offloaded, outage, extra_ms) = match &final_by_row[row]
-            {
-                Some((pred, conf, extra_ms, outage)) => {
-                    (l, *pred, *conf, !*outage, *outage, *extra_ms)
-                }
-                None => (split, exit_out.pred[row], exit_out.conf[row], false, false, 0.0),
-            };
-            let latency = queue_ms + edge_ms + extra_ms;
-            let (cost, energy, reward) = if outage {
-                let gamma = self.cost.compute_cost_cascade(l);
-                (gamma, self.edge.energy(gamma, false), self.cost.reward_exit(l, conf as f64, side))
-            } else if offloaded {
-                (
-                    self.cost.total_cost(split, true, side),
-                    self.edge.energy(self.cost.gamma(split, side), true),
-                    self.cost.reward_offload(split, conf as f64, side),
-                )
-            } else {
-                (
-                    self.cost.total_cost(split, false, side),
-                    self.edge.energy(self.cost.gamma(split, side), false),
-                    self.cost.reward_exit(split, exit_out.conf[row] as f64, side),
-                )
-            };
-
-            match &mut self.policy {
-                PolicyState::SplitEe(p) => p.record(split, reward),
-                PolicyState::SplitEeS(p) => {
-                    let mut prefix: Vec<f32> =
-                        prefix_conf.iter().map(|layer| layer[row]).collect();
-                    prefix.push(exit_out.conf[row]);
-                    let conf_final = offloaded.then_some(conf as f64);
-                    p.record_prefix(&self.cost, &prefix, conf_final);
-                }
-                _ => {}
-            }
-
-            self.metrics.record_request(
-                infer_layer,
-                offloaded,
-                outage,
-                latency,
-                queue_ms,
-                cost,
-                energy,
-            );
-            let _ = req.reply.send(Response {
-                id: req.id,
-                prediction: pred,
-                confidence: conf,
-                infer_layer,
-                offloaded,
-                latency_ms: latency,
             });
-        }
+
+            // ---- stage 2: edge compute
+            let edge_handle = s.spawn(move || -> Result<()> {
+                while let Ok(batch) = batch_rx.recv() {
+                    // embed is split-independent: overlap it with the
+                    // previous batch's cloud/reply work
+                    let t0 = Instant::now();
+                    let h = model_edge.embed(&batch.tokens)?;
+                    let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let split = match static_split {
+                        Some(k) => k,
+                        None => match split_rx.recv() {
+                            Ok(k) => k,
+                            Err(_) => break, // reply stage is gone
+                        },
+                    };
+                    let work = edge_stage_after_embed(
+                        &model_edge, &edge, alpha, side, l, split, batch, h, embed_ms,
+                    )?;
+                    if edge_tx.send(work).is_err() {
+                        break;
+                    }
+                }
+                Ok(())
+            });
+
+            // ---- stage 3: cloud continuation for offloaded rows
+            let cloud_handle = s.spawn(move || -> Result<()> {
+                while let Ok(work) = edge_rx.recv() {
+                    let work = cloud_stage(&model_cloud, &cloud, work)?;
+                    if cloud_tx.send(work).is_err() {
+                        break;
+                    }
+                }
+                Ok(())
+            });
+
+            // ---- stage 4 (this thread): link sim, bandit updates, replies.
+            // Updates are serialized here in batch order; the next split is
+            // released only after they are applied.
+            while let Ok(work) = cloud_rx.recv() {
+                reply_stage(work, l, side, &cost, &edge, &cloud, link, policy, metrics);
+                if static_split.is_none() {
+                    // The token for the batch after this one.  A final token
+                    // may go unconsumed when the stream ends; `choose`
+                    // without a subsequent update only advances the UCB round
+                    // counter, never the arm statistics.
+                    let _ = split_tx.send(policy.choose_split(l));
+                }
+            }
+
+            // The reply loop ending means the cloud stage has exited.
+            let cloud_res = cloud_handle.join().expect("cloud stage panicked");
+            // Unblock an edge stage waiting for a split token...
+            drop(split_tx);
+            if cloud_res.is_err() {
+                // ...and, on an error shutdown, a batcher blocked on the
+                // router, so every stage can be joined.
+                router.shutdown();
+            }
+            let edge_res = edge_handle.join().expect("edge stage panicked");
+            if edge_res.is_err() {
+                router.shutdown();
+            }
+            edge_res.and(cloud_res)
+        })
+    }
+
+    /// Serve one formed batch on the caller's thread (the serial reference
+    /// path; also used directly by failure-injection tests).
+    pub fn serve_batch(&mut self, batch: Batch) -> Result<()> {
+        let l = self.model.n_layers();
+        let split = self.choose_split();
+        let side = self.side_info();
+        let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch)?;
+        let work = cloud_stage(&self.model, &self.cloud, work)?;
+        reply_stage(
+            work,
+            l,
+            side,
+            &self.cost,
+            &self.edge,
+            &self.cloud,
+            &mut self.link,
+            &mut self.policy,
+            &mut self.metrics,
+        );
         Ok(())
     }
 

@@ -101,13 +101,7 @@ impl Dataset {
 
     /// Gather rows by index (for shuffled batching).
     pub fn gather_tokens(&self, idx: &[usize]) -> TensorI32 {
-        let t = self.seq_len;
-        let mut data = Vec::with_capacity(idx.len() * t);
-        for &i in idx {
-            let row = self.tokens.slice_rows(i, i + 1).expect("gather index");
-            data.extend_from_slice(row.data());
-        }
-        TensorI32::new(vec![idx.len(), t], data).expect("gather shape")
+        self.tokens.gather_rows(idx).expect("gather index")
     }
 }
 

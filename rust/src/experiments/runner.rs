@@ -101,7 +101,7 @@ pub fn run_policy_order(
     }
 }
 
-/// Run `reps` shuffled repetitions (resetting the policy each time) and
+/// Run `reps` shuffled repetitions (each from a freshly-reset policy) and
 /// average the headline metrics; also returns the per-rep values for CIs.
 pub struct RepeatedResult {
     pub mean: EvalResult,
@@ -109,6 +109,12 @@ pub struct RepeatedResult {
     pub cost_by_rep: Vec<f64>,
 }
 
+/// Repetitions are independent — each gets its own forked RNG and its own
+/// policy clone (then `reset()`, the same state the serial reset-per-rep
+/// loop started each rep from) — so they fan out across the shared
+/// [`crate::util::threadpool`] pool.  RNG forks are drawn from the root in
+/// rep order and results are aggregated in rep order, so every number is
+/// bit-identical to the serial loop.
 pub fn run_policy_repeated(
     cache: &ConfidenceCache,
     policy: &mut dyn Policy,
@@ -117,13 +123,26 @@ pub fn run_policy_repeated(
     seed: u64,
 ) -> RepeatedResult {
     let mut root = Rng::new(seed);
+    let rngs: Vec<Rng> = (0..reps).map(|rep| root.fork(rep as u64)).collect();
+    let results: Vec<EvalResult> = if reps <= 1 {
+        rngs.into_iter()
+            .map(|mut rng| {
+                policy.reset();
+                run_policy_once(cache, policy, cm, &mut rng)
+            })
+            .collect()
+    } else {
+        let jobs: Vec<(Box<dyn Policy>, Rng)> =
+            rngs.into_iter().map(|rng| (policy.clone_box(), rng)).collect();
+        crate::util::threadpool::global().scope_map(jobs, |(mut p, mut rng)| {
+            p.reset();
+            run_policy_once(cache, p.as_mut(), cm, &mut rng)
+        })
+    };
     let mut acc_by_rep = Vec::with_capacity(reps);
     let mut cost_by_rep = Vec::with_capacity(reps);
     let mut agg: Option<EvalResult> = None;
-    for rep in 0..reps {
-        policy.reset();
-        let mut rng = root.fork(rep as u64);
-        let r = run_policy_once(cache, policy, cm, &mut rng);
+    for r in results {
         acc_by_rep.push(r.accuracy);
         cost_by_rep.push(r.total_cost);
         agg = Some(match agg.take() {
@@ -213,6 +232,30 @@ mod tests {
         let distinct: std::collections::BTreeSet<u64> =
             rr.cost_by_rep.iter().map(|c| (*c * 100.0) as u64).collect();
         assert!(distinct.len() > 1);
+    }
+
+    #[test]
+    fn repeated_parallel_matches_serial_reference() {
+        // run_policy_repeated fans reps out over the thread pool; every
+        // per-rep number must stay bit-identical to the serial
+        // reset-per-rep loop it replaced
+        let cache = ConfidenceCache::synthetic(800, 12, 9);
+        let c = cm();
+        let mut serial_acc = Vec::new();
+        let mut serial_cost = Vec::new();
+        let mut root = Rng::new(77);
+        let mut p_ref = SplitEePolicy::new(12, 0.85, 1.0);
+        for rep in 0..4u64 {
+            p_ref.reset();
+            let mut rng = root.fork(rep);
+            let r = run_policy_once(&cache, &mut p_ref, &c, &mut rng);
+            serial_acc.push(r.accuracy);
+            serial_cost.push(r.total_cost);
+        }
+        let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+        let rr = run_policy_repeated(&cache, &mut p, &c, 4, 77);
+        assert_eq!(rr.acc_by_rep, serial_acc);
+        assert_eq!(rr.cost_by_rep, serial_cost);
     }
 
     #[test]

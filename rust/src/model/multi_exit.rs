@@ -37,7 +37,8 @@ impl ExitOutput {
         })
     }
 
-    fn truncate(&mut self, n: usize) {
+    /// Keep only the first `n` samples (drop padded rows).
+    pub fn truncate(&mut self, n: usize) {
         if self.conf.len() > n {
             self.probs = self.probs.slice_rows(0, n).expect("truncate probs");
             self.conf.truncate(n);
@@ -46,9 +47,11 @@ impl ExitOutput {
         }
     }
 
-    fn append(&mut self, other: &ExitOutput) {
-        self.probs =
-            TensorF32::concat_rows(&[&self.probs, &other.probs]).expect("concat probs");
+    /// Append another batch's outputs in place.  Uses the in-place
+    /// `extend_rows` so accumulating K chunks is O(total rows), not the
+    /// O(total²) of re-concatenating the prefix on every append.
+    pub fn append(&mut self, other: &ExitOutput) {
+        self.probs.extend_rows(&other.probs).expect("append probs");
         self.conf.extend_from_slice(&other.conf);
         self.ent.extend_from_slice(&other.ent);
         self.pred.extend_from_slice(&other.pred);
@@ -277,13 +280,22 @@ impl MultiExitModel {
     /// Full forward through every exit at once via the fused `prefix_full`
     /// graph.  tokens [B, T] with any B — batching/padding handled here.
     /// Returns per-layer outputs, outer index = layer.
+    ///
+    /// Accumulators are preallocated from the batch plan (`n` rows, `C`
+    /// classes known up front), so covering a large cache is one exact-size
+    /// allocation per layer instead of a re-concatenation per chunk.
     pub fn forward_all_exits(&self, tokens: &TensorI32) -> Result<Vec<ExitOutput>> {
         let (cache_b, exe) = self
             .prefix_full
             .as_ref()
             .context("prefix_full graph not in manifest")?;
         let n = tokens.shape()[0];
-        let mut per_layer: Vec<Option<ExitOutput>> = vec![None; self.n_layers];
+        let c = self.weights.n_classes;
+        let layers = self.n_layers;
+        let mut probs_acc: Vec<Vec<f32>> =
+            (0..layers).map(|_| Vec::with_capacity(n * c)).collect();
+        let mut conf_acc: Vec<Vec<f32>> = (0..layers).map(|_| Vec::with_capacity(n)).collect();
+        let mut ent_acc: Vec<Vec<f32>> = (0..layers).map(|_| Vec::with_capacity(n)).collect();
         let mut done = 0usize;
         while done < n {
             let real = (*cache_b).min(n - done);
@@ -307,25 +319,29 @@ impl MultiExitModel {
                 bail!("prefix_full returned {} outputs, expected 3", out.len());
             }
             let (probs, conf, ent) = (&out[0], &out[1], &out[2]);
-            let c = probs.shape()[2];
-            for l in 0..self.n_layers {
-                let p = slice_layer(probs, l, real, c)?;
-                let cf = slice_layer_vec(conf, l, real)?;
-                let en = slice_layer_vec(ent, l, real)?;
-                let mut eo = ExitOutput::from_tensors(
-                    p,
-                    TensorF32::new(vec![real], cf).map_err(|e| anyhow::anyhow!(e))?,
-                    TensorF32::new(vec![real], en).map_err(|e| anyhow::anyhow!(e))?,
-                )?;
-                eo.truncate(real);
-                match &mut per_layer[l] {
-                    Some(acc) => acc.append(&eo),
-                    slot => *slot = Some(eo),
-                }
+            let b = probs.shape()[1];
+            if probs.shape()[2] != c {
+                bail!("prefix_full emitted {} classes, weights have {c}", probs.shape()[2]);
+            }
+            // copy the `real` unpadded rows of each stacked layer straight
+            // into the preallocated accumulators
+            for l in 0..layers {
+                probs_acc[l].extend_from_slice(&probs.data()[l * b * c..l * b * c + real * c]);
+                conf_acc[l].extend_from_slice(&conf.data()[l * b..l * b + real]);
+                ent_acc[l].extend_from_slice(&ent.data()[l * b..l * b + real]);
             }
             done += real;
         }
-        Ok(per_layer.into_iter().map(|o| o.expect("layer filled")).collect())
+        probs_acc
+            .into_iter()
+            .zip(conf_acc)
+            .zip(ent_acc)
+            .map(|((p, cf), en)| {
+                let probs = TensorF32::new(vec![n, c], p).map_err(|e| anyhow::anyhow!(e))?;
+                let pred = probs.argmax_rows().map_err(|e| anyhow::anyhow!(e))?;
+                Ok(ExitOutput { probs, conf: cf, ent: en, pred })
+            })
+            .collect()
     }
 
     /// Convenience single-pass serving call used by examples and tests: run
@@ -345,21 +361,6 @@ impl MultiExitModel {
     pub fn batch_plan(&self, n: usize) -> Vec<(usize, usize)> {
         plan_batches(n, &self.batch_sizes)
     }
-}
-
-/// Slice layer `l` out of a stacked [L, B, C] tensor, keeping `real` rows.
-fn slice_layer(t: &TensorF32, l: usize, real: usize, c: usize) -> Result<TensorF32> {
-    let b = t.shape()[1];
-    let start = l * b * c;
-    let data = &t.data()[start..start + real * c];
-    TensorF32::new(vec![real, c], data.to_vec()).map_err(|e| anyhow::anyhow!(e))
-}
-
-/// Slice layer `l` out of a stacked [L, B] tensor, keeping `real` entries.
-fn slice_layer_vec(t: &TensorF32, l: usize, real: usize) -> Result<Vec<f32>> {
-    let b = t.shape()[1];
-    let start = l * b;
-    Ok(t.data()[start..start + real].to_vec())
 }
 
 impl std::fmt::Debug for MultiExitModel {
@@ -401,19 +402,27 @@ mod tests {
     }
 
     #[test]
-    fn slice_layer_helpers() {
-        // L=2, B=2, C=2 stacked tensor
-        let t = TensorF32::new(
-            vec![2, 2, 2],
-            vec![1., 2., 3., 4., 5., 6., 7., 8.],
-        )
-        .unwrap();
-        let l1 = slice_layer(&t, 1, 2, 2).unwrap();
-        assert_eq!(l1.data(), &[5., 6., 7., 8.]);
-        let l0_partial = slice_layer(&t, 0, 1, 2).unwrap();
-        assert_eq!(l0_partial.data(), &[1., 2.]);
-
-        let v = TensorF32::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(slice_layer_vec(&v, 1, 2).unwrap(), vec![4., 5.]);
+    fn append_accumulation_is_linear_and_correct() {
+        // accumulate many single-row chunks; the result must match one big
+        // construction (this is the pattern forward_all_exits preallocates)
+        let mut acc = ExitOutput {
+            probs: TensorF32::new(vec![1, 2], vec![0.9, 0.1]).unwrap(),
+            conf: vec![0.9],
+            ent: vec![0.3],
+            pred: vec![0],
+        };
+        for i in 1..20 {
+            let p = if i % 2 == 0 { vec![0.8, 0.2] } else { vec![0.2, 0.8] };
+            let other = ExitOutput {
+                probs: TensorF32::new(vec![1, 2], p.clone()).unwrap(),
+                conf: vec![p[0].max(p[1])],
+                ent: vec![0.5],
+                pred: vec![if p[1] > p[0] { 1 } else { 0 }],
+            };
+            acc.append(&other);
+        }
+        assert_eq!(acc.len(), 20);
+        assert_eq!(acc.probs.shape(), &[20, 2]);
+        assert_eq!(acc.pred, acc.probs.argmax_rows().unwrap());
     }
 }

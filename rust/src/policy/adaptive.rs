@@ -74,6 +74,10 @@ impl Policy for AdaptiveThresholdPolicy {
         self.alpha_ucb.reset();
         self.last_alpha_arm = 0;
     }
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 /// Per-sample adaptive split (future-work extension 2).
@@ -147,6 +151,10 @@ impl Policy for PerSamplePolicy {
         for b in &mut self.buckets {
             b.reset();
         }
+    }
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
     }
 }
 

@@ -45,6 +45,10 @@ impl Policy for DeeBertPolicy {
     }
 
     fn reset(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 /// ElasticBERT: confidence-threshold cascade (max-prob `>= alpha`), again
@@ -84,11 +88,15 @@ impl Policy for ElasticBertPolicy {
     }
 
     fn reset(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 /// Random selection (paper 5.3): uniform random split layer, then the same
 /// exit-or-offload rule as SplitEE.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct RandomExitPolicy {
     pub alpha: f64,
     rng: Rng,
@@ -128,6 +136,10 @@ impl Policy for RandomExitPolicy {
     fn reset(&mut self) {
         self.rng = Rng::new(self.seed);
     }
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 /// Final exit: every sample through all L layers (the benchmark row all
@@ -152,6 +164,10 @@ impl Policy for FinalExitPolicy {
     }
 
     fn reset(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 /// Fixed split layer with SplitEE's exit-or-offload rule.  With the oracle
@@ -204,6 +220,10 @@ impl Policy for FixedSplitPolicy {
     }
 
     fn reset(&mut self) {}
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -69,6 +69,12 @@ pub trait Policy: Send {
     fn uses_side_info(&self) -> bool {
         false
     }
+
+    /// Clone into a boxed trait object.  Lets the experiment harness run
+    /// repetitions of one configured policy in parallel: each repetition
+    /// gets its own clone (then `reset()`), exactly the state a serial
+    /// `reset()`-per-rep loop would start from.
+    fn clone_box(&self) -> Box<dyn Policy>;
 }
 
 /// Compute the paper's reward (eq. 1) for splitting at `layer` (1-based)

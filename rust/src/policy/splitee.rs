@@ -65,6 +65,10 @@ impl Policy for SplitEePolicy {
     fn reset(&mut self) {
         self.ucb.reset();
     }
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
+    }
 }
 
 /// SplitEE-S: evaluates every exit head up to the chosen split layer and
@@ -158,6 +162,10 @@ impl Policy for SplitEeSPolicy {
         self.ucb.reset();
         self.mean_conf_final = 0.9;
         self.n_conf_final = 0;
+    }
+
+    fn clone_box(&self) -> Box<dyn Policy> {
+        Box::new(self.clone())
     }
 }
 

@@ -119,10 +119,13 @@ macro_rules! tensor_impl {
             }
 
             /// Concatenate along axis 0 (all trailing dims must match).
+            /// Single preallocation sized from the parts — no reallocation
+            /// churn however many parts are concatenated.
             pub fn concat_rows(parts: &[&Self]) -> Result<Self, TensorError> {
                 let first = parts.first().expect("concat of nothing");
                 let mut shape = first.shape.clone();
-                let mut data = Vec::new();
+                let total: usize = parts.iter().map(|p| p.data.len()).sum();
+                let mut data = Vec::with_capacity(total);
                 let mut rows = 0;
                 for p in parts {
                     if p.shape[1..] != first.shape[1..] {
@@ -139,9 +142,58 @@ macro_rules! tensor_impl {
                 Ok(Self { shape, data })
             }
 
+            /// Gather `rows` (axis-0 indices, any order, duplicates allowed)
+            /// into a new contiguous tensor.  This replaces the per-row
+            /// `slice_rows` + `concat_rows` pattern on the serving hot path:
+            /// one allocation, one copy per row.
+            pub fn gather_rows(&self, rows: &[usize]) -> Result<Self, TensorError> {
+                if self.shape.is_empty() {
+                    return Err(TensorError::OutOfBounds {
+                        index: rows.to_vec(),
+                        shape: self.shape.clone(),
+                    });
+                }
+                let row: usize = self.shape[1..].iter().product();
+                let mut data = Vec::with_capacity(rows.len() * row);
+                for &r in rows {
+                    if r >= self.shape[0] {
+                        return Err(TensorError::OutOfBounds {
+                            index: vec![r],
+                            shape: self.shape.clone(),
+                        });
+                    }
+                    data.extend_from_slice(&self.data[r * row..(r + 1) * row]);
+                }
+                let mut shape = self.shape.clone();
+                shape[0] = rows.len();
+                Ok(Self { shape, data })
+            }
+
+            /// Append `other`'s rows in place along axis 0 (trailing dims must
+            /// match).  In-place counterpart of [`Self::concat_rows`] for
+            /// accumulation loops: amortised O(rows) instead of a fresh
+            /// allocation + full copy per append.
+            pub fn extend_rows(&mut self, other: &Self) -> Result<(), TensorError> {
+                if self.shape.is_empty()
+                    || other.shape.is_empty()
+                    || self.shape[1..] != other.shape[1..]
+                {
+                    return Err(TensorError::Incompatible {
+                        op: "extend_rows",
+                        a: self.shape.clone(),
+                        b: other.shape.clone(),
+                    });
+                }
+                self.data.extend_from_slice(&other.data);
+                self.shape[0] += other.shape[0];
+                Ok(())
+            }
+
             /// Pad axis 0 up to `rows` by repeating the final row.
             /// Used by the dynamic batcher to reach a compiled batch size —
             /// repeating a real row keeps the padded lanes numerically tame.
+            /// One exact-size allocation; the repeated row is copied from
+            /// within the destination buffer (no intermediate row clone).
             pub fn pad_rows_to(&self, rows: usize) -> Result<Self, TensorError> {
                 if self.shape.is_empty() || self.shape[0] == 0 || rows < self.shape[0] {
                     return Err(TensorError::OutOfBounds {
@@ -150,10 +202,11 @@ macro_rules! tensor_impl {
                     });
                 }
                 let row: usize = self.shape[1..].iter().product();
-                let mut data = self.data.clone();
-                let last = self.data[(self.shape[0] - 1) * row..].to_vec();
+                let mut data = Vec::with_capacity(rows * row);
+                data.extend_from_slice(&self.data);
+                let last = (self.shape[0] - 1) * row;
                 for _ in self.shape[0]..rows {
-                    data.extend_from_slice(&last);
+                    data.extend_from_within(last..last + row);
                 }
                 let mut shape = self.shape.clone();
                 shape[0] = rows;
@@ -242,6 +295,52 @@ mod tests {
     fn pad_noop_when_full() {
         let t = TensorF32::zeros(vec![3, 2]);
         assert_eq!(t.pad_rows_to(3).unwrap(), t);
+    }
+
+    #[test]
+    fn gather_rows_matches_slice_concat() {
+        let t = TensorF32::new(vec![5, 3], (0..15).map(|x| x as f32).collect()).unwrap();
+        for rows in [vec![0usize, 2, 4], vec![3, 1], vec![2, 2, 2], vec![]] {
+            let gathered = t.gather_rows(&rows).unwrap();
+            // reference: the old per-row slice + concat path
+            let parts: Vec<TensorF32> =
+                rows.iter().map(|&r| t.slice_rows(r, r + 1).unwrap()).collect();
+            if parts.is_empty() {
+                assert_eq!(gathered.shape(), &[0, 3]);
+                assert!(gathered.is_empty());
+            } else {
+                let refs: Vec<&TensorF32> = parts.iter().collect();
+                assert_eq!(gathered, TensorF32::concat_rows(&refs).unwrap());
+            }
+        }
+        assert!(t.gather_rows(&[5]).is_err());
+    }
+
+    #[test]
+    fn extend_rows_matches_concat() {
+        let a0 = TensorI32::new(vec![2, 2], vec![1, 2, 3, 4]).unwrap();
+        let b = TensorI32::new(vec![3, 2], vec![5, 6, 7, 8, 9, 10]).unwrap();
+        let expected = TensorI32::concat_rows(&[&a0, &b]).unwrap();
+        let mut a = a0.clone();
+        a.extend_rows(&b).unwrap();
+        assert_eq!(a, expected);
+        // mismatched trailing dims rejected, tensor unchanged
+        let bad = TensorI32::zeros(vec![1, 3]);
+        assert!(a.extend_rows(&bad).is_err());
+        assert_eq!(a, expected);
+    }
+
+    #[test]
+    fn preallocated_pad_and_concat_unchanged() {
+        // pin the exact semantics the preallocation rewrite must preserve
+        let t = TensorF32::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let p = t.pad_rows_to(4).unwrap();
+        assert_eq!(p.shape(), &[4, 3]);
+        assert_eq!(p.data(), &[1., 2., 3., 4., 5., 6., 4., 5., 6., 4., 5., 6.]);
+        let c = TensorF32::concat_rows(&[&t, &p]).unwrap();
+        assert_eq!(c.shape(), &[6, 3]);
+        assert_eq!(&c.data()[..6], t.data());
+        assert_eq!(&c.data()[6..], p.data());
     }
 
     #[test]

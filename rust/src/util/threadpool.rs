@@ -9,10 +9,19 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Process-wide shared pool, sized to the host, created on first use.
+/// Experiment fan-out (`run_policy_repeated`) borrows caches and cost models
+/// from the caller's stack, so it goes through [`ThreadPool::scope_map`] on
+/// this pool instead of spinning up threads per call.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::for_host)
+}
 
 struct Shared {
     queue: Mutex<VecDeque<Job>>,
@@ -80,25 +89,53 @@ impl ThreadPool {
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
+        self.scope_map(items, f)
+    }
+
+    /// Like [`ThreadPool::map`], but the items, results and closure may
+    /// borrow from the caller's scope (non-`'static`).  Preserves item
+    /// order.  Blocks until every submitted job has finished before
+    /// returning — that barrier is what makes lending borrowed data to the
+    /// worker threads sound.
+    ///
+    /// A job that panics is reported here as a "job panicked" panic after
+    /// the barrier (the worker survives; see `worker_loop`).
+    pub fn scope_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Send + Sync + 'env,
+    {
         let f = Arc::new(f);
         let results: Arc<Mutex<Vec<Option<R>>>> =
             Arc::new(Mutex::new((0..items.len()).map(|_| None).collect()));
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let results = Arc::clone(&results);
-            self.submit(move || {
+            let job: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
                 let r = f(item);
                 results.lock().unwrap()[i] = Some(r);
             });
+            // SAFETY: lifetime erasure only — the layouts are identical.
+            // `wait_idle` below does not return until every job submitted
+            // here has been consumed (run to completion or unwound — the
+            // worker decrements `in_flight` either way and the job's
+            // captures are dropped during unwinding), so nothing captured
+            // by `job` outlives this call.  Must not be called from a
+            // worker of this same pool (the barrier would starve itself).
+            let job: Job = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+            };
+            self.submit(job);
         }
         self.wait_idle();
         Arc::try_unwrap(results)
             .ok()
-            .expect("map results still shared")
+            .expect("scope_map results still shared")
             .into_inner()
             .unwrap()
             .into_iter()
-            .map(|r| r.expect("job dropped"))
+            .map(|r| r.expect("job panicked"))
             .collect()
     }
 
@@ -121,7 +158,19 @@ fn worker_loop(shared: Arc<Shared>) {
                 queue = shared.available.wait(queue).unwrap();
             }
         };
-        job();
+        // A panicking job must not wedge the pool: catch the unwind so the
+        // worker survives and `in_flight` is still decremented (otherwise
+        // every later `wait_idle` on the shared global() pool would hang
+        // forever).  map/scope_map surface the failure as a "job panicked"
+        // panic from the empty result slot; fire-and-forget submits log it.
+        if let Err(panic) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            log::error!("thread-pool job panicked: {msg}");
+        }
         if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
             let _guard = shared.done_lock.lock().unwrap();
             shared.done.notify_all();
@@ -185,6 +234,41 @@ mod tests {
             pool.wait_idle();
             assert_eq!(c.load(Ordering::SeqCst), (round + 1) * 10);
         }
+    }
+
+    #[test]
+    fn panicking_job_does_not_wedge_the_pool() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| panic!("boom"));
+        pool.wait_idle(); // must return, not hang
+        // the worker survived and the pool still does work
+        let out = pool.scope_map(vec![1u64, 2], |x| x * 2);
+        assert_eq!(out, vec![2, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "job panicked")]
+    fn scope_map_surfaces_job_panics() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.scope_map(vec![0u64], |_| -> u64 { panic!("inner failure") });
+    }
+
+    #[test]
+    fn scope_map_borrows_local_data() {
+        // the closure and results borrow stack data — allowed by scope_map's
+        // completion barrier
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let slice = &data[..];
+        let out = pool.scope_map((0..100usize).collect::<Vec<_>>(), |i| slice[i] * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_usable() {
+        let out = global().scope_map(vec![1u64, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+        assert!(global().worker_count() >= 1);
     }
 
     #[test]

@@ -302,6 +302,137 @@ fn full_coordinator_round_trip_answers_every_request() {
 }
 
 #[test]
+fn pipelined_matches_serial_decisions() {
+    // The staged pipeline must make exactly the decisions the serial loop
+    // makes for the same arrival order: same per-request prediction, exit
+    // layer and offload flag, and the same bandit arm statistics.
+    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+    use splitee::sim::LinkSim;
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let task = m.source_task("imdb").unwrap().clone();
+    let runtime = fresh_runtime();
+    let model = Arc::new(MultiExitModel::load(m, &runtime, &task.name, "elasticbert").unwrap());
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+    let n = 25usize;
+
+    for policy in [PolicyKind::SplitEe, PolicyKind::SplitEeS] {
+        let mut runs = Vec::new();
+        for pipelined in [false, true] {
+            let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+            let link = LinkSim::new(NetworkProfile::three_g(), 42);
+            let config = ServiceConfig {
+                policy,
+                alpha: task.alpha,
+                beta: 1.0,
+                batcher: BatcherConfig {
+                    batch_sizes: m.batch_sizes.clone(),
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+            };
+            let router = Router::new(RouterConfig::default());
+            let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+            let (tx, rx) = std::sync::mpsc::channel();
+            for i in 0..n {
+                router.submit(data.sample_tokens(i), tx.clone()).unwrap();
+            }
+            drop(tx);
+            // pre-filled queue + shutdown: batch formation is deterministic,
+            // so both paths see the identical batch/arrival sequence
+            router.shutdown();
+            if pipelined {
+                service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+            } else {
+                service.run_serial(Arc::clone(&router), config.batcher.clone()).unwrap();
+            }
+            let mut replies: Vec<(u64, usize, usize, bool)> = Vec::new();
+            while let Ok(r) = rx.recv() {
+                replies.push((r.id, r.prediction, r.infer_layer, r.offloaded));
+            }
+            replies.sort_unstable();
+            assert_eq!(replies.len(), n);
+            let arms = service.bandit_summary().unwrap().1;
+            runs.push((replies, arms));
+        }
+        assert_eq!(runs[0].0, runs[1].0, "{policy:?}: per-request decisions drifted");
+        assert_eq!(runs[0].1, runs[1].1, "{policy:?}: bandit arm statistics drifted");
+    }
+}
+
+#[test]
+fn pipelined_service_answers_concurrent_producers_in_order() {
+    // Under concurrent producers the pipeline must answer every request
+    // exactly once, deliver each client's replies in its submission order,
+    // and agree with the served-request metric.
+    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+    use splitee::sim::LinkSim;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let task = m.source_task("imdb").unwrap().clone();
+    let runtime = fresh_runtime();
+    let model = Arc::new(MultiExitModel::load(m, &runtime, &task.name, "elasticbert").unwrap());
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+
+    let producers = 4usize;
+    let per = 12usize;
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::four_g(), 7);
+    let config = ServiceConfig {
+        policy: PolicyKind::SplitEe,
+        alpha: task.alpha,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: m.batch_sizes.clone(),
+            max_wait: std::time::Duration::from_millis(2),
+        },
+    };
+    let router = Router::new(RouterConfig { max_inflight: 32 });
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    let remaining = Arc::new(AtomicUsize::new(producers));
+
+    let mut handles = Vec::new();
+    for p in 0..producers {
+        let router = Arc::clone(&router);
+        let remaining = Arc::clone(&remaining);
+        let tokens: Vec<_> =
+            (0..per).map(|i| data.sample_tokens((p * per + i) % data.len())).collect();
+        handles.push(std::thread::spawn(move || {
+            let (tx, rx) = std::sync::mpsc::channel();
+            let mut ids = Vec::new();
+            for t in tokens {
+                ids.push(router.submit(t, tx.clone()).expect("router accepting"));
+            }
+            drop(tx);
+            let mut replies = Vec::new();
+            while let Ok(r) = rx.recv() {
+                replies.push(r.id);
+            }
+            // last producer to finish receiving shuts the router down
+            if remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                router.shutdown();
+            }
+            (ids, replies)
+        }));
+    }
+    service.run(Arc::clone(&router), config.batcher.clone()).unwrap();
+    let mut total = 0usize;
+    for h in handles {
+        let (ids, replies) = h.join().unwrap();
+        assert_eq!(replies, ids, "per-client replies must follow submission order");
+        total += replies.len();
+    }
+    assert_eq!(total, producers * per);
+    assert_eq!(service.metrics.served, (producers * per) as u64);
+}
+
+#[test]
 fn service_outage_falls_back_on_device() {
     use splitee::coordinator::service::PolicyKind;
     use splitee::coordinator::{Batcher, BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
