@@ -63,6 +63,7 @@ fn main() -> Result<()> {
             batch_sizes: manifest.batch_sizes.clone(),
             max_wait: Duration::from_millis(5),
         },
+        coalesce: Default::default(),
     };
 
     let router = Router::new(RouterConfig { max_inflight: 256 });

@@ -8,6 +8,10 @@ Output tree (all consumed by the rust side)::
       hlo/
         embed_b{B}.hlo.txt       tokens + embed params -> h0
         block_b{B}.hlo.txt       h + block params -> h        (Pallas kernels)
+        chain{N}_b{B}.hlo.txt    h + N blocks' params -> h    (fused range;
+                                 N in 2..n_layers — the rust partition graphs
+                                 run blocks[i..j) as ONE launch; length-1
+                                 ranges reuse block_b{B})
         head_c{C}_b{B}.hlo.txt   h + head params -> probs/conf/ent  (Pallas)
         prefix_full_c{C}_b{BC}.hlo.txt
                                  tokens + all params -> per-layer probs/conf/ent
@@ -42,8 +46,8 @@ from jax._src.lib import xla_client as xc
 from . import datagen, export
 from .common import (BLOCK_PARAM_ORDER, EMBED_PARAM_ORDER, HEAD_PARAM_ORDER,
                      DEFAULT_CONFIG, ModelConfig, init_model_params)
-from .model import (block_fn, embed_fn, exit_head_fn, forward_all_exits,
-                    make_prefix_full_fn)
+from .model import (block_fn, chain_fn, embed_fn, exit_head_fn,
+                    forward_all_exits, make_prefix_full_fn)
 from .train import (calibrate_alpha, calibrate_tau, eval_all_exits,
                     split_train_val, train_deebert, train_elasticbert)
 
@@ -101,6 +105,16 @@ def lower_graphs(cfg: ModelConfig, out_hlo: Path, log=print) -> dict:
         fn = functools.partial(block_fn, n_heads=cfg.n_heads, use_pallas=True)
         lowered = jax.jit(fn).lower(h_spec, *blk_arg_specs)
         hlo_index["block"][str(b)] = dump(f"block_b{b}", to_hlo_text(lowered))
+
+        # Fused block-range graphs: one module per range length, weights as
+        # args, so the same executable serves every blocks[i..j) window of
+        # that length.  Length 1 is exactly `block`, so it is not duplicated.
+        for n in range(2, cfg.n_layers + 1):
+            fn = functools.partial(chain_fn, n_blocks=n, n_heads=cfg.n_heads,
+                                   use_pallas=True)
+            lowered = jax.jit(fn).lower(h_spec, *(blk_arg_specs * n))
+            hlo_index.setdefault(f"chain{n}", {})[str(b)] = dump(
+                f"chain{n}_b{b}", to_hlo_text(lowered))
 
         for c in (2, 3):
             head_arg_specs = [
@@ -276,6 +290,7 @@ def build(out_dir: Path, cfg: ModelConfig, quick: bool, log=print) -> None:
         "arg_order": {
             "embed": EMBED_PARAM_ORDER,
             "block": BLOCK_PARAM_ORDER,
+            "chain": "h, then BLOCK_PARAM_ORDER per covered layer, ascending",
             "head": HEAD_PARAM_ORDER,
             "prefix_full": "tokens, embed params, block0..L-1 params, head0..L-1 params",
         },

@@ -53,6 +53,26 @@ def exit_head_fn(h: jnp.ndarray, *params: jnp.ndarray,
     return ref.exit_head_ref(h, p)
 
 
+def chain_fn(h: jnp.ndarray, *params: jnp.ndarray, n_blocks: int,
+             n_heads: int, use_pallas: bool = True) -> jnp.ndarray:
+    """``n_blocks`` consecutive transformer blocks fused into one graph.
+
+    Weights are positional args: BLOCK_PARAM_ORDER per block, blocks in
+    ascending layer order — the rust partition subsystem feeds any
+    ``blocks[i..j)`` range of length ``n_blocks`` through the same compiled
+    module.  Fusing the range into one executable keeps the activation
+    device-resident across every internal layer boundary; the per-block
+    composition is exactly ``block_fn`` iterated, so outputs are identical
+    to the layer-by-layer path (asserted by tests on both sides).
+    """
+    per = len(BLOCK_PARAM_ORDER)
+    assert len(params) == n_blocks * per, (len(params), n_blocks, per)
+    for i in range(n_blocks):
+        h = block_fn(h, *params[i * per:(i + 1) * per], n_heads=n_heads,
+                     use_pallas=use_pallas)
+    return h
+
+
 def forward_all_exits(
     params: Dict, tokens: jnp.ndarray, cfg: ModelConfig, use_pallas: bool = False
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:

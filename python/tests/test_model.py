@@ -9,7 +9,8 @@ import pytest
 from compile.aot import flat_arg_specs, flatten_args, unflatten_args
 from compile.common import (BLOCK_PARAM_ORDER, DEFAULT_CONFIG, EMBED_PARAM_ORDER,
                             HEAD_PARAM_ORDER, init_model_params)
-from compile.model import (forward_all_exits, forward_logits_all_exits)
+from compile.model import (block_fn, chain_fn, forward_all_exits,
+                           forward_logits_all_exits)
 
 
 @pytest.fixture(scope="module")
@@ -83,6 +84,31 @@ def test_flat_arg_specs_match_flatten(params):
     for a, s in zip(flat, specs):
         assert a.shape == s.shape, (a.shape, s.shape)
         assert a.dtype == s.dtype
+
+
+def test_chain_fn_matches_iterated_blocks(params):
+    """The *jitted* fused range module (what aot.py lowers as `chain{n}`)
+    must be bit-identical to iterating the *jitted* single-block module
+    (what the rust per-block path executes) — the python-side mirror of the
+    rust integration suite's fused-vs-per-block bit-exactness property."""
+    import functools
+    cfg = DEFAULT_CONFIG
+    key = jax.random.PRNGKey(3)
+    h0 = jax.random.normal(key, (2, cfg.seq_len, cfg.d_model), jnp.float32)
+    jit_block = jax.jit(functools.partial(block_fn, n_heads=cfg.n_heads,
+                                          use_pallas=True))
+    for start, n in [(0, 4), (2, 3), (0, cfg.n_layers)]:
+        blocks = params["blocks"][start:start + n]
+        flat = [blk[k] for blk in blocks for k in BLOCK_PARAM_ORDER]
+        jit_chain = jax.jit(functools.partial(chain_fn, n_blocks=n,
+                                              n_heads=cfg.n_heads,
+                                              use_pallas=True))
+        fused = jit_chain(h0, *flat)
+        step = h0
+        for blk in blocks:
+            step = jit_block(step, *[blk[k] for k in BLOCK_PARAM_ORDER])
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(step),
+                                      err_msg=f"range start={start} n={n}")
 
 
 def test_deterministic_forward(params, tokens):

@@ -3,9 +3,11 @@
 //! timed).  Needs `make artifacts`.
 //!
 //! Besides the BenchSuite baseline (`results/bench_serving.json`), this
-//! writes `BENCH_serving.json` with headline req/s per policy plus the raw
-//! full-depth roofline, so successive PRs have a throughput trajectory to
-//! compare against (see ROADMAP "Open items" for the methodology).
+//! writes `BENCH_serving.json` with headline req/s per policy, simulated
+//! p50/p99 latency, executable-launch counts (edge/cloud + per request) and
+//! coalescing stats, plus the raw full-depth roofline — so successive PRs
+//! have a throughput *and* tail-latency/launch-amortization trajectory to
+//! compare against (see ROADMAP "Serving pipeline" for the methodology).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -40,6 +42,11 @@ fn main() {
     let data = Dataset::load(&manifest.root.join(&info.file), "imdb").expect("data");
     let mut suite = BenchSuite::new("serving");
 
+    // per-policy tail-latency + launch-amortization stats, captured from the
+    // last timed run of each policy (simulated latency, so comparable across
+    // serial/pipelined and across PRs)
+    let mut extras: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
+
     for (label, kind) in [
         ("serve_200req_splitee", PolicyKind::SplitEe),
         ("serve_200req_splitee_s", PolicyKind::SplitEeS),
@@ -58,6 +65,7 @@ fn main() {
                     batch_sizes: manifest.batch_sizes.clone(),
                     max_wait: Duration::from_millis(2),
                 },
+                coalesce: Default::default(),
             };
             let router = Router::new(RouterConfig::default());
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -80,6 +88,16 @@ fn main() {
             service.run(Arc::clone(&router), bc).expect("serve");
             producer.join().unwrap();
             assert_eq!(service.metrics.served, n as u64);
+            let met = &service.metrics;
+            extras.insert(format!("{label}_p50_ms"), met.latency.percentile_us(50.0) / 1e3);
+            extras.insert(format!("{label}_p99_ms"), met.latency.percentile_us(99.0) / 1e3);
+            extras.insert(format!("{label}_edge_launches"), met.edge_launches as f64);
+            extras.insert(format!("{label}_cloud_launches"), met.cloud_launches as f64);
+            extras.insert(
+                format!("{label}_launches_per_req"),
+                (met.edge_launches + met.cloud_launches) as f64 / n as f64,
+            );
+            extras.insert(format!("{label}_coalesced_batches"), met.coalesced_batches as f64);
         });
     }
 
@@ -100,12 +118,17 @@ fn main() {
         1.0 / per_req
     };
 
-    // headline throughput baseline for the perf trajectory across PRs
+    // headline throughput baseline for the perf trajectory across PRs, plus
+    // tail latency and launch counts so the trajectory captures launch
+    // amortization, not just req/s
     let mut baseline = std::collections::BTreeMap::new();
     for r in suite.results() {
         if let Some(items) = r.items_per_iter {
             baseline.insert(format!("{}_rps", r.name), Json::Num(items / (r.mean_ns / 1e9)));
         }
+    }
+    for (k, v) in extras {
+        baseline.insert(k, Json::Num(v));
     }
     baseline.insert("raw_roofline_rps".to_string(), Json::Num(roofline_rps));
     if let Err(e) = std::fs::write("BENCH_serving.json", Json::Obj(baseline).to_string()) {

@@ -24,6 +24,17 @@ pub struct ServingMetrics {
     pub edge_busy_ms: f64,
     /// accumulated simulated busy time of the pipeline's cloud stage (ms)
     pub cloud_busy_ms: f64,
+    /// executable launches performed by the edge stage (embed + fused
+    /// block-range + exit head per batch when the chain artifacts exist)
+    pub edge_launches: u64,
+    /// executable launches performed by the cloud stage
+    pub cloud_launches: u64,
+    /// cloud-stage offload groups that launched a continuation
+    pub cloud_groups: u64,
+    /// offload-contributing batches merged into a coalesced group beyond
+    /// the first — each one is a batch whose offloads rode along in another
+    /// batch's launch (passively absorbed zero-offload batches don't count)
+    pub coalesced_batches: u64,
 }
 
 impl ServingMetrics {
@@ -42,6 +53,10 @@ impl ServingMetrics {
             padded_rows: 0,
             edge_busy_ms: 0.0,
             cloud_busy_ms: 0.0,
+            edge_launches: 0,
+            cloud_launches: 0,
+            cloud_groups: 0,
+            coalesced_batches: 0,
         }
     }
 
@@ -82,6 +97,23 @@ impl ServingMetrics {
     pub fn record_stage_ms(&mut self, edge_ms: f64, cloud_ms: f64) {
         self.edge_busy_ms += edge_ms;
         self.cloud_busy_ms += cloud_ms;
+    }
+
+    /// Record one batch's per-stage executable-launch counts (cloud
+    /// launches are attributed to the head batch of a coalesced group).
+    pub fn record_launches(&mut self, edge: u64, cloud: u64) {
+        self.edge_launches += edge;
+        self.cloud_launches += cloud;
+    }
+
+    /// Record one cloud-stage group by how many offload-contributing
+    /// batches it merged — zero means the group had no offloaded rows and
+    /// launched nothing.
+    pub fn record_coalesce(&mut self, contributing_batches: usize) {
+        if contributing_batches > 0 {
+            self.cloud_groups += 1;
+        }
+        self.coalesced_batches += contributing_batches.saturating_sub(1) as u64;
     }
 
     pub fn throughput_rps(&self) -> f64 {
@@ -138,6 +170,14 @@ impl ServingMetrics {
             "stages   edge busy {:.1} ms   cloud busy {:.1} ms\n",
             self.edge_busy_ms, self.cloud_busy_ms,
         ));
+        out.push_str(&format!(
+            "launches edge {} ({:.1}/batch)   cloud {} in {} groups   coalesced {} batches\n",
+            self.edge_launches,
+            self.edge_launches as f64 / self.batches.max(1) as f64,
+            self.cloud_launches,
+            self.cloud_groups,
+            self.coalesced_batches,
+        ));
         out.push_str("exit layers: ");
         for (layer, &count) in self.per_layer.iter().enumerate().skip(1) {
             if count > 0 {
@@ -156,11 +196,19 @@ mod tests {
     #[test]
     fn records_accumulate() {
         let mut m = ServingMetrics::new(12);
-        m.record_request(3, false, false, 5.0, 0.5, 2.7, 2.7, );
+        m.record_request(3, false, false, 5.0, 0.5, 2.7, 2.7);
         m.record_request(12, true, false, 20.0, 1.0, 7.6, 5.1);
         m.record_batch(2, 8);
         m.record_stage_ms(3.0, 1.5);
         m.record_stage_ms(2.0, 0.0);
+        m.record_launches(3, 2);
+        m.record_launches(3, 0);
+        m.record_coalesce(2);
+        m.record_coalesce(0);
+        assert_eq!(m.edge_launches, 6);
+        assert_eq!(m.cloud_launches, 2);
+        assert_eq!(m.cloud_groups, 1);
+        assert_eq!(m.coalesced_batches, 1);
         assert!((m.edge_busy_ms - 5.0).abs() < 1e-12);
         assert!((m.cloud_busy_ms - 1.5).abs() < 1e-12);
         assert_eq!(m.served, 2);
@@ -179,6 +227,7 @@ mod tests {
         let r = m.report();
         assert!(r.contains("latency"));
         assert!(r.contains("offload"));
+        assert!(r.contains("launches"));
         assert!(r.contains("L5:1"));
     }
 

@@ -26,4 +26,4 @@ pub mod service;
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::ServingMetrics;
 pub use router::{Request, Response, Router, RouterConfig};
-pub use service::{Service, ServiceConfig};
+pub use service::{CoalesceConfig, Service, ServiceConfig};

@@ -12,9 +12,9 @@
 //!
 //! ```text
 //!     batcher thread  ──►  edge stage  ──►  cloud stage  ──►  reply stage
-//!     (forms batches)      (embed +         (continuation     (link sim,
-//!                           blocks to        for offloaded     bandit updates,
-//!                           the split)       rows)             metrics, replies)
+//!     (forms batches)      (embed +         (coalesced        (link sim,
+//!                           fused range      continuation      bandit updates,
+//!                           to the split)    for offloads)     metrics, replies)
 //! ```
 //!
 //! Stages are connected by **bounded channels**, so batch formation (and its
@@ -27,22 +27,38 @@
 //! `embed` of batch *k+1* runs before its split is known; for fixed-split and
 //! final-exit policies the whole edge stage overlaps freely.)
 //!
+//! # Partition launches and offload coalescing
+//!
+//! The edge stage runs **one fused block-range launch** per batch (plus the
+//! embed and the exit head) via the `chain{n}` partition graphs; the
+//! activation stays device-resident across the range and crosses the host
+//! boundary only at the split point.  The cloud stage **coalesces adjacent
+//! batches with the same split**: their offloaded rows merge into one fused
+//! `forward_rest` launch, bounded by the largest compiled batch size and a
+//! short deadline ([`CoalesceConfig`]).  Coalescing waits only under
+//! static-split policies — with a bandit policy the next batch cannot reach
+//! the cloud stage before this batch's rewards are applied, so waiting would
+//! only add latency.  Per-row cloud-time attribution and reply order are
+//! preserved, so rewards and bandit updates are unchanged (asserted by
+//! `tests/integration.rs::pipelined_matches_serial_decisions`).
+//!
 //! [`Service::run_serial`] keeps the single-threaded reference path; both
 //! paths share the same stage functions, so their per-request outputs are
 //! identical by construction (asserted by `tests/integration.rs`).
 
-use std::sync::mpsc;
+use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{Context as _, Result};
 
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::router::{Response, Router};
 use crate::cost::CostModel;
-use crate::model::{plan_batches, ExitOutput, MultiExitModel};
+use crate::model::{plan_batches_fused, ExitOutput, HiddenState, MultiExitModel};
 use crate::policy::{SplitEePolicy, SplitEeSPolicy};
+use crate::runtime::thread_launches;
 use crate::sim::device::{CloudSim, EdgeSim};
 use crate::sim::link::{LinkSim, TransferResult};
 use crate::tensor::TensorF32;
@@ -65,6 +81,22 @@ pub enum PolicyKind {
     FinalExit,
 }
 
+/// Cross-batch offload coalescing parameters (cloud stage).
+#[derive(Debug, Clone, Copy)]
+pub struct CoalesceConfig {
+    /// merge adjacent same-split batches' offloads into one fused launch
+    pub enabled: bool,
+    /// how long the cloud stage may hold a group open for the next batch
+    /// (wall clock; simulated latency is unaffected)
+    pub max_wait: Duration,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        CoalesceConfig { enabled: true, max_wait: Duration::from_micros(200) }
+    }
+}
+
 /// Service parameters.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -74,6 +106,8 @@ pub struct ServiceConfig {
     /// UCB exploration parameter
     pub beta: f64,
     pub batcher: BatcherConfig,
+    /// cloud-stage cross-batch offload coalescing
+    pub coalesce: CoalesceConfig,
 }
 
 /// Policy state held by the service.
@@ -109,8 +143,10 @@ impl PolicyState {
 /// What the edge stage hands to the cloud stage for one batch.
 struct EdgeWork {
     batch: Batch,
-    /// hidden state at the split layer (consumed by the cloud continuation)
-    h: TensorF32,
+    /// hidden state at the split layer (consumed by the cloud continuation;
+    /// this is the one host transfer the split boundary requires) — `None`
+    /// when no row offloads, so fully-exiting batches skip the transfer
+    h: Option<TensorF32>,
     exit_out: ExitOutput,
     /// per earlier layer, per row: exit-head confidences (SplitEE-S only)
     prefix_conf: Vec<Vec<f32>>,
@@ -120,6 +156,8 @@ struct EdgeWork {
     edge_ms: f64,
     /// activation payload size for the uplink simulator
     payload: usize,
+    /// executable launches this batch's edge stage performed
+    launches: u64,
 }
 
 /// One offloaded row's final-layer result from the cloud continuation.
@@ -140,12 +178,19 @@ struct ReplyWork {
     edge_ms: f64,
     payload: usize,
     cloud_out: Vec<CloudRow>,
-    /// total simulated cloud compute across this batch's offload chunks
+    /// this batch's share of the simulated cloud compute (pro-rata within
+    /// each coalesced launch, so shares sum to the launch totals)
     cloud_busy_ms: f64,
+    edge_launches: u64,
+    /// cloud-stage launches, attributed to the group head (0 elsewhere)
+    cloud_launches: u64,
+    /// on the group head: how many batches contributed offloaded rows to
+    /// the group's launch (0 = the group launched nothing)
+    group: Option<usize>,
 }
 
-/// Edge share: embed + blocks up to the split + the split's exit head, plus
-/// the per-row exit-or-offload decision.
+/// Edge share: embed + one fused block-range launch to the split + the
+/// split's exit head, plus the per-row exit-or-offload decision.
 fn edge_stage(
     model: &MultiExitModel,
     edge: &EdgeSim,
@@ -155,10 +200,11 @@ fn edge_stage(
     split: usize,
     batch: Batch,
 ) -> Result<EdgeWork> {
+    let launches0 = thread_launches();
     let t0 = Instant::now();
-    let h = model.embed(&batch.tokens)?;
+    let h0 = model.embed_hidden(&batch.tokens)?;
     let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
-    edge_stage_after_embed(model, edge, alpha, side, n_layers, split, batch, h, embed_ms)
+    edge_stage_after_embed(model, edge, alpha, side, n_layers, split, batch, h0, embed_ms, launches0)
 }
 
 /// The split-dependent part of the edge stage.  Separated so the pipelined
@@ -173,21 +219,38 @@ fn edge_stage_after_embed(
     n_layers: usize,
     split: usize,
     batch: Batch,
-    mut h: TensorF32,
+    h0: HiddenState,
     embed_ms: f64,
+    launches0: u64,
 ) -> Result<EdgeWork> {
+    // compile-if-needed outside the timed region, so a first-use chain
+    // compile never shows up as simulated edge latency (the side path runs
+    // per-block launches and never touches the fused chain — don't compile
+    // modules it will never use)
+    if !side {
+        model.warm_range(h0.batch(), 0, split)?;
+    }
     let t0 = Instant::now();
     let mut prefix_conf: Vec<Vec<f32>> = Vec::new(); // per layer, per row
-    for layer in 0..split {
-        h = model.block(&h, layer)?;
-        if side && layer + 1 < split {
-            prefix_conf.push(model.exit_head(&h, layer)?.conf);
+    let h_split = if side {
+        // SplitEE-S observes every prefix exit head, so the range decomposes
+        // into per-block launches — the activation still stays in device
+        // format between them.
+        let mut h = h0;
+        for layer in 0..split {
+            h = model.blocks_between(&h, layer, layer + 1)?;
+            if layer + 1 < split {
+                prefix_conf.push(model.exit_head_hidden(&h, layer)?.conf);
+            }
         }
-    }
-    let exit_out = model.exit_head(&h, split - 1)?;
-    let edge_ms = edge.simulated_ms(embed_ms + t0.elapsed().as_secs_f64() * 1e3);
+        h
+    } else {
+        // one fused launch covers the whole edge partition
+        model.blocks_between(&h0, 0, split)?
+    };
+    let exit_out = model.exit_head_hidden(&h_split, split - 1)?;
 
-    // per-sample exit-or-offload
+    // per-sample exit-or-offload, decided before any host transfer
     let n_real = batch.real_len();
     let mut offload_rows: Vec<usize> = Vec::new();
     for row in 0..n_real {
@@ -195,41 +258,104 @@ fn edge_stage_after_embed(
             offload_rows.push(row);
         }
     }
-    let payload = LinkSim::activation_payload(model.seq_len(), h.shape()[2]);
-    Ok(EdgeWork { batch, h, exit_out, prefix_conf, offload_rows, split, edge_ms, payload })
+    // the split-boundary host transfer: this buffer is what the uplink
+    // ships, so it happens only when some row actually crosses the split
+    let (h, payload) = if offload_rows.is_empty() {
+        (None, 0)
+    } else {
+        let h = h_split.to_tensor()?;
+        let payload = LinkSim::activation_payload(model.seq_len(), h.shape()[2]);
+        (Some(h), payload)
+    };
+    let edge_ms = edge.simulated_ms(embed_ms + t0.elapsed().as_secs_f64() * 1e3);
+    let launches = thread_launches() - launches0;
+    Ok(EdgeWork { batch, h, exit_out, prefix_conf, offload_rows, split, edge_ms, payload, launches })
 }
 
-/// Cloud share: continue the offloaded rows from the split to the final
-/// layer.  The gather is one contiguous copy (`gather_rows`), not a per-row
-/// slice + concat.
-fn cloud_stage(model: &MultiExitModel, cloud: &CloudSim, work: EdgeWork) -> Result<ReplyWork> {
-    let l = model.n_layers();
-    let mut cloud_out: Vec<CloudRow> = Vec::with_capacity(work.offload_rows.len());
-    let mut cloud_busy_ms = 0.0;
-    if !work.offload_rows.is_empty() {
-        let gathered = work.h.gather_rows(&work.offload_rows)?;
-        let plan = plan_batches(work.offload_rows.len(), model.batch_sizes());
+/// Cloud share for one coalesced group of same-split batches: gather every
+/// batch's offloaded rows into one tensor, run ≤ 1 fused `forward_rest` +
+/// final-head launch pair per plan chunk (a group bounded by the largest
+/// compiled batch size is exactly one chunk), and attribute results and
+/// simulated time back to each batch.  A group of one is the uncoalesced
+/// case — the serial path always uses that.
+fn cloud_stage_group(
+    model: &MultiExitModel,
+    cloud: &CloudSim,
+    group: Vec<EdgeWork>,
+) -> Result<Vec<ReplyWork>> {
+    let split = group[0].split;
+    let launches0 = thread_launches();
+
+    // union gather across the group (host-side, one contiguous copy per batch)
+    let mut union: Option<TensorF32> = None;
+    let mut origin: Vec<(usize, usize)> = Vec::new(); // (group index, batch row)
+    for (gi, work) in group.iter().enumerate() {
+        if work.offload_rows.is_empty() {
+            continue;
+        }
+        let gathered = work
+            .h
+            .as_ref()
+            .context("offloaded rows without a split-boundary hidden state")?
+            .gather_rows(&work.offload_rows)?;
+        match &mut union {
+            Some(u) => u.extend_rows(&gathered).map_err(|e| anyhow::anyhow!(e))?,
+            None => union = Some(gathered),
+        }
+        origin.extend(work.offload_rows.iter().map(|&r| (gi, r)));
+    }
+
+    let mut cloud_out: Vec<Vec<CloudRow>> =
+        group.iter().map(|w| Vec::with_capacity(w.offload_rows.len())).collect();
+    let mut busy = vec![0.0f64; group.len()];
+    if let Some(union) = union {
+        let plan = plan_batches_fused(origin.len(), model.batch_sizes());
         let mut done = 0usize;
         for (bsz, real) in plan {
-            let chunk = gathered.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
+            let chunk = union.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
+            // compile-if-needed before the timed region (see warm_range)
+            model.warm_range(bsz, split, model.n_layers())?;
             let t1 = Instant::now();
-            let h_final = model.forward_rest(&chunk, work.split - 1)?;
-            let out = model.exit_head(&h_final, l - 1)?;
+            let out = model.forward_rest_exit(&chunk, split - 1)?;
             let cloud_ms = cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
-            cloud_busy_ms += cloud_ms;
+            // Per-row attribution: every row in this launch experienced the
+            // same simulated cloud latency; busy time splits pro rata so the
+            // per-batch accounting sums to the launch total.
             for i in 0..real {
-                cloud_out.push(CloudRow {
-                    row: work.offload_rows[done + i],
+                let (gi, row) = origin[done + i];
+                cloud_out[gi].push(CloudRow {
+                    row,
                     pred: out.pred[i],
                     conf: out.conf[i],
                     cloud_ms,
                 });
+                busy[gi] += cloud_ms / real as f64;
             }
             done += real;
         }
     }
-    let EdgeWork { batch, exit_out, prefix_conf, split, edge_ms, payload, .. } = work;
-    Ok(ReplyWork { batch, exit_out, prefix_conf, split, edge_ms, payload, cloud_out, cloud_busy_ms })
+    let cloud_launches = thread_launches() - launches0;
+    // coalescing stats count only batches whose offloads shared the launch
+    let contributing = group.iter().filter(|w| !w.offload_rows.is_empty()).count();
+
+    let mut replies = Vec::with_capacity(group.len());
+    for (gi, work) in group.into_iter().enumerate() {
+        let EdgeWork { batch, exit_out, prefix_conf, split, edge_ms, payload, launches, .. } = work;
+        replies.push(ReplyWork {
+            batch,
+            exit_out,
+            prefix_conf,
+            split,
+            edge_ms,
+            payload,
+            cloud_out: std::mem::take(&mut cloud_out[gi]),
+            cloud_busy_ms: busy[gi],
+            edge_launches: launches,
+            cloud_launches: if gi == 0 { cloud_launches } else { 0 },
+            group: if gi == 0 { Some(contributing) } else { None },
+        });
+    }
+    Ok(replies)
 }
 
 /// Reply share: uplink simulation for offloaded rows, reward computation,
@@ -249,11 +375,26 @@ fn reply_stage(
     metrics: &mut ServingMetrics,
 ) {
     let l = n_layers;
-    let ReplyWork { batch, exit_out, prefix_conf, split, edge_ms, payload, cloud_out, cloud_busy_ms } =
-        work;
+    let ReplyWork {
+        batch,
+        exit_out,
+        prefix_conf,
+        split,
+        edge_ms,
+        payload,
+        cloud_out,
+        cloud_busy_ms,
+        edge_launches,
+        cloud_launches,
+        group,
+    } = work;
     let n_real = batch.real_len();
     metrics.record_batch(n_real, batch.padded_to);
     metrics.record_stage_ms(edge_ms, cloud_busy_ms);
+    metrics.record_launches(edge_launches, cloud_launches);
+    if let Some(contributing) = group {
+        metrics.record_coalesce(contributing);
+    }
 
     // (pred, conf, extra_latency_ms, outage) for rows that were offloaded
     let mut final_by_row: Vec<Option<(usize, f32, f64, bool)>> = vec![None; n_real];
@@ -347,6 +488,7 @@ pub struct Service {
     pub link: LinkSim,
     policy: PolicyState,
     alpha: f64,
+    coalesce: CoalesceConfig,
     pub metrics: ServingMetrics,
 }
 
@@ -377,6 +519,7 @@ impl Service {
             link,
             policy,
             alpha: config.alpha,
+            coalesce: config.coalesce,
         }
     }
 
@@ -418,7 +561,13 @@ impl Service {
         let edge = self.edge;
         let cloud = self.cloud;
         let cost = self.cost;
+        let coalesce = self.coalesce;
+        let max_rows = self.model.max_batch().context("sizing the coalescing bound")?;
         let static_split = self.policy.static_split(l);
+        // Only static-split policies can have two batches in the cloud stage
+        // at once (a bandit releases batch k+1's split after batch k's
+        // replies), so only they ever wait out the coalescing deadline.
+        let coalesce_wait = coalesce.enabled && static_split.is_some();
 
         let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(PIPELINE_DEPTH);
         let (edge_tx, edge_rx) = mpsc::sync_channel::<EdgeWork>(PIPELINE_DEPTH);
@@ -451,8 +600,9 @@ impl Service {
                 while let Ok(batch) = batch_rx.recv() {
                     // embed is split-independent: overlap it with the
                     // previous batch's cloud/reply work
+                    let launches0 = thread_launches();
                     let t0 = Instant::now();
-                    let h = model_edge.embed(&batch.tokens)?;
+                    let h0 = model_edge.embed_hidden(&batch.tokens)?;
                     let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
                     let split = match static_split {
                         Some(k) => k,
@@ -462,7 +612,7 @@ impl Service {
                         },
                     };
                     let work = edge_stage_after_embed(
-                        &model_edge, &edge, alpha, side, l, split, batch, h, embed_ms,
+                        &model_edge, &edge, alpha, side, l, split, batch, h0, embed_ms, launches0,
                     )?;
                     if edge_tx.send(work).is_err() {
                         break;
@@ -471,11 +621,64 @@ impl Service {
                 Ok(())
             });
 
-            // ---- stage 3: cloud continuation for offloaded rows
+            // ---- stage 3: cloud continuation, coalescing adjacent
+            // same-split batches' offloads into one fused launch
             let cloud_handle = s.spawn(move || -> Result<()> {
-                while let Ok(work) = edge_rx.recv() {
-                    let work = cloud_stage(&model_cloud, &cloud, work)?;
-                    if cloud_tx.send(work).is_err() {
+                let mut pending: Option<EdgeWork> = None;
+                loop {
+                    let first = match pending.take() {
+                        Some(w) => w,
+                        None => match edge_rx.recv() {
+                            Ok(w) => w,
+                            Err(_) => break, // edge stage done
+                        },
+                    };
+                    let mut rows = first.offload_rows.len();
+                    let mut group = vec![first];
+                    if coalesce_wait && rows > 0 {
+                        let deadline = Instant::now() + coalesce.max_wait;
+                        // the deadline bounds the whole group, including the
+                        // try_recv fast path — a stream of zero-offload
+                        // batches must not hold replies open past max_wait
+                        while rows < max_rows && Instant::now() < deadline {
+                            // harvest queued work immediately; otherwise wait
+                            // out the remaining deadline
+                            let next = match edge_rx.try_recv() {
+                                Ok(w) => w,
+                                Err(TryRecvError::Disconnected) => break,
+                                Err(TryRecvError::Empty) => {
+                                    let now = Instant::now();
+                                    if now >= deadline {
+                                        break;
+                                    }
+                                    match edge_rx.recv_timeout(deadline - now) {
+                                        Ok(w) => w,
+                                        Err(RecvTimeoutError::Timeout)
+                                        | Err(RecvTimeoutError::Disconnected) => break,
+                                    }
+                                }
+                            };
+                            if next.split == group[0].split
+                                && rows + next.offload_rows.len() <= max_rows
+                            {
+                                rows += next.offload_rows.len();
+                                group.push(next);
+                            } else {
+                                // different split or over the row bound:
+                                // flush this group, start the next with it
+                                pending = Some(next);
+                                break;
+                            }
+                        }
+                    }
+                    let mut closed = false;
+                    for reply in cloud_stage_group(&model_cloud, &cloud, group)? {
+                        if cloud_tx.send(reply).is_err() {
+                            closed = true;
+                            break;
+                        }
+                    }
+                    if closed {
                         break;
                     }
                 }
@@ -514,13 +717,15 @@ impl Service {
     }
 
     /// Serve one formed batch on the caller's thread (the serial reference
-    /// path; also used directly by failure-injection tests).
+    /// path; also used directly by failure-injection tests).  The cloud
+    /// share runs as a group of one — identical math to a coalesced group.
     pub fn serve_batch(&mut self, batch: Batch) -> Result<()> {
         let l = self.model.n_layers();
         let split = self.choose_split();
         let side = self.side_info();
         let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch)?;
-        let work = cloud_stage(&self.model, &self.cloud, work)?;
+        let mut replies = cloud_stage_group(&self.model, &self.cloud, vec![work])?;
+        let work = replies.pop().expect("one reply per batch");
         reply_stage(
             work,
             l,

@@ -255,6 +255,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
             batch_sizes: manifest.batch_sizes.clone(),
             max_wait: std::time::Duration::from_millis(4),
         },
+        coalesce: Default::default(),
     };
 
     let router = Router::new(RouterConfig::default());

@@ -9,7 +9,7 @@
 pub mod multi_exit;
 pub mod weights;
 
-pub use multi_exit::{ExitOutput, MultiExitModel};
+pub use multi_exit::{ExitOutput, HiddenState, MultiExitModel};
 pub use weights::ModelWeights;
 
 /// Plan how to cover `n` samples with the compiled batch sizes.
@@ -39,6 +39,35 @@ pub fn plan_batches(n: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
     out
 }
 
+/// Like [`plan_batches`], but minimizes *launches* instead of padded rows:
+/// full largest-size chunks while the remainder exceeds every compiled
+/// size, then one padded launch with the smallest compiled size that fits
+/// the tail.  The cloud stage's coalesced offload groups use this — one
+/// fused `forward_rest` launch per group beats the per-row padding FLOPs at
+/// the batch sizes we compile.
+pub fn plan_batches_fused(n: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
+    assert!(!sizes.is_empty(), "no compiled batch sizes");
+    let max = *sizes.iter().max().expect("non-empty sizes");
+    let mut out = Vec::new();
+    let mut left = n;
+    while left > 0 {
+        if left >= max {
+            out.push((max, max));
+            left -= max;
+        } else {
+            let fit = sizes
+                .iter()
+                .copied()
+                .filter(|&b| b >= left)
+                .min()
+                .expect("some compiled size >= remainder < max");
+            out.push((fit, left));
+            left = 0;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -57,6 +86,36 @@ mod tests {
     #[test]
     fn plan_zero() {
         assert!(plan_batches(0, &[1, 8]).is_empty());
+    }
+
+    #[test]
+    fn plan_fused_prefers_one_padded_launch() {
+        assert_eq!(plan_batches_fused(3, &[1, 8]), vec![(8, 3)]);
+        assert_eq!(plan_batches_fused(8, &[1, 8]), vec![(8, 8)]);
+        assert_eq!(plan_batches_fused(1, &[1, 8]), vec![(1, 1)]);
+        // overflow: full max-size chunks, then one fused tail
+        assert_eq!(plan_batches_fused(10, &[1, 8]), vec![(8, 8), (8, 2)]);
+        assert_eq!(plan_batches_fused(17, &[1, 8]), vec![(8, 8), (8, 8), (1, 1)]);
+        assert!(plan_batches_fused(0, &[1, 8]).is_empty());
+    }
+
+    #[test]
+    fn plan_fused_covers_all_rows_with_fewer_or_equal_launches() {
+        for n in 0..50 {
+            for sizes in [&[1usize, 8][..], &[8][..], &[1][..], &[4, 32][..]] {
+                let fused = plan_batches_fused(n, sizes);
+                let total: usize = fused.iter().map(|(_, real)| real).sum();
+                assert_eq!(total, n, "n={n} sizes={sizes:?}");
+                for (b, real) in &fused {
+                    assert!(real <= b);
+                    assert!(sizes.contains(b));
+                }
+                assert!(
+                    fused.len() <= plan_batches(n, sizes).len(),
+                    "n={n} sizes={sizes:?}: fused plan must not add launches"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,15 +1,28 @@
 //! The multi-exit encoder bound to trained weights, executing compiled
-//! PJRT graphs layer by layer.
+//! PJRT graphs as fused **partition ranges**.
+//!
+//! The serving hot path is partitioned at the split layer: one fused
+//! `chain{n}` executable covers `blocks[i..j)` in a single launch (the
+//! activation stays device-resident inside the module), the exit head is one
+//! more launch, and the hidden state crosses the host boundary only where
+//! the system semantics require it — at the split point (the simulated
+//! uplink payload) and at final outputs.  Between launches the activation is
+//! carried as a [`HiddenState`] (a raw XLA literal), never a `TensorF32`.
+//! When an artifact set predates the chain graphs the model falls back to
+//! per-block launches with the same literal passthrough, so outputs are
+//! identical either way.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use super::weights::ModelWeights;
 use super::plan_batches;
+use super::weights::ModelWeights;
 use crate::config::Manifest;
 use crate::runtime::executable::Arg;
+use crate::runtime::literal::{literal_f32, tensor_f32};
 use crate::runtime::{Executable, Runtime};
 use crate::tensor::{TensorF32, TensorI32};
 
@@ -66,19 +79,54 @@ impl ExitOutput {
     }
 }
 
-/// One trained multi-exit model, ready to execute layer by layer.
+/// A hidden state held in XLA-literal form between partition launches.
 ///
-/// The same compiled `block` executable serves all layers (weights are
-/// arguments), mirroring the paper's hardware-reuse motivation: one physical
-/// module re-run per layer.
+/// The buffer is handed straight back as the next launch's argument
+/// (`Arg::Lit`), skipping the host `TensorF32` materialization the per-block
+/// path used to pay at every layer boundary.  Call [`HiddenState::to_tensor`]
+/// only where the host genuinely needs the values — the split boundary and
+/// final outputs.
+pub struct HiddenState {
+    lit: xla::Literal,
+    batch: usize,
+}
+
+impl HiddenState {
+    /// Batch dimension (a compiled batch size).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Host transfer: literal -> `TensorF32` (the split-boundary copy).
+    pub fn to_tensor(&self) -> Result<TensorF32> {
+        tensor_f32(&self.lit)
+    }
+}
+
+impl std::fmt::Debug for HiddenState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HiddenState").field("batch", &self.batch).finish()
+    }
+}
+
+/// One trained multi-exit model, ready to execute partition by partition.
+///
+/// The fused `chain{n}` executables are weight-parameterized like `block`,
+/// so one compiled module serves *every* range of length `n`; they are
+/// compiled lazily per `(length, batch)` through the runtime's bounded LRU
+/// cache rather than eagerly at load.
 pub struct MultiExitModel {
     pub task: String,
     pub style: String,
     weights: Arc<ModelWeights>,
+    runtime: Runtime,
     embed: BTreeMap<usize, Arc<Executable>>,
     block: BTreeMap<usize, Arc<Executable>>,
     head: BTreeMap<usize, Arc<Executable>>,
     prefix_full: Option<(usize, Arc<Executable>)>,
+    /// fused block-range artifacts: (range length, batch) -> HLO path,
+    /// loaded lazily through the runtime's LRU cache
+    chain: BTreeMap<(usize, usize), PathBuf>,
     /// Weight tensors pre-converted to XLA literals — skips the host copy on
     /// every layer execution (L3 perf pass; disable for A/B measurement with
     /// SPLITEE_NO_LITERAL_CACHE=1).
@@ -97,12 +145,15 @@ struct LitCache {
 
 // SAFETY: the literal cache is immutable after construction and literals are
 // plain host buffers; the PJRT CPU executables are internally synchronized.
-// The model is only ever used behind `Arc` with `&self` access.
+// The runtime handle is only used for lazy chain compiles, which are
+// serialized under the runtime's dedicated compile lock
+// (`RuntimeInner::compile_lock` — cache-hit probes never compile), so the
+// thread-affine client never compiles from two threads at once.  The model
+// is only ever used behind `Arc` with `&self` access.
 unsafe impl Send for MultiExitModel {}
 unsafe impl Sync for MultiExitModel {}
 
 fn build_lit_cache(weights: &ModelWeights) -> anyhow::Result<LitCache> {
-    use crate::runtime::literal::literal_f32;
     let conv = |ts: &[crate::tensor::TensorF32]| -> anyhow::Result<Vec<xla::Literal>> {
         ts.iter().map(literal_f32).collect()
     };
@@ -152,6 +203,18 @@ impl MultiExitModel {
             Ok(path) => Some((manifest.cache_batch, runtime.load(&path)?)),
             Err(_) => None,
         };
+        // Fused block-range graphs (chain2..chainL): record paths only; the
+        // runtime compiles each lazily on first use behind its LRU cache.
+        // Length-1 ranges reuse the plain `block` executable.
+        let mut chain = BTreeMap::new();
+        for len in 2..=manifest.model.n_layers {
+            let graph = format!("chain{len}");
+            for &b in &manifest.batch_sizes {
+                if let Ok(path) = manifest.hlo_path(&graph, b) {
+                    chain.insert((len, b), path);
+                }
+            }
+        }
         let weights = Arc::new(weights);
         let lits = if std::env::var("SPLITEE_NO_LITERAL_CACHE").is_ok() {
             None
@@ -162,10 +225,12 @@ impl MultiExitModel {
             task: task.to_string(),
             style: style.to_string(),
             weights,
+            runtime: runtime.clone(),
             embed,
             block,
             head,
             prefix_full,
+            chain,
             lits,
             batch_sizes: manifest.batch_sizes.clone(),
             n_layers: manifest.model.n_layers,
@@ -189,9 +254,25 @@ impl MultiExitModel {
         &self.batch_sizes
     }
 
-    /// Largest compiled batch size.
-    pub fn max_batch(&self) -> usize {
-        *self.batch_sizes.iter().max().unwrap()
+    /// Largest compiled batch size.  Errors (rather than panicking) on a
+    /// manifest with an empty batch-size table.
+    pub fn max_batch(&self) -> Result<usize> {
+        self.batch_sizes.iter().max().copied().with_context(|| {
+            format!(
+                "model {}/{} has an empty compiled batch-size table — \
+                 artifacts manifest lists no batch_sizes",
+                self.task, self.style
+            )
+        })
+    }
+
+    /// True when every multi-block range has a fused artifact (all lengths
+    /// 2..=L at every compiled batch size), i.e. the serving path runs one
+    /// block-range launch per partition.
+    pub fn has_fused_ranges(&self) -> bool {
+        self.batch_sizes
+            .iter()
+            .all(|&b| (2..=self.n_layers).all(|len| self.chain.contains_key(&(len, b))))
     }
 
     fn pick_exec<'a>(
@@ -203,9 +284,122 @@ impl MultiExitModel {
             .with_context(|| format!("no executable compiled for batch {batch}"))
     }
 
-    /// Embedding: tokens [B, T] -> hidden [B, T, D].  B must be a compiled
-    /// batch size (callers batch via [`plan_batches`]).
-    pub fn embed(&self, tokens: &TensorI32) -> Result<TensorF32> {
+    fn push_block_args<'a>(&'a self, args: &mut Vec<Arg<'a>>, layer: usize) {
+        match &self.lits {
+            Some(l) => args.extend(l.blocks[layer].iter().map(Arg::Lit)),
+            None => args.extend(self.weights.blocks[layer].iter().map(Arg::F32)),
+        }
+    }
+
+    /// Run blocks `start..end` (0-based, end exclusive) from a hidden-state
+    /// argument, returning the raw output literal.  One fused launch when
+    /// the `chain{end-start}` artifact exists; otherwise per-block launches
+    /// with literal passthrough (no host materialization either way).
+    fn run_blocks_arg(
+        &self,
+        h: Arg<'_>,
+        batch: usize,
+        start: usize,
+        end: usize,
+    ) -> Result<xla::Literal> {
+        if start >= end || end > self.n_layers {
+            bail!(
+                "block range [{start}, {end}) out of bounds (L = {})",
+                self.n_layers
+            );
+        }
+        let len = end - start;
+        if len > 1 {
+            if let Some(path) = self.chain.get(&(len, batch)) {
+                let exe = self
+                    .runtime
+                    .load(path)
+                    .with_context(|| format!("loading fused range chain{len} (batch {batch})"))?;
+                let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + 16 * len);
+                args.push(h);
+                match &self.lits {
+                    Some(l) => {
+                        for blk in &l.blocks[start..end] {
+                            args.extend(blk.iter().map(Arg::Lit));
+                        }
+                    }
+                    None => {
+                        args.extend(self.weights.block_range_args(start, end).map(Arg::F32))
+                    }
+                }
+                let mut out = exe.run(&args)?;
+                if out.is_empty() {
+                    bail!("chain{len} returned no outputs");
+                }
+                return Ok(out.remove(0));
+            }
+        }
+        // fallback: per-block launches, activation carried as a literal
+        let exe = Self::pick_exec(&self.block, batch)?;
+        let mut cur = {
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(17);
+            args.push(h);
+            self.push_block_args(&mut args, start);
+            let mut out = exe.run(&args)?;
+            if out.is_empty() {
+                bail!("block returned no outputs");
+            }
+            out.remove(0)
+        };
+        for layer in (start + 1)..end {
+            let mut out = {
+                let mut args: Vec<Arg<'_>> = Vec::with_capacity(17);
+                args.push(Arg::Lit(&cur));
+                self.push_block_args(&mut args, layer);
+                exe.run(&args)?
+            };
+            if out.is_empty() {
+                bail!("block returned no outputs");
+            }
+            cur = out.remove(0);
+        }
+        Ok(cur)
+    }
+
+    fn exit_head_arg(&self, h: Arg<'_>, batch: usize, layer: usize) -> Result<ExitOutput> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        }
+        let exe = Self::pick_exec(&self.head, batch)?;
+        let mut args = vec![h];
+        match &self.lits {
+            Some(l) => args.extend(l.heads[layer].iter().map(Arg::Lit)),
+            None => args.extend(self.weights.heads[layer].iter().map(Arg::F32)),
+        }
+        let out = exe.run(&args)?;
+        if out.len() != 3 {
+            bail!("exit head returned {} outputs, expected 3", out.len());
+        }
+        let probs = tensor_f32(&out[0])?;
+        let conf = tensor_f32(&out[1])?;
+        let ent = tensor_f32(&out[2])?;
+        ExitOutput::from_tensors(probs, conf, ent)
+    }
+
+    /// Ensure the fused range executable for blocks `start..end` at `batch`
+    /// is compiled (no-op when absent or length 1).  The serving stages call
+    /// this *before* their timed regions so a first-use (or post-eviction)
+    /// chain compile is never recorded as simulated compute latency.
+    pub fn warm_range(&self, batch: usize, start: usize, end: usize) -> Result<()> {
+        if end > start && end - start > 1 {
+            if let Some(path) = self.chain.get(&(end - start, batch)) {
+                self.runtime.load(path).with_context(|| {
+                    format!("pre-warming fused range chain{} (batch {batch})", end - start)
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Embedding straight to a device-format hidden state: tokens [B, T] ->
+    /// h0 [B, T, D] as a literal.  B must be a compiled batch size (callers
+    /// batch via [`plan_batches`]).
+    pub fn embed_hidden(&self, tokens: &TensorI32) -> Result<HiddenState> {
         let b = tokens.shape()[0];
         let exe = Self::pick_exec(&self.embed, b)?;
         let mut args = vec![Arg::I32(tokens)];
@@ -213,68 +407,100 @@ impl MultiExitModel {
             Some(l) => args.extend(l.embed.iter().map(Arg::Lit)),
             None => args.extend(self.weights.embed.iter().map(Arg::F32)),
         }
-        let mut out = exe.run_f32(&args)?;
-        Ok(out.remove(0))
+        let mut out = exe.run(&args)?;
+        if out.is_empty() {
+            bail!("embed returned no outputs");
+        }
+        Ok(HiddenState { lit: out.remove(0), batch: b })
+    }
+
+    /// Blocks `start..end` (0-based, end exclusive) as fused partition
+    /// launches, hidden state in and out in device format.
+    pub fn blocks_between(
+        &self,
+        h: &HiddenState,
+        start: usize,
+        end: usize,
+    ) -> Result<HiddenState> {
+        let lit = self.run_blocks_arg(Arg::Lit(&h.lit), h.batch, start, end)?;
+        Ok(HiddenState { lit, batch: h.batch })
+    }
+
+    /// Exit head after `layer` (0-based) evaluated from a device-format
+    /// hidden state.
+    pub fn exit_head_hidden(&self, h: &HiddenState, layer: usize) -> Result<ExitOutput> {
+        self.exit_head_arg(Arg::Lit(&h.lit), h.batch, layer)
+    }
+
+    /// Embedding: tokens [B, T] -> hidden [B, T, D] on the host.
+    pub fn embed(&self, tokens: &TensorI32) -> Result<TensorF32> {
+        self.embed_hidden(tokens)?.to_tensor()
     }
 
     /// One transformer block: hidden [B, T, D] -> hidden [B, T, D].
     /// `layer` is 0-based.
     pub fn block(&self, h: &TensorF32, layer: usize) -> Result<TensorF32> {
-        if layer >= self.n_layers {
-            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        let b = h.shape()[0];
+        let lit = self.run_blocks_arg(Arg::F32(h), b, layer, layer + 1)?;
+        tensor_f32(&lit)
+    }
+
+    /// Blocks `start..end` (0-based, end exclusive) from a host hidden
+    /// state: one fused launch when the range artifact exists.  Bit-exact
+    /// with iterating [`MultiExitModel::block`] (asserted by the
+    /// integration property test).
+    pub fn forward_range(&self, h: &TensorF32, start: usize, end: usize) -> Result<TensorF32> {
+        if start == end {
+            return Ok(h.clone());
         }
         let b = h.shape()[0];
-        let exe = Self::pick_exec(&self.block, b)?;
-        let mut args = vec![Arg::F32(h)];
-        match &self.lits {
-            Some(l) => args.extend(l.blocks[layer].iter().map(Arg::Lit)),
-            None => args.extend(self.weights.blocks[layer].iter().map(Arg::F32)),
-        }
-        let mut out = exe.run_f32(&args)?;
-        Ok(out.remove(0))
+        let lit = self.run_blocks_arg(Arg::F32(h), b, start, end)?;
+        tensor_f32(&lit)
     }
 
     /// Exit head after `layer` (0-based): hidden -> (probs, conf, ent, pred).
     pub fn exit_head(&self, h: &TensorF32, layer: usize) -> Result<ExitOutput> {
-        if layer >= self.n_layers {
-            bail!("layer {layer} out of range (L = {})", self.n_layers);
-        }
-        let b = h.shape()[0];
-        let exe = Self::pick_exec(&self.head, b)?;
-        let mut args = vec![Arg::F32(h)];
-        match &self.lits {
-            Some(l) => args.extend(l.heads[layer].iter().map(Arg::Lit)),
-            None => args.extend(self.weights.heads[layer].iter().map(Arg::F32)),
-        }
-        let mut out = exe.run_f32(&args)?;
-        if out.len() != 3 {
-            bail!("exit head returned {} outputs, expected 3", out.len());
-        }
-        let ent = out.pop().unwrap();
-        let conf = out.pop().unwrap();
-        let probs = out.pop().unwrap();
-        ExitOutput::from_tensors(probs, conf, ent)
+        self.exit_head_arg(Arg::F32(h), h.shape()[0], layer)
     }
 
     /// Run embed + blocks `0..=layer` (0-based).  Returns the hidden state at
-    /// the split point.  This is the "edge device" share of the computation.
+    /// the split point.  This is the "edge device" share of the computation:
+    /// one embed launch plus one fused block-range launch.
     pub fn forward_to(&self, tokens: &TensorI32, layer: usize) -> Result<TensorF32> {
-        let mut h = self.embed(tokens)?;
-        for l in 0..=layer {
-            h = self.block(&h, l)?;
-        }
-        Ok(h)
+        let h0 = self.embed_hidden(tokens)?;
+        self.blocks_between(&h0, 0, layer + 1)?.to_tensor()
     }
 
     /// Continue from the hidden state after `from_layer` (0-based, already
     /// executed) through the final block.  This is the "cloud" share after an
-    /// offload.
-    pub fn forward_rest(&self, h: &TensorF32, from_layer: usize) -> Result<TensorF32> {
-        let mut h = h.clone();
-        for l in (from_layer + 1)..self.n_layers {
-            h = self.block(&h, l)?;
+    /// offload.  Takes the hidden state by value — the offload call sites
+    /// own the gathered chunk, so the continuation never clones it.
+    pub fn forward_rest(&self, h: TensorF32, from_layer: usize) -> Result<TensorF32> {
+        if from_layer >= self.n_layers {
+            bail!("from_layer {from_layer} out of range (L = {})", self.n_layers);
         }
-        Ok(h)
+        if from_layer + 1 == self.n_layers {
+            return Ok(h);
+        }
+        let b = h.shape()[0];
+        let lit = self.run_blocks_arg(Arg::F32(&h), b, from_layer + 1, self.n_layers)?;
+        tensor_f32(&lit)
+    }
+
+    /// Cloud continuation fused with the final exit head: blocks
+    /// `from_layer+1..L` (one range launch) then head `L-1`, without
+    /// materializing the intermediate hidden state on the host.
+    pub fn forward_rest_exit(&self, h: &TensorF32, from_layer: usize) -> Result<ExitOutput> {
+        if from_layer >= self.n_layers {
+            bail!("from_layer {from_layer} out of range (L = {})", self.n_layers);
+        }
+        let l = self.n_layers;
+        let b = h.shape()[0];
+        if from_layer + 1 == l {
+            return self.exit_head_arg(Arg::F32(h), b, l - 1);
+        }
+        let lit = self.run_blocks_arg(Arg::F32(h), b, from_layer + 1, l)?;
+        self.exit_head_arg(Arg::Lit(&lit), b, l - 1)
     }
 
     /// Full forward through every exit at once via the fused `prefix_full`
@@ -352,9 +578,10 @@ impl MultiExitModel {
         tokens: &TensorI32,
         split: usize,
     ) -> Result<(TensorF32, ExitOutput)> {
-        let h = self.forward_to(tokens, split)?;
-        let out = self.exit_head(&h, split)?;
-        Ok((h, out))
+        let h0 = self.embed_hidden(tokens)?;
+        let h = self.blocks_between(&h0, 0, split + 1)?;
+        let out = self.exit_head_hidden(&h, split)?;
+        Ok((h.to_tensor()?, out))
     }
 
     /// Cover `n` rows with compiled batch sizes (see [`plan_batches`]).
@@ -370,6 +597,7 @@ impl std::fmt::Debug for MultiExitModel {
             .field("style", &self.style)
             .field("layers", &self.n_layers)
             .field("classes", &self.weights.n_classes)
+            .field("fused_ranges", &self.chain.len())
             .finish()
     }
 }

@@ -102,6 +102,15 @@ impl ModelWeights {
         Ok(ModelWeights { n_layers, n_classes, embed, blocks, heads })
     }
 
+    /// Argument assembly for a fused `chain{n}` block-range graph covering
+    /// layers `start..end` (0-based, end exclusive): each layer's parameters
+    /// in canonical [`BLOCK_PARAM_ORDER`], layers in ascending order —
+    /// exactly the positional order `python/compile/model.py::chain_fn`
+    /// lowers with.
+    pub fn block_range_args(&self, start: usize, end: usize) -> impl Iterator<Item = &TensorF32> {
+        self.blocks[start..end].iter().flat_map(|b| b.iter())
+    }
+
     /// Flat argument list for the `prefix_full` graph: embed params, then all
     /// block params, then all head params (matches the AOT flat order).
     pub fn prefix_full_args(&self) -> Vec<&TensorF32> {
@@ -242,6 +251,25 @@ mod tests {
         assert_eq!(w.blocks[0].len(), 16);
         assert_eq!(w.heads[1].len(), 4);
         assert_eq!(w.prefix_full_args().len(), 4 + 2 * 16 + 2 * 4);
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn block_range_args_cover_layers_in_order() {
+        let path = temp_file(&tiny_weights_file(2, 3));
+        let w = ModelWeights::load(&path, 2).unwrap();
+        let full: Vec<&TensorF32> = w.block_range_args(0, 2).collect();
+        assert_eq!(full.len(), 2 * BLOCK_PARAM_ORDER.len());
+        // same references, same order, as walking the per-layer tables
+        let manual: Vec<&TensorF32> =
+            w.blocks.iter().flat_map(|b| b.iter()).collect();
+        for (a, b) in full.iter().zip(&manual) {
+            assert!(std::ptr::eq(*a, *b));
+        }
+        let tail: Vec<&TensorF32> = w.block_range_args(1, 2).collect();
+        assert_eq!(tail.len(), BLOCK_PARAM_ORDER.len());
+        assert!(std::ptr::eq(tail[0], manual[BLOCK_PARAM_ORDER.len()]));
+        assert!(w.block_range_args(1, 1).next().is_none());
         std::fs::remove_file(path).unwrap();
     }
 

@@ -13,7 +13,7 @@
 pub mod executable;
 pub mod literal;
 
-pub use executable::{Executable, Runtime};
+pub use executable::{thread_launches, CacheStats, Executable, LruMap, Runtime};
 
 use std::sync::Arc;
 

@@ -124,7 +124,7 @@ impl<'m> CoInferencePipeline<'m> {
             TransferResult::Delivered { ms, .. } => {
                 latency_ms += ms;
                 let t1 = Instant::now();
-                let h_final = self.model.forward_rest(&h, split - 1)?;
+                let h_final = self.model.forward_rest(h, split - 1)?;
                 let final_out = self.model.exit_head(&h_final, l - 1)?;
                 let cloud_host_ms = t1.elapsed().as_secs_f64() * 1e3;
                 host_compute_ms += cloud_host_ms;
@@ -150,7 +150,7 @@ impl<'m> CoInferencePipeline<'m> {
                 // Service outage (LEE/DEE scenario): degrade to full
                 // on-device inference — finish the remaining layers locally.
                 let t1 = Instant::now();
-                let h_final = self.model.forward_rest(&h, split - 1)?;
+                let h_final = self.model.forward_rest(h, split - 1)?;
                 let final_out = self.model.exit_head(&h_final, l - 1)?;
                 let local_ms = t1.elapsed().as_secs_f64() * 1e3;
                 host_compute_ms += local_ms;

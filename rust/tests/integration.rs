@@ -267,6 +267,7 @@ fn full_coordinator_round_trip_answers_every_request() {
             batch_sizes: m.batch_sizes.clone(),
             max_wait: std::time::Duration::from_millis(2),
         },
+        coalesce: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -332,6 +333,7 @@ fn pipelined_matches_serial_decisions() {
                     batch_sizes: m.batch_sizes.clone(),
                     max_wait: std::time::Duration::from_millis(2),
                 },
+                coalesce: Default::default(),
             };
             let router = Router::new(RouterConfig::default());
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -392,6 +394,7 @@ fn pipelined_service_answers_concurrent_producers_in_order() {
             batch_sizes: m.batch_sizes.clone(),
             max_wait: std::time::Duration::from_millis(2),
         },
+        coalesce: Default::default(),
     };
     let router = Router::new(RouterConfig { max_inflight: 32 });
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -433,6 +436,237 @@ fn pipelined_service_answers_concurrent_producers_in_order() {
 }
 
 #[test]
+fn fused_block_ranges_match_per_block_chain_bitexact() {
+    // Tentpole invariant: one fused `chain{n}` launch over blocks[i..j)
+    // must be *bit-identical* to iterating the single-block executable —
+    // this is what keeps every policy-equivalence guarantee intact when the
+    // serving path switches to partition launches.  Random (batch, i, j,
+    // tokens) cases cover all compiled batch sizes and range positions.
+    use splitee::util::prop::{check, PropConfig};
+
+    let Some(m) = manifest() else { return };
+    let runtime = fresh_runtime();
+    let model = MultiExitModel::load(m, &runtime, "sst2", "elasticbert").unwrap();
+    if !model.has_fused_ranges() {
+        eprintln!("SKIP: artifacts predate chain graphs (re-run `make artifacts`)");
+        return;
+    }
+    let l = m.model.n_layers;
+    let seq = m.model.seq_len;
+    let vocab = m.model.vocab as u64;
+    let sizes = m.batch_sizes.clone();
+    check(
+        PropConfig { cases: 24, seed: 0xFACE },
+        |rng, _size| {
+            let b = sizes[rng.below(sizes.len() as u64) as usize];
+            let start = rng.below(l as u64) as usize;
+            let len = 1 + rng.below((l - start) as u64) as usize;
+            let tokens: Vec<i32> = (0..b * seq).map(|_| rng.below(vocab) as i32).collect();
+            (b, start, start + len, tokens)
+        },
+        |(b, start, end, tokens)| {
+            let t = TensorI32::new(vec![*b, seq], tokens.clone()).unwrap();
+            let h0 = model.embed(&t).unwrap();
+            let fused = model.forward_range(&h0, *start, *end).unwrap();
+            let mut step = h0;
+            for layer in *start..*end {
+                step = model.block(&step, layer).unwrap();
+            }
+            splitee::prop_assert!(
+                fused.shape() == step.shape(),
+                "shape {:?} vs {:?}",
+                fused.shape(),
+                step.shape()
+            );
+            for (i, (a, c)) in fused.data().iter().zip(step.data()).enumerate() {
+                splitee::prop_assert!(
+                    a.to_bits() == c.to_bits(),
+                    "range [{start},{end}) b={b}: element {i} fused {a:?} != per-block {c:?}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn executable_cache_lru_eviction_and_hit_counters() {
+    use splitee::runtime::Client;
+
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::with_capacity(Client::cpu().expect("PJRT CPU client"), 2);
+    let p_block1 = m.hlo_path("block", 1).unwrap();
+    let p_block8 = m.hlo_path("block", 8).unwrap();
+    let p_embed1 = m.hlo_path("embed", 1).unwrap();
+    rt.load(&p_block1).unwrap(); // miss (compile)
+    rt.load(&p_block1).unwrap(); // hit
+    rt.load(&p_block8).unwrap(); // miss
+    rt.load(&p_embed1).unwrap(); // miss -> evicts block1 (least recent)
+    assert_eq!(rt.cached_count(), 2, "capacity bound holds");
+    rt.load(&p_block1).unwrap(); // miss again: it was evicted
+    let s = rt.cache_stats();
+    assert_eq!(s.hits, 1, "stats: {s:?}");
+    assert_eq!(s.misses, 4, "stats: {s:?}");
+    assert_eq!(s.evictions, 2, "stats: {s:?}");
+    assert_eq!(s.resident, 2);
+}
+
+#[test]
+fn one_fused_launch_per_partition_verified_by_counters() {
+    // Acceptance: the edge stage performs exactly one block-range launch per
+    // batch (plus embed and exit head), and the cloud stage one fused
+    // forward_rest (+ final head) launch pair per coalesced group.
+    use splitee::coordinator::service::{CoalesceConfig, PolicyKind};
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+    use splitee::sim::LinkSim;
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let task = m.source_task("imdb").unwrap().clone();
+    let runtime = fresh_runtime();
+    let model = Arc::new(MultiExitModel::load(m, &runtime, &task.name, "elasticbert").unwrap());
+    if !model.has_fused_ranges() {
+        eprintln!("SKIP: artifacts predate chain graphs (re-run `make artifacts`)");
+        return;
+    }
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+    let n = 40usize;
+
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::four_g(), 5);
+    let config = ServiceConfig {
+        // static split + unreachable alpha: every row offloads; the full
+        // batches keep every group at the row bound, so launch counts are
+        // deterministic (the merge path itself is covered by
+        // coalesced_offload_groups_merge_adjacent_batches_and_preserve_results)
+        policy: PolicyKind::Fixed(4),
+        alpha: 1.1,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: m.batch_sizes.clone(),
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        coalesce: CoalesceConfig::default(),
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    service.link.outage_rate = 0.0; // keep every offload an offload
+    let (tx, rx) = std::sync::mpsc::channel();
+    for i in 0..n {
+        router.submit(data.sample_tokens(i % data.len()), tx.clone()).unwrap();
+    }
+    drop(tx);
+    router.shutdown();
+    service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+    let mut served = 0usize;
+    while rx.recv().is_ok() {
+        served += 1;
+    }
+    assert_eq!(served, n);
+
+    let met = &service.metrics;
+    assert!(met.batches > 0);
+    assert_eq!(
+        met.edge_launches,
+        3 * met.batches,
+        "edge stage must be embed + one fused block-range + one exit head per batch"
+    );
+    assert_eq!(met.offloaded, n as u64, "alpha > 1 forces every row to offload");
+    assert!(met.cloud_groups > 0);
+    assert_eq!(
+        met.cloud_launches,
+        2 * met.cloud_groups,
+        "cloud stage must be one fused forward_rest + one final head per group"
+    );
+    assert!(met.cloud_groups <= met.batches);
+}
+
+#[test]
+fn coalesced_offload_groups_merge_adjacent_batches_and_preserve_results() {
+    // Exercises the actual cross-batch merge path: two adjacent singleton
+    // batches with the same static split must coalesce into one fused cloud
+    // launch, and every per-request answer must match the serial path where
+    // each batch's continuation runs alone.
+    use splitee::coordinator::service::{CoalesceConfig, PolicyKind};
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+    use splitee::sim::LinkSim;
+    use std::sync::Arc;
+
+    let Some(m) = manifest() else { return };
+    let task = m.source_task("imdb").unwrap().clone();
+    let runtime = fresh_runtime();
+    let model = Arc::new(MultiExitModel::load(m, &runtime, &task.name, "elasticbert").unwrap());
+    if !model.has_fused_ranges() {
+        eprintln!("SKIP: artifacts predate chain graphs (re-run `make artifacts`)");
+        return;
+    }
+    let info = m.dataset("imdb").unwrap();
+    let data = Dataset::load(&m.root.join(&info.file), "imdb").unwrap();
+    // 10 prefilled requests form batches of [8, 1, 1]: the full batch is
+    // already at the row bound (its group flushes untouched), while the two
+    // singleton batches offload one row each and must merge under the
+    // generous deadline below.
+    let n = 10usize;
+
+    let mut runs: Vec<Vec<(u64, usize, usize, bool)>> = Vec::new();
+    for pipelined in [false, true] {
+        let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+        let mut link = LinkSim::new(NetworkProfile::four_g(), 9);
+        link.outage_rate = 0.0; // keep every offload an offload
+        let config = ServiceConfig {
+            policy: PolicyKind::Fixed(4),
+            alpha: 1.1, // nothing exits: every row offloads
+            beta: 1.0,
+            batcher: BatcherConfig {
+                batch_sizes: m.batch_sizes.clone(),
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            coalesce: CoalesceConfig {
+                enabled: true,
+                max_wait: std::time::Duration::from_secs(1),
+            },
+        };
+        let router = Router::new(RouterConfig::default());
+        let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..n {
+            router.submit(data.sample_tokens(i), tx.clone()).unwrap();
+        }
+        drop(tx);
+        router.shutdown();
+        if pipelined {
+            service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+            let met = &service.metrics;
+            assert_eq!(met.offloaded, n as u64);
+            assert_eq!(
+                met.coalesced_batches, 1,
+                "the two singleton batches must merge into one group"
+            );
+            assert_eq!(met.cloud_groups, 2, "full batch + merged singleton pair");
+            assert_eq!(
+                met.cloud_launches,
+                2 * met.cloud_groups,
+                "one fused forward_rest + one final head per group"
+            );
+        } else {
+            service.run_serial(Arc::clone(&router), config.batcher.clone()).unwrap();
+        }
+        let mut replies: Vec<(u64, usize, usize, bool)> = Vec::new();
+        while let Ok(r) = rx.recv() {
+            replies.push((r.id, r.prediction, r.infer_layer, r.offloaded));
+        }
+        replies.sort_unstable();
+        assert_eq!(replies.len(), n);
+        runs.push(replies);
+    }
+    // same final answers whether each continuation ran alone (serial) or in
+    // one merged launch (pipelined + coalescing): batch execution is
+    // row-independent (cf. batched_execution_matches_single)
+    assert_eq!(runs[0], runs[1], "coalescing must not change any answer");
+}
+
+#[test]
 fn service_outage_falls_back_on_device() {
     use splitee::coordinator::service::PolicyKind;
     use splitee::coordinator::{Batcher, BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
@@ -457,6 +691,7 @@ fn service_outage_falls_back_on_device() {
             batch_sizes: m.batch_sizes.clone(),
             max_wait: std::time::Duration::from_millis(1),
         },
+        coalesce: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
