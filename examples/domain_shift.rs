@@ -13,7 +13,7 @@ use splitee::config::{Manifest, Settings};
 use splitee::cost::CostModel;
 use splitee::experiments::ConfidenceCache;
 use splitee::policy::{oracle_split, Policy, SampleView, SplitEeSPolicy};
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::util::args::Args;
 use splitee::util::rng::Rng;
 
@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     let per_phase = args.get_num("per-phase", 3000usize).map_err(anyhow::Error::msg)?;
 
     let manifest = Manifest::load(&settings.artifacts_dir)?;
-    let runtime = Runtime::cpu()?;
+    let backend = Backend::from_name(&settings.backend)?;
     let l = manifest.model.n_layers;
     let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
 
@@ -38,7 +38,7 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(settings.seed);
 
     for (phase, dataset) in phases.iter().enumerate() {
-        let cache = ConfidenceCache::load_or_build(&manifest, &runtime, dataset, "elasticbert")?;
+        let cache = ConfidenceCache::load_or_build(&manifest, &backend, dataset, "elasticbert")?;
         let profiles: Vec<(Vec<f32>, Vec<f32>)> = (0..cache.n_samples)
             .map(|i| (cache.sample_conf(i), cache.sample_ent(i)))
             .collect();

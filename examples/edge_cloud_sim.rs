@@ -15,7 +15,7 @@ use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
 use splitee::model::MultiExitModel;
 use splitee::policy::SplitEePolicy;
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::sim::{CoInferencePipeline, LinkSim};
 use splitee::util::args::Args;
 use splitee::util::stats::Summary;
@@ -27,9 +27,9 @@ fn main() -> Result<()> {
     let n = args.get_num("requests", 300usize).map_err(anyhow::Error::msg)?;
 
     let manifest = Manifest::load(&settings.artifacts_dir)?;
-    let runtime = Runtime::cpu()?;
+    let backend = Backend::from_name(&settings.backend)?;
     let task = manifest.source_task("imdb")?.clone();
-    let model = MultiExitModel::load(&manifest, &runtime, &task.name, "elasticbert")?;
+    let model = MultiExitModel::load(&manifest, &backend, &task.name, "elasticbert")?;
     let data = Dataset::load(
         &manifest.root.join(&manifest.dataset("imdb")?.file),
         "imdb",

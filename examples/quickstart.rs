@@ -11,20 +11,20 @@ use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
 use splitee::model::MultiExitModel;
 use splitee::policy::{Policy, SampleView, SplitEePolicy};
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::sim::{CoInferencePipeline, LinkSim};
 
 fn main() -> Result<()> {
     splitee::util::logging::init(1);
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let runtime = Runtime::cpu()?;
-    println!("PJRT platform: {}", runtime.client().platform_name());
+    let backend = Backend::auto();
+    println!("compute backend: {}", backend.name());
 
     // 1. Load the fine-tuned multi-exit model for the IMDb task (trained on
     //    the SST-2-like source domain, evaluated cross-domain — the paper's
     //    unsupervised setting).
     let task = manifest.source_task("imdb")?.clone();
-    let model = MultiExitModel::load(&manifest, &runtime, &task.name, "elasticbert")?;
+    let model = MultiExitModel::load(&manifest, &backend, &task.name, "elasticbert")?;
     println!(
         "model: {} layers, {} classes, exit threshold alpha = {}",
         model.n_layers(),

@@ -6,6 +6,7 @@
 //! ```text
 //! cargo run --release --example serve_stream -- \
 //!     [--dataset imdb] [--requests 500] [--network 4g] [--rate 200] \
+//!     [--backend auto|reference|pjrt] \
 //!     [--policy splitee|splitee-s|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
@@ -22,7 +23,7 @@ use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service};
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::{Dataset, SampleStream};
 use splitee::model::MultiExitModel;
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::sim::LinkSim;
 use splitee::util::args::Args;
 use splitee::util::rng::Rng;
@@ -33,7 +34,7 @@ fn main() -> Result<()> {
     let settings = Settings::from_args(&args).map_err(anyhow::Error::msg)?;
 
     let manifest = Manifest::load(&settings.artifacts_dir)?;
-    let runtime = Runtime::cpu()?;
+    let backend = Backend::from_name(&settings.backend)?;
     let dataset_name = args.get_or("dataset", "imdb").to_string();
     let info = manifest.dataset(&dataset_name)?.clone();
     let task = manifest.source_task(&dataset_name)?.clone();
@@ -50,7 +51,7 @@ fn main() -> Result<()> {
     };
 
     let model = Arc::new(MultiExitModel::load(
-        &manifest, &runtime, &task.name, "elasticbert",
+        &manifest, &backend, &task.name, "elasticbert",
     )?);
     let dataset = Dataset::load(&manifest.root.join(&info.file), &dataset_name)?;
     let cm = CostModel::paper(network.offload_lambda, settings.mu, model.n_layers());

@@ -8,7 +8,7 @@ use splitee::experiments::figures::{sweep_dataset, OFFLOAD_SWEEP};
 use splitee::experiments::runner::run_policy_repeated;
 use splitee::experiments::ConfidenceCache;
 use splitee::policy::SplitEePolicy;
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::util::bench::BenchSuite;
 
 fn main() {
@@ -29,12 +29,12 @@ fn main() {
     );
     if dir.join("manifest.json").exists() {
         let manifest = Manifest::load(&dir).expect("manifest");
-        let runtime = Runtime::cpu().expect("client");
+        let backend = Backend::auto();
         let mut settings = Settings::default();
         settings.artifacts_dir = dir;
         settings.reps = 3;
         let real =
-            ConfidenceCache::load_or_build(&manifest, &runtime, "imdb", "elasticbert").unwrap();
+            ConfidenceCache::load_or_build(&manifest, &backend, "imdb", "elasticbert").unwrap();
         suite.bench("sweep_o_imdb_reps3_both_algos", 0, 2, || {
             for algo in ["splitee", "splitee-s"] {
                 std::hint::black_box(

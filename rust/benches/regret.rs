@@ -6,7 +6,7 @@ use splitee::cost::CostModel;
 use splitee::experiments::regret::regret_curves_with_alpha;
 use splitee::experiments::ConfidenceCache;
 use splitee::policy::{Policy, SplitEePolicy, SplitEeSPolicy};
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::util::bench::BenchSuite;
 
 fn main() {
@@ -34,11 +34,11 @@ fn main() {
     );
     if dir.join("manifest.json").exists() {
         let manifest = Manifest::load(&dir).expect("manifest");
-        let runtime = Runtime::cpu().expect("client");
+        let backend = Backend::auto();
         let settings = Settings { artifacts_dir: dir, ..Settings::default() };
         let _ = settings;
         let real =
-            ConfidenceCache::load_or_build(&manifest, &runtime, "imdb", "elasticbert").unwrap();
+            ConfidenceCache::load_or_build(&manifest, &backend, "imdb", "elasticbert").unwrap();
         let alpha = manifest.source_task("imdb").unwrap().alpha;
         suite.bench("regret_imdb_reps5", 0, 2, || {
             let mut mk: Box<dyn FnMut() -> Box<dyn Policy>> =

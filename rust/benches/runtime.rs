@@ -1,9 +1,12 @@
-//! PJRT execute latency per compiled graph at each batch size — the L2/L3
-//! boundary the serving loop pays per layer.  Needs `make artifacts`.
+//! Per-graph execute latency at each batch size — the L2/L3 boundary the
+//! serving loop pays per layer.  Runs through whatever backend
+//! [`Backend::auto`] resolves; without artifacts it measures the synthetic
+//! reference-backend model instead (the suite name records neither — check
+//! the printed backend line when comparing runs).
 
 use splitee::config::Manifest;
-use splitee::model::MultiExitModel;
-use splitee::runtime::Runtime;
+use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::runtime::Backend;
 use splitee::tensor::TensorI32;
 use splitee::util::bench::BenchSuite;
 
@@ -11,19 +14,40 @@ fn main() {
     let dir = std::path::PathBuf::from(
         std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP bench runtime: no artifacts (run `make artifacts`)");
-        return;
-    }
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let runtime = Runtime::cpu().expect("client");
-    let model = MultiExitModel::load(&manifest, &runtime, "sst2", "elasticbert").expect("model");
+    let (model, seq_len, vocab, cache_batch) = if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let backend = Backend::auto();
+        let model =
+            MultiExitModel::load(&manifest, &backend, "sst2", "elasticbert").expect("model");
+        (
+            model,
+            manifest.model.seq_len,
+            manifest.model.vocab,
+            manifest.cache_batch,
+        )
+    } else {
+        eprintln!("no artifacts — benching the reference backend on a synthetic model");
+        let (layers, d, ff, vocab, seq, classes) = (12, 32, 64, 256, 16, 2);
+        let weights = ModelWeights::synthetic(layers, d, ff, vocab, seq, classes, 0xBE7C);
+        let model = MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            4,
+            seq,
+            vec![1, 8],
+            &Backend::reference(),
+        )
+        .expect("synthetic model");
+        (model, seq, vocab, 8)
+    };
+    println!("runtime bench on the {} backend", model.backend_name());
     let mut suite = BenchSuite::new("runtime");
 
-    for &b in &manifest.batch_sizes {
+    for &b in model.batch_sizes() {
         let tokens = TensorI32::new(
-            vec![b, manifest.model.seq_len],
-            (0..(b * manifest.model.seq_len) as i32).map(|i| i % 997).collect(),
+            vec![b, seq_len],
+            (0..(b * seq_len) as i32).map(|i| i % vocab as i32).collect(),
         )
         .unwrap();
         let h = model.embed(&tokens).unwrap();
@@ -37,16 +61,17 @@ fn main() {
         suite.bench_items(&format!("exit_head_b{b}"), 20, 200, b as f64, || {
             std::hint::black_box(model.exit_head(&h, 0).unwrap());
         });
-        suite.bench_items(&format!("full_12_layers_b{b}"), 5, 50, b as f64, || {
-            std::hint::black_box(model.run_split(&tokens, 11).unwrap());
+        let l = model.n_layers();
+        suite.bench_items(&format!("full_{l}_layers_b{b}"), 5, 50, b as f64, || {
+            std::hint::black_box(model.run_split(&tokens, l - 1).unwrap());
         });
     }
 
     // the cache-builder graph
-    let cb = manifest.cache_batch;
+    let cb = cache_batch;
     let tokens = TensorI32::new(
-        vec![cb, manifest.model.seq_len],
-        (0..(cb * manifest.model.seq_len) as i32).map(|i| i % 997).collect(),
+        vec![cb, seq_len],
+        (0..(cb * seq_len) as i32).map(|i| i % vocab as i32).collect(),
     )
     .unwrap();
     suite.bench_items(&format!("prefix_full_b{cb}"), 3, 30, cb as f64, || {

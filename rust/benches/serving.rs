@@ -1,6 +1,12 @@
 //! End-to-end serving bench: requests/s and per-request latency through
 //! router -> batcher -> the staged pipeline (the deliverable-(e) driver,
-//! timed).  Needs `make artifacts`.
+//! timed).
+//!
+//! Runs everywhere: with `make artifacts` it replays the real IMDb workload
+//! through whatever backend [`Backend::auto`] resolves; without artifacts it
+//! serves a synthetic reference-backend model, so CI still emits
+//! machine-comparable datapoints (the `backend` field in the JSON says which
+//! configuration produced them — only compare like with like).
 //!
 //! Besides the BenchSuite baseline (`results/bench_serving.json`), this
 //! writes `BENCH_serving.json` with headline req/s per policy, simulated
@@ -19,27 +25,62 @@ use splitee::coordinator::service::PolicyKind;
 use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
-use splitee::model::MultiExitModel;
-use splitee::runtime::Runtime;
+use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::runtime::Backend;
 use splitee::sim::LinkSim;
+use splitee::tensor::TensorI32;
 use splitee::util::bench::BenchSuite;
+use splitee::util::rng::Rng;
 
-fn main() {
+/// Real-artifact workload when available, synthetic reference model else.
+fn workload(n: usize) -> (Arc<MultiExitModel>, Vec<TensorI32>, f64) {
     let dir = std::path::PathBuf::from(
         std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
-    if !dir.join("manifest.json").exists() {
-        eprintln!("SKIP bench serving: no artifacts (run `make artifacts`)");
-        return;
+    if dir.join("manifest.json").exists() {
+        let manifest = Manifest::load(&dir).expect("manifest");
+        let backend = Backend::auto();
+        let task = manifest.source_task("imdb").expect("task").clone();
+        let model = Arc::new(
+            MultiExitModel::load(&manifest, &backend, &task.name, "elasticbert").expect("model"),
+        );
+        let info = manifest.dataset("imdb").expect("dataset");
+        let data = Dataset::load(&manifest.root.join(&info.file), "imdb").expect("data");
+        let tokens = (0..n).map(|i| data.sample_tokens(i % data.len())).collect();
+        return (model, tokens, task.alpha);
     }
-    let manifest = Manifest::load(&dir).expect("manifest");
-    let runtime = Runtime::cpu().expect("client");
-    let task = manifest.source_task("imdb").expect("task").clone();
+    eprintln!("no artifacts — serving a synthetic model on the reference backend");
+    let (layers, d, ff, vocab, seq, classes) = (12, 32, 64, 256, 16, 2);
+    let weights = ModelWeights::synthetic(layers, d, ff, vocab, seq, classes, 0xBE7C);
     let model = Arc::new(
-        MultiExitModel::load(&manifest, &runtime, &task.name, "elasticbert").expect("model"),
+        MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            4,
+            seq,
+            vec![1, 8],
+            &Backend::reference(),
+        )
+        .expect("synthetic model"),
     );
-    let info = manifest.dataset("imdb").expect("dataset");
-    let data = Dataset::load(&manifest.root.join(&info.file), "imdb").expect("data");
+    let mut rng = Rng::new(0x5EED);
+    let tokens = (0..n)
+        .map(|_| {
+            TensorI32::new(
+                vec![1, seq],
+                (0..seq).map(|_| rng.below(vocab as u64) as i32).collect(),
+            )
+            .expect("tokens")
+        })
+        .collect();
+    (model, tokens, 0.8)
+}
+
+fn main() {
+    let n = 200usize;
+    let (model, request_tokens, alpha) = workload(n);
+    println!("serving bench on the {} backend", model.backend_name());
     let mut suite = BenchSuite::new("serving");
 
     // per-policy tail-latency + launch-amortization stats, captured from the
@@ -53,16 +94,15 @@ fn main() {
         ("serve_200req_final_exit", PolicyKind::FinalExit),
         ("serve_200req_fixed4", PolicyKind::Fixed(4)),
     ] {
-        let n = 200usize;
         suite.bench_items(label, 0, 3, n as f64, || {
             let cm = CostModel::paper(5.0, 0.1, model.n_layers());
             let link = LinkSim::new(NetworkProfile::three_g(), 7);
             let config = ServiceConfig {
                 policy: kind,
-                alpha: task.alpha,
+                alpha,
                 beta: 1.0,
                 batcher: BatcherConfig {
-                    batch_sizes: manifest.batch_sizes.clone(),
+                    batch_sizes: model.batch_sizes().to_vec(),
                     max_wait: Duration::from_millis(2),
                 },
                 coalesce: Default::default(),
@@ -71,7 +111,7 @@ fn main() {
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
             let producer = {
                 let router = Arc::clone(&router);
-                let tokens: Vec<_> = (0..n).map(|i| data.sample_tokens(i % data.len())).collect();
+                let tokens: Vec<_> = request_tokens.clone();
                 std::thread::spawn(move || {
                     let (tx, rx) = std::sync::mpsc::channel();
                     for t in tokens {
@@ -101,17 +141,22 @@ fn main() {
         });
     }
 
-    // raw PJRT roofline for comparison: back-to-back full-depth batches of 8
+    // raw backend roofline for comparison: back-to-back full-depth batches
     let roofline_rps = {
-        let tokens = data.range_tokens(0, 8);
+        let b = *model.batch_sizes().iter().max().unwrap();
+        let mut rows = request_tokens[0].clone();
+        while rows.shape()[0] < b {
+            let next = request_tokens[rows.shape()[0] % request_tokens.len()].clone();
+            rows.extend_rows(&next).expect("roofline batch");
+        }
         let t0 = Instant::now();
         let iters = 25;
         for _ in 0..iters {
-            std::hint::black_box(model.run_split(&tokens, model.n_layers() - 1).unwrap());
+            std::hint::black_box(model.run_split(&rows, model.n_layers() - 1).unwrap());
         }
-        let per_req = t0.elapsed().as_secs_f64() / (iters * 8) as f64;
+        let per_req = t0.elapsed().as_secs_f64() / (iters * b) as f64;
         println!(
-            "  raw full-depth roofline: {:.0} req/s ({:.2} ms/request at B=8)",
+            "  raw full-depth roofline: {:.0} req/s ({:.2} ms/request at B={b})",
             1.0 / per_req,
             per_req * 1e3
         );
@@ -131,6 +176,10 @@ fn main() {
         baseline.insert(k, Json::Num(v));
     }
     baseline.insert("raw_roofline_rps".to_string(), Json::Num(roofline_rps));
+    baseline.insert(
+        "backend".to_string(),
+        Json::Str(model.backend_name().to_string()),
+    );
     if let Err(e) = std::fs::write("BENCH_serving.json", Json::Obj(baseline).to_string()) {
         eprintln!("warning: could not write BENCH_serving.json: {e}");
     }

@@ -8,7 +8,7 @@ use splitee::cost::CostModel;
 use splitee::experiments::runner::run_policy_repeated;
 use splitee::experiments::{table2, ConfidenceCache};
 use splitee::policy::{FinalExitPolicy, SplitEePolicy, SplitEeSPolicy};
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::util::bench::BenchSuite;
 
 fn main() {
@@ -36,14 +36,14 @@ fn main() {
     // the real thing, when artifacts exist (uses cached confidences)
     if dir.join("manifest.json").exists() {
         let manifest = Manifest::load(&dir).expect("manifest");
-        let runtime = Runtime::cpu().expect("client");
+        let backend = Backend::auto();
         let mut settings = Settings::default();
         settings.artifacts_dir = dir;
         // bench runs must not clobber the canonical results/ files
         settings.results_dir = std::env::temp_dir().join("splitee_bench_results");
         settings.reps = 5; // bench-speed reps; the CLI default is 20
         suite.bench("table2_full_5datasets_reps5", 0, 2, || {
-            std::hint::black_box(table2::run(&manifest, &runtime, &settings).expect("table2"));
+            std::hint::black_box(table2::run(&manifest, &backend, &settings).expect("table2"));
         });
     } else {
         eprintln!("NOTE: no artifacts; full-table bench skipped");

@@ -232,6 +232,9 @@ impl Manifest {
 pub struct Settings {
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
+    /// compute backend: "auto" (pjrt when built + available, else
+    /// reference), "reference", or "pjrt"
+    pub backend: String,
     /// cost-confidence conversion factor mu (paper: 0.1)
     pub mu: f64,
     /// UCB exploration parameter beta (paper: 1.0)
@@ -249,6 +252,7 @@ impl Default for Settings {
         Settings {
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
+            backend: "auto".to_string(),
             mu: 0.1,
             beta: 1.0,
             offload_cost: 5.0,
@@ -268,6 +272,9 @@ impl Settings {
         }
         if let Some(dir) = args.get("results") {
             s.results_dir = PathBuf::from(dir);
+        }
+        if let Some(b) = args.get("backend") {
+            s.backend = b.to_string();
         }
         s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
         s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
@@ -357,6 +364,11 @@ mod tests {
         assert_eq!(s.mu, 0.2);
         assert_eq!(s.reps, 5);
         assert_eq!(s.offload_cost, 3.0);
+        assert_eq!(s.backend, "auto", "backend defaults to auto");
+        let args = Args::parse(
+            ["x", "--backend", "reference"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(Settings::from_args(&args).unwrap().backend, "reference");
     }
 
     #[test]

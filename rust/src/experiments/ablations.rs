@@ -11,7 +11,7 @@ use crate::experiments::report::{write_results, Table};
 use crate::experiments::runner::run_policy_repeated;
 use crate::policy::{AdaptiveThresholdPolicy, PerSamplePolicy, Policy, SplitEePolicy,
                     SplitEeSPolicy};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 pub const BETA_SWEEP: [f64; 5] = [0.25, 0.5, 1.0, 2.0, 4.0];
 pub const MU_SWEEP: [f64; 5] = [0.02, 0.05, 0.1, 0.2, 0.5];
@@ -53,14 +53,14 @@ impl Which {
 
 pub fn run(
     manifest: &Manifest,
-    runtime: &Runtime,
+    backend: &Backend,
     settings: &Settings,
     which: Which,
     dataset: &str,
 ) -> Result<String> {
     let l = manifest.model.n_layers;
     let task = manifest.source_task(dataset)?;
-    let cache = ConfidenceCache::load_or_build(manifest, runtime, dataset, "elasticbert")?;
+    let cache = ConfidenceCache::load_or_build(manifest, backend, dataset, "elasticbert")?;
     let mut rendered = format!("Ablations on {dataset} (reps = {})\n", settings.reps);
 
     if matches!(which, Which::Beta | Which::All) {

@@ -23,7 +23,7 @@ use byteorder::{LittleEndian, ReadBytesExt, WriteBytesExt};
 use crate::config::Manifest;
 use crate::data::Dataset;
 use crate::model::MultiExitModel;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 pub const CACHE_MAGIC: u32 = 0x53504C43;
 pub const FORMAT_VERSION: u32 = 1;
@@ -141,7 +141,7 @@ impl ConfidenceCache {
     /// Load from disk, or build via the model and persist.
     pub fn load_or_build(
         manifest: &Manifest,
-        runtime: &Runtime,
+        backend: &Backend,
         dataset_name: &str,
         style: &str,
     ) -> Result<ConfidenceCache> {
@@ -157,7 +157,7 @@ impl ConfidenceCache {
             .clone()
             .unwrap_or_else(|| dataset_name.to_string());
         log::info!("building cache for {dataset_name} [{style}] (model {source})");
-        let model = MultiExitModel::load(manifest, runtime, &source, style)?;
+        let model = MultiExitModel::load(manifest, backend, &source, style)?;
         let data = Dataset::load(&manifest.root.join(&info.file), dataset_name)?;
         let cache = Self::build(&model, &data, style, true)?;
         std::fs::create_dir_all(path.parent().unwrap())?;

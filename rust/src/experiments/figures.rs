@@ -9,7 +9,7 @@ use crate::experiments::cache::ConfidenceCache;
 use crate::experiments::report::{write_results, Table};
 use crate::experiments::runner::run_policy_repeated;
 use crate::policy::{Policy, SplitEePolicy, SplitEeSPolicy};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// One sweep point.
 #[derive(Debug, Clone)]
@@ -57,7 +57,7 @@ pub fn sweep_dataset(
 }
 
 /// Run figures 3-6 (both algorithms, all datasets) and render.
-pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+pub fn run(manifest: &Manifest, backend: &Backend, settings: &Settings) -> Result<String> {
     let mut rendered = String::new();
     let mut csv = Table::new(&["figure", "algo", "dataset", "o", "acc_pct", "cost_1e4", "offload_rate"]);
     for (algo, acc_fig, cost_fig) in
@@ -66,7 +66,7 @@ pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Resul
         for dataset in manifest.eval_datasets() {
             log::info!("figures: {algo} on {dataset}");
             let cache =
-                ConfidenceCache::load_or_build(manifest, runtime, &dataset, "elasticbert")?;
+                ConfidenceCache::load_or_build(manifest, backend, &dataset, "elasticbert")?;
             let points = sweep_dataset(manifest, &cache, &dataset, algo, settings)?;
             let mut t = Table::new(&["o (lambda)", "accuracy %", "cost (1e4 lambda)", "offload %"]);
             for p in &points {

@@ -13,7 +13,7 @@ use crate::experiments::cache::ConfidenceCache;
 use crate::experiments::report::{write_results, Table};
 use crate::policy::{oracle_split, reward_for_split, Policy, RandomExitPolicy,
                     SplitEePolicy, SplitEeSPolicy};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -101,7 +101,7 @@ pub fn regret_curves_with_alpha(
 }
 
 /// Run figure 7 for all datasets.
-pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+pub fn run(manifest: &Manifest, backend: &Backend, settings: &Settings) -> Result<String> {
     let mut rendered = String::new();
     let mut csv = Table::new(&["dataset", "algo", "round", "mean_cum_regret", "ci95"]);
     let l = manifest.model.n_layers;
@@ -111,7 +111,7 @@ pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Resul
         let task = manifest.source_task(&dataset)?;
         let alpha = task.alpha;
         let beta = settings.beta;
-        let cache = ConfidenceCache::load_or_build(manifest, runtime, &dataset, "elasticbert")?;
+        let cache = ConfidenceCache::load_or_build(manifest, backend, &dataset, "elasticbert")?;
 
         let seed = settings.seed ^ 0xF16_7;
         let mut algos: Vec<(&str, Box<dyn FnMut() -> Box<dyn Policy>>)> = vec![

@@ -11,9 +11,9 @@ use crate::experiments::cache::ConfidenceCache;
 use crate::experiments::report::{write_results, Table};
 use crate::experiments::runner::run_policy_repeated;
 use crate::policy::{DeeBertPolicy, ElasticBertPolicy, SplitEePolicy};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
-pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+pub fn run(manifest: &Manifest, backend: &Backend, settings: &Settings) -> Result<String> {
     let l = manifest.model.n_layers;
     let cm = CostModel::paper(settings.offload_cost, settings.mu, l);
     let mut table = Table::new(&[
@@ -27,8 +27,8 @@ pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Resul
     let mut count = 0.0;
     for dataset in manifest.eval_datasets() {
         let task = manifest.source_task(&dataset)?;
-        let eb = ConfidenceCache::load_or_build(manifest, runtime, &dataset, "elasticbert")?;
-        let db = ConfidenceCache::load_or_build(manifest, runtime, &dataset, "deebert")?;
+        let eb = ConfidenceCache::load_or_build(manifest, backend, &dataset, "elasticbert")?;
+        let db = ConfidenceCache::load_or_build(manifest, backend, &dataset, "deebert")?;
 
         let mut deebert = DeeBertPolicy::new(task.tau);
         let r_db = run_policy_repeated(&db, &mut deebert, &cm, 1, settings.seed).mean;

@@ -10,7 +10,7 @@ use crate::experiments::report::{fmt_acc_delta, fmt_cost_delta, write_results, T
 use crate::experiments::runner::{run_policy_repeated, EvalResult};
 use crate::policy::{DeeBertPolicy, ElasticBertPolicy, FinalExitPolicy,
                     RandomExitPolicy, SplitEePolicy, SplitEeSPolicy};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// Rows for one dataset: the six models of the paper's Table 2.
 #[derive(Debug, Clone)]
@@ -22,14 +22,14 @@ pub struct DatasetRows {
 /// Run the Table 2 experiment for one dataset.
 pub fn run_dataset(
     manifest: &Manifest,
-    runtime: &Runtime,
+    backend: &Backend,
     dataset: &str,
     settings: &Settings,
 ) -> Result<DatasetRows> {
     let task = manifest.source_task(dataset)?;
     let cm = CostModel::paper(settings.offload_cost, settings.mu, manifest.model.n_layers);
-    let eb_cache = ConfidenceCache::load_or_build(manifest, runtime, dataset, "elasticbert")?;
-    let db_cache = ConfidenceCache::load_or_build(manifest, runtime, dataset, "deebert")?;
+    let eb_cache = ConfidenceCache::load_or_build(manifest, backend, dataset, "elasticbert")?;
+    let db_cache = ConfidenceCache::load_or_build(manifest, backend, dataset, "deebert")?;
     let l = manifest.model.n_layers;
     let reps = settings.reps;
     let seed = settings.seed;
@@ -60,12 +60,12 @@ pub fn run_dataset(
 }
 
 /// Run the whole table and render it paper-style (deltas vs Final-exit).
-pub fn run(manifest: &Manifest, runtime: &Runtime, settings: &Settings) -> Result<String> {
+pub fn run(manifest: &Manifest, backend: &Backend, settings: &Settings) -> Result<String> {
     let datasets = manifest.eval_datasets();
     let mut per_dataset = Vec::new();
     for d in &datasets {
         log::info!("table2: dataset {d}");
-        per_dataset.push(run_dataset(manifest, runtime, d, settings)?);
+        per_dataset.push(run_dataset(manifest, backend, d, settings)?);
     }
 
     // paper-style: first row absolute, then deltas

@@ -12,11 +12,13 @@
 //!   `python/compile/kernels/`, validated against a pure-jnp oracle;
 //! * **L2** — the multi-exit JAX encoder, AOT-lowered to HLO-text artifacts
 //!   (`make artifacts`; python never runs on the request path);
-//! * **L3** — this crate: the PJRT [`runtime`], the multi-exit [`model`]
-//!   executor, the [`policy`] zoo (SplitEE, SplitEE-S and the paper's
-//!   baselines), the edge/cloud [`sim`]ulator, the serving [`coordinator`]
-//!   and the [`experiments`] harness that regenerates every table and figure
-//!   of the paper.
+//! * **L3** — this crate: the pluggable-backend [`runtime`] (an
+//!   always-available pure-Rust `reference` backend, plus the PJRT backend
+//!   behind the `pjrt` cargo feature), the multi-exit [`model`] executor,
+//!   the [`policy`] zoo (SplitEE, SplitEE-S and the paper's baselines), the
+//!   edge/cloud [`sim`]ulator, the serving [`coordinator`] and the
+//!   [`experiments`] harness that regenerates every table and figure of the
+//!   paper.
 //!
 //! Quick start (after `make artifacts && cargo build --release`):
 //!

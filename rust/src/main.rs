@@ -24,7 +24,7 @@ use splitee::data::{Dataset, SampleStream};
 use splitee::experiments::{ablations, figures, regret, report, sec5_4, table2,
                            ConfidenceCache};
 use splitee::model::MultiExitModel;
-use splitee::runtime::Runtime;
+use splitee::runtime::Backend;
 use splitee::sim::LinkSim;
 use splitee::util::args::Args;
 use splitee::util::logging;
@@ -48,35 +48,35 @@ fn run(args: &Args) -> Result<()> {
         "cache" => cache(args, &settings),
         "table1" => table1(&settings),
         "table2" => {
-            let (manifest, runtime) = open(&settings)?;
-            let out = table2::run(&manifest, &runtime, &settings)?;
+            let (manifest, backend) = open(&settings)?;
+            let out = table2::run(&manifest, &backend, &settings)?;
             println!("{out}");
             Ok(())
         }
         "figures" => {
-            let (manifest, runtime) = open(&settings)?;
-            let out = figures::run(&manifest, &runtime, &settings)?;
+            let (manifest, backend) = open(&settings)?;
+            let out = figures::run(&manifest, &backend, &settings)?;
             println!("{out}");
             Ok(())
         }
         "regret" => {
-            let (manifest, runtime) = open(&settings)?;
-            let out = regret::run(&manifest, &runtime, &settings)?;
+            let (manifest, backend) = open(&settings)?;
+            let out = regret::run(&manifest, &backend, &settings)?;
             println!("{out}");
             Ok(())
         }
         "sec54" => {
-            let (manifest, runtime) = open(&settings)?;
-            let out = sec5_4::run(&manifest, &runtime, &settings)?;
+            let (manifest, backend) = open(&settings)?;
+            let out = sec5_4::run(&manifest, &backend, &settings)?;
             println!("{out}");
             Ok(())
         }
         "ablations" => {
-            let (manifest, runtime) = open(&settings)?;
+            let (manifest, backend) = open(&settings)?;
             let which = ablations::Which::parse(args.get_or("which", "all"))
                 .context("--which must be beta|mu|alpha|side|all")?;
             let dataset = args.get_or("dataset", "imdb").to_string();
-            let out = ablations::run(&manifest, &runtime, &settings, which, &dataset)?;
+            let out = ablations::run(&manifest, &backend, &settings, which, &dataset)?;
             println!("{out}");
             Ok(())
         }
@@ -112,6 +112,9 @@ Subcommands
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
   --results DIR     results directory  (default: results)
+  --backend NAME    compute backend: auto|reference|pjrt (default: auto —
+                    pjrt when this build has it, else the pure-Rust
+                    reference backend)
   --o N             offloading cost in lambda units (default: 5)
   --mu X            cost weight in the reward (default: 0.1)
   --beta X          UCB exploration (default: 1.0)
@@ -120,28 +123,28 @@ Common flags
   --quiet / --debug verbosity
 ";
 
-fn open(settings: &Settings) -> Result<(Manifest, Runtime)> {
+fn open(settings: &Settings) -> Result<(Manifest, Backend)> {
     let manifest = Manifest::load(&settings.artifacts_dir)?;
-    let runtime = Runtime::cpu()?;
+    let backend = Backend::from_name(&settings.backend)?;
     log::info!(
-        "platform {} | model {}L d={} | {} tasks, {} datasets",
-        runtime.client().platform_name(),
+        "backend {} | model {}L d={} | {} tasks, {} datasets",
+        backend.name(),
         manifest.model.n_layers,
         manifest.model.d_model,
         manifest.tasks.len(),
         manifest.datasets.len()
     );
-    Ok((manifest, runtime))
+    Ok((manifest, backend))
 }
 
 /// `splitee check` — end-to-end artifact sanity: compile + run one sample
 /// through every graph and compare the layered path to prefix_full.
 fn check(settings: &Settings) -> Result<()> {
-    let (manifest, runtime) = open(settings)?;
+    let (manifest, backend) = open(settings)?;
     let mut failures = 0;
     for (task_name, task) in &manifest.tasks {
         for style in task.weights.keys() {
-            let model = MultiExitModel::load(&manifest, &runtime, task_name, style)?;
+            let model = MultiExitModel::load(&manifest, &backend, task_name, style)?;
             // one synthetic sample through the layered path
             let tokens = splitee::tensor::TensorI32::new(
                 vec![1, manifest.model.seq_len],
@@ -168,20 +171,20 @@ fn check(settings: &Settings) -> Result<()> {
     if failures > 0 {
         bail!("{failures} artifact checks failed");
     }
-    println!("all artifact checks passed ({} modules compiled)", runtime.cached_count());
+    println!("all artifact checks passed (backend: {})", backend.name());
     Ok(())
 }
 
 /// `splitee cache` — pre-build every confidence cache.
 fn cache(args: &Args, settings: &Settings) -> Result<()> {
-    let (manifest, runtime) = open(settings)?;
+    let (manifest, backend) = open(settings)?;
     let datasets = args
         .get_list("datasets")
         .unwrap_or_else(|| manifest.eval_datasets());
     for d in &datasets {
         for style in ["elasticbert", "deebert"] {
             let t0 = std::time::Instant::now();
-            let c = ConfidenceCache::load_or_build(&manifest, &runtime, d, style)?;
+            let c = ConfidenceCache::load_or_build(&manifest, &backend, d, style)?;
             println!(
                 "{d}/{style}: {} samples x {} layers ({:.1}s)",
                 c.n_samples,
@@ -221,7 +224,7 @@ fn table1(settings: &Settings) -> Result<()> {
 /// `splitee serve` — live serving through router -> batcher -> service with
 /// the co-inference simulator, driven by a dataset replay workload.
 fn serve(args: &Args, settings: &Settings) -> Result<()> {
-    let (manifest, runtime) = open(settings)?;
+    let (manifest, backend) = open(settings)?;
     let dataset_name = args.get_or("dataset", "imdb").to_string();
     let info = manifest.dataset(&dataset_name)?.clone();
     let task = manifest.source_task(&dataset_name)?.clone();
@@ -242,7 +245,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
         .context("--network must be wifi|5g|4g|3g")?;
 
     let model = Arc::new(MultiExitModel::load(
-        &manifest, &runtime, &task.name, "elasticbert",
+        &manifest, &backend, &task.name, "elasticbert",
     )?);
     let dataset = Dataset::load(&manifest.root.join(&info.file), &dataset_name)?;
     let cm = CostModel::paper(network.offload_lambda, settings.mu, model.n_layers());

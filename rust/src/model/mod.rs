@@ -1,16 +1,20 @@
-//! Multi-exit model execution on top of the PJRT runtime.
+//! Multi-exit model execution on top of the pluggable compute backends.
 //!
-//! [`MultiExitModel`] binds one trained task's weights to the compiled
-//! `embed` / `block` / `exit_head` graphs and exposes the layer-by-layer
-//! operations the coordinator needs for true early-exit serving: run blocks
-//! up to the split layer on the "edge", evaluate the exit head there, and —
-//! if offloading — continue through the remaining blocks on the "cloud".
+//! [`MultiExitModel`] binds one trained task's weights to a backend-loaded
+//! executor (compiled PJRT graphs, or the pure-Rust reference math) and
+//! exposes the layer-by-layer operations the coordinator needs for true
+//! early-exit serving: run blocks up to the split layer on the "edge",
+//! evaluate the exit head there, and — if offloading — continue through the
+//! remaining blocks on the "cloud".  [`HiddenState`] is the backend-owned
+//! activation handle that travels between those partition launches.
 
 pub mod multi_exit;
 pub mod weights;
 
-pub use multi_exit::{ExitOutput, HiddenState, MultiExitModel};
+pub use multi_exit::{ExitOutput, MultiExitModel};
 pub use weights::ModelWeights;
+
+pub use crate::runtime::Hidden as HiddenState;
 
 /// Plan how to cover `n` samples with the compiled batch sizes.
 ///

@@ -1,19 +1,20 @@
-//! The multi-exit encoder bound to trained weights, executing compiled
-//! PJRT graphs as fused **partition ranges**.
+//! The multi-exit encoder bound to trained weights, executed through a
+//! pluggable compute backend as fused **partition ranges**.
 //!
 //! The serving hot path is partitioned at the split layer: one fused
-//! `chain{n}` executable covers `blocks[i..j)` in a single launch (the
-//! activation stays device-resident inside the module), the exit head is one
-//! more launch, and the hidden state crosses the host boundary only where
-//! the system semantics require it — at the split point (the simulated
-//! uplink payload) and at final outputs.  Between launches the activation is
-//! carried as a [`HiddenState`] (a raw XLA literal), never a `TensorF32`.
-//! When an artifact set predates the chain graphs the model falls back to
-//! per-block launches with the same literal passthrough, so outputs are
-//! identical either way.
+//! block-range launch covers `blocks[i..j)`, the exit head is one more
+//! launch, and the hidden state crosses the host boundary only where the
+//! system semantics require it — at the split point (the simulated uplink
+//! payload) and at final outputs.  Between launches the activation is
+//! carried as an opaque backend-owned [`HiddenState`] (a raw XLA literal
+//! under PJRT, a host tensor under the reference backend), never forced
+//! through a `TensorF32` round trip by this layer.
+//!
+//! All backend-specific execution lives behind
+//! [`ModelExecutor`](crate::runtime::ModelExecutor); this type owns the
+//! model identity (task/style/geometry), validates arguments, plans
+//! batches, and derives predictions from head outputs.
 
-use std::collections::BTreeMap;
-use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
@@ -21,9 +22,7 @@ use anyhow::{bail, Context, Result};
 use super::plan_batches;
 use super::weights::ModelWeights;
 use crate::config::Manifest;
-use crate::runtime::executable::Arg;
-use crate::runtime::literal::{literal_f32, tensor_f32};
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Backend, HeadOut, Hidden as HiddenState, ModelExecutor, ModelSpec};
 use crate::tensor::{TensorF32, TensorI32};
 
 /// Output of one exit head over a batch.
@@ -44,10 +43,17 @@ impl ExitOutput {
         let pred = probs.argmax_rows().map_err(|e| anyhow::anyhow!(e))?;
         Ok(ExitOutput {
             pred,
-            conf: conf.data().to_vec(),
-            ent: ent.data().to_vec(),
+            conf: conf.into_data(),
+            ent: ent.into_data(),
             probs,
         })
+    }
+
+    /// Backend head output -> exit output (predictions derived here, once,
+    /// identically for every backend).
+    fn from_head(h: HeadOut) -> Result<ExitOutput> {
+        let pred = h.probs.argmax_rows().map_err(|e| anyhow::anyhow!(e))?;
+        Ok(ExitOutput { pred, conf: h.conf, ent: h.ent, probs: h.probs })
     }
 
     /// Keep only the first `n` samples (drop padded rows).
@@ -79,104 +85,22 @@ impl ExitOutput {
     }
 }
 
-/// A hidden state held in XLA-literal form between partition launches.
-///
-/// The buffer is handed straight back as the next launch's argument
-/// (`Arg::Lit`), skipping the host `TensorF32` materialization the per-block
-/// path used to pay at every layer boundary.  Call [`HiddenState::to_tensor`]
-/// only where the host genuinely needs the values — the split boundary and
-/// final outputs.
-pub struct HiddenState {
-    lit: xla::Literal,
-    batch: usize,
-}
-
-impl HiddenState {
-    /// Batch dimension (a compiled batch size).
-    pub fn batch(&self) -> usize {
-        self.batch
-    }
-
-    /// Host transfer: literal -> `TensorF32` (the split-boundary copy).
-    pub fn to_tensor(&self) -> Result<TensorF32> {
-        tensor_f32(&self.lit)
-    }
-}
-
-impl std::fmt::Debug for HiddenState {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("HiddenState").field("batch", &self.batch).finish()
-    }
-}
-
-/// One trained multi-exit model, ready to execute partition by partition.
-///
-/// The fused `chain{n}` executables are weight-parameterized like `block`,
-/// so one compiled module serves *every* range of length `n`; they are
-/// compiled lazily per `(length, batch)` through the runtime's bounded LRU
-/// cache rather than eagerly at load.
+/// One trained multi-exit model, ready to execute partition by partition
+/// through whichever [`Backend`] loaded it.
 pub struct MultiExitModel {
     pub task: String,
     pub style: String,
-    weights: Arc<ModelWeights>,
-    runtime: Runtime,
-    embed: BTreeMap<usize, Arc<Executable>>,
-    block: BTreeMap<usize, Arc<Executable>>,
-    head: BTreeMap<usize, Arc<Executable>>,
-    prefix_full: Option<(usize, Arc<Executable>)>,
-    /// fused block-range artifacts: (range length, batch) -> HLO path,
-    /// loaded lazily through the runtime's LRU cache
-    chain: BTreeMap<(usize, usize), PathBuf>,
-    /// Weight tensors pre-converted to XLA literals — skips the host copy on
-    /// every layer execution (L3 perf pass; disable for A/B measurement with
-    /// SPLITEE_NO_LITERAL_CACHE=1).
-    lits: Option<LitCache>,
+    exec: Box<dyn ModelExecutor>,
     batch_sizes: Vec<usize>,
     n_layers: usize,
+    n_classes: usize,
     seq_len: usize,
 }
 
-struct LitCache {
-    embed: Vec<xla::Literal>,
-    blocks: Vec<Vec<xla::Literal>>,
-    heads: Vec<Vec<xla::Literal>>,
-    prefix: Vec<xla::Literal>,
-}
-
-// SAFETY: the literal cache is immutable after construction and literals are
-// plain host buffers; the PJRT CPU executables are internally synchronized.
-// The runtime handle is only used for lazy chain compiles, which are
-// serialized under the runtime's dedicated compile lock
-// (`RuntimeInner::compile_lock` — cache-hit probes never compile), so the
-// thread-affine client never compiles from two threads at once.  The model
-// is only ever used behind `Arc` with `&self` access.
-unsafe impl Send for MultiExitModel {}
-unsafe impl Sync for MultiExitModel {}
-
-fn build_lit_cache(weights: &ModelWeights) -> anyhow::Result<LitCache> {
-    let conv = |ts: &[crate::tensor::TensorF32]| -> anyhow::Result<Vec<xla::Literal>> {
-        ts.iter().map(literal_f32).collect()
-    };
-    Ok(LitCache {
-        embed: conv(&weights.embed)?,
-        blocks: weights.blocks.iter().map(|b| conv(b)).collect::<anyhow::Result<_>>()?,
-        heads: weights.heads.iter().map(|h| conv(h)).collect::<anyhow::Result<_>>()?,
-        prefix: {
-            let mut all = conv(&weights.embed)?;
-            for b in &weights.blocks {
-                all.extend(conv(b)?);
-            }
-            for h in &weights.heads {
-                all.extend(conv(h)?);
-            }
-            all
-        },
-    })
-}
-
 impl MultiExitModel {
-    /// Load a task's trained model (`style` is "elasticbert" or "deebert").
-    pub fn load(manifest: &Manifest, runtime: &Runtime, task: &str, style: &str) -> Result<Self> {
+    /// Load a task's trained model (`style` is "elasticbert" or "deebert")
+    /// from an artifact manifest, through the given backend.
+    pub fn load(manifest: &Manifest, backend: &Backend, task: &str, style: &str) -> Result<Self> {
         let info = manifest.task(task)?;
         let weights = ModelWeights::load(
             &manifest.weights_path(task, style)?,
@@ -189,53 +113,74 @@ impl MultiExitModel {
                 info.classes
             );
         }
-        let head_graph = format!("head_c{}", info.classes);
-        let mut embed = BTreeMap::new();
-        let mut block = BTreeMap::new();
-        let mut head = BTreeMap::new();
-        for &b in &manifest.batch_sizes {
-            embed.insert(b, runtime.load(&manifest.hlo_path("embed", b)?)?);
-            block.insert(b, runtime.load(&manifest.hlo_path("block", b)?)?);
-            head.insert(b, runtime.load(&manifest.hlo_path(&head_graph, b)?)?);
-        }
-        let prefix_graph = format!("prefix_full_c{}", info.classes);
-        let prefix_full = match manifest.hlo_path(&prefix_graph, manifest.cache_batch) {
-            Ok(path) => Some((manifest.cache_batch, runtime.load(&path)?)),
-            Err(_) => None,
-        };
-        // Fused block-range graphs (chain2..chainL): record paths only; the
-        // runtime compiles each lazily on first use behind its LRU cache.
-        // Length-1 ranges reuse the plain `block` executable.
-        let mut chain = BTreeMap::new();
-        for len in 2..=manifest.model.n_layers {
-            let graph = format!("chain{len}");
-            for &b in &manifest.batch_sizes {
-                if let Ok(path) = manifest.hlo_path(&graph, b) {
-                    chain.insert((len, b), path);
-                }
-            }
-        }
         let weights = Arc::new(weights);
-        let lits = if std::env::var("SPLITEE_NO_LITERAL_CACHE").is_ok() {
-            None
-        } else {
-            Some(build_lit_cache(&weights)?)
+        let n_classes = weights.n_classes;
+        let spec = ModelSpec {
+            task,
+            style,
+            weights,
+            n_heads: manifest.model.n_heads,
+            seq_len: manifest.model.seq_len,
+            batch_sizes: manifest.batch_sizes.clone(),
+            cache_batch: manifest.cache_batch,
+            manifest: Some(manifest),
         };
+        let exec = backend.load_model(&spec)?;
         Ok(MultiExitModel {
             task: task.to_string(),
             style: style.to_string(),
-            weights,
-            runtime: runtime.clone(),
-            embed,
-            block,
-            head,
-            prefix_full,
-            chain,
-            lits,
+            exec,
             batch_sizes: manifest.batch_sizes.clone(),
             n_layers: manifest.model.n_layers,
+            n_classes,
             seq_len: manifest.model.seq_len,
         })
+    }
+
+    /// Build a model directly from in-memory weights, no artifact manifest —
+    /// synthetic tests and benches use this with the reference backend so
+    /// the full serving stack runs on machines with no artifacts at all.
+    /// (Backends that execute compiled artifacts reject manifest-less specs.)
+    pub fn from_weights(
+        task: &str,
+        style: &str,
+        weights: ModelWeights,
+        n_heads: usize,
+        seq_len: usize,
+        batch_sizes: Vec<usize>,
+        backend: &Backend,
+    ) -> Result<Self> {
+        if batch_sizes.is_empty() {
+            bail!("from_weights needs at least one batch size");
+        }
+        let n_layers = weights.n_layers;
+        let n_classes = weights.n_classes;
+        let cache_batch = *batch_sizes.iter().max().expect("non-empty batch sizes");
+        let spec = ModelSpec {
+            task,
+            style,
+            weights: Arc::new(weights),
+            n_heads,
+            seq_len,
+            batch_sizes: batch_sizes.clone(),
+            cache_batch,
+            manifest: None,
+        };
+        let exec = backend.load_model(&spec)?;
+        Ok(MultiExitModel {
+            task: task.to_string(),
+            style: style.to_string(),
+            exec,
+            batch_sizes,
+            n_layers,
+            n_classes,
+            seq_len,
+        })
+    }
+
+    /// Which compute backend executes this model.
+    pub fn backend_name(&self) -> &'static str {
+        self.exec.backend_name()
     }
 
     pub fn n_layers(&self) -> usize {
@@ -243,7 +188,7 @@ impl MultiExitModel {
     }
 
     pub fn n_classes(&self) -> usize {
-        self.weights.n_classes
+        self.n_classes
     }
 
     pub fn seq_len(&self) -> usize {
@@ -266,170 +211,48 @@ impl MultiExitModel {
         })
     }
 
-    /// True when every multi-block range has a fused artifact (all lengths
-    /// 2..=L at every compiled batch size), i.e. the serving path runs one
-    /// block-range launch per partition.
+    /// True when every multi-block range runs as one fused launch (always
+    /// for the reference backend; under PJRT, when the artifact set has
+    /// every `chain{n}` graph).
     pub fn has_fused_ranges(&self) -> bool {
-        self.batch_sizes
-            .iter()
-            .all(|&b| (2..=self.n_layers).all(|len| self.chain.contains_key(&(len, b))))
+        self.exec.has_fused_ranges()
     }
 
-    fn pick_exec<'a>(
-        table: &'a BTreeMap<usize, Arc<Executable>>,
-        batch: usize,
-    ) -> Result<&'a Arc<Executable>> {
-        table
-            .get(&batch)
-            .with_context(|| format!("no executable compiled for batch {batch}"))
-    }
-
-    fn push_block_args<'a>(&'a self, args: &mut Vec<Arg<'a>>, layer: usize) {
-        match &self.lits {
-            Some(l) => args.extend(l.blocks[layer].iter().map(Arg::Lit)),
-            None => args.extend(self.weights.blocks[layer].iter().map(Arg::F32)),
-        }
-    }
-
-    /// Run blocks `start..end` (0-based, end exclusive) from a hidden-state
-    /// argument, returning the raw output literal.  One fused launch when
-    /// the `chain{end-start}` artifact exists; otherwise per-block launches
-    /// with literal passthrough (no host materialization either way).
-    fn run_blocks_arg(
-        &self,
-        h: Arg<'_>,
-        batch: usize,
-        start: usize,
-        end: usize,
-    ) -> Result<xla::Literal> {
-        if start >= end || end > self.n_layers {
-            bail!(
-                "block range [{start}, {end}) out of bounds (L = {})",
-                self.n_layers
-            );
-        }
-        let len = end - start;
-        if len > 1 {
-            if let Some(path) = self.chain.get(&(len, batch)) {
-                let exe = self
-                    .runtime
-                    .load(path)
-                    .with_context(|| format!("loading fused range chain{len} (batch {batch})"))?;
-                let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + 16 * len);
-                args.push(h);
-                match &self.lits {
-                    Some(l) => {
-                        for blk in &l.blocks[start..end] {
-                            args.extend(blk.iter().map(Arg::Lit));
-                        }
-                    }
-                    None => {
-                        args.extend(self.weights.block_range_args(start, end).map(Arg::F32))
-                    }
-                }
-                let mut out = exe.run(&args)?;
-                if out.is_empty() {
-                    bail!("chain{len} returned no outputs");
-                }
-                return Ok(out.remove(0));
-            }
-        }
-        // fallback: per-block launches, activation carried as a literal
-        let exe = Self::pick_exec(&self.block, batch)?;
-        let mut cur = {
-            let mut args: Vec<Arg<'_>> = Vec::with_capacity(17);
-            args.push(h);
-            self.push_block_args(&mut args, start);
-            let mut out = exe.run(&args)?;
-            if out.is_empty() {
-                bail!("block returned no outputs");
-            }
-            out.remove(0)
-        };
-        for layer in (start + 1)..end {
-            let mut out = {
-                let mut args: Vec<Arg<'_>> = Vec::with_capacity(17);
-                args.push(Arg::Lit(&cur));
-                self.push_block_args(&mut args, layer);
-                exe.run(&args)?
-            };
-            if out.is_empty() {
-                bail!("block returned no outputs");
-            }
-            cur = out.remove(0);
-        }
-        Ok(cur)
-    }
-
-    fn exit_head_arg(&self, h: Arg<'_>, batch: usize, layer: usize) -> Result<ExitOutput> {
-        if layer >= self.n_layers {
-            bail!("layer {layer} out of range (L = {})", self.n_layers);
-        }
-        let exe = Self::pick_exec(&self.head, batch)?;
-        let mut args = vec![h];
-        match &self.lits {
-            Some(l) => args.extend(l.heads[layer].iter().map(Arg::Lit)),
-            None => args.extend(self.weights.heads[layer].iter().map(Arg::F32)),
-        }
-        let out = exe.run(&args)?;
-        if out.len() != 3 {
-            bail!("exit head returned {} outputs, expected 3", out.len());
-        }
-        let probs = tensor_f32(&out[0])?;
-        let conf = tensor_f32(&out[1])?;
-        let ent = tensor_f32(&out[2])?;
-        ExitOutput::from_tensors(probs, conf, ent)
-    }
-
-    /// Ensure the fused range executable for blocks `start..end` at `batch`
-    /// is compiled (no-op when absent or length 1).  The serving stages call
+    /// Ensure whatever executes blocks `start..end` at `batch` is compiled
+    /// (no-op when unnecessary or length <= 1).  The serving stages call
     /// this *before* their timed regions so a first-use (or post-eviction)
-    /// chain compile is never recorded as simulated compute latency.
+    /// compile is never recorded as simulated compute latency.
     pub fn warm_range(&self, batch: usize, start: usize, end: usize) -> Result<()> {
         if end > start && end - start > 1 {
-            if let Some(path) = self.chain.get(&(end - start, batch)) {
-                self.runtime.load(path).with_context(|| {
-                    format!("pre-warming fused range chain{} (batch {batch})", end - start)
-                })?;
-            }
+            self.exec.warm_range(batch, start, end)?;
         }
         Ok(())
     }
 
-    /// Embedding straight to a device-format hidden state: tokens [B, T] ->
-    /// h0 [B, T, D] as a literal.  B must be a compiled batch size (callers
+    /// Embedding straight to a backend-format hidden state: tokens [B, T] ->
+    /// h0 [B, T, D].  Under PJRT, B must be a compiled batch size (callers
     /// batch via [`plan_batches`]).
     pub fn embed_hidden(&self, tokens: &TensorI32) -> Result<HiddenState> {
-        let b = tokens.shape()[0];
-        let exe = Self::pick_exec(&self.embed, b)?;
-        let mut args = vec![Arg::I32(tokens)];
-        match &self.lits {
-            Some(l) => args.extend(l.embed.iter().map(Arg::Lit)),
-            None => args.extend(self.weights.embed.iter().map(Arg::F32)),
-        }
-        let mut out = exe.run(&args)?;
-        if out.is_empty() {
-            bail!("embed returned no outputs");
-        }
-        Ok(HiddenState { lit: out.remove(0), batch: b })
+        self.exec.embed(tokens)
     }
 
     /// Blocks `start..end` (0-based, end exclusive) as fused partition
-    /// launches, hidden state in and out in device format.
+    /// launches, hidden state in and out in backend format.
     pub fn blocks_between(
         &self,
         h: &HiddenState,
         start: usize,
         end: usize,
     ) -> Result<HiddenState> {
-        let lit = self.run_blocks_arg(Arg::Lit(&h.lit), h.batch, start, end)?;
-        Ok(HiddenState { lit, batch: h.batch })
+        self.check_range(start, end)?;
+        self.exec.blocks(h, start, end)
     }
 
-    /// Exit head after `layer` (0-based) evaluated from a device-format
+    /// Exit head after `layer` (0-based) evaluated from a backend-format
     /// hidden state.
     pub fn exit_head_hidden(&self, h: &HiddenState, layer: usize) -> Result<ExitOutput> {
-        self.exit_head_arg(Arg::Lit(&h.lit), h.batch, layer)
+        self.check_layer(layer)?;
+        ExitOutput::from_head(self.exec.exit_head(h, layer)?)
     }
 
     /// Embedding: tokens [B, T] -> hidden [B, T, D] on the host.
@@ -440,27 +263,26 @@ impl MultiExitModel {
     /// One transformer block: hidden [B, T, D] -> hidden [B, T, D].
     /// `layer` is 0-based.
     pub fn block(&self, h: &TensorF32, layer: usize) -> Result<TensorF32> {
-        let b = h.shape()[0];
-        let lit = self.run_blocks_arg(Arg::F32(h), b, layer, layer + 1)?;
-        tensor_f32(&lit)
+        self.check_layer(layer)?;
+        self.exec.blocks_host(h, layer, layer + 1)?.to_tensor()
     }
 
     /// Blocks `start..end` (0-based, end exclusive) from a host hidden
-    /// state: one fused launch when the range artifact exists.  Bit-exact
+    /// state: one fused launch when the backend supports it.  Bit-exact
     /// with iterating [`MultiExitModel::block`] (asserted by the
-    /// integration property test).
+    /// integration property tests on both backends).
     pub fn forward_range(&self, h: &TensorF32, start: usize, end: usize) -> Result<TensorF32> {
         if start == end {
             return Ok(h.clone());
         }
-        let b = h.shape()[0];
-        let lit = self.run_blocks_arg(Arg::F32(h), b, start, end)?;
-        tensor_f32(&lit)
+        self.check_range(start, end)?;
+        self.exec.blocks_host(h, start, end)?.to_tensor()
     }
 
     /// Exit head after `layer` (0-based): hidden -> (probs, conf, ent, pred).
     pub fn exit_head(&self, h: &TensorF32, layer: usize) -> Result<ExitOutput> {
-        self.exit_head_arg(Arg::F32(h), h.shape()[0], layer)
+        self.check_layer(layer)?;
+        ExitOutput::from_head(self.exec.exit_head_host(h, layer)?)
     }
 
     /// Run embed + blocks `0..=layer` (0-based).  Returns the hidden state at
@@ -482,9 +304,7 @@ impl MultiExitModel {
         if from_layer + 1 == self.n_layers {
             return Ok(h);
         }
-        let b = h.shape()[0];
-        let lit = self.run_blocks_arg(Arg::F32(&h), b, from_layer + 1, self.n_layers)?;
-        tensor_f32(&lit)
+        self.exec.blocks_host(&h, from_layer + 1, self.n_layers)?.to_tensor()
     }
 
     /// Cloud continuation fused with the final exit head: blocks
@@ -495,78 +315,22 @@ impl MultiExitModel {
             bail!("from_layer {from_layer} out of range (L = {})", self.n_layers);
         }
         let l = self.n_layers;
-        let b = h.shape()[0];
         if from_layer + 1 == l {
-            return self.exit_head_arg(Arg::F32(h), b, l - 1);
+            return ExitOutput::from_head(self.exec.exit_head_host(h, l - 1)?);
         }
-        let lit = self.run_blocks_arg(Arg::F32(h), b, from_layer + 1, l)?;
-        self.exit_head_arg(Arg::Lit(&lit), b, l - 1)
+        let hid = self.exec.blocks_host(h, from_layer + 1, l)?;
+        ExitOutput::from_head(self.exec.exit_head(&hid, l - 1)?)
     }
 
-    /// Full forward through every exit at once via the fused `prefix_full`
-    /// graph.  tokens [B, T] with any B — batching/padding handled here.
-    /// Returns per-layer outputs, outer index = layer.
-    ///
-    /// Accumulators are preallocated from the batch plan (`n` rows, `C`
-    /// classes known up front), so covering a large cache is one exact-size
-    /// allocation per layer instead of a re-concatenation per chunk.
+    /// Full forward through every exit at once (the cache-builder path —
+    /// the fused `prefix_full` graph under PJRT, a direct sweep under the
+    /// reference backend).  tokens [B, T] with any B.  Returns per-layer
+    /// outputs, outer index = layer.
     pub fn forward_all_exits(&self, tokens: &TensorI32) -> Result<Vec<ExitOutput>> {
-        let (cache_b, exe) = self
-            .prefix_full
-            .as_ref()
-            .context("prefix_full graph not in manifest")?;
-        let n = tokens.shape()[0];
-        let c = self.weights.n_classes;
-        let layers = self.n_layers;
-        let mut probs_acc: Vec<Vec<f32>> =
-            (0..layers).map(|_| Vec::with_capacity(n * c)).collect();
-        let mut conf_acc: Vec<Vec<f32>> = (0..layers).map(|_| Vec::with_capacity(n)).collect();
-        let mut ent_acc: Vec<Vec<f32>> = (0..layers).map(|_| Vec::with_capacity(n)).collect();
-        let mut done = 0usize;
-        while done < n {
-            let real = (*cache_b).min(n - done);
-            let chunk = tokens
-                .slice_rows(done, done + real)
-                .map_err(|e| anyhow::anyhow!(e))?
-                .pad_rows_to(*cache_b)
-                .map_err(|e| anyhow::anyhow!(e))?;
-            let mut args = vec![Arg::I32(&chunk)];
-            let flat;
-            match &self.lits {
-                Some(l) => args.extend(l.prefix.iter().map(Arg::Lit)),
-                None => {
-                    flat = self.weights.prefix_full_args();
-                    args.extend(flat.iter().map(|t| Arg::F32(t)));
-                }
-            }
-            let out = exe.run_f32(&args)?;
-            // output layout: (probs [L,B,C], conf [L,B], ent [L,B])
-            if out.len() != 3 {
-                bail!("prefix_full returned {} outputs, expected 3", out.len());
-            }
-            let (probs, conf, ent) = (&out[0], &out[1], &out[2]);
-            let b = probs.shape()[1];
-            if probs.shape()[2] != c {
-                bail!("prefix_full emitted {} classes, weights have {c}", probs.shape()[2]);
-            }
-            // copy the `real` unpadded rows of each stacked layer straight
-            // into the preallocated accumulators
-            for l in 0..layers {
-                probs_acc[l].extend_from_slice(&probs.data()[l * b * c..l * b * c + real * c]);
-                conf_acc[l].extend_from_slice(&conf.data()[l * b..l * b + real]);
-                ent_acc[l].extend_from_slice(&ent.data()[l * b..l * b + real]);
-            }
-            done += real;
-        }
-        probs_acc
+        self.exec
+            .forward_all_exits(tokens)?
             .into_iter()
-            .zip(conf_acc)
-            .zip(ent_acc)
-            .map(|((p, cf), en)| {
-                let probs = TensorF32::new(vec![n, c], p).map_err(|e| anyhow::anyhow!(e))?;
-                let pred = probs.argmax_rows().map_err(|e| anyhow::anyhow!(e))?;
-                Ok(ExitOutput { probs, conf: cf, ent: en, pred })
-            })
+            .map(ExitOutput::from_head)
             .collect()
     }
 
@@ -588,6 +352,23 @@ impl MultiExitModel {
     pub fn batch_plan(&self, n: usize) -> Vec<(usize, usize)> {
         plan_batches(n, &self.batch_sizes)
     }
+
+    fn check_range(&self, start: usize, end: usize) -> Result<()> {
+        if start >= end || end > self.n_layers {
+            bail!(
+                "block range [{start}, {end}) out of bounds (L = {})",
+                self.n_layers
+            );
+        }
+        Ok(())
+    }
+
+    fn check_layer(&self, layer: usize) -> Result<()> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        }
+        Ok(())
+    }
 }
 
 impl std::fmt::Debug for MultiExitModel {
@@ -595,9 +376,10 @@ impl std::fmt::Debug for MultiExitModel {
         f.debug_struct("MultiExitModel")
             .field("task", &self.task)
             .field("style", &self.style)
+            .field("backend", &self.exec.backend_name())
             .field("layers", &self.n_layers)
-            .field("classes", &self.weights.n_classes)
-            .field("fused_ranges", &self.chain.len())
+            .field("classes", &self.n_classes)
+            .field("fused_ranges", &self.exec.has_fused_ranges())
             .finish()
     }
 }
@@ -652,5 +434,95 @@ mod tests {
         assert_eq!(acc.len(), 20);
         assert_eq!(acc.probs.shape(), &[20, 2]);
         assert_eq!(acc.pred, acc.probs.argmax_rows().unwrap());
+    }
+
+    fn tiny_reference_model() -> MultiExitModel {
+        let weights = ModelWeights::synthetic(4, 16, 32, 64, 8, 2, 0xC0DE);
+        MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            2,
+            8,
+            vec![1, 4],
+            &Backend::reference(),
+        )
+        .expect("reference model")
+    }
+
+    fn tokens(b: usize, seed: i32) -> TensorI32 {
+        TensorI32::new(
+            vec![b, 8],
+            (0..b as i32 * 8).map(|i| (i * 7 + seed) % 64).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn reference_model_runs_end_to_end() {
+        let model = tiny_reference_model();
+        assert_eq!(model.backend_name(), "reference");
+        assert!(model.has_fused_ranges());
+        let t = tokens(1, 3);
+        let (h, out) = model.run_split(&t, 2).unwrap();
+        assert_eq!(h.shape(), &[1, 8, 16]);
+        assert_eq!(out.probs.shape(), &[1, 2]);
+        let p: f32 = out.probs.data().iter().sum();
+        assert!((p - 1.0).abs() < 1e-4, "probs sum {p}");
+        // full-depth sweep agrees with the layered path at the final layer
+        let all = model.forward_all_exits(&t).unwrap();
+        assert_eq!(all.len(), 4);
+        let (_h, fin) = model.run_split(&t, 3).unwrap();
+        assert!((all[3].conf[0] - fin.conf[0]).abs() < 1e-4);
+        assert_eq!(all[3].pred[0], fin.pred[0]);
+    }
+
+    #[test]
+    fn reference_batched_execution_matches_single() {
+        let model = tiny_reference_model();
+        let batch = tokens(4, 11);
+        let (_h, out_batch) = model.run_split(&batch, 1).unwrap();
+        for i in 0..4 {
+            let single = TensorI32::new(
+                vec![1, 8],
+                batch.data()[i * 8..(i + 1) * 8].to_vec(),
+            )
+            .unwrap();
+            let (_h1, out1) = model.run_split(&single, 1).unwrap();
+            assert_eq!(
+                out1.conf[0].to_bits(),
+                out_batch.conf[i].to_bits(),
+                "row {i}: reference batching must be bit-exact"
+            );
+            assert_eq!(out1.pred[0], out_batch.pred[i], "row {i}");
+        }
+    }
+
+    #[test]
+    fn reference_forward_rest_continues_the_layered_path() {
+        let model = tiny_reference_model();
+        let t = tokens(2, 5);
+        let split = 1usize; // 0-based split layer
+        let (h, _out) = model.run_split(&t, split).unwrap();
+        let full = model.forward_rest(h.clone(), split).unwrap();
+        let direct = model.forward_to(&t, model.n_layers() - 1).unwrap();
+        for (a, b) in full.data().iter().zip(direct.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // fused continuation + head agrees with the two-step version
+        let eo = model.forward_rest_exit(&h, split).unwrap();
+        let eo2 = model.exit_head(&full, model.n_layers() - 1).unwrap();
+        assert_eq!(eo.pred, eo2.pred);
+        assert_eq!(eo.conf[0].to_bits(), eo2.conf[0].to_bits());
+    }
+
+    #[test]
+    fn model_rejects_out_of_range_layers() {
+        let model = tiny_reference_model();
+        let t = tokens(1, 1);
+        let h = model.embed(&t).unwrap();
+        assert!(model.exit_head(&h, 4).is_err());
+        assert!(model.forward_range(&h, 2, 9).is_err());
+        assert!(model.forward_rest(h, 9).is_err());
     }
 }

@@ -111,6 +111,76 @@ impl ModelWeights {
         self.blocks[start..end].iter().flat_map(|b| b.iter())
     }
 
+    /// Deterministic synthetic weights: a real (randomly initialized)
+    /// multi-exit encoder of the given geometry, for tests and benches that
+    /// must run without trained artifacts.  LayerNorm gains start at 1 /
+    /// biases at 0 and matrices scale with 1/sqrt(fan_in), so activations
+    /// and exit confidences stay in a realistic range at any depth.
+    pub fn synthetic(
+        n_layers: usize,
+        d_model: usize,
+        d_ff: usize,
+        vocab: usize,
+        seq_len: usize,
+        n_classes: usize,
+        seed: u64,
+    ) -> ModelWeights {
+        use crate::util::rng::Rng;
+
+        fn mat(rng: &mut Rng, rows: usize, cols: usize) -> TensorF32 {
+            let scale = 1.0 / (rows as f32).sqrt();
+            let data = (0..rows * cols)
+                .map(|_| (rng.next_f32() * 2.0 - 1.0) * scale)
+                .collect();
+            TensorF32::new(vec![rows, cols], data).expect("synthetic matrix")
+        }
+        fn small(rng: &mut Rng, n: usize) -> TensorF32 {
+            let data = (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * 0.05).collect();
+            TensorF32::new(vec![n], data).expect("synthetic bias")
+        }
+        fn ones(n: usize) -> TensorF32 {
+            TensorF32::new(vec![n], vec![1.0; n]).expect("ln gain")
+        }
+
+        let mut rng = Rng::new(seed ^ 0x5EED_5157);
+        let r = &mut rng;
+        let embed = vec![
+            mat(r, vocab, d_model),
+            mat(r, seq_len, d_model),
+            ones(d_model),
+            TensorF32::zeros(vec![d_model]),
+        ];
+        let mut blocks = Vec::with_capacity(n_layers);
+        let mut heads = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            blocks.push(vec![
+                ones(d_model),             // ln1_g
+                TensorF32::zeros(vec![d_model]), // ln1_b
+                mat(r, d_model, d_model),  // wq
+                small(r, d_model),         // bq
+                mat(r, d_model, d_model),  // wk
+                small(r, d_model),         // bk
+                mat(r, d_model, d_model),  // wv
+                small(r, d_model),         // bv
+                mat(r, d_model, d_model),  // wo
+                small(r, d_model),         // bo
+                ones(d_model),             // ln2_g
+                TensorF32::zeros(vec![d_model]), // ln2_b
+                mat(r, d_model, d_ff),     // w1
+                small(r, d_ff),            // b1
+                mat(r, d_ff, d_model),     // w2
+                small(r, d_model),         // b2
+            ]);
+            heads.push(vec![
+                ones(d_model),              // ln_g
+                TensorF32::zeros(vec![d_model]), // ln_b
+                mat(r, d_model, n_classes), // wc
+                small(r, n_classes),        // bc
+            ]);
+        }
+        ModelWeights { n_layers, n_classes, embed, blocks, heads }
+    }
+
     /// Flat argument list for the `prefix_full` graph: embed params, then all
     /// block params, then all head params (matches the AOT flat order).
     pub fn prefix_full_args(&self) -> Vec<&TensorF32> {
@@ -271,6 +341,27 @@ mod tests {
         assert!(std::ptr::eq(tail[0], manual[BLOCK_PARAM_ORDER.len()]));
         assert!(w.block_range_args(1, 1).next().is_none());
         std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn synthetic_weights_have_canonical_layout() {
+        let w = ModelWeights::synthetic(3, 8, 16, 32, 4, 2, 42);
+        assert_eq!(w.n_layers, 3);
+        assert_eq!(w.n_classes, 2);
+        assert_eq!(w.embed.len(), EMBED_PARAM_ORDER.len());
+        assert_eq!(w.embed[0].shape(), &[32, 8]);
+        assert_eq!(w.embed[1].shape(), &[4, 8]);
+        for b in &w.blocks {
+            assert_eq!(b.len(), BLOCK_PARAM_ORDER.len());
+            assert_eq!(b[12].shape(), &[8, 16]); // w1
+            assert_eq!(b[14].shape(), &[16, 8]); // w2
+        }
+        assert_eq!(w.heads[2][2].shape(), &[8, 2]); // wc
+        // deterministic per seed, distinct across seeds
+        let again = ModelWeights::synthetic(3, 8, 16, 32, 4, 2, 42);
+        assert_eq!(w.embed[0], again.embed[0]);
+        let other = ModelWeights::synthetic(3, 8, 16, 32, 4, 2, 43);
+        assert_ne!(w.embed[0], other.embed[0]);
     }
 
     #[test]

@@ -1,46 +1,71 @@
-//! Compiled-executable cache and typed execution.
+//! PJRT client, compiled-executable cache and typed execution (the `pjrt`
+//! feature's half of the runtime; see the module docs in `runtime/mod.rs`).
 //!
-//! The cache is a **bounded LRU**: the partition-graph subsystem loads fused
-//! block-range executables lazily per `(range length, batch)` key, so the
-//! resident set is the serving working set, not every module ever compiled.
-//! Hit/miss/eviction counters are exposed via [`Runtime::cache_stats`] and a
-//! thread-local launch counter ([`thread_launches`]) lets each pipeline
-//! stage attribute executable launches to itself without cross-thread races.
+//! The cache is a **bounded LRU** ([`LruMap`]): the partition-graph
+//! subsystem loads fused block-range executables lazily per `(range length,
+//! batch)` key, so the resident set is the serving working set, not every
+//! module ever compiled.  Hit/miss/eviction counters are exposed via
+//! [`Runtime::cache_stats`] and every execution bumps the backend-agnostic
+//! thread-local launch counter ([`crate::runtime::thread_launches`]).
 
-use std::cell::Cell;
-use std::collections::HashMap;
-use std::hash::Hash;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use super::literal::{literal_f32, literal_i32, tensor_f32};
-use super::Client;
+use super::lru::{CacheStats, LruMap};
 use crate::tensor::{TensorF32, TensorI32};
 
-thread_local! {
-    static THREAD_LAUNCHES: Cell<u64> = Cell::new(0);
+/// Shared PJRT CPU client.  Creating a client is expensive (plugin init), so
+/// one is shared per process.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
 }
 
-/// Executable launches performed by the *calling thread* since it started.
-/// Pipeline stages run on dedicated threads, so a before/after delta
-/// attributes launches to one stage even while other stages are executing
-/// concurrently on their own threads.
-pub fn thread_launches() -> u64 {
-    THREAD_LAUNCHES.with(|c| c.get())
+impl Client {
+    /// Create the process-wide CPU client.
+    pub fn cpu() -> Result<Client> {
+        let raw = xla::PjRtClient::cpu().context(
+            "creating the PJRT CPU client — the pjrt backend needs the XLA/PJRT \
+             extension library at runtime; on machines without it, use \
+             `--backend reference` (or a default-features build)",
+        )?;
+        Ok(Client { inner: Arc::new(raw) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    pub(crate) fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client")
+            .field("platform", &self.platform_name())
+            .field("devices", &self.device_count())
+            .finish()
+    }
 }
 
 /// A positional argument to an executable.
 ///
 /// `Lit` passes a pre-converted literal by reference — the weight-literal
-/// cache in [`crate::model::MultiExitModel`] uses it to avoid re-converting
-/// every weight tensor on every layer execution (the L3 perf pass measured
-/// this at ~2x on the per-block hot path; see EXPERIMENTS.md §Perf), and the
-/// partition hot path uses it to hand one launch's output straight to the
-/// next launch without a host `TensorF32` round trip.
+/// cache in the pjrt executor uses it to avoid re-converting every weight
+/// tensor on every layer execution (the L3 perf pass measured this at ~2x on
+/// the per-block hot path; see EXPERIMENTS.md §Perf), and the partition hot
+/// path uses it to hand one launch's output straight to the next launch
+/// without a host `TensorF32` round trip.
 #[derive(Clone)]
 pub enum Arg<'a> {
     F32(&'a TensorF32),
@@ -110,7 +135,7 @@ impl Executable {
             .exe
             .execute::<&xla::Literal>(&literals)
             .with_context(|| format!("executing {}", self.name))?;
-        THREAD_LAUNCHES.with(|c| c.set(c.get() + 1));
+        super::count_launch();
         let mut tuple = result[0][0]
             .to_literal_sync()
             .with_context(|| format!("fetching result of {}", self.name))?;
@@ -129,83 +154,6 @@ impl Executable {
     }
 }
 
-/// Minimal LRU map: a `HashMap` plus a monotonically increasing access tick.
-/// Eviction scans for the smallest tick — the cache holds tens of compiled
-/// modules at most, so the O(n) scan is irrelevant next to a compile and
-/// keeps this dependency-free.
-pub struct LruMap<K, V> {
-    capacity: usize,
-    tick: u64,
-    map: HashMap<K, (u64, V)>,
-}
-
-impl<K: Hash + Eq + Clone, V> LruMap<K, V> {
-    pub fn new(capacity: usize) -> LruMap<K, V> {
-        assert!(capacity > 0, "LRU capacity must be positive");
-        LruMap { capacity, tick: 0, map: HashMap::new() }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    pub fn len(&self) -> usize {
-        self.map.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
-    }
-
-    /// Look up and mark as most recently used.  Generic over borrowed key
-    /// forms (like `HashMap::get`) so the per-launch hot path can probe
-    /// with `&Path` without allocating a `PathBuf`.
-    pub fn get<Q>(&mut self, key: &Q) -> Option<&V>
-    where
-        K: std::borrow::Borrow<Q>,
-        Q: Hash + Eq + ?Sized,
-    {
-        self.tick += 1;
-        let tick = self.tick;
-        match self.map.get_mut(key) {
-            Some(entry) => {
-                entry.0 = tick;
-                Some(&entry.1)
-            }
-            None => None,
-        }
-    }
-
-    /// Insert, evicting the least-recently-used entry when at capacity.
-    /// Returns the evicted `(key, value)`, if any.
-    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
-        self.tick += 1;
-        let mut evicted = None;
-        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
-            let lru_key = self
-                .map
-                .iter()
-                .min_by_key(|(_, (t, _))| *t)
-                .map(|(k, _)| k.clone());
-            if let Some(k) = lru_key {
-                evicted = self.map.remove(&k).map(|(_, v)| (k, v));
-            }
-        }
-        self.map.insert(key, (self.tick, value));
-        evicted
-    }
-}
-
-/// Cache observability snapshot (see [`Runtime::cache_stats`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub evictions: u64,
-    /// compiled modules currently resident
-    pub resident: usize,
-}
-
 struct RuntimeInner {
     client: Client,
     cache: Mutex<LruMap<PathBuf, Arc<Executable>>>,
@@ -213,15 +161,12 @@ struct RuntimeInner {
     /// compiling thread at a time) without blocking cache-hit probes, which
     /// only ever take the short `cache` lock
     compile_lock: Mutex<()>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
 }
 
 /// Loads HLO-text artifacts, compiles them once, and caches the result in a
 /// bounded LRU.  Cheaply cloneable: clones share one client and one cache,
-/// which is what lets [`crate::model::MultiExitModel`] keep a handle for
-/// lazy per-range compilation.
+/// which is what lets the pjrt executor keep a handle for lazy per-range
+/// compilation.
 #[derive(Clone)]
 pub struct Runtime {
     inner: Arc<RuntimeInner>,
@@ -278,9 +223,6 @@ impl Runtime {
                 client,
                 cache: Mutex::new(LruMap::new(capacity)),
                 compile_lock: Mutex::new(()),
-                hits: AtomicU64::new(0),
-                misses: AtomicU64::new(0),
-                evictions: AtomicU64::new(0),
             }),
         }
     }
@@ -300,46 +242,53 @@ impl Runtime {
     /// compile on one pipeline stage's thread must never stall the other
     /// stage's per-launch hit probe.  The dedicated compile lock still
     /// keeps client-side compilation single-threaded (the thread-affine
-    /// PJRT wrapper wants that), with a double-check after acquiring it so
-    /// racing threads compile each module once.
+    /// PJRT wrapper wants that), with a counter-free double-check
+    /// ([`LruMap::peek`]) after acquiring it so racing threads compile each
+    /// module once and a lost race is accounted as the single miss it was.
     pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
         if let Some(hit) = self.inner.cache.lock().unwrap().get(path) {
-            self.inner.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(hit.clone());
         }
         let _compiling = self.inner.compile_lock.lock().unwrap();
         // another thread may have compiled this module while we waited
-        if let Some(hit) = self.inner.cache.lock().unwrap().get(path) {
-            self.inner.hits.fetch_add(1, Ordering::Relaxed);
+        if let Some(hit) = self.inner.cache.lock().unwrap().peek(path) {
             return Ok(hit.clone());
         }
-        self.inner.misses.fetch_add(1, Ordering::Relaxed);
         if !path.exists() {
-            bail!("HLO artifact {path:?} not found — run `make artifacts`");
+            bail!(
+                "HLO artifact {path:?} not found — run `make artifacts` to generate \
+                 it, or point --artifacts / SPLITEE_ARTIFACTS at a directory that \
+                 has it"
+            );
         }
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .inner
-            .client
-            .raw()
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        let name = path
-            .file_stem()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| path.display().to_string());
+        let compiled: Result<Arc<Executable>> = (|| {
+            let proto = xla::HloModuleProto::from_text_file(path).context("parsing HLO text")?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.inner.client.raw().compile(&comp).context("compiling")?;
+            let name = path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string());
+            Ok(Arc::new(Executable { exe, name }))
+        })();
+        let arc = compiled.with_context(|| {
+            let stats = self.cache_stats();
+            format!(
+                "loading HLO artifact {path:?} (executable cache: {}/{} modules \
+                 resident; capacity set by SPLITEE_EXEC_CACHE_CAP)",
+                stats.resident,
+                self.inner.cache.lock().unwrap().capacity()
+            )
+        })?;
         log::debug!(
-            "compiled {name} in {:.1} ms",
+            "compiled {} in {:.1} ms",
+            arc.name(),
             t0.elapsed().as_secs_f64() * 1e3
         );
-        let arc = Arc::new(Executable { exe, name });
         if let Some((evicted, _)) =
             self.inner.cache.lock().unwrap().insert(path.to_path_buf(), arc.clone())
         {
-            self.inner.evictions.fetch_add(1, Ordering::Relaxed);
             log::debug!("evicted {evicted:?} from the executable cache");
         }
         Ok(arc)
@@ -350,14 +299,11 @@ impl Runtime {
         self.inner.cache.lock().unwrap().len()
     }
 
-    /// Hit/miss/eviction counters since this runtime was created.
+    /// Hit/miss/eviction counters since this runtime was created.  Miss
+    /// accounting: one miss per cold load, counted at the pre-lock probe
+    /// (a lost compile race therefore counts one miss and no extra hit).
     pub fn cache_stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.inner.hits.load(Ordering::Relaxed),
-            misses: self.inner.misses.load(Ordering::Relaxed),
-            evictions: self.inner.evictions.load(Ordering::Relaxed),
-            resident: self.cached_count(),
-        }
+        self.inner.cache.lock().unwrap().stats()
     }
 }
 
@@ -367,73 +313,5 @@ impl std::fmt::Debug for Runtime {
             .field("client", &self.inner.client)
             .field("cached", &self.cached_count())
             .finish()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    // Pure LRU behaviour — no PJRT client needed.
-
-    #[test]
-    fn lru_get_and_insert_within_capacity() {
-        let mut lru: LruMap<u32, &str> = LruMap::new(3);
-        assert!(lru.is_empty());
-        assert!(lru.insert(1, "a").is_none());
-        assert!(lru.insert(2, "b").is_none());
-        assert_eq!(lru.get(&1), Some(&"a"));
-        assert_eq!(lru.get(&3), None);
-        assert_eq!(lru.len(), 2);
-    }
-
-    #[test]
-    fn lru_evicts_least_recently_used() {
-        let mut lru: LruMap<u32, &str> = LruMap::new(2);
-        lru.insert(1, "a");
-        lru.insert(2, "b");
-        // touch 1 so 2 becomes the LRU entry
-        assert_eq!(lru.get(&1), Some(&"a"));
-        let evicted = lru.insert(3, "c");
-        assert_eq!(evicted, Some((2, "b")));
-        assert_eq!(lru.len(), 2);
-        assert!(lru.get(&2).is_none());
-        assert_eq!(lru.get(&1), Some(&"a"));
-        assert_eq!(lru.get(&3), Some(&"c"));
-    }
-
-    #[test]
-    fn lru_reinsert_existing_key_does_not_evict() {
-        let mut lru: LruMap<u32, &str> = LruMap::new(2);
-        lru.insert(1, "a");
-        lru.insert(2, "b");
-        assert!(lru.insert(1, "a2").is_none());
-        assert_eq!(lru.len(), 2);
-        assert_eq!(lru.get(&1), Some(&"a2"));
-        assert_eq!(lru.get(&2), Some(&"b"));
-    }
-
-    #[test]
-    fn lru_capacity_one_cycles() {
-        let mut lru: LruMap<u32, u32> = LruMap::new(1);
-        for i in 0..10 {
-            let evicted = lru.insert(i, i * 10);
-            if i > 0 {
-                assert_eq!(evicted, Some((i - 1, (i - 1) * 10)));
-            }
-            assert_eq!(lru.len(), 1);
-        }
-    }
-
-    #[test]
-    fn thread_launch_counter_is_per_thread() {
-        // Only the thread-isolation semantics are testable without a PJRT
-        // client; the increment in `Executable::run` and the per-stage
-        // delta attribution are covered by the artifact-gated integration
-        // tests (launch-count assertions in tests/integration.rs).
-        let before = thread_launches();
-        assert_eq!(thread_launches(), before);
-        let other = std::thread::spawn(thread_launches).join().unwrap();
-        assert_eq!(other, 0, "fresh thread starts at zero");
     }
 }

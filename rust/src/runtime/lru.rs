@@ -1,0 +1,263 @@
+//! Bounded LRU map + cache observability counters.
+//!
+//! Backend-agnostic on purpose: the PJRT backend uses it as the compiled-
+//! executable cache, and the unit tests below run on every build (no XLA
+//! library, no artifacts).  Hit/miss/eviction accounting lives *inside* the
+//! map so a backend holding it behind a mutex gets consistent counters for
+//! free (see [`LruMap::stats`]).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Cache observability snapshot (hit/miss/eviction counters plus residency).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// entries currently resident
+    pub resident: usize,
+}
+
+/// Minimal LRU map: a `HashMap` plus a monotonically increasing access tick.
+/// Eviction scans for the smallest tick — the cache holds tens of compiled
+/// modules at most, so the O(n) scan is irrelevant next to a compile and
+/// keeps this dependency-free.
+///
+/// Counter semantics: [`LruMap::get`] counts one hit or one miss per call;
+/// [`LruMap::peek`] refreshes recency without touching the counters (for
+/// double-check-after-lock patterns, so a lost compile race is not counted
+/// twice); [`LruMap::insert`] counts one eviction whenever an entry is
+/// displaced (including every insert into a zero-capacity map, which stores
+/// nothing and hands the pair straight back).
+pub struct LruMap<K, V> {
+    capacity: usize,
+    tick: u64,
+    map: HashMap<K, (u64, V)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<K: Hash + Eq + Clone, V> LruMap<K, V> {
+    /// `capacity` 0 is legal and means "cache nothing" (every insert is an
+    /// immediate eviction) — useful for disabling a cache in experiments.
+    pub fn new(capacity: usize) -> LruMap<K, V> {
+        LruMap {
+            capacity,
+            tick: 0,
+            map: HashMap::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Hit/miss/eviction counters plus current residency.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            resident: self.map.len(),
+        }
+    }
+
+    /// Look up, mark as most recently used, and count a hit or a miss.
+    /// Generic over borrowed key forms (like `HashMap::get`) so a per-launch
+    /// hot path can probe with `&Path` without allocating a `PathBuf`.
+    pub fn get<Q>(&mut self, key: &Q) -> Option<&V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        match self.lookup(key) {
+            Some(v) => {
+                self.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Like [`LruMap::get`] but without counter updates.  Callers that probe
+    /// again after taking a build lock use this so one logical miss is not
+    /// recorded twice (and a lost build race is not recorded as a hit).
+    pub fn peek<Q>(&mut self, key: &Q) -> Option<&V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        self.lookup(key)
+    }
+
+    fn lookup<Q>(&mut self, key: &Q) -> Option<&V>
+    where
+        K: std::borrow::Borrow<Q>,
+        Q: Hash + Eq + ?Sized,
+    {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(entry) => {
+                entry.0 = tick;
+                Some(&entry.1)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert, evicting the least-recently-used entry when at capacity.
+    /// Returns the evicted `(key, value)`, if any; with capacity 0 the
+    /// incoming pair itself is returned (nothing is stored).
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        self.tick += 1;
+        if self.capacity == 0 {
+            self.evictions += 1;
+            return Some((key, value));
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+            let lru_key = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = lru_key {
+                evicted = self.map.remove(&k).map(|(_, v)| (k, v));
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(key, (self.tick, value));
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_and_insert_within_capacity() {
+        let mut lru: LruMap<u32, &str> = LruMap::new(3);
+        assert!(lru.is_empty());
+        assert!(lru.insert(1, "a").is_none());
+        assert!(lru.insert(2, "b").is_none());
+        assert_eq!(lru.get(&1), Some(&"a"));
+        assert_eq!(lru.get(&3), None);
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.capacity(), 3);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut lru: LruMap<u32, &str> = LruMap::new(2);
+        lru.insert(1, "a");
+        lru.insert(2, "b");
+        // touch 1 so 2 becomes the LRU entry
+        assert_eq!(lru.get(&1), Some(&"a"));
+        let evicted = lru.insert(3, "c");
+        assert_eq!(evicted, Some((2, "b")));
+        assert_eq!(lru.len(), 2);
+        assert!(lru.get(&2).is_none());
+        assert_eq!(lru.get(&1), Some(&"a"));
+        assert_eq!(lru.get(&3), Some(&"c"));
+    }
+
+    #[test]
+    fn eviction_order_follows_access_history_not_insertion_order() {
+        let mut lru: LruMap<u32, u32> = LruMap::new(3);
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        lru.insert(3, 30);
+        // access order now 1 < 2 < 3; touch 1 and 2 so 3 becomes LRU
+        lru.get(&1);
+        lru.get(&2);
+        assert_eq!(lru.insert(4, 40), Some((3, 30)));
+        // access order 1 < 2 < 4; next eviction must be 1
+        assert_eq!(lru.insert(5, 50), Some((1, 10)));
+        assert_eq!(lru.len(), 3);
+        assert!(lru.peek(&2).is_some() && lru.peek(&4).is_some() && lru.peek(&5).is_some());
+    }
+
+    #[test]
+    fn reinsert_existing_key_does_not_evict() {
+        let mut lru: LruMap<u32, &str> = LruMap::new(2);
+        lru.insert(1, "a");
+        lru.insert(2, "b");
+        assert!(lru.insert(1, "a2").is_none());
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.get(&1), Some(&"a2"));
+        assert_eq!(lru.get(&2), Some(&"b"));
+        assert_eq!(lru.stats().evictions, 0);
+    }
+
+    #[test]
+    fn capacity_one_cycles() {
+        let mut lru: LruMap<u32, u32> = LruMap::new(1);
+        for i in 0..10 {
+            let evicted = lru.insert(i, i * 10);
+            if i > 0 {
+                assert_eq!(evicted, Some((i - 1, (i - 1) * 10)));
+            }
+            assert_eq!(lru.len(), 1);
+        }
+        assert_eq!(lru.stats().evictions, 9);
+    }
+
+    #[test]
+    fn capacity_zero_stores_nothing() {
+        let mut lru: LruMap<u32, &str> = LruMap::new(0);
+        assert_eq!(lru.insert(1, "a"), Some((1, "a")));
+        assert!(lru.is_empty());
+        assert_eq!(lru.get(&1), None);
+        let s = lru.stats();
+        assert_eq!((s.evictions, s.misses, s.resident), (1, 1, 0));
+    }
+
+    #[test]
+    fn counter_accounting_hits_misses_evictions() {
+        let mut lru: LruMap<u32, u32> = LruMap::new(2);
+        assert_eq!(lru.stats(), CacheStats::default());
+        lru.get(&1); // miss
+        lru.insert(1, 10);
+        lru.get(&1); // hit
+        lru.get(&2); // miss
+        lru.insert(2, 20);
+        lru.insert(3, 30); // evicts 1 (2's insert is more recent than 1's get)
+        let s = lru.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident, 2);
+    }
+
+    #[test]
+    fn peek_refreshes_recency_without_counting() {
+        let mut lru: LruMap<u32, u32> = LruMap::new(2);
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        let before = lru.stats();
+        assert_eq!(lru.peek(&1), Some(&10)); // refresh 1, no counters
+        assert_eq!(lru.peek(&9), None);
+        assert_eq!(lru.stats().hits, before.hits);
+        assert_eq!(lru.stats().misses, before.misses);
+        // 2 is now the LRU entry thanks to the peek-refresh of 1
+        assert_eq!(lru.insert(3, 30), Some((2, 20)));
+    }
+}

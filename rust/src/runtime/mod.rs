@@ -1,55 +1,335 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute on the
-//! request path.
+//! Pluggable compute backends: the runtime seam between the model layer and
+//! whatever actually executes it.
 //!
-//! This is the only module that touches the `xla` crate.  Everything above it
-//! (model, coordinator, experiments) works with host [`TensorF32`]/
-//! [`TensorI32`] values.  Pattern follows /opt/xla-example/load_hlo:
+//! # The backend trait
+//!
+//! A [`ComputeBackend`] turns a [`ModelSpec`] (weights + geometry, plus the
+//! artifact manifest when one exists) into a [`ModelExecutor`]: the object
+//! that runs `embed`, fused `blocks[i..j)` ranges, exit heads and the
+//! all-exits cache graph.  Between executor calls the activation travels as
+//! an opaque [`Hidden`] handle owned by the backend — device-resident for
+//! PJRT, a host tensor for the reference backend — and crosses to the host
+//! only through [`Hidden::to_tensor`] (the split-boundary uplink payload and
+//! final outputs).  Launch accounting ([`thread_launches`]) and executable-
+//! cache observability ([`CacheStats`]) sit behind the same seam, so
+//! `ServingMetrics` and the coordinator's coalescing logic are
+//! backend-agnostic.
+//!
+//! # Feature matrix
+//!
+//! | backend     | cargo feature    | needs                                  |
+//! |-------------|------------------|----------------------------------------|
+//! | `reference` | always compiled  | nothing — pure Rust on host tensors    |
+//! | `pjrt`      | `--features pjrt`| `xla` crate + XLA/PJRT extension lib,  |
+//! |             |                  | AOT HLO artifacts (`make artifacts`)   |
+//!
+//! Selection is runtime-configurable: `--backend auto|reference|pjrt`
+//! (see [`Backend::from_name`]; `auto` prefers PJRT when this build has it
+//! and the client initializes, else falls back to `reference`).
+//!
+//! # Which tests run where
+//!
+//! * default features, no artifacts (every machine, every CI job): all unit
+//!   tests, plus the full coordinator integration suite — pipeline ordering,
+//!   coalescing, bandit-decision equivalence, failure injection — on a
+//!   synthetic reference-backend model, plus the reference fused-vs-per-block
+//!   bit-exactness property test.
+//! * artifacts present, default features: the same, plus golden-fixture and
+//!   layered-vs-prefix checks through the reference backend.
+//! * artifacts + `--features pjrt`: everything above through PJRT, plus the
+//!   chain-graph bit-exactness, executable-cache LRU and reference-vs-pjrt
+//!   parity tests.
+//!
+//! The PJRT pattern follows /opt/xla-example/load_hlo:
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
 //! `PjRtClient::compile` -> `execute`.
-//!
-//! [`TensorF32`]: crate::tensor::TensorF32
-//! [`TensorI32`]: crate::tensor::TensorI32
 
+pub mod lru;
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
 pub mod executable;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-pub use executable::{thread_launches, CacheStats, Executable, LruMap, Runtime};
+pub use lru::{CacheStats, LruMap};
+pub use reference::ReferenceBackend;
 
+#[cfg(feature = "pjrt")]
+pub use executable::{Arg, Client, Executable, Runtime};
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use std::cell::Cell;
 use std::sync::Arc;
 
 use anyhow::Result;
 
-/// Shared PJRT CPU client.  Creating a client is expensive (plugin init), so
-/// one is shared per process.
-#[derive(Clone)]
-pub struct Client {
-    inner: Arc<xla::PjRtClient>,
+use crate::config::Manifest;
+use crate::model::weights::ModelWeights;
+use crate::tensor::{TensorF32, TensorI32};
+
+thread_local! {
+    static THREAD_LAUNCHES: Cell<u64> = Cell::new(0);
 }
 
-impl Client {
-    /// Create the process-wide CPU client.
-    pub fn cpu() -> Result<Client> {
-        Ok(Client { inner: Arc::new(xla::PjRtClient::cpu()?) })
+/// Executable launches performed by the *calling thread* since it started.
+/// Pipeline stages run on dedicated threads, so a before/after delta
+/// attributes launches to one stage even while other stages are executing
+/// concurrently on their own threads.  On the serving path both backends
+/// count in the same units — one per graph execution (embed, one fused
+/// block range, one exit head) — so launch-based `ServingMetrics` are
+/// comparable across backends.  (`forward_all_exits` counts one launch per
+/// all-exits sweep on the reference backend vs one per `prefix_full` chunk
+/// under PJRT; it is the off-path cache builder, not a serving metric.)
+pub fn thread_launches() -> u64 {
+    THREAD_LAUNCHES.with(|c| c.get())
+}
+
+/// Record one executable launch on this thread (called by backends only).
+pub(crate) fn count_launch() {
+    THREAD_LAUNCHES.with(|c| c.set(c.get() + 1));
+}
+
+/// Backend-owned representation of an in-flight activation.
+pub trait HiddenRepr: std::fmt::Debug {
+    /// Host transfer: materialize as a `TensorF32` (the split-boundary copy).
+    fn to_tensor(&self) -> Result<TensorF32>;
+    /// Downcast hook for the owning backend.
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// A hidden state held in backend-native form between partition launches.
+///
+/// The handle is handed straight back as the next launch's argument, so the
+/// activation only crosses the host boundary where the system semantics
+/// require it — at the split point (the simulated uplink payload) and at
+/// final outputs.  For PJRT the repr is a raw XLA literal; for the reference
+/// backend it is already a host tensor.
+pub struct Hidden {
+    batch: usize,
+    repr: Box<dyn HiddenRepr>,
+}
+
+impl Hidden {
+    pub fn new(batch: usize, repr: Box<dyn HiddenRepr>) -> Hidden {
+        Hidden { batch, repr }
     }
 
-    pub fn platform_name(&self) -> String {
-        self.inner.platform_name()
+    /// Batch dimension (a compiled batch size under PJRT).
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
-    pub fn device_count(&self) -> usize {
-        self.inner.device_count()
+    /// Host transfer: backend repr -> `TensorF32` (the split-boundary copy).
+    pub fn to_tensor(&self) -> Result<TensorF32> {
+        self.repr.to_tensor()
     }
 
-    pub(crate) fn raw(&self) -> &xla::PjRtClient {
-        &self.inner
+    /// The backend-owned representation (backends downcast via `as_any`).
+    pub fn repr(&self) -> &dyn HiddenRepr {
+        self.repr.as_ref()
     }
 }
 
-impl std::fmt::Debug for Client {
+impl std::fmt::Debug for Hidden {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Client")
-            .field("platform", &self.platform_name())
-            .field("devices", &self.device_count())
+        f.debug_struct("Hidden")
+            .field("batch", &self.batch)
+            .field("repr", &self.repr)
             .finish()
+    }
+}
+
+/// Raw output of one exit head over a batch: class probabilities plus the
+/// per-sample confidence / entropy the policies consume.  The model layer
+/// derives predictions (argmax) and wraps this into its `ExitOutput`.
+#[derive(Debug, Clone)]
+pub struct HeadOut {
+    /// class probabilities [B, C]
+    pub probs: TensorF32,
+    /// max-probability confidence per sample (the paper's C_i)
+    pub conf: Vec<f32>,
+    /// prediction entropy per sample in nats (DeeBERT's measure)
+    pub ent: Vec<f32>,
+}
+
+/// Everything a backend needs to instantiate one trained model.
+///
+/// `manifest` carries the AOT artifact inventory; it is `None` for models
+/// built directly from weights (synthetic tests/benches), which only the
+/// artifact-free backends accept.
+pub struct ModelSpec<'a> {
+    pub task: &'a str,
+    pub style: &'a str,
+    pub weights: Arc<ModelWeights>,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    /// batch sizes the serving batcher may form (compiled sizes under PJRT)
+    pub batch_sizes: Vec<usize>,
+    /// batch size of the all-exits cache-builder graph
+    pub cache_batch: usize,
+    pub manifest: Option<&'a Manifest>,
+}
+
+/// One loaded model, executable partition by partition.
+///
+/// Contract: `start < end <= n_layers` and `layer < n_layers` are validated
+/// by the model layer before calls reach an executor; executors may assume
+/// in-range arguments but must never cause undefined behaviour on bad ones.
+pub trait ModelExecutor: Send + Sync + std::fmt::Debug {
+    fn backend_name(&self) -> &'static str;
+
+    /// tokens [B, T] -> h0 [B, T, D] in backend-native form.
+    fn embed(&self, tokens: &TensorI32) -> Result<Hidden>;
+
+    /// Blocks `start..end` (0-based, end exclusive) from a backend-native
+    /// hidden state — one fused launch where the backend supports it.
+    fn blocks(&self, h: &Hidden, start: usize, end: usize) -> Result<Hidden>;
+
+    /// Blocks `start..end` from a host hidden state (the offload
+    /// continuation entry point).
+    fn blocks_host(&self, h: &TensorF32, start: usize, end: usize) -> Result<Hidden>;
+
+    /// Exit head after `layer` (0-based) on a backend-native hidden state.
+    fn exit_head(&self, h: &Hidden, layer: usize) -> Result<HeadOut>;
+
+    /// Exit head after `layer` on a host hidden state.
+    fn exit_head_host(&self, h: &TensorF32, layer: usize) -> Result<HeadOut>;
+
+    /// Full forward through every exit at once (the cache-builder path).
+    /// tokens [B, T] with any B — batching/padding is the executor's
+    /// business.  Outer index of the result = layer.
+    fn forward_all_exits(&self, tokens: &TensorI32) -> Result<Vec<HeadOut>>;
+
+    /// Ensure whatever executes blocks `start..end` at `batch` is ready
+    /// (compiled), so first-use compilation never lands in a timed region.
+    /// No-op for backends without a compile step.
+    fn warm_range(&self, _batch: usize, _start: usize, _end: usize) -> Result<()> {
+        Ok(())
+    }
+
+    /// True when every multi-block range runs as one fused launch.
+    fn has_fused_ranges(&self) -> bool;
+
+    /// Executable-cache observability (all zeros for cache-less backends).
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
+}
+
+/// A compute backend: a factory for [`ModelExecutor`]s.
+pub trait ComputeBackend: Send + Sync + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+    fn load_model(&self, spec: &ModelSpec<'_>) -> Result<Box<dyn ModelExecutor>>;
+}
+
+/// Cheaply-cloneable handle to a selected compute backend.
+#[derive(Clone, Debug)]
+pub struct Backend {
+    inner: Arc<dyn ComputeBackend>,
+}
+
+impl Backend {
+    /// The pure-Rust reference backend (always available).
+    pub fn reference() -> Backend {
+        Backend { inner: Arc::new(ReferenceBackend) }
+    }
+
+    /// The PJRT backend over a fresh CPU client (only in `pjrt` builds).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Backend> {
+        Ok(Backend { inner: Arc::new(PjrtBackend::cpu()?) })
+    }
+
+    /// Prefer PJRT when this build has it and the client initializes;
+    /// otherwise the reference backend.
+    pub fn auto() -> Backend {
+        auto_impl()
+    }
+
+    /// Runtime selection by name: `auto`, `reference` or `pjrt`.
+    pub fn from_name(name: &str) -> Result<Backend> {
+        match name {
+            "auto" => Ok(Backend::auto()),
+            "reference" => Ok(Backend::reference()),
+            "pjrt" => pjrt_by_name(),
+            other => anyhow::bail!(
+                "unknown backend {other:?} — expected auto, reference or pjrt"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    pub fn load_model(&self, spec: &ModelSpec<'_>) -> Result<Box<dyn ModelExecutor>> {
+        self.inner.load_model(spec)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn auto_impl() -> Backend {
+    match Backend::pjrt() {
+        Ok(b) => b,
+        Err(e) => {
+            log::warn!(
+                "pjrt backend unavailable ({e:#}) — falling back to the reference backend"
+            );
+            Backend::reference()
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn auto_impl() -> Backend {
+    Backend::reference()
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_by_name() -> Result<Backend> {
+    Backend::pjrt()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_by_name() -> Result<Backend> {
+    anyhow::bail!(
+        "this build has no pjrt backend — rebuild with `cargo build --features pjrt` \
+         (needs the XLA/PJRT extension library), or use `--backend reference`"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_launch_counter_is_per_thread() {
+        let before = thread_launches();
+        count_launch();
+        assert_eq!(thread_launches(), before + 1);
+        let other = std::thread::spawn(thread_launches).join().unwrap();
+        assert_eq!(other, 0, "fresh thread starts at zero");
+    }
+
+    #[test]
+    fn backend_selection_by_name() {
+        assert_eq!(Backend::reference().name(), "reference");
+        assert_eq!(Backend::from_name("reference").unwrap().name(), "reference");
+        assert!(Backend::from_name("tpu-pod").is_err());
+        // `auto` always resolves to something usable
+        let auto = Backend::from_name("auto").unwrap();
+        assert!(auto.name() == "reference" || auto.name() == "pjrt");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_by_name_is_a_clear_error_without_the_feature() {
+        let err = Backend::from_name("pjrt").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--features pjrt"), "unhelpful error: {msg}");
     }
 }

@@ -1,0 +1,467 @@
+//! The PJRT compute backend: executes the AOT-compiled HLO artifacts as
+//! fused **partition ranges** (see the module docs in `runtime/mod.rs`).
+//!
+//! The serving hot path is partitioned at the split layer: one fused
+//! `chain{n}` executable covers `blocks[i..j)` in a single launch (the
+//! activation stays device-resident inside the module), the exit head is one
+//! more launch, and the hidden state crosses the host boundary only where
+//! the system semantics require it.  Between launches the activation is
+//! carried as a raw XLA literal inside the opaque [`Hidden`] handle.  When
+//! an artifact set predates the chain graphs the executor falls back to
+//! per-block launches with the same literal passthrough, so outputs are
+//! identical either way.
+//!
+//! The fused `chain{n}` executables are weight-parameterized like `block`,
+//! so one compiled module serves *every* range of length `n`; they are
+//! compiled lazily per `(length, batch)` through the runtime's bounded LRU
+//! cache rather than eagerly at load.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::executable::{Arg, Executable, Runtime};
+use super::literal::{literal_f32, tensor_f32};
+use super::lru::CacheStats;
+use super::{ComputeBackend, HeadOut, Hidden, HiddenRepr, ModelExecutor, ModelSpec};
+use crate::model::weights::ModelWeights;
+use crate::tensor::{TensorF32, TensorI32};
+
+/// XLA-literal activation handle (the pjrt backend's [`HiddenRepr`]).
+struct LiteralHidden(xla::Literal);
+
+impl std::fmt::Debug for LiteralHidden {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("LiteralHidden")
+    }
+}
+
+impl HiddenRepr for LiteralHidden {
+    fn to_tensor(&self) -> Result<TensorF32> {
+        tensor_f32(&self.0)
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// The PJRT backend: one shared client + compiled-executable cache; every
+/// loaded model compiles through it.
+pub struct PjrtBackend {
+    runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime) -> PjrtBackend {
+        PjrtBackend { runtime }
+    }
+
+    /// Backend over a fresh CPU client.
+    pub fn cpu() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { runtime: Runtime::cpu()? })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl std::fmt::Debug for PjrtBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtBackend").field("runtime", &self.runtime).finish()
+    }
+}
+
+// SAFETY: the runtime's executables are internally synchronized (see
+// `Executable`); compilation is serialized under the runtime's dedicated
+// compile lock, so the thread-affine client never compiles from two threads
+// at once.
+unsafe impl Send for PjrtBackend {}
+unsafe impl Sync for PjrtBackend {}
+
+impl ComputeBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load_model(&self, spec: &ModelSpec<'_>) -> Result<Box<dyn ModelExecutor>> {
+        let manifest = spec.manifest.with_context(|| {
+            format!(
+                "the pjrt backend executes compiled HLO artifacts — load {}/{} \
+                 through a manifest (run `make artifacts`), or use the reference \
+                 backend for artifact-free models",
+                spec.task, spec.style
+            )
+        })?;
+        let weights = Arc::clone(&spec.weights);
+        let n_layers = weights.n_layers;
+        let head_graph = format!("head_c{}", weights.n_classes);
+        let mut embed = BTreeMap::new();
+        let mut block = BTreeMap::new();
+        let mut head = BTreeMap::new();
+        for &b in &spec.batch_sizes {
+            embed.insert(b, self.runtime.load(&manifest.hlo_path("embed", b)?)?);
+            block.insert(b, self.runtime.load(&manifest.hlo_path("block", b)?)?);
+            head.insert(b, self.runtime.load(&manifest.hlo_path(&head_graph, b)?)?);
+        }
+        let prefix_graph = format!("prefix_full_c{}", weights.n_classes);
+        let prefix_full = match manifest.hlo_path(&prefix_graph, spec.cache_batch) {
+            Ok(path) => Some((spec.cache_batch, self.runtime.load(&path)?)),
+            Err(_) => None,
+        };
+        // Fused block-range graphs (chain2..chainL): record paths only; the
+        // runtime compiles each lazily on first use behind its LRU cache.
+        // Length-1 ranges reuse the plain `block` executable.
+        let mut chain = BTreeMap::new();
+        for len in 2..=n_layers {
+            let graph = format!("chain{len}");
+            for &b in &spec.batch_sizes {
+                if let Ok(path) = manifest.hlo_path(&graph, b) {
+                    chain.insert((len, b), path);
+                }
+            }
+        }
+        let lits = if std::env::var("SPLITEE_NO_LITERAL_CACHE").is_ok() {
+            None
+        } else {
+            Some(build_lit_cache(&weights)?)
+        };
+        Ok(Box::new(PjrtExecutor {
+            n_layers,
+            n_classes: weights.n_classes,
+            weights,
+            runtime: self.runtime.clone(),
+            embed,
+            block,
+            head,
+            prefix_full,
+            chain,
+            lits,
+            batch_sizes: spec.batch_sizes.clone(),
+        }))
+    }
+}
+
+struct LitCache {
+    embed: Vec<xla::Literal>,
+    blocks: Vec<Vec<xla::Literal>>,
+    heads: Vec<Vec<xla::Literal>>,
+    prefix: Vec<xla::Literal>,
+}
+
+fn build_lit_cache(weights: &ModelWeights) -> Result<LitCache> {
+    let conv = |ts: &[TensorF32]| -> Result<Vec<xla::Literal>> {
+        ts.iter().map(literal_f32).collect()
+    };
+    Ok(LitCache {
+        embed: conv(&weights.embed)?,
+        blocks: weights.blocks.iter().map(|b| conv(b)).collect::<Result<_>>()?,
+        heads: weights.heads.iter().map(|h| conv(h)).collect::<Result<_>>()?,
+        prefix: {
+            let mut all = conv(&weights.embed)?;
+            for b in &weights.blocks {
+                all.extend(conv(b)?);
+            }
+            for h in &weights.heads {
+                all.extend(conv(h)?);
+            }
+            all
+        },
+    })
+}
+
+/// One trained model bound to its compiled executables.
+pub(crate) struct PjrtExecutor {
+    weights: Arc<ModelWeights>,
+    runtime: Runtime,
+    embed: BTreeMap<usize, Arc<Executable>>,
+    block: BTreeMap<usize, Arc<Executable>>,
+    head: BTreeMap<usize, Arc<Executable>>,
+    prefix_full: Option<(usize, Arc<Executable>)>,
+    /// fused block-range artifacts: (range length, batch) -> HLO path,
+    /// loaded lazily through the runtime's LRU cache
+    chain: BTreeMap<(usize, usize), PathBuf>,
+    /// Weight tensors pre-converted to XLA literals — skips the host copy on
+    /// every layer execution (L3 perf pass; disable for A/B measurement with
+    /// SPLITEE_NO_LITERAL_CACHE=1).
+    lits: Option<LitCache>,
+    batch_sizes: Vec<usize>,
+    n_layers: usize,
+    n_classes: usize,
+}
+
+impl std::fmt::Debug for PjrtExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtExecutor")
+            .field("layers", &self.n_layers)
+            .field("classes", &self.n_classes)
+            .field("fused_ranges", &self.chain.len())
+            .finish()
+    }
+}
+
+// SAFETY: the literal cache is immutable after construction and literals are
+// plain host buffers; the PJRT CPU executables are internally synchronized.
+// The runtime handle is only used for lazy chain compiles, which are
+// serialized under the runtime's dedicated compile lock (cache-hit probes
+// never compile), so the thread-affine client never compiles from two
+// threads at once.  The executor is only ever used behind `Arc`/`Box` with
+// `&self` access.
+unsafe impl Send for PjrtExecutor {}
+unsafe impl Sync for PjrtExecutor {}
+
+impl PjrtExecutor {
+    fn pick_exec<'a>(
+        table: &'a BTreeMap<usize, Arc<Executable>>,
+        batch: usize,
+    ) -> Result<&'a Arc<Executable>> {
+        table
+            .get(&batch)
+            .with_context(|| format!("no executable compiled for batch {batch}"))
+    }
+
+    fn lit_of<'a>(&self, h: &'a Hidden) -> Result<&'a xla::Literal> {
+        h.repr()
+            .as_any()
+            .downcast_ref::<LiteralHidden>()
+            .map(|l| &l.0)
+            .context("hidden state does not belong to the pjrt backend")
+    }
+
+    fn push_block_args<'a>(&'a self, args: &mut Vec<Arg<'a>>, layer: usize) {
+        match &self.lits {
+            Some(l) => args.extend(l.blocks[layer].iter().map(Arg::Lit)),
+            None => args.extend(self.weights.blocks[layer].iter().map(Arg::F32)),
+        }
+    }
+
+    /// Run blocks `start..end` (0-based, end exclusive) from a hidden-state
+    /// argument, returning the raw output literal.  One fused launch when
+    /// the `chain{end-start}` artifact exists; otherwise per-block launches
+    /// with literal passthrough (no host materialization either way).
+    fn run_blocks_arg(
+        &self,
+        h: Arg<'_>,
+        batch: usize,
+        start: usize,
+        end: usize,
+    ) -> Result<xla::Literal> {
+        if start >= end || end > self.n_layers {
+            bail!(
+                "block range [{start}, {end}) out of bounds (L = {})",
+                self.n_layers
+            );
+        }
+        let len = end - start;
+        if len > 1 {
+            if let Some(path) = self.chain.get(&(len, batch)) {
+                let exe = self
+                    .runtime
+                    .load(path)
+                    .with_context(|| format!("loading fused range chain{len} (batch {batch})"))?;
+                let mut args: Vec<Arg<'_>> = Vec::with_capacity(1 + 16 * len);
+                args.push(h);
+                match &self.lits {
+                    Some(l) => {
+                        for blk in &l.blocks[start..end] {
+                            args.extend(blk.iter().map(Arg::Lit));
+                        }
+                    }
+                    None => {
+                        args.extend(self.weights.block_range_args(start, end).map(Arg::F32))
+                    }
+                }
+                let mut out = exe.run(&args)?;
+                if out.is_empty() {
+                    bail!("chain{len} returned no outputs");
+                }
+                return Ok(out.remove(0));
+            }
+        }
+        // fallback: per-block launches, activation carried as a literal
+        let exe = Self::pick_exec(&self.block, batch)?;
+        let mut cur = {
+            let mut args: Vec<Arg<'_>> = Vec::with_capacity(17);
+            args.push(h);
+            self.push_block_args(&mut args, start);
+            let mut out = exe.run(&args)?;
+            if out.is_empty() {
+                bail!("block returned no outputs");
+            }
+            out.remove(0)
+        };
+        for layer in (start + 1)..end {
+            let mut out = {
+                let mut args: Vec<Arg<'_>> = Vec::with_capacity(17);
+                args.push(Arg::Lit(&cur));
+                self.push_block_args(&mut args, layer);
+                exe.run(&args)?
+            };
+            if out.is_empty() {
+                bail!("block returned no outputs");
+            }
+            cur = out.remove(0);
+        }
+        Ok(cur)
+    }
+
+    fn exit_head_arg(&self, h: Arg<'_>, batch: usize, layer: usize) -> Result<HeadOut> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        }
+        let exe = Self::pick_exec(&self.head, batch)?;
+        let mut args = vec![h];
+        match &self.lits {
+            Some(l) => args.extend(l.heads[layer].iter().map(Arg::Lit)),
+            None => args.extend(self.weights.heads[layer].iter().map(Arg::F32)),
+        }
+        let out = exe.run(&args)?;
+        if out.len() != 3 {
+            bail!("exit head returned {} outputs, expected 3", out.len());
+        }
+        let probs = tensor_f32(&out[0])?;
+        let conf = tensor_f32(&out[1])?;
+        let ent = tensor_f32(&out[2])?;
+        Ok(HeadOut {
+            probs,
+            conf: conf.into_data(),
+            ent: ent.into_data(),
+        })
+    }
+}
+
+impl ModelExecutor for PjrtExecutor {
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn embed(&self, tokens: &TensorI32) -> Result<Hidden> {
+        let b = tokens.shape()[0];
+        let exe = Self::pick_exec(&self.embed, b)?;
+        let mut args = vec![Arg::I32(tokens)];
+        match &self.lits {
+            Some(l) => args.extend(l.embed.iter().map(Arg::Lit)),
+            None => args.extend(self.weights.embed.iter().map(Arg::F32)),
+        }
+        let mut out = exe.run(&args)?;
+        if out.is_empty() {
+            bail!("embed returned no outputs");
+        }
+        Ok(Hidden::new(b, Box::new(LiteralHidden(out.remove(0)))))
+    }
+
+    fn blocks(&self, h: &Hidden, start: usize, end: usize) -> Result<Hidden> {
+        let lit = self.run_blocks_arg(Arg::Lit(self.lit_of(h)?), h.batch(), start, end)?;
+        Ok(Hidden::new(h.batch(), Box::new(LiteralHidden(lit))))
+    }
+
+    fn blocks_host(&self, h: &TensorF32, start: usize, end: usize) -> Result<Hidden> {
+        let b = h.shape()[0];
+        let lit = self.run_blocks_arg(Arg::F32(h), b, start, end)?;
+        Ok(Hidden::new(b, Box::new(LiteralHidden(lit))))
+    }
+
+    fn exit_head(&self, h: &Hidden, layer: usize) -> Result<HeadOut> {
+        self.exit_head_arg(Arg::Lit(self.lit_of(h)?), h.batch(), layer)
+    }
+
+    fn exit_head_host(&self, h: &TensorF32, layer: usize) -> Result<HeadOut> {
+        self.exit_head_arg(Arg::F32(h), h.shape()[0], layer)
+    }
+
+    /// Full forward through every exit at once via the fused `prefix_full`
+    /// graph.  tokens [B, T] with any B — batching/padding handled here.
+    ///
+    /// Accumulators are preallocated from the batch plan (`n` rows, `C`
+    /// classes known up front), so covering a large cache is one exact-size
+    /// allocation per layer instead of a re-concatenation per chunk.
+    fn forward_all_exits(&self, tokens: &TensorI32) -> Result<Vec<HeadOut>> {
+        let (cache_b, exe) = self
+            .prefix_full
+            .as_ref()
+            .context("prefix_full graph not in manifest")?;
+        let n = tokens.shape()[0];
+        let c = self.n_classes;
+        let layers = self.n_layers;
+        let mut probs_acc: Vec<Vec<f32>> =
+            (0..layers).map(|_| Vec::with_capacity(n * c)).collect();
+        let mut conf_acc: Vec<Vec<f32>> = (0..layers).map(|_| Vec::with_capacity(n)).collect();
+        let mut ent_acc: Vec<Vec<f32>> = (0..layers).map(|_| Vec::with_capacity(n)).collect();
+        let mut done = 0usize;
+        while done < n {
+            let real = (*cache_b).min(n - done);
+            let chunk = tokens
+                .slice_rows(done, done + real)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .pad_rows_to(*cache_b)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            let mut args = vec![Arg::I32(&chunk)];
+            let flat;
+            match &self.lits {
+                Some(l) => args.extend(l.prefix.iter().map(Arg::Lit)),
+                None => {
+                    flat = self.weights.prefix_full_args();
+                    args.extend(flat.iter().map(|t| Arg::F32(t)));
+                }
+            }
+            let out = exe.run_f32(&args)?;
+            // output layout: (probs [L,B,C], conf [L,B], ent [L,B])
+            if out.len() != 3 {
+                bail!("prefix_full returned {} outputs, expected 3", out.len());
+            }
+            let (probs, conf, ent) = (&out[0], &out[1], &out[2]);
+            let b = probs.shape()[1];
+            if probs.shape()[2] != c {
+                bail!("prefix_full emitted {} classes, weights have {c}", probs.shape()[2]);
+            }
+            // copy the `real` unpadded rows of each stacked layer straight
+            // into the preallocated accumulators
+            for l in 0..layers {
+                probs_acc[l].extend_from_slice(&probs.data()[l * b * c..l * b * c + real * c]);
+                conf_acc[l].extend_from_slice(&conf.data()[l * b..l * b + real]);
+                ent_acc[l].extend_from_slice(&ent.data()[l * b..l * b + real]);
+            }
+            done += real;
+        }
+        probs_acc
+            .into_iter()
+            .zip(conf_acc)
+            .zip(ent_acc)
+            .map(|((p, cf), en)| {
+                let probs = TensorF32::new(vec![n, c], p).map_err(|e| anyhow::anyhow!(e))?;
+                Ok(HeadOut { probs, conf: cf, ent: en })
+            })
+            .collect()
+    }
+
+    /// Ensure the fused range executable for blocks `start..end` at `batch`
+    /// is compiled (no-op when absent or length 1).  The serving stages call
+    /// this *before* their timed regions so a first-use (or post-eviction)
+    /// chain compile is never recorded as simulated compute latency.
+    fn warm_range(&self, batch: usize, start: usize, end: usize) -> Result<()> {
+        if end > start && end - start > 1 {
+            if let Some(path) = self.chain.get(&(end - start, batch)) {
+                self.runtime.load(path).with_context(|| {
+                    format!("pre-warming fused range chain{} (batch {batch})", end - start)
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// True when every multi-block range has a fused artifact (all lengths
+    /// 2..=L at every compiled batch size), i.e. the serving path runs one
+    /// block-range launch per partition.
+    fn has_fused_ranges(&self) -> bool {
+        self.batch_sizes
+            .iter()
+            .all(|&b| (2..=self.n_layers).all(|len| self.chain.contains_key(&(len, b))))
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.runtime.cache_stats()
+    }
+}

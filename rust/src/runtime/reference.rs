@@ -1,0 +1,504 @@
+//! The pure-Rust reference backend: executes embed / transformer blocks /
+//! exit heads directly from the host-side [`ModelWeights`], no compiled
+//! artifacts and no external libraries.
+//!
+//! The math mirrors `python/compile/kernels/ref.py` operation for operation
+//! (pre-LN attention and FFN with residuals, tanh-approximate GELU, stable
+//! softmax, entropy in nats with the same `1e-12` floor), so outputs agree
+//! with the AOT-compiled PJRT graphs to float tolerance — asserted by the
+//! reference-vs-pjrt parity test in `tests/integration.rs`.  Fused-range
+//! semantics are trivial here (`blocks(start..end)` is one "launch" however
+//! many layers it covers), which keeps launch-count metrics comparable with
+//! the PJRT partition path.
+//!
+//! Naive loops on purpose: this backend exists so the full stack builds,
+//! tests and benches **everywhere** — correctness and portability first,
+//! with per-row work laid out so the obvious SIMD/thread upgrades stay easy.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    count_launch, ComputeBackend, HeadOut, Hidden, HiddenRepr, ModelExecutor, ModelSpec,
+};
+use crate::model::weights::ModelWeights;
+use crate::tensor::{TensorF32, TensorI32};
+
+/// LayerNorm epsilon — matches `ref.py::layer_norm`.
+const LN_EPS: f32 = 1e-5;
+/// sqrt(2/pi) for the tanh-approximate GELU — matches `jax.nn.gelu`.
+const GELU_C: f32 = 0.797_884_56;
+/// Entropy log floor — matches `ref.py::exit_head_ref`.
+const ENT_EPS: f32 = 1e-12;
+
+/// Host-tensor activation handle (the reference backend's [`HiddenRepr`]).
+#[derive(Debug)]
+struct HostHidden(TensorF32);
+
+impl HiddenRepr for HostHidden {
+    fn to_tensor(&self) -> Result<TensorF32> {
+        Ok(self.0.clone())
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
+/// The always-available pure-Rust backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReferenceBackend;
+
+impl ComputeBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn load_model(&self, spec: &ModelSpec<'_>) -> Result<Box<dyn ModelExecutor>> {
+        Ok(Box::new(ReferenceExecutor::new(spec)?))
+    }
+}
+
+/// One model bound to the reference math.
+pub(crate) struct ReferenceExecutor {
+    weights: Arc<ModelWeights>,
+    n_heads: usize,
+    d_model: usize,
+    n_layers: usize,
+}
+
+impl std::fmt::Debug for ReferenceExecutor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReferenceExecutor")
+            .field("layers", &self.n_layers)
+            .field("d_model", &self.d_model)
+            .field("heads", &self.n_heads)
+            .finish()
+    }
+}
+
+impl ReferenceExecutor {
+    fn new(spec: &ModelSpec<'_>) -> Result<ReferenceExecutor> {
+        let weights = Arc::clone(&spec.weights);
+        let tok = &weights.embed[0];
+        if tok.ndim() != 2 {
+            bail!("embed.tok must be 2-D [vocab, d_model], got {:?}", tok.shape());
+        }
+        let d_model = tok.shape()[1];
+        if spec.n_heads == 0 || d_model % spec.n_heads != 0 {
+            bail!(
+                "d_model {d_model} is not divisible by n_heads {} — \
+                 reference attention needs equal head widths",
+                spec.n_heads
+            );
+        }
+        Ok(ReferenceExecutor {
+            n_layers: weights.n_layers,
+            weights,
+            n_heads: spec.n_heads,
+            d_model,
+        })
+    }
+
+    fn host_of<'a>(&self, h: &'a Hidden) -> Result<&'a TensorF32> {
+        h.repr()
+            .as_any()
+            .downcast_ref::<HostHidden>()
+            .map(|hh| &hh.0)
+            .context("hidden state does not belong to the reference backend")
+    }
+
+    /// Embedding math: tokens [B, T] -> h0 [B, T, D].
+    fn embed_math(&self, tokens: &TensorI32) -> Result<TensorF32> {
+        if tokens.ndim() != 2 {
+            bail!("tokens must be [B, T], got shape {:?}", tokens.shape());
+        }
+        let (b, t) = (tokens.shape()[0], tokens.shape()[1]);
+        let tok = &self.weights.embed[0];
+        let pos = &self.weights.embed[1];
+        let (ln_g, ln_b) = (&self.weights.embed[2], &self.weights.embed[3]);
+        let vocab = tok.shape()[0];
+        let d = self.d_model;
+        if pos.ndim() != 2 || pos.shape()[1] != d {
+            bail!("embed.pos must be [T, {d}], got {:?}", pos.shape());
+        }
+        if t > pos.shape()[0] {
+            bail!(
+                "sequence length {t} exceeds the positional table ({} rows)",
+                pos.shape()[0]
+            );
+        }
+        let mut h = vec![0f32; b * t * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                let id = tokens.data()[bi * t + ti];
+                if id < 0 || id as usize >= vocab {
+                    bail!(
+                        "token id {id} at [{bi}, {ti}] is outside the vocabulary \
+                         (0..{vocab})"
+                    );
+                }
+                let row = &mut h[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                let tk = &tok.data()[id as usize * d..(id as usize + 1) * d];
+                let ps = &pos.data()[ti * d..(ti + 1) * d];
+                for j in 0..d {
+                    row[j] = tk[j] + ps[j];
+                }
+            }
+        }
+        layer_norm_rows(&mut h, d, ln_g.data(), ln_b.data());
+        TensorF32::new(vec![b, t, d], h).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// One transformer block (pre-LN attention + pre-LN FFN, both residual).
+    fn block_math(&self, x: Vec<f32>, b: usize, t: usize, layer: usize) -> Vec<f32> {
+        // BLOCK_PARAM_ORDER: ln1_g ln1_b wq bq wk bk wv bv wo bo
+        //                    ln2_g ln2_b w1 b1 w2 b2
+        let p = &self.weights.blocks[layer];
+        let d = self.d_model;
+        let heads = self.n_heads;
+        let dh = d / heads;
+        let n = b * t;
+
+        // ---- attention: x + (softmax(QK^T / sqrt(dh)) V) Wo + bo
+        let mut hn = x.clone();
+        layer_norm_rows(&mut hn, d, p[0].data(), p[1].data());
+        let q = matmul_bias(&hn, p[2].data(), p[3].data(), n, d, d);
+        let k = matmul_bias(&hn, p[4].data(), p[5].data(), n, d, d);
+        let v = matmul_bias(&hn, p[6].data(), p[7].data(), n, d, d);
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut o = vec![0f32; n * d];
+        let mut scores = vec![0f32; t];
+        for bi in 0..b {
+            for hi in 0..heads {
+                let hoff = hi * dh;
+                for ti in 0..t {
+                    let qoff = (bi * t + ti) * d + hoff;
+                    for (si, s) in scores.iter_mut().enumerate() {
+                        let koff = (bi * t + si) * d + hoff;
+                        let mut dot = 0f32;
+                        for dd in 0..dh {
+                            dot += q[qoff + dd] * k[koff + dd];
+                        }
+                        *s = dot * scale;
+                    }
+                    softmax_inplace(&mut scores);
+                    let ooff = (bi * t + ti) * d + hoff;
+                    for (si, &w) in scores.iter().enumerate() {
+                        let voff = (bi * t + si) * d + hoff;
+                        for dd in 0..dh {
+                            o[ooff + dd] += w * v[voff + dd];
+                        }
+                    }
+                }
+            }
+        }
+        let proj = matmul_bias(&o, p[8].data(), p[9].data(), n, d, d);
+        let mut x = x;
+        for i in 0..n * d {
+            x[i] += proj[i];
+        }
+
+        // ---- FFN: x + W2 gelu(W1 LN2(x) + b1) + b2
+        let f = p[12].shape()[1];
+        let mut hn = x.clone();
+        layer_norm_rows(&mut hn, d, p[10].data(), p[11].data());
+        let mut a = matmul_bias(&hn, p[12].data(), p[13].data(), n, d, f);
+        for v in a.iter_mut() {
+            *v = gelu_tanh(*v);
+        }
+        let proj = matmul_bias(&a, p[14].data(), p[15].data(), n, f, d);
+        for i in 0..n * d {
+            x[i] += proj[i];
+        }
+        x
+    }
+
+    /// Blocks `start..end` over a [B, T, D] tensor.
+    fn run_blocks(&self, h: &TensorF32, start: usize, end: usize) -> Result<TensorF32> {
+        if h.ndim() != 3 || h.shape()[2] != self.d_model {
+            bail!(
+                "hidden state must be [B, T, {}], got {:?}",
+                self.d_model,
+                h.shape()
+            );
+        }
+        if start >= end || end > self.n_layers {
+            bail!(
+                "block range [{start}, {end}) out of bounds (L = {})",
+                self.n_layers
+            );
+        }
+        let (b, t) = (h.shape()[0], h.shape()[1]);
+        let mut x = h.data().to_vec();
+        for layer in start..end {
+            x = self.block_math(x, b, t, layer);
+        }
+        TensorF32::new(vec![b, t, self.d_model], x).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Exit head after `layer` over a [B, T, D] tensor.
+    fn head_math(&self, h: &TensorF32, layer: usize) -> Result<HeadOut> {
+        if layer >= self.n_layers {
+            bail!("layer {layer} out of range (L = {})", self.n_layers);
+        }
+        if h.ndim() != 3 || h.shape()[2] != self.d_model {
+            bail!(
+                "hidden state must be [B, T, {}], got {:?}",
+                self.d_model,
+                h.shape()
+            );
+        }
+        // HEAD_PARAM_ORDER: ln_g ln_b wc bc
+        let p = &self.weights.heads[layer];
+        let (b, t, d) = (h.shape()[0], h.shape()[1], self.d_model);
+        let c = p[2].shape()[1];
+        // [CLS] pooling: row 0 of every sample
+        let mut cls = vec![0f32; b * d];
+        for bi in 0..b {
+            cls[bi * d..(bi + 1) * d].copy_from_slice(&h.data()[bi * t * d..bi * t * d + d]);
+        }
+        layer_norm_rows(&mut cls, d, p[0].data(), p[1].data());
+        let mut logits = matmul_bias(&cls, p[2].data(), p[3].data(), b, d, c);
+        let mut conf = Vec::with_capacity(b);
+        let mut ent = Vec::with_capacity(b);
+        for row in logits.chunks_exact_mut(c) {
+            softmax_inplace(row);
+            let mut mx = row[0];
+            let mut h_nats = 0f32;
+            for &pv in row.iter() {
+                if pv > mx {
+                    mx = pv;
+                }
+                h_nats -= pv * (pv + ENT_EPS).ln();
+            }
+            conf.push(mx);
+            ent.push(h_nats);
+        }
+        let probs = TensorF32::new(vec![b, c], logits).map_err(|e| anyhow::anyhow!(e))?;
+        Ok(HeadOut { probs, conf, ent })
+    }
+}
+
+impl ModelExecutor for ReferenceExecutor {
+    fn backend_name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn embed(&self, tokens: &TensorI32) -> Result<Hidden> {
+        let h = self.embed_math(tokens)?;
+        count_launch();
+        let b = h.shape()[0];
+        Ok(Hidden::new(b, Box::new(HostHidden(h))))
+    }
+
+    fn blocks(&self, h: &Hidden, start: usize, end: usize) -> Result<Hidden> {
+        let out = self.run_blocks(self.host_of(h)?, start, end)?;
+        count_launch();
+        Ok(Hidden::new(h.batch(), Box::new(HostHidden(out))))
+    }
+
+    fn blocks_host(&self, h: &TensorF32, start: usize, end: usize) -> Result<Hidden> {
+        let out = self.run_blocks(h, start, end)?;
+        count_launch();
+        let b = out.shape()[0];
+        Ok(Hidden::new(b, Box::new(HostHidden(out))))
+    }
+
+    fn exit_head(&self, h: &Hidden, layer: usize) -> Result<HeadOut> {
+        let out = self.head_math(self.host_of(h)?, layer)?;
+        count_launch();
+        Ok(out)
+    }
+
+    fn exit_head_host(&self, h: &TensorF32, layer: usize) -> Result<HeadOut> {
+        let out = self.head_math(h, layer)?;
+        count_launch();
+        Ok(out)
+    }
+
+    fn forward_all_exits(&self, tokens: &TensorI32) -> Result<Vec<HeadOut>> {
+        let h0 = self.embed_math(tokens)?;
+        // one "launch" for the whole sweep — the analogue of PJRT's fused
+        // prefix_full module, keeping cross-backend launch units comparable
+        count_launch();
+        let (b, t) = (h0.shape()[0], h0.shape()[1]);
+        let mut x = h0.into_data();
+        let mut out = Vec::with_capacity(self.n_layers);
+        for layer in 0..self.n_layers {
+            x = self.block_math(x, b, t, layer);
+            let h = TensorF32::new(vec![b, t, self.d_model], x.clone())
+                .map_err(|e| anyhow::anyhow!(e))?;
+            out.push(self.head_math(&h, layer)?);
+        }
+        Ok(out)
+    }
+
+    fn has_fused_ranges(&self) -> bool {
+        // any blocks(start..end) call is one "launch" here, whatever its
+        // length — the fused-partition invariant holds by construction
+        true
+    }
+}
+
+/// LayerNorm over the last axis, row by row (`ref.py::layer_norm`).
+fn layer_norm_rows(x: &mut [f32], d: usize, g: &[f32], b: &[f32]) {
+    debug_assert!(d > 0 && x.len() % d == 0 && g.len() == d && b.len() == d);
+    for row in x.chunks_exact_mut(d) {
+        let mu = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..d {
+            row[j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+}
+
+/// out[n, m] = x[n, k] @ w[k, m] + bias[m] (row-major, k-outer accumulation).
+fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), k * m);
+    debug_assert_eq!(bias.len(), m);
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let xi = &x[i * k..(i + 1) * k];
+        let oi = &mut out[i * m..(i + 1) * m];
+        oi.copy_from_slice(bias);
+        for (kk, &xv) in xi.iter().enumerate() {
+            let wrow = &w[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                oi[j] += xv * wrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Numerically stable in-place softmax over one row.
+fn softmax_inplace(row: &mut [f32]) {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Tanh-approximate GELU (`jax.nn.gelu(..., approximate=True)`).
+fn gelu_tanh(v: f32) -> f32 {
+    0.5 * v * (1.0 + (GELU_C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        let g = vec![1.0f32; 4];
+        let b = vec![0.0f32; 4];
+        layer_norm_rows(&mut x, 4, &g, &b);
+        let mu: f32 = x.iter().sum::<f32>() / 4.0;
+        let var: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6, "mean {mu}");
+        assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        // gain/bias applied after normalization
+        let mut y = vec![1.0f32, 2.0, 3.0, 4.0];
+        layer_norm_rows(&mut y, 4, &[2.0; 4], &[1.0; 4]);
+        for (a, c) in x.iter().zip(&y) {
+            assert!((a * 2.0 + 1.0 - c).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_bias_matches_hand_computation() {
+        // [2,3] @ [3,2] + bias
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let bias = [10.0, 20.0];
+        let out = matmul_bias(&x, &w, &bias, 2, 3, 2);
+        assert_eq!(out, vec![1.0 + 3.0 + 10.0, 2.0 + 3.0 + 20.0, 4.0 + 6.0 + 10.0, 5.0 + 6.0 + 20.0]);
+    }
+
+    #[test]
+    fn softmax_is_stable_and_normalized() {
+        let mut row = vec![1000.0f32, 1001.0, 1002.0];
+        softmax_inplace(&mut row);
+        let sum: f32 = row.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+        assert!(row.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        assert_eq!(gelu_tanh(0.0), 0.0);
+        // gelu(1) ≈ 0.841192 (tanh approximation)
+        assert!((gelu_tanh(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu_tanh(-1.0) + 0.158808).abs() < 1e-4);
+        // large inputs saturate to identity / zero
+        assert!((gelu_tanh(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu_tanh(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn executor_rejects_bad_ranges_and_tokens() {
+        use crate::model::ModelWeights;
+        let weights = Arc::new(ModelWeights::synthetic(2, 8, 16, 32, 4, 2, 7));
+        let spec = ModelSpec {
+            task: "t",
+            style: "s",
+            weights,
+            n_heads: 2,
+            seq_len: 4,
+            batch_sizes: vec![1],
+            cache_batch: 1,
+            manifest: None,
+        };
+        let exec = ReferenceExecutor::new(&spec).unwrap();
+        let tokens = TensorI32::new(vec![1, 4], vec![0, 1, 2, 3]).unwrap();
+        let h = exec.embed(&tokens).unwrap();
+        assert!(exec.blocks(&h, 1, 1).is_err(), "empty range");
+        assert!(exec.blocks(&h, 0, 3).is_err(), "range past L");
+        assert!(exec.exit_head(&h, 2).is_err(), "head past L");
+        // out-of-vocabulary token ids are a clear error, not a panic
+        let bad = TensorI32::new(vec![1, 4], vec![0, 1, 2, 64]).unwrap();
+        let err = exec.embed(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("vocabulary"));
+    }
+
+    #[test]
+    fn head_probs_are_a_distribution() {
+        use crate::model::ModelWeights;
+        let weights = Arc::new(ModelWeights::synthetic(2, 8, 16, 32, 4, 3, 11));
+        let spec = ModelSpec {
+            task: "t",
+            style: "s",
+            weights,
+            n_heads: 2,
+            seq_len: 4,
+            batch_sizes: vec![1, 2],
+            cache_batch: 2,
+            manifest: None,
+        };
+        let exec = ReferenceExecutor::new(&spec).unwrap();
+        let tokens = TensorI32::new(vec![2, 4], vec![5, 1, 9, 3, 0, 31, 7, 2]).unwrap();
+        let h0 = exec.embed(&tokens).unwrap();
+        let h1 = exec.blocks(&h0, 0, 2).unwrap();
+        let out = exec.exit_head(&h1, 1).unwrap();
+        assert_eq!(out.probs.shape(), &[2, 3]);
+        for row in out.probs.data().chunks_exact(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "probs sum {sum}");
+        }
+        for (i, &c) in out.conf.iter().enumerate() {
+            assert!(c >= 1.0 / 3.0 - 1e-4 && c <= 1.0, "conf[{i}] = {c}");
+            assert!(out.ent[i] >= 0.0 && out.ent[i] <= (3f32).ln() + 1e-4);
+        }
+    }
+}

@@ -1,6 +1,8 @@
-//! Failure injection: malformed artifacts, truncated weights, link outages,
-//! and coordinator shutdown under load.  None of these need the real
-//! artifacts — corruption fixtures are built inline.
+//! Failure injection: malformed artifacts, truncated weights, backend
+//! misconfiguration, link outages, and coordinator shutdown under load.
+//! None of these need the real artifacts — corruption fixtures are built
+//! inline — and only the compiled-artifact corruption cases need the
+//! `pjrt` feature.
 
 use std::io::Write;
 use std::sync::Arc;
@@ -9,8 +11,8 @@ use splitee::config::Manifest;
 use splitee::coordinator::{Batcher, BatcherConfig, Router, RouterConfig};
 use splitee::cost::NetworkProfile;
 use splitee::data::Dataset;
-use splitee::model::ModelWeights;
-use splitee::runtime::Runtime;
+use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::runtime::Backend;
 use splitee::sim::link::{LinkSim, TransferResult};
 use splitee::tensor::TensorI32;
 
@@ -56,19 +58,80 @@ fn truncated_weights_rejected_not_crashed() {
     std::fs::remove_file(p).unwrap();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
-fn corrupt_hlo_artifact_is_an_error_not_a_crash() {
+fn corrupt_hlo_artifact_is_an_error_naming_path_and_cache_cap() {
+    use splitee::runtime::Runtime;
     let p = tmp("bad.hlo.txt", b"HloModule this is not real hlo !!!");
     let runtime = Runtime::cpu().unwrap();
-    assert!(runtime.load(&p).is_err());
+    let err = runtime.load(&p).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("bad.hlo.txt"), "error must name the artifact: {msg}");
+    assert!(
+        msg.contains("SPLITEE_EXEC_CACHE_CAP"),
+        "error must name the cache-capacity setting: {msg}"
+    );
     std::fs::remove_file(p).unwrap();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
-fn missing_hlo_artifact_mentions_make_artifacts() {
+fn missing_hlo_artifact_mentions_make_artifacts_and_path() {
+    use splitee::runtime::Runtime;
     let runtime = Runtime::cpu().unwrap();
     let err = runtime.load(std::path::Path::new("/no/such/file.hlo.txt")).unwrap_err();
-    assert!(format!("{err:#}").contains("make artifacts"));
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    assert!(msg.contains("file.hlo.txt"), "error must name the missing path: {msg}");
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn pjrt_backend_selection_without_the_feature_is_a_clear_error() {
+    let err = Backend::from_name("pjrt").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("--features pjrt"), "unhelpful error: {msg}");
+    assert!(msg.contains("reference"), "error should point at the fallback: {msg}");
+}
+
+#[test]
+fn unknown_backend_name_rejected() {
+    let err = Backend::from_name("gpu-cluster").unwrap_err();
+    assert!(format!("{err:#}").contains("gpu-cluster"));
+}
+
+#[test]
+fn pjrt_backend_rejects_manifestless_models() {
+    // Whichever backend `auto` resolves, asking specifically for compiled-
+    // artifact execution without a manifest must fail with guidance, and the
+    // reference backend must accept the same spec.
+    let weights = ModelWeights::synthetic(2, 8, 16, 32, 4, 2, 3);
+    let ok = MultiExitModel::from_weights(
+        "t", "s", weights.clone(), 2, 4, vec![1], &Backend::reference(),
+    );
+    assert!(ok.is_ok());
+    #[cfg(feature = "pjrt")]
+    {
+        let err = MultiExitModel::from_weights(
+            "t", "s", weights, 2, 4, vec![1], &Backend::pjrt().unwrap(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"));
+    }
+}
+
+#[test]
+fn reference_backend_rejects_out_of_vocabulary_tokens() {
+    let weights = ModelWeights::synthetic(2, 8, 16, 32, 4, 2, 5);
+    let model = MultiExitModel::from_weights(
+        "t", "s", weights, 2, 4, vec![1], &Backend::reference(),
+    )
+    .unwrap();
+    let bad = TensorI32::new(vec![1, 4], vec![0, 1, 2, 999]).unwrap();
+    let err = model.embed(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("vocabulary"));
+    let negative = TensorI32::new(vec![1, 4], vec![0, -1, 2, 3]).unwrap();
+    assert!(model.embed(&negative).is_err());
 }
 
 #[test]
