@@ -6,7 +6,7 @@
 //! ```text
 //! cargo run --release --example serve_stream -- \
 //!     [--dataset imdb] [--requests 500] [--network 4g] [--rate 200] \
-//!     [--backend auto|reference|pjrt] \
+//!     [--backend auto|reference|pjrt] [--speculate on|off|auto] \
 //!     [--policy splitee|splitee-s|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
@@ -18,7 +18,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 use splitee::config::{Manifest, Settings};
-use splitee::coordinator::service::PolicyKind;
+use splitee::coordinator::service::{PolicyKind, SpeculateMode};
 use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service};
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::{Dataset, SampleStream};
@@ -65,6 +65,7 @@ fn main() -> Result<()> {
             max_wait: Duration::from_millis(5),
         },
         coalesce: Default::default(),
+        speculate: SpeculateMode::from_name(&settings.speculate)?,
     };
 
     let router = Router::new(RouterConfig { max_inflight: 256 });

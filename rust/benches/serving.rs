@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 use splitee::util::json::Json;
 
 use splitee::config::Manifest;
-use splitee::coordinator::service::PolicyKind;
+use splitee::coordinator::service::{PolicyKind, SpeculateMode};
 use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
@@ -88,57 +88,81 @@ fn main() {
     // serial/pipelined and across PRs)
     let mut extras: std::collections::BTreeMap<String, f64> = std::collections::BTreeMap::new();
 
-    for (label, kind) in [
+    // Each policy runs twice: speculation off (the baseline comparable with
+    // earlier PRs' BENCH files) and speculation on (`_spec` labels), so the
+    // JSON carries the speculation hit-rate and the req/s delta per policy.
+    for (base_label, kind) in [
         ("serve_200req_splitee", PolicyKind::SplitEe),
         ("serve_200req_splitee_s", PolicyKind::SplitEeS),
         ("serve_200req_final_exit", PolicyKind::FinalExit),
         ("serve_200req_fixed4", PolicyKind::Fixed(4)),
     ] {
-        suite.bench_items(label, 0, 3, n as f64, || {
-            let cm = CostModel::paper(5.0, 0.1, model.n_layers());
-            let link = LinkSim::new(NetworkProfile::three_g(), 7);
-            let config = ServiceConfig {
-                policy: kind,
-                alpha,
-                beta: 1.0,
-                batcher: BatcherConfig {
-                    batch_sizes: model.batch_sizes().to_vec(),
-                    max_wait: Duration::from_millis(2),
-                },
-                coalesce: Default::default(),
+        for speculate in [SpeculateMode::Off, SpeculateMode::On] {
+            let label = if speculate == SpeculateMode::On {
+                format!("{base_label}_spec")
+            } else {
+                base_label.to_string()
             };
-            let router = Router::new(RouterConfig::default());
-            let mut service = Service::new(Arc::clone(&model), cm, link, &config);
-            let producer = {
-                let router = Arc::clone(&router);
-                let tokens: Vec<_> = request_tokens.clone();
-                std::thread::spawn(move || {
-                    let (tx, rx) = std::sync::mpsc::channel();
-                    for t in tokens {
-                        if router.submit(t, tx.clone()).is_none() {
-                            break;
+            suite.bench_items(&label, 0, 3, n as f64, || {
+                let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+                let link = LinkSim::new(NetworkProfile::three_g(), 7);
+                let config = ServiceConfig {
+                    policy: kind,
+                    alpha,
+                    beta: 1.0,
+                    batcher: BatcherConfig {
+                        batch_sizes: model.batch_sizes().to_vec(),
+                        max_wait: Duration::from_millis(2),
+                    },
+                    coalesce: Default::default(),
+                    speculate,
+                };
+                let router = Router::new(RouterConfig::default());
+                let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+                let producer = {
+                    let router = Arc::clone(&router);
+                    let tokens: Vec<_> = request_tokens.clone();
+                    std::thread::spawn(move || {
+                        let (tx, rx) = std::sync::mpsc::channel();
+                        for t in tokens {
+                            if router.submit(t, tx.clone()).is_none() {
+                                break;
+                            }
                         }
-                    }
-                    drop(tx);
-                    while rx.recv().is_ok() {}
-                    router.shutdown();
-                })
-            };
-            let bc = config.batcher.clone();
-            service.run(Arc::clone(&router), bc).expect("serve");
-            producer.join().unwrap();
-            assert_eq!(service.metrics.served, n as u64);
-            let met = &service.metrics;
-            extras.insert(format!("{label}_p50_ms"), met.latency.percentile_us(50.0) / 1e3);
-            extras.insert(format!("{label}_p99_ms"), met.latency.percentile_us(99.0) / 1e3);
-            extras.insert(format!("{label}_edge_launches"), met.edge_launches as f64);
-            extras.insert(format!("{label}_cloud_launches"), met.cloud_launches as f64);
-            extras.insert(
-                format!("{label}_launches_per_req"),
-                (met.edge_launches + met.cloud_launches) as f64 / n as f64,
-            );
-            extras.insert(format!("{label}_coalesced_batches"), met.coalesced_batches as f64);
-        });
+                        drop(tx);
+                        while rx.recv().is_ok() {}
+                        router.shutdown();
+                    })
+                };
+                let bc = config.batcher.clone();
+                service.run(Arc::clone(&router), bc).expect("serve");
+                producer.join().unwrap();
+                assert_eq!(service.metrics.served, n as u64);
+                let met = &service.metrics;
+                extras.insert(format!("{label}_p50_ms"), met.latency.percentile_us(50.0) / 1e3);
+                extras.insert(format!("{label}_p99_ms"), met.latency.percentile_us(99.0) / 1e3);
+                extras.insert(format!("{label}_edge_launches"), met.edge_launches as f64);
+                extras.insert(format!("{label}_cloud_launches"), met.cloud_launches as f64);
+                extras.insert(
+                    format!("{label}_launches_per_req"),
+                    (met.edge_launches + met.cloud_launches) as f64 / n as f64,
+                );
+                extras
+                    .insert(format!("{label}_coalesced_batches"), met.coalesced_batches as f64);
+                if speculate == SpeculateMode::On {
+                    let s = met.spec.snapshot();
+                    assert_eq!(
+                        s.used + s.wasted,
+                        s.issued,
+                        "every speculative launch must resolve by the end of a run"
+                    );
+                    extras.insert(format!("{label}_issued"), s.issued as f64);
+                    extras.insert(format!("{label}_used"), s.used as f64);
+                    extras.insert(format!("{label}_wasted"), s.wasted as f64);
+                    extras.insert(format!("{label}_hit_rate"), s.hit_rate());
+                }
+            });
+        }
     }
 
     // raw backend roofline for comparison: back-to-back full-depth batches
@@ -171,6 +195,38 @@ fn main() {
         if let Some(items) = r.items_per_iter {
             baseline.insert(format!("{}_rps", r.name), Json::Num(items / (r.mean_ns / 1e9)));
         }
+    }
+    // totals across the speculation-on runs (the headline speculation keys),
+    // plus the per-policy req/s delta speculation buys
+    for agg in ["issued", "used", "wasted"] {
+        let total: f64 = extras
+            .iter()
+            .filter(|(k, _)| k.ends_with(&format!("_spec_{agg}")))
+            .map(|(_, v)| v)
+            .sum();
+        baseline.insert(format!("spec_{agg}"), Json::Num(total));
+    }
+    let (issued, used) = (
+        extras.iter().filter(|(k, _)| k.ends_with("_spec_issued")).map(|(_, v)| v).sum::<f64>(),
+        extras.iter().filter(|(k, _)| k.ends_with("_spec_used")).map(|(_, v)| v).sum::<f64>(),
+    );
+    baseline.insert(
+        "spec_hit_rate".to_string(),
+        Json::Num(if issued > 0.0 { used / issued } else { 0.0 }),
+    );
+    let rps_pairs: Vec<(String, f64, f64)> = baseline
+        .iter()
+        .filter_map(|(k, v)| {
+            let base = k.strip_suffix("_spec_rps")?;
+            let Json::Num(spec_rps) = v else { return None };
+            match baseline.get(&format!("{base}_rps")) {
+                Some(Json::Num(off_rps)) => Some((base.to_string(), *spec_rps, *off_rps)),
+                _ => None,
+            }
+        })
+        .collect();
+    for (base, spec_rps, off_rps) in rps_pairs {
+        baseline.insert(format!("{base}_spec_rps_delta"), Json::Num(spec_rps - off_rps));
     }
     for (k, v) in extras {
         baseline.insert(k, Json::Num(v));

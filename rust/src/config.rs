@@ -235,6 +235,10 @@ pub struct Settings {
     /// compute backend: "auto" (pjrt when built + available, else
     /// reference), "reference", or "pjrt"
     pub backend: String,
+    /// speculative edge continuation past the split: "on", "off" or "auto"
+    /// (auto = on when the backend is decision-transparent and the host has
+    /// spare parallelism; parsed into `coordinator::SpeculateMode`)
+    pub speculate: String,
     /// cost-confidence conversion factor mu (paper: 0.1)
     pub mu: f64,
     /// UCB exploration parameter beta (paper: 1.0)
@@ -253,6 +257,7 @@ impl Default for Settings {
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
             backend: "auto".to_string(),
+            speculate: "auto".to_string(),
             mu: 0.1,
             beta: 1.0,
             offload_cost: 5.0,
@@ -276,6 +281,12 @@ impl Settings {
         if let Some(b) = args.get("backend") {
             s.backend = b.to_string();
         }
+        if let Some(sp) = args.get("speculate") {
+            s.speculate = sp.to_string();
+        }
+        // single source of truth for the accepted values (and the error
+        // message) is the coordinator's parser
+        crate::coordinator::service::SpeculateMode::from_name(&s.speculate)?;
         s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
         s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
         s.offload_cost = args.get_num("o", s.offload_cost).map_err(anyhow::Error::msg)?;
@@ -365,10 +376,15 @@ mod tests {
         assert_eq!(s.reps, 5);
         assert_eq!(s.offload_cost, 3.0);
         assert_eq!(s.backend, "auto", "backend defaults to auto");
+        assert_eq!(s.speculate, "auto", "speculation defaults to auto");
         let args = Args::parse(
-            ["x", "--backend", "reference"].iter().map(|s| s.to_string()),
+            ["x", "--backend", "reference", "--speculate", "on"]
+                .iter()
+                .map(|s| s.to_string()),
         );
-        assert_eq!(Settings::from_args(&args).unwrap().backend, "reference");
+        let s = Settings::from_args(&args).unwrap();
+        assert_eq!(s.backend, "reference");
+        assert_eq!(s.speculate, "on");
     }
 
     #[test]
@@ -376,6 +392,8 @@ mod tests {
         let args = Args::parse(["x", "--reps", "0"].iter().map(|s| s.to_string()));
         assert!(Settings::from_args(&args).is_err());
         let args = Args::parse(["x", "--mu", "-1"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
+        let args = Args::parse(["x", "--speculate", "maybe"].iter().map(|s| s.to_string()));
         assert!(Settings::from_args(&args).is_err());
     }
 }

@@ -1,8 +1,10 @@
 //! Serving metrics: latency, throughput, exit-layer distribution, offload
 //! rate, cost accounting — everything `splitee serve` reports.
 
+use std::sync::Arc;
 use std::time::Instant;
 
+use crate::runtime::SpecCounters;
 use crate::util::stats::{LatencyHistogram, Welford};
 
 /// Aggregated metrics for a serving session.
@@ -35,6 +37,12 @@ pub struct ServingMetrics {
     /// the first — each one is a batch whose offloads rode along in another
     /// batch's launch (passively absorbed zero-offload batches don't count)
     pub coalesced_batches: u64,
+    /// speculative-launch lifecycle counters (issued / used / wasted).
+    /// Shared atomics: the edge stage issues and kills-on-exit, the cloud
+    /// stage consumes — read them through [`SpecCounters::snapshot`], which
+    /// is ordered so a mid-flight read never shows `used + wasted > issued`
+    /// (field-by-field loads in the wrong order would).
+    pub spec: Arc<SpecCounters>,
 }
 
 impl ServingMetrics {
@@ -57,6 +65,7 @@ impl ServingMetrics {
             cloud_launches: 0,
             cloud_groups: 0,
             coalesced_batches: 0,
+            spec: SpecCounters::new(),
         }
     }
 
@@ -178,6 +187,14 @@ impl ServingMetrics {
             self.cloud_groups,
             self.coalesced_batches,
         ));
+        let spec = self.spec.snapshot();
+        out.push_str(&format!(
+            "spec     issued {}   used {}   wasted {}   (hit-rate {:.1}%)\n",
+            spec.issued,
+            spec.used,
+            spec.wasted,
+            100.0 * spec.hit_rate(),
+        ));
         out.push_str("exit layers: ");
         for (layer, &count) in self.per_layer.iter().enumerate().skip(1) {
             if count > 0 {
@@ -228,7 +245,16 @@ mod tests {
         assert!(r.contains("latency"));
         assert!(r.contains("offload"));
         assert!(r.contains("launches"));
+        assert!(r.contains("spec"));
         assert!(r.contains("L5:1"));
+    }
+
+    #[test]
+    fn fresh_metrics_have_empty_speculation_counters() {
+        let m = ServingMetrics::new(6);
+        let s = m.spec.snapshot();
+        assert_eq!((s.issued, s.used, s.wasted), (0, 0, 0));
+        assert_eq!(s.hit_rate(), 0.0, "no-division-by-zero hit rate");
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! deployment, as in the paper), so a whole batch shares the chosen split;
 //! the exit-or-offload decision is per sample.  All bandit state lives in
 //! the reply stage and is updated in batch order, so the pipeline's
-//! decisions are identical to serial execution for a fixed arrival order.
+//! decisions are identical to serial execution for a fixed arrival order —
+//! including with speculative edge continuation enabled (the edge stage
+//! overlaps the post-split continuation with the exit-head verdict,
+//! kill-on-exit; see `service` module docs and `tests/speculation.rs`).
 
 pub mod batcher;
 pub mod metrics;
@@ -26,4 +29,4 @@ pub mod service;
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use metrics::ServingMetrics;
 pub use router::{Request, Response, Router, RouterConfig};
-pub use service::{CoalesceConfig, Service, ServiceConfig};
+pub use service::{CoalesceConfig, Service, ServiceConfig, SpeculateMode};

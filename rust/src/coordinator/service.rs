@@ -42,6 +42,37 @@
 //! preserved, so rewards and bandit updates are unchanged (asserted by
 //! `tests/integration.rs::pipelined_matches_serial_decisions`).
 //!
+//! # Speculative edge continuation (kill-on-exit)
+//!
+//! With speculation enabled ([`SpeculateMode`]), the edge stage does not
+//! idle while the exit-head verdict is computed: right after the fused
+//! `blocks[i..j)` range launch it issues the *next* block-range launch —
+//! the continuation `blocks[j..L)` + final head — on a dedicated
+//! speculation lane, concurrently with the verdict.  The in-flight handle
+//! travels to the cloud stage inside the batch's `EdgeWork` (under
+//! static-split policies this is the "speculative hidden" arriving ahead of
+//! its resolution).  Three rules keep it provably invisible:
+//!
+//! * **kill-on-exit** — a batch whose rows all exit at the split kills its
+//!   speculative launch; the wasted work is never attributed to any launch
+//!   counter or simulated-latency account (it ran on the lane thread).
+//! * **decision transparency** — speculative results are consumed only on
+//!   backends where the full-batch continuation is bit-identical per row to
+//!   the serial gathered launch (`ModelExecutor::speculation_transparent`),
+//!   so outputs, rewards and bandit decisions are *exactly* the serial
+//!   path's for any arrival order (asserted by `tests/speculation.rs`).
+//! * **no mixed groups** — a coalesced group never consumes speculative
+//!   rows: merging kills every member's pending launch first, and a
+//!   speculative result only ever serves a singleton group.  Used results
+//!   are attributed exactly like the launch they replaced: same launch
+//!   count, and the measured speculative compute rescaled to the padded
+//!   size the serial launch would have run — so the launch acceptance
+//!   tests hold and latency metrics stay comparable with speculation on
+//!   or off.
+//!
+//! Issued/used/wasted lifecycle counts live in `ServingMetrics::spec`
+//! (`SpecCounters`, consistent snapshots).
+//!
 //! [`Service::run_serial`] keeps the single-threaded reference path; both
 //! paths share the same stage functions, so their per-request outputs are
 //! identical by construction (asserted by `tests/integration.rs`).
@@ -58,7 +89,7 @@ use crate::coordinator::router::{Response, Router};
 use crate::cost::CostModel;
 use crate::model::{plan_batches_fused, ExitOutput, HiddenState, MultiExitModel};
 use crate::policy::{SplitEePolicy, SplitEeSPolicy};
-use crate::runtime::thread_launches;
+use crate::runtime::{thread_launches, SpecCounters, SpecHandle, SpecLane, SpecResult};
 use crate::sim::device::{CloudSim, EdgeSim};
 use crate::sim::link::{LinkSim, TransferResult};
 use crate::tensor::TensorF32;
@@ -97,6 +128,51 @@ impl Default for CoalesceConfig {
     }
 }
 
+/// When the edge stage issues speculative continuations past the split
+/// while the exit-head verdict is in flight (kill-on-exit; see the module
+/// docs for the invariants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SpeculateMode {
+    /// speculate whenever the backend's speculative results are decision-
+    /// transparent (bit-identical to the serial path); on other backends
+    /// this silently degrades to `Off` rather than risking ulp-level
+    /// decision drift
+    On,
+    /// never speculate (the serial-identical default)
+    #[default]
+    Off,
+    /// speculate when the backend is decision-transparent *and* the host
+    /// has spare parallelism for the speculation lane (>= 4 hardware
+    /// threads) — otherwise the lane would steal cycles from the serving
+    /// stages instead of overlapping them
+    Auto,
+}
+
+impl SpeculateMode {
+    /// Parse a `--speculate` value.
+    pub fn from_name(name: &str) -> Result<SpeculateMode> {
+        match name {
+            "on" => Ok(SpeculateMode::On),
+            "off" => Ok(SpeculateMode::Off),
+            "auto" => Ok(SpeculateMode::Auto),
+            other => anyhow::bail!("--speculate must be on, off or auto, got {other:?}"),
+        }
+    }
+
+    /// Test-matrix hook: `SPLITEE_SPECULATE=on|off|auto` (default `Off`
+    /// when unset).  The integration and speculation suites build their
+    /// services with this, so CI gates both speculation paths over the same
+    /// tests.  An unparseable value panics rather than silently testing the
+    /// off path under an "on" job label.
+    pub fn from_env() -> SpeculateMode {
+        match std::env::var("SPLITEE_SPECULATE") {
+            Ok(v) => SpeculateMode::from_name(&v)
+                .expect("SPLITEE_SPECULATE must be on, off or auto"),
+            Err(_) => SpeculateMode::Off,
+        }
+    }
+}
+
 /// Service parameters.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -108,6 +184,8 @@ pub struct ServiceConfig {
     pub batcher: BatcherConfig,
     /// cloud-stage cross-batch offload coalescing
     pub coalesce: CoalesceConfig,
+    /// speculative edge continuation past the split (kill-on-exit)
+    pub speculate: SpeculateMode,
 }
 
 /// Policy state held by the service.
@@ -145,8 +223,10 @@ struct EdgeWork {
     batch: Batch,
     /// hidden state at the split layer (consumed by the cloud continuation;
     /// this is the one host transfer the split boundary requires) — `None`
-    /// when no row offloads, so fully-exiting batches skip the transfer
-    h: Option<TensorF32>,
+    /// when no row offloads, so fully-exiting batches skip the transfer.
+    /// Arc-shared with an in-flight speculative launch, so speculation
+    /// never copies the activation buffer
+    h: Option<Arc<TensorF32>>,
     exit_out: ExitOutput,
     /// per earlier layer, per row: exit-head confidences (SplitEE-S only)
     prefix_conf: Vec<Vec<f32>>,
@@ -158,6 +238,11 @@ struct EdgeWork {
     payload: usize,
     /// executable launches this batch's edge stage performed
     launches: u64,
+    /// in-flight speculative continuation (blocks past the split + final
+    /// head over the full batch), issued concurrently with the exit-head
+    /// verdict.  `None` when speculation is off or the batch fully exited
+    /// (kill-on-exit happens in the edge stage).
+    spec: Option<SpecHandle>,
 }
 
 /// One offloaded row's final-layer result from the cloud continuation.
@@ -191,6 +276,7 @@ struct ReplyWork {
 
 /// Edge share: embed + one fused block-range launch to the split + the
 /// split's exit head, plus the per-row exit-or-offload decision.
+#[allow(clippy::too_many_arguments)]
 fn edge_stage(
     model: &MultiExitModel,
     edge: &EdgeSim,
@@ -199,12 +285,15 @@ fn edge_stage(
     n_layers: usize,
     split: usize,
     batch: Batch,
+    spec: Option<(&SpecLane, &Arc<SpecCounters>)>,
 ) -> Result<EdgeWork> {
     let launches0 = thread_launches();
     let t0 = Instant::now();
     let h0 = model.embed_hidden(&batch.tokens)?;
     let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
-    edge_stage_after_embed(model, edge, alpha, side, n_layers, split, batch, h0, embed_ms, launches0)
+    edge_stage_after_embed(
+        model, edge, alpha, side, n_layers, split, batch, h0, embed_ms, launches0, spec,
+    )
 }
 
 /// The split-dependent part of the edge stage.  Separated so the pipelined
@@ -222,6 +311,7 @@ fn edge_stage_after_embed(
     h0: HiddenState,
     embed_ms: f64,
     launches0: u64,
+    spec: Option<(&SpecLane, &Arc<SpecCounters>)>,
 ) -> Result<EdgeWork> {
     // compile-if-needed outside the timed region, so a first-use chain
     // compile never shows up as simulated edge latency (the side path runs
@@ -248,6 +338,33 @@ fn edge_stage_after_embed(
         // one fused launch covers the whole edge partition
         model.blocks_between(&h0, 0, split)?
     };
+    let mut compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // Speculative continuation: issue blocks[split..L) + final head on the
+    // speculation lane *now*, so it runs concurrently with the exit-head
+    // verdict below.  Deliberately outside the timed region — speculative
+    // work must never be attributed to simulated edge latency (kill-on-exit
+    // discards it entirely; a used result is attributed as cloud compute by
+    // the cloud stage, exactly like the launch it replaces).
+    let mut spec_handle: Option<SpecHandle> = None;
+    let mut spec_h: Option<Arc<TensorF32>> = None;
+    let mut spec_transfer_ms = 0.0;
+    if split < n_layers {
+        if let Some((lane, counters)) = spec {
+            // the transfer is timed separately: it is charged to edge_ms
+            // below only if some row offloads — exactly where (and only
+            // where) the non-speculative path pays the same copy, so on/off
+            // latency accounting stays comparable
+            let tt = Instant::now();
+            let hh = Arc::new(h_split.to_tensor()?);
+            spec_transfer_ms = tt.elapsed().as_secs_f64() * 1e3;
+            spec_handle =
+                Some(model.speculate_rest_exit(lane, Arc::clone(&hh), split - 1, counters)?);
+            spec_h = Some(hh);
+        }
+    }
+
+    let t1 = Instant::now();
     let exit_out = model.exit_head_hidden(&h_split, split - 1)?;
 
     // per-sample exit-or-offload, decided before any host transfer
@@ -260,16 +377,50 @@ fn edge_stage_after_embed(
     }
     // the split-boundary host transfer: this buffer is what the uplink
     // ships, so it happens only when some row actually crosses the split
+    // (when speculating, the buffer already exists — it was the speculative
+    // launch's input)
     let (h, payload) = if offload_rows.is_empty() {
         (None, 0)
     } else {
-        let h = h_split.to_tensor()?;
+        let h = match spec_h {
+            Some(hh) => hh,
+            None => Arc::new(h_split.to_tensor()?),
+        };
         let payload = LinkSim::activation_payload(model.seq_len(), h.shape()[2]);
         (Some(h), payload)
     };
-    let edge_ms = edge.simulated_ms(embed_ms + t0.elapsed().as_secs_f64() * 1e3);
+    compute_ms += t1.elapsed().as_secs_f64() * 1e3;
+    if !offload_rows.is_empty() {
+        // charge the split-boundary transfer where the non-speculative path
+        // pays it (zero when it ran inside the timed window above); a
+        // killed speculation's transfer stays unattributed, like the rest
+        // of its work
+        compute_ms += spec_transfer_ms;
+    }
+    let edge_ms = edge.simulated_ms(embed_ms + compute_ms);
+    // kill-on-exit: a fully-exiting batch discards its speculative launch
+    // and its cost is attributed nowhere
+    let spec_handle = if offload_rows.is_empty() {
+        if let Some(handle) = spec_handle {
+            handle.kill();
+        }
+        None
+    } else {
+        spec_handle
+    };
     let launches = thread_launches() - launches0;
-    Ok(EdgeWork { batch, h, exit_out, prefix_conf, offload_rows, split, edge_ms, payload, launches })
+    Ok(EdgeWork {
+        batch,
+        h,
+        exit_out,
+        prefix_conf,
+        offload_rows,
+        split,
+        edge_ms,
+        payload,
+        launches,
+        spec: spec_handle,
+    })
 }
 
 /// Cloud share for one coalesced group of same-split batches: gather every
@@ -281,60 +432,118 @@ fn edge_stage_after_embed(
 fn cloud_stage_group(
     model: &MultiExitModel,
     cloud: &CloudSim,
-    group: Vec<EdgeWork>,
+    mut group: Vec<EdgeWork>,
 ) -> Result<Vec<ReplyWork>> {
     let split = group[0].split;
     let launches0 = thread_launches();
 
-    // union gather across the group (host-side, one contiguous copy per batch)
-    let mut union: Option<TensorF32> = None;
-    let mut origin: Vec<(usize, usize)> = Vec::new(); // (group index, batch row)
-    for (gi, work) in group.iter().enumerate() {
-        if work.offload_rows.is_empty() {
-            continue;
+    // Speculation resolution.  A *singleton* group whose batch carries a
+    // speculative continuation serves straight from that result — the rows
+    // it needs are direct reads out of the full-batch launch, bit-identical
+    // to the gathered launch on decision-transparent backends.  A *merged*
+    // group kills every member's pending launch first (counted wasted), so
+    // a coalesced launch never mixes speculative rows with gathered rows.
+    let mut spec_result: Option<SpecResult> = None;
+    if group.len() == 1 {
+        if let Some(handle) = group[0].spec.take() {
+            match handle.take() {
+                Ok(r) => spec_result = Some(r),
+                // already counted wasted by take(); recompute below
+                Err(e) => log::warn!("speculative continuation failed ({e:#}) — recomputing"),
+            }
         }
-        let gathered = work
-            .h
-            .as_ref()
-            .context("offloaded rows without a split-boundary hidden state")?
-            .gather_rows(&work.offload_rows)?;
-        match &mut union {
-            Some(u) => u.extend_rows(&gathered).map_err(|e| anyhow::anyhow!(e))?,
-            None => union = Some(gathered),
+    } else {
+        for work in group.iter_mut() {
+            if let Some(handle) = work.spec.take() {
+                handle.kill();
+            }
         }
-        origin.extend(work.offload_rows.iter().map(|&r| (gi, r)));
     }
 
     let mut cloud_out: Vec<Vec<CloudRow>> =
         group.iter().map(|w| Vec::with_capacity(w.offload_rows.len())).collect();
     let mut busy = vec![0.0f64; group.len()];
-    if let Some(union) = union {
-        let plan = plan_batches_fused(origin.len(), model.batch_sizes());
-        let mut done = 0usize;
-        for (bsz, real) in plan {
-            let chunk = union.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
-            // compile-if-needed before the timed region (see warm_range)
-            model.warm_range(bsz, split, model.n_layers())?;
-            let t1 = Instant::now();
-            let out = model.forward_rest_exit(&chunk, split - 1)?;
-            let cloud_ms = cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
-            // Per-row attribution: every row in this launch experienced the
-            // same simulated cloud latency; busy time splits pro rata so the
-            // per-batch accounting sums to the launch total.
-            for i in 0..real {
-                let (gi, row) = origin[done + i];
-                cloud_out[gi].push(CloudRow {
-                    row,
-                    pred: out.pred[i],
-                    conf: out.conf[i],
-                    cloud_ms,
-                });
-                busy[gi] += cloud_ms / real as f64;
+    // launches attributed to this group: the speculative launch count when
+    // its result did the work, the on-thread delta otherwise — never both
+    let mut spec_launches: Option<u64> = None;
+    if let Some(result) = spec_result {
+        let SpecResult { head, launches, host_ms } = result;
+        let out = ExitOutput::from_head(head)?;
+        let work = &group[0];
+        let real = work.offload_rows.len();
+        // Normalize the simulated-time basis to the launch this result
+        // replaced: the speculative continuation ran the full padded batch,
+        // while the serial path runs the gathered rows padded to a compiled
+        // size.  Compute is row-linear, so scale the measured host time by
+        // that ratio — otherwise a batch where few rows offload would report
+        // inflated cloud latency under speculation (decisions never depend
+        // on measured time, so this is purely a metrics-comparability rule).
+        let spec_rows = work.batch.padded_to.max(1);
+        let serial_rows = plan_batches_fused(real, model.batch_sizes())
+            .first()
+            .map(|&(bsz, _)| bsz)
+            .unwrap_or(spec_rows);
+        let cloud_ms =
+            cloud.simulated_ms(host_ms * serial_rows as f64 / spec_rows as f64);
+        for &row in &work.offload_rows {
+            cloud_out[0].push(CloudRow {
+                row,
+                pred: out.pred[row],
+                conf: out.conf[row],
+                cloud_ms,
+            });
+            busy[0] += cloud_ms / real as f64;
+        }
+        spec_launches = Some(launches);
+    } else {
+        // union gather across the group (host-side, one contiguous copy per
+        // batch)
+        let mut union: Option<TensorF32> = None;
+        let mut origin: Vec<(usize, usize)> = Vec::new(); // (group index, batch row)
+        for (gi, work) in group.iter().enumerate() {
+            if work.offload_rows.is_empty() {
+                continue;
             }
-            done += real;
+            let gathered = work
+                .h
+                .as_ref()
+                .context("offloaded rows without a split-boundary hidden state")?
+                .gather_rows(&work.offload_rows)?;
+            match &mut union {
+                Some(u) => u.extend_rows(&gathered).map_err(|e| anyhow::anyhow!(e))?,
+                None => union = Some(gathered),
+            }
+            origin.extend(work.offload_rows.iter().map(|&r| (gi, r)));
+        }
+
+        if let Some(union) = union {
+            let plan = plan_batches_fused(origin.len(), model.batch_sizes());
+            let mut done = 0usize;
+            for (bsz, real) in plan {
+                let chunk = union.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
+                // compile-if-needed before the timed region (see warm_range)
+                model.warm_range(bsz, split, model.n_layers())?;
+                let t1 = Instant::now();
+                let out = model.forward_rest_exit(&chunk, split - 1)?;
+                let cloud_ms = cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
+                // Per-row attribution: every row in this launch experienced
+                // the same simulated cloud latency; busy time splits pro rata
+                // so the per-batch accounting sums to the launch total.
+                for i in 0..real {
+                    let (gi, row) = origin[done + i];
+                    cloud_out[gi].push(CloudRow {
+                        row,
+                        pred: out.pred[i],
+                        conf: out.conf[i],
+                        cloud_ms,
+                    });
+                    busy[gi] += cloud_ms / real as f64;
+                }
+                done += real;
+            }
         }
     }
-    let cloud_launches = thread_launches() - launches0;
+    let cloud_launches = spec_launches.unwrap_or_else(|| thread_launches() - launches0);
     // coalescing stats count only batches whose offloads shared the launch
     let contributing = group.iter().filter(|w| !w.offload_rows.is_empty()).count();
 
@@ -489,6 +698,8 @@ pub struct Service {
     policy: PolicyState,
     alpha: f64,
     coalesce: CoalesceConfig,
+    /// the speculation lane (worker thread) when speculation resolved on
+    spec_lane: Option<SpecLane>,
     pub metrics: ServingMetrics,
 }
 
@@ -510,6 +721,29 @@ impl Service {
             PolicyKind::Fixed(k) => PolicyState::Fixed(k.clamp(1, l)),
             PolicyKind::FinalExit => PolicyState::FinalExit,
         };
+        // Resolve the speculation mode against the backend: results are
+        // consumed only when decision-transparent (see the module docs), so
+        // speculating on an opaque backend would be pure wasted work.
+        let speculate = match config.speculate {
+            SpeculateMode::Off => false,
+            SpeculateMode::On => {
+                let ok = model.speculation_transparent();
+                if !ok {
+                    log::info!(
+                        "--speculate on ignored: the {} backend's speculative results \
+                         are not decision-transparent",
+                        model.backend_name()
+                    );
+                }
+                ok
+            }
+            SpeculateMode::Auto => {
+                model.speculation_transparent()
+                    && std::thread::available_parallelism()
+                        .map(|n| n.get() >= 4)
+                        .unwrap_or(false)
+            }
+        };
         Service {
             metrics: ServingMetrics::new(l),
             model,
@@ -520,6 +754,7 @@ impl Service {
             policy,
             alpha: config.alpha,
             coalesce: config.coalesce,
+            spec_lane: speculate.then(SpecLane::new),
         }
     }
 
@@ -578,6 +813,10 @@ impl Service {
         if static_split.is_none() {
             let _ = split_tx.send(self.policy.choose_split(l));
         }
+        // the edge stage's handle on the speculation lane + the shared
+        // lifecycle counters (cloned before `self` is destructured below)
+        let spec_lane = self.spec_lane.clone();
+        let spec_counters = Arc::clone(&self.metrics.spec);
 
         let Service { model, policy, metrics, link, .. } = self;
         let model_edge = Arc::clone(model);
@@ -612,7 +851,17 @@ impl Service {
                         },
                     };
                     let work = edge_stage_after_embed(
-                        &model_edge, &edge, alpha, side, l, split, batch, h0, embed_ms, launches0,
+                        &model_edge,
+                        &edge,
+                        alpha,
+                        side,
+                        l,
+                        split,
+                        batch,
+                        h0,
+                        embed_ms,
+                        launches0,
+                        spec_lane.as_ref().map(|lane| (lane, &spec_counters)),
                     )?;
                     if edge_tx.send(work).is_err() {
                         break;
@@ -723,7 +972,11 @@ impl Service {
         let l = self.model.n_layers();
         let split = self.choose_split();
         let side = self.side_info();
-        let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch)?;
+        // The serial path never speculates: it is the pristine reference
+        // whose decisions the speculative pipeline must reproduce exactly
+        // (tests/speculation.rs), and with one thread there is nothing to
+        // overlap the continuation with.
+        let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch, None)?;
         let mut replies = cloud_stage_group(&self.model, &self.cloud, vec![work])?;
         let work = replies.pop().expect("one reply per batch");
         reply_stage(

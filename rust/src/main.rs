@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use splitee::config::{Manifest, Settings};
 use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
-use splitee::coordinator::service::PolicyKind;
+use splitee::coordinator::service::{PolicyKind, SpeculateMode};
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::{Dataset, SampleStream};
 use splitee::experiments::{ablations, figures, regret, report, sec5_4, table2,
@@ -108,6 +108,7 @@ Subcommands
   serve        live co-inference serving
                [--dataset imdb] [--requests 200] [--policy splitee|splitee-s|
                 fixed:K|final] [--network wifi|5g|4g|3g] [--listen ADDR]
+                [--speculate on|off|auto]
 
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
@@ -115,6 +116,10 @@ Common flags
   --backend NAME    compute backend: auto|reference|pjrt (default: auto —
                     pjrt when this build has it, else the pure-Rust
                     reference backend)
+  --speculate MODE  speculative edge continuation past the split, killed
+                    on exit: on|off|auto (default: auto — on when the
+                    backend is decision-transparent and the host has spare
+                    parallelism)
   --o N             offloading cost in lambda units (default: 5)
   --mu X            cost weight in the reward (default: 0.1)
   --beta X          UCB exploration (default: 1.0)
@@ -259,6 +264,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
             max_wait: std::time::Duration::from_millis(4),
         },
         coalesce: Default::default(),
+        speculate: SpeculateMode::from_name(&settings.speculate)?,
     };
 
     let router = Router::new(RouterConfig::default());

@@ -22,7 +22,10 @@ use anyhow::{bail, Context, Result};
 use super::plan_batches;
 use super::weights::ModelWeights;
 use crate::config::Manifest;
-use crate::runtime::{Backend, HeadOut, Hidden as HiddenState, ModelExecutor, ModelSpec};
+use crate::runtime::{
+    Backend, HeadOut, Hidden as HiddenState, ModelExecutor, ModelSpec, SpecCounters, SpecHandle,
+    SpecLane,
+};
 use crate::tensor::{TensorF32, TensorI32};
 
 /// Output of one exit head over a batch.
@@ -50,8 +53,9 @@ impl ExitOutput {
     }
 
     /// Backend head output -> exit output (predictions derived here, once,
-    /// identically for every backend).
-    fn from_head(h: HeadOut) -> Result<ExitOutput> {
+    /// identically for every backend — resolved speculative launches go
+    /// through the same conversion as direct launches).
+    pub fn from_head(h: HeadOut) -> Result<ExitOutput> {
         let pred = h.probs.argmax_rows().map_err(|e| anyhow::anyhow!(e))?;
         Ok(ExitOutput { pred, conf: h.conf, ent: h.ent, probs: h.probs })
     }
@@ -90,7 +94,9 @@ impl ExitOutput {
 pub struct MultiExitModel {
     pub task: String,
     pub style: String,
-    exec: Box<dyn ModelExecutor>,
+    /// shared (not boxed) so speculative launches can execute through the
+    /// same executor from the speculation lane's thread
+    exec: Arc<dyn ModelExecutor>,
     batch_sizes: Vec<usize>,
     n_layers: usize,
     n_classes: usize,
@@ -125,7 +131,7 @@ impl MultiExitModel {
             cache_batch: manifest.cache_batch,
             manifest: Some(manifest),
         };
-        let exec = backend.load_model(&spec)?;
+        let exec: Arc<dyn ModelExecutor> = Arc::from(backend.load_model(&spec)?);
         Ok(MultiExitModel {
             task: task.to_string(),
             style: style.to_string(),
@@ -166,7 +172,7 @@ impl MultiExitModel {
             cache_batch,
             manifest: None,
         };
-        let exec = backend.load_model(&spec)?;
+        let exec: Arc<dyn ModelExecutor> = Arc::from(backend.load_model(&spec)?);
         Ok(MultiExitModel {
             task: task.to_string(),
             style: style.to_string(),
@@ -320,6 +326,39 @@ impl MultiExitModel {
         }
         let hid = self.exec.blocks_host(h, from_layer + 1, l)?;
         ExitOutput::from_head(self.exec.exit_head(&hid, l - 1)?)
+    }
+
+    /// True when consuming a speculative *full-batch* continuation result
+    /// in place of the serial gathered launch is bit-identical (see
+    /// `ModelExecutor::speculation_transparent`) — the precondition for the
+    /// coordinator to use speculative results at all.
+    pub fn speculation_transparent(&self) -> bool {
+        self.exec.speculation_transparent()
+    }
+
+    /// Issue the cloud continuation (blocks `from_layer+1..L` + the final
+    /// exit head — the same operation sequence as
+    /// [`MultiExitModel::forward_rest_exit`]) as a cancellable speculative
+    /// launch on `lane`, running concurrently with whatever the caller does
+    /// next (typically the exit-head verdict).  `h` is the full (padded)
+    /// batch hidden state at the split, shared (not copied) with the caller.
+    pub fn speculate_rest_exit(
+        &self,
+        lane: &SpecLane,
+        h: Arc<TensorF32>,
+        from_layer: usize,
+        counters: &Arc<SpecCounters>,
+    ) -> Result<SpecHandle> {
+        if from_layer >= self.n_layers {
+            bail!("from_layer {from_layer} out of range (L = {})", self.n_layers);
+        }
+        Ok(lane.speculate_rest_exit(
+            Arc::clone(&self.exec),
+            h,
+            from_layer,
+            self.n_layers,
+            counters,
+        ))
     }
 
     /// Full forward through every exit at once (the cache-builder path —

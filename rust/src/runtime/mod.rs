@@ -13,7 +13,11 @@
 //! final outputs).  Launch accounting ([`thread_launches`]) and executable-
 //! cache observability ([`CacheStats`]) sit behind the same seam, so
 //! `ServingMetrics` and the coordinator's coalescing logic are
-//! backend-agnostic.
+//! backend-agnostic.  The [`spec`] module adds the speculative side of the
+//! seam: cancellable/deferred continuation launches ([`SpecLane`] /
+//! [`SpecHandle`]) that run through any executor from a dedicated worker
+//! thread, with [`ModelExecutor::speculation_transparent`] deciding whether
+//! their results may replace the serial-path launch bit for bit.
 //!
 //! # Feature matrix
 //!
@@ -46,6 +50,7 @@
 
 pub mod lru;
 pub mod reference;
+pub mod spec;
 
 #[cfg(feature = "pjrt")]
 pub mod executable;
@@ -56,6 +61,7 @@ pub mod pjrt;
 
 pub use lru::{CacheStats, LruMap};
 pub use reference::ReferenceBackend;
+pub use spec::{SpecCounters, SpecHandle, SpecLane, SpecResult, SpecSnapshot};
 
 #[cfg(feature = "pjrt")]
 pub use executable::{Arg, Client, Executable, Runtime};
@@ -213,6 +219,21 @@ pub trait ModelExecutor: Send + Sync + std::fmt::Debug {
 
     /// True when every multi-block range runs as one fused launch.
     fn has_fused_ranges(&self) -> bool;
+
+    /// True when a speculative *full-batch* continuation is decision-
+    /// transparent: running blocks `[split..L)` + the final head over the
+    /// whole padded batch and then reading the offloaded rows out of the
+    /// result is **bit-identical** to gathering those rows first and running
+    /// the continuation on the gathered chunk (the serial path).  Row-
+    /// independent host math qualifies; backends that execute per-batch-size
+    /// compiled graphs do not (a gathered chunk may run a different
+    /// executable than the full batch, so equality only holds to float
+    /// tolerance).  The coordinator consumes speculative results only when
+    /// this returns true — that is what keeps bandit decisions exactly the
+    /// serial-path decisions with speculation enabled.
+    fn speculation_transparent(&self) -> bool {
+        false
+    }
 
     /// Executable-cache observability (all zeros for cache-less backends).
     fn cache_stats(&self) -> CacheStats {

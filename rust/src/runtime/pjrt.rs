@@ -452,6 +452,20 @@ impl ModelExecutor for PjrtExecutor {
         Ok(())
     }
 
+    /// Speculative full-batch continuations are *not* decision-transparent
+    /// here: a gathered offload chunk may pad to a different compiled batch
+    /// size than the edge batch, so it can execute a different `chain{n}` /
+    /// head executable whose floats agree only to tolerance (cf. the
+    /// `batched_execution_matches_single` bars).  Substituting a speculative
+    /// result for the serial-path launch could therefore drift a bandit
+    /// decision by an ulp, so the coordinator disables speculation entirely
+    /// on this backend (`Service::new` never builds a lane for it).  The
+    /// lane itself is backend-agnostic and can still drive this executor
+    /// directly — the pjrt-gated test in `tests/speculation.rs` does.
+    fn speculation_transparent(&self) -> bool {
+        false
+    }
+
     /// True when every multi-block range has a fused artifact (all lengths
     /// 2..=L at every compiled batch size), i.e. the serving path runs one
     /// block-range launch per partition.

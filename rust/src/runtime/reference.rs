@@ -340,6 +340,16 @@ impl ModelExecutor for ReferenceExecutor {
         // length — the fused-partition invariant holds by construction
         true
     }
+
+    fn speculation_transparent(&self) -> bool {
+        // every operation here is row-independent (attention and softmax
+        // reduce within a sample, never across the batch), so computing the
+        // continuation over the full padded batch and reading out rows is
+        // bit-identical to gathering first — the invariant
+        // `reference_batched_execution_matches_single` pins.  Speculative
+        // results are therefore safe to consume verbatim.
+        true
+    }
 }
 
 /// LayerNorm over the last axis, row by row (`ref.py::layer_norm`).

@@ -1,0 +1,574 @@
+//! Speculative launches: cancellable, possibly-deferred execution of the
+//! post-split continuation while the exit-head verdict is in flight.
+//!
+//! SplitEE's edge stage serializes the exit-head verdict before any
+//! post-split work begins — the "idle-while-deciding" gap Matsubara et al.
+//! identify as the main latency tax of early-exit split computing.  This
+//! module closes it at the runtime seam: [`SpecLane`] owns a dedicated
+//! worker thread on which a [`ModelExecutor`] runs the continuation
+//! (`blocks[split..L)` + final exit head) *concurrently* with whatever the
+//! issuing thread does next, and hands back a [`SpecHandle`] that resolves
+//! to exactly one of
+//!
+//! * **used** — [`SpecHandle::take`] returned the result and the caller
+//!   consumed it, or
+//! * **wasted** — [`SpecHandle::kill`] (kill-on-exit), a drop on an error
+//!   path, or a worker failure discarded it.
+//!
+//! The seam is backend-agnostic: the job executes through the
+//! `blocks_host` / `exit_head` trait methods, so the reference and pjrt
+//! executors both run speculative launches without backend-specific code.
+//! When no worker is reachable the handle degrades to a **deferred** launch
+//! that runs inline at `take()` — still cancellable, never lost.
+//!
+//! # Accounting invariants
+//!
+//! * Speculative launches execute on the lane thread, so the per-thread
+//!   launch counters ([`thread_launches`]) of the serving stages never see
+//!   them; a *used* result carries its own launch count for the consumer to
+//!   attribute, a *wasted* one is attributed nowhere.
+//! * Every issued handle resolves exactly once:
+//!   `used + wasted == issued` once all handles are dropped, and — because
+//!   [`SpecCounters::snapshot`] reads `used`/`wasted` *before* `issued` —
+//!   a mid-flight snapshot can never show `used + wasted > issued`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{thread_launches, HeadOut, ModelExecutor};
+use crate::tensor::TensorF32;
+
+/// Lifecycle counters for speculative launches, shared across the pipeline
+/// stages that issue (edge) and resolve (cloud) handles.
+#[derive(Debug, Default)]
+pub struct SpecCounters {
+    issued: AtomicU64,
+    used: AtomicU64,
+    wasted: AtomicU64,
+}
+
+/// A consistent point-in-time view of [`SpecCounters`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SpecSnapshot {
+    /// speculative launches issued (handles created)
+    pub issued: u64,
+    /// handles whose result was consumed by the pipeline
+    pub used: u64,
+    /// handles killed, dropped, or failed — their work is attributed nowhere
+    pub wasted: u64,
+}
+
+impl SpecSnapshot {
+    /// Fraction of issued launches whose result was consumed.
+    pub fn hit_rate(&self) -> f64 {
+        if self.issued == 0 {
+            0.0
+        } else {
+            self.used as f64 / self.issued as f64
+        }
+    }
+
+    /// Handles issued but not yet resolved at snapshot time.
+    pub fn in_flight(&self) -> u64 {
+        self.issued - self.used - self.wasted
+    }
+}
+
+impl SpecCounters {
+    /// A fresh, shareable counter set.
+    pub fn new() -> Arc<SpecCounters> {
+        Arc::new(SpecCounters::default())
+    }
+
+    fn issue(&self) {
+        self.issued.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn resolve_used(&self) {
+        self.used.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn resolve_wasted(&self) {
+        self.wasted.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// One consistent struct read.  `used` and `wasted` are loaded *before*
+    /// `issued`: every resolution is preceded (in its handle's program
+    /// order) by its issue, so any resolution visible to the first two loads
+    /// has its issue visible to the third — a mid-flight snapshot therefore
+    /// always satisfies `used + wasted <= issued`, whatever the stages are
+    /// doing concurrently.  (Reading `issued` first would admit snapshots
+    /// with `used > issued`: a handle issued *and* used between the two
+    /// loads would be counted by the second but not the first.)
+    pub fn snapshot(&self) -> SpecSnapshot {
+        let used = self.used.load(Ordering::SeqCst);
+        let wasted = self.wasted.load(Ordering::SeqCst);
+        let issued = self.issued.load(Ordering::SeqCst);
+        SpecSnapshot { issued, used, wasted }
+    }
+}
+
+/// The payload a resolved speculative launch hands back.
+pub struct SpecResult {
+    /// final-exit head output over the *full* (padded) batch the launch was
+    /// issued for — consumers gather the rows they need
+    pub head: HeadOut,
+    /// executable launches the speculative job performed (on the lane
+    /// thread; the consumer attributes them iff the result is used)
+    pub launches: u64,
+    /// real host time of the continuation compute (ms) — the cloud
+    /// simulator's input when the result is used
+    pub host_ms: f64,
+}
+
+struct SpecJob {
+    exec: Arc<dyn ModelExecutor>,
+    /// shared with the edge stage's `EdgeWork.h` — issuing a speculative
+    /// launch never copies the activation buffer
+    h: Arc<TensorF32>,
+    from_layer: usize,
+    n_layers: usize,
+    cancel: Arc<AtomicBool>,
+    out: Sender<Result<SpecResult>>,
+}
+
+/// The continuation itself: blocks `from_layer+1..L` then the final exit
+/// head — the exact operation sequence of the non-speculative cloud path
+/// (`MultiExitModel::forward_rest_exit`), so a used result is the same math
+/// on the same rows.  `cancel` is re-checked between the two launches: a
+/// kill-on-exit landing mid-range still bounds wasted compute to the range
+/// already in flight (a fused range launch itself cannot be interrupted
+/// without changing the launch-count semantics of a used result).  Returns
+/// `None` only when cancelled between launches.
+fn run_continuation(
+    exec: &dyn ModelExecutor,
+    h: &TensorF32,
+    from_layer: usize,
+    n_layers: usize,
+    cancel: Option<&AtomicBool>,
+) -> Option<Result<SpecResult>> {
+    let launches0 = thread_launches();
+    let t0 = Instant::now();
+    let head = if from_layer + 1 == n_layers {
+        exec.exit_head_host(h, n_layers - 1)
+    } else {
+        match exec.blocks_host(h, from_layer + 1, n_layers) {
+            Ok(hid) => {
+                if cancel.is_some_and(|c| c.load(Ordering::SeqCst)) {
+                    return None; // killed mid-range: skip the head launch
+                }
+                exec.exit_head(&hid, n_layers - 1)
+            }
+            Err(e) => Err(e),
+        }
+    };
+    Some(head.map(|head| SpecResult {
+        head,
+        launches: thread_launches() - launches0,
+        host_ms: t0.elapsed().as_secs_f64() * 1e3,
+    }))
+}
+
+fn worker_loop(rx: Receiver<SpecJob>) {
+    while let Ok(job) = rx.recv() {
+        // killed before starting: skip the compute entirely (the fast
+        // kill-on-exit path when the whole batch exits at the split)
+        if job.cancel.load(Ordering::SeqCst) {
+            continue;
+        }
+        if let Some(res) =
+            run_continuation(job.exec.as_ref(), &job.h, job.from_layer, job.n_layers, Some(&job.cancel))
+        {
+            // the receiver may already be gone (killed mid-compute) — discard
+            let _ = job.out.send(res);
+        }
+    }
+}
+
+struct LaneGuard {
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        // By the time the last lane clone drops, every sender is gone, so
+        // the worker drains its queue and exits — the join is bounded by
+        // the in-flight compute, never indefinite.
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A dedicated speculation worker thread plus the sending half used to
+/// issue launches on it.  Cheap to clone (each pipeline stage owns its own
+/// sender); the worker exits when the last clone drops.
+#[derive(Clone)]
+pub struct SpecLane {
+    tx: Sender<SpecJob>,
+    _guard: Arc<LaneGuard>,
+}
+
+impl std::fmt::Debug for SpecLane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("SpecLane")
+    }
+}
+
+impl Default for SpecLane {
+    fn default() -> Self {
+        SpecLane::new()
+    }
+}
+
+impl SpecLane {
+    /// Spawn the speculation worker thread.
+    pub fn new() -> SpecLane {
+        let (tx, rx) = std::sync::mpsc::channel::<SpecJob>();
+        let handle = std::thread::Builder::new()
+            .name("splitee-spec".into())
+            .spawn(move || worker_loop(rx))
+            .expect("spawn speculation worker");
+        SpecLane { tx, _guard: Arc::new(LaneGuard { handle: Some(handle) }) }
+    }
+
+    /// Issue blocks `from_layer+1..L` + the final exit head over `h` as a
+    /// speculative launch, returning immediately.  Counts `issued` now; the
+    /// handle resolves to exactly one of used/wasted.  If the worker is
+    /// unreachable the handle degrades to a deferred launch.
+    pub fn speculate_rest_exit(
+        &self,
+        exec: Arc<dyn ModelExecutor>,
+        h: Arc<TensorF32>,
+        from_layer: usize,
+        n_layers: usize,
+        counters: &Arc<SpecCounters>,
+    ) -> SpecHandle {
+        counters.issue();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let (out_tx, out_rx) = std::sync::mpsc::channel();
+        let job = SpecJob {
+            exec,
+            h,
+            from_layer,
+            n_layers,
+            cancel: Arc::clone(&cancel),
+            out: out_tx,
+        };
+        match self.tx.send(job) {
+            Ok(()) => SpecHandle {
+                state: Some(HandleState::InFlight { rx: out_rx, cancel }),
+                counters: Arc::clone(counters),
+            },
+            Err(err) => {
+                // worker died: keep the launch as a deferred computation so
+                // the consumer still gets a correct (if unoverlapped) result
+                let SpecJob { exec, h, from_layer, n_layers, .. } = err.0;
+                SpecHandle {
+                    state: Some(HandleState::Deferred { exec, h, from_layer, n_layers }),
+                    counters: Arc::clone(counters),
+                }
+            }
+        }
+    }
+}
+
+enum HandleState {
+    /// queued on / running on the lane worker
+    InFlight {
+        rx: Receiver<Result<SpecResult>>,
+        cancel: Arc<AtomicBool>,
+    },
+    /// no worker: the compute runs on the caller's thread at `take()`
+    Deferred {
+        exec: Arc<dyn ModelExecutor>,
+        h: Arc<TensorF32>,
+        from_layer: usize,
+        n_layers: usize,
+    },
+}
+
+/// A cancellable speculative launch.  Consumed by exactly one of
+/// [`SpecHandle::take`] or [`SpecHandle::kill`]; dropping an unresolved
+/// handle counts it wasted, so `used + wasted == issued` holds on every
+/// path, including error shutdowns with launches still in flight.
+pub struct SpecHandle {
+    state: Option<HandleState>,
+    counters: Arc<SpecCounters>,
+}
+
+impl std::fmt::Debug for SpecHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(if self.state.is_some() { "SpecHandle(pending)" } else { "SpecHandle(resolved)" })
+    }
+}
+
+impl SpecHandle {
+    /// A deferred launch with no worker involved: nothing runs unless
+    /// `take()` is called (tests and the lane's fallback path use this).
+    pub fn deferred(
+        exec: Arc<dyn ModelExecutor>,
+        h: Arc<TensorF32>,
+        from_layer: usize,
+        n_layers: usize,
+        counters: &Arc<SpecCounters>,
+    ) -> SpecHandle {
+        counters.issue();
+        SpecHandle {
+            state: Some(HandleState::Deferred { exec, h, from_layer, n_layers }),
+            counters: Arc::clone(counters),
+        }
+    }
+
+    /// Kill the launch (kill-on-exit): counts it wasted and never blocks.
+    /// A job not yet started is skipped by the worker; one mid-compute
+    /// finishes on the lane and its result is discarded.
+    pub fn kill(mut self) {
+        self.discard();
+    }
+
+    fn discard(&mut self) {
+        if let Some(state) = self.state.take() {
+            if let HandleState::InFlight { cancel, .. } = &state {
+                cancel.store(true, Ordering::SeqCst);
+            }
+            self.counters.resolve_wasted();
+        }
+    }
+
+    /// Wait for (or, deferred, run) the speculative result.  `Ok` counts
+    /// the handle used; `Err` (worker died mid-launch) counts it wasted and
+    /// the caller recomputes through the normal path.
+    pub fn take(mut self) -> Result<SpecResult> {
+        let state = self.state.take().expect("take/kill consume the handle");
+        let res = match state {
+            HandleState::InFlight { rx, .. } => match rx.recv() {
+                Ok(res) => res,
+                Err(_) => Err(anyhow!("speculation worker dropped the launch")),
+            },
+            HandleState::Deferred { exec, h, from_layer, n_layers } => {
+                run_continuation(exec.as_ref(), &h, from_layer, n_layers, None)
+                    .expect("a deferred launch cannot be cancelled mid-run")
+            }
+        };
+        match res {
+            Ok(r) => {
+                self.counters.resolve_used();
+                Ok(r)
+            }
+            Err(e) => {
+                self.counters.resolve_wasted();
+                Err(e)
+            }
+        }
+    }
+}
+
+impl Drop for SpecHandle {
+    fn drop(&mut self) {
+        self.discard();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::ModelWeights;
+    use crate::runtime::{ComputeBackend, ModelSpec, ReferenceBackend};
+    use crate::tensor::TensorI32;
+
+    const L: usize = 3;
+
+    fn executor() -> Arc<dyn ModelExecutor> {
+        let weights = Arc::new(ModelWeights::synthetic(L, 16, 32, 64, 8, 2, 0x51EC));
+        let spec = ModelSpec {
+            task: "t",
+            style: "s",
+            weights,
+            n_heads: 2,
+            seq_len: 8,
+            batch_sizes: vec![1, 4],
+            cache_batch: 4,
+            manifest: None,
+        };
+        Arc::from(ReferenceBackend.load_model(&spec).expect("reference executor"))
+    }
+
+    fn hidden(exec: &Arc<dyn ModelExecutor>, b: usize) -> Arc<TensorF32> {
+        let tokens = TensorI32::new(
+            vec![b, 8],
+            (0..(b * 8) as i32).map(|i| (i * 5 + 3) % 64).collect(),
+        )
+        .unwrap();
+        let h0 = exec.embed(&tokens).unwrap();
+        Arc::new(exec.blocks(&h0, 0, 1).unwrap().to_tensor().unwrap())
+    }
+
+    /// Direct (non-speculative) continuation for comparison.
+    fn direct(exec: &Arc<dyn ModelExecutor>, h: &TensorF32, from_layer: usize) -> HeadOut {
+        let hid = exec.blocks_host(h, from_layer + 1, L).unwrap();
+        exec.exit_head(&hid, L - 1).unwrap()
+    }
+
+    #[test]
+    fn taken_launch_matches_direct_execution_bitexact() {
+        let exec = executor();
+        let h = hidden(&exec, 4);
+        let counters = SpecCounters::new();
+        let lane = SpecLane::new();
+        let handle = lane.speculate_rest_exit(Arc::clone(&exec), h.clone(), 0, L, &counters);
+        let want = direct(&exec, &h, 0);
+        let got = handle.take().expect("speculative result");
+        assert_eq!(got.launches, 2, "one range launch + one head launch");
+        assert!(got.host_ms >= 0.0);
+        for (a, b) in got.head.probs.data().iter().zip(want.probs.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "speculative probs must be bit-exact");
+        }
+        for (a, b) in got.head.conf.iter().zip(&want.conf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let s = counters.snapshot();
+        assert_eq!((s.issued, s.used, s.wasted), (1, 1, 0));
+        assert!((s.hit_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn last_layer_speculation_is_head_only() {
+        let exec = executor();
+        let h = hidden(&exec, 1);
+        let counters = SpecCounters::new();
+        let lane = SpecLane::new();
+        let got = lane
+            .speculate_rest_exit(Arc::clone(&exec), h.clone(), L - 1, L, &counters)
+            .take()
+            .unwrap();
+        assert_eq!(got.launches, 1, "from L-1 the continuation is the head alone");
+        let want = exec.exit_head_host(&h, L - 1).unwrap();
+        assert_eq!(got.head.conf[0].to_bits(), want.conf[0].to_bits());
+    }
+
+    #[test]
+    fn killed_launch_counts_wasted_and_never_blocks() {
+        let exec = executor();
+        let counters = SpecCounters::new();
+        let lane = SpecLane::new();
+        for i in 0..8 {
+            let h = hidden(&exec, 1 + (i % 2));
+            let handle = lane.speculate_rest_exit(Arc::clone(&exec), h, 0, L, &counters);
+            handle.kill();
+        }
+        drop(lane); // joins the worker: no deadlock with killed jobs queued
+        let s = counters.snapshot();
+        assert_eq!((s.issued, s.used, s.wasted), (8, 0, 8));
+        assert_eq!(s.in_flight(), 0);
+    }
+
+    #[test]
+    fn dropped_handle_resolves_wasted_exactly_once() {
+        let exec = executor();
+        let counters = SpecCounters::new();
+        let lane = SpecLane::new();
+        {
+            let h = hidden(&exec, 1);
+            let _handle = lane.speculate_rest_exit(Arc::clone(&exec), h, 0, L, &counters);
+            // dropped unresolved (the error-shutdown path)
+        }
+        drop(lane);
+        let s = counters.snapshot();
+        assert_eq!((s.issued, s.used, s.wasted), (1, 0, 1));
+    }
+
+    #[test]
+    fn deferred_handle_runs_inline_and_is_cancellable() {
+        let exec = executor();
+        let h = hidden(&exec, 2);
+        let counters = SpecCounters::new();
+        // used path: computes at take() on this thread, bit-exact
+        let handle = SpecHandle::deferred(Arc::clone(&exec), h.clone(), 0, L, &counters);
+        let launches0 = thread_launches();
+        let got = handle.take().unwrap();
+        assert_eq!(
+            thread_launches() - launches0,
+            got.launches,
+            "deferred launches run on the calling thread"
+        );
+        let want = direct(&exec, &h, 0);
+        assert_eq!(got.head.conf[0].to_bits(), want.conf[0].to_bits());
+        // killed path: nothing ever runs
+        let launches1 = thread_launches();
+        SpecHandle::deferred(Arc::clone(&exec), h, 0, L, &counters).kill();
+        assert_eq!(thread_launches(), launches1, "killed deferred launch must not execute");
+        let s = counters.snapshot();
+        assert_eq!((s.issued, s.used, s.wasted), (2, 1, 1));
+    }
+
+    #[test]
+    fn lane_worker_launches_never_pollute_the_issuing_thread() {
+        let exec = executor();
+        let h = hidden(&exec, 1);
+        let counters = SpecCounters::new();
+        let lane = SpecLane::new();
+        let launches0 = thread_launches();
+        let handle = lane.speculate_rest_exit(Arc::clone(&exec), h, 0, L, &counters);
+        let got = handle.take().unwrap();
+        assert_eq!(
+            thread_launches(),
+            launches0,
+            "speculative launches must land on the lane thread only"
+        );
+        assert_eq!(got.launches, 2);
+    }
+
+    #[test]
+    fn mid_flight_snapshot_never_shows_used_exceeding_issued() {
+        // Hammer the counters from several writer threads (each following
+        // the issue -> resolve lifecycle) while a reader snapshots
+        // concurrently: the read order inside snapshot() must make
+        // `used + wasted <= issued` (hence `used <= issued`) hold in every
+        // observable interleaving.
+        let counters = SpecCounters::new();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for w in 0..4 {
+            let c = Arc::clone(&counters);
+            writers.push(std::thread::spawn(move || {
+                for i in 0..20_000u64 {
+                    c.issue();
+                    if (i + w) % 3 == 0 {
+                        c.resolve_wasted();
+                    } else {
+                        c.resolve_used();
+                    }
+                }
+            }));
+        }
+        let reader = {
+            let c = Arc::clone(&counters);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut seen = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let s = c.snapshot();
+                    assert!(
+                        s.used + s.wasted <= s.issued,
+                        "inconsistent mid-flight snapshot: {s:?}"
+                    );
+                    seen += 1;
+                }
+                seen
+            })
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        stop.store(true, Ordering::SeqCst);
+        assert!(reader.join().unwrap() > 0, "reader must have raced the writers");
+        let s = counters.snapshot();
+        assert_eq!(s.issued, 80_000);
+        assert_eq!(s.used + s.wasted, 80_000, "every lifecycle resolved exactly once");
+    }
+}

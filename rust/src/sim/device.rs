@@ -55,6 +55,12 @@ impl Default for CloudSim {
 }
 
 impl CloudSim {
+    /// Simulated cloud latency for a real measured host duration.  With
+    /// speculative edge continuation this is fed the *speculative* launch's
+    /// measured compute when its result is used (the same rule as the
+    /// launch it replaced), and never sees killed speculative work — so
+    /// speculation changes no reward or cost accounting, only when the
+    /// compute happened (see coordinator::service module docs).
     pub fn simulated_ms(&self, real_host_ms: f64) -> f64 {
         real_host_ms * self.compute_scale + self.service_overhead_ms
     }

@@ -8,8 +8,11 @@ use std::io::Write;
 use std::sync::Arc;
 
 use splitee::config::Manifest;
-use splitee::coordinator::{Batcher, BatcherConfig, Router, RouterConfig};
-use splitee::cost::NetworkProfile;
+use splitee::coordinator::service::{PolicyKind, SpeculateMode};
+use splitee::coordinator::{
+    Batcher, BatcherConfig, CoalesceConfig, Router, RouterConfig, Service, ServiceConfig,
+};
+use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
 use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::Backend;
@@ -170,6 +173,159 @@ fn router_shutdown_mid_stream_loses_nothing_queued() {
         total += b.real_len();
     }
     assert_eq!(total, 10);
+}
+
+// ---- speculation under failure ------------------------------------------
+
+fn speculation_service_model() -> Arc<MultiExitModel> {
+    let weights = ModelWeights::synthetic(5, 16, 32, 64, 8, 2, 0xFA11);
+    Arc::new(
+        MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            2,
+            8,
+            vec![1, 8],
+            &Backend::reference(),
+        )
+        .expect("synthetic reference model"),
+    )
+}
+
+fn speculation_tokens(n: usize) -> Vec<TensorI32> {
+    use splitee::util::rng::Rng;
+    let mut rng = Rng::new(0x0F_F10AD);
+    (0..n)
+        .map(|_| {
+            TensorI32::new(vec![1, 8], (0..8).map(|_| rng.below(64) as i32).collect()).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn link_outage_with_speculation_in_flight_resolves_cleanly() {
+    // A total link outage arrives while every batch has a speculative
+    // continuation in flight: the run must complete (no hang), every reply
+    // falls back on-device, launch counters must not double-count the
+    // speculative work, and the lifecycle accounting balances exactly.
+    let model = speculation_service_model();
+    let n = 16usize;
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let mut link = LinkSim::new(NetworkProfile::three_g(), 13);
+    link.outage_rate = 1.0; // every transfer fails after the cloud computed
+    let config = ServiceConfig {
+        policy: PolicyKind::Fixed(2),
+        alpha: 1.1, // nothing exits: every row attempts the offload
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: std::time::Duration::from_millis(1),
+        },
+        coalesce: CoalesceConfig { enabled: false, max_wait: std::time::Duration::ZERO },
+        speculate: SpeculateMode::On,
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for t in speculation_tokens(n) {
+        router.submit(t, tx.clone()).unwrap();
+    }
+    drop(tx);
+    router.shutdown();
+    service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+    let mut got = 0usize;
+    while let Ok(resp) = rx.recv() {
+        assert!(!resp.offloaded, "outage must prevent the offload");
+        assert_eq!(resp.infer_layer, model.n_layers(), "fallback runs to the final layer");
+        got += 1;
+    }
+    assert_eq!(got, n);
+    let met = &service.metrics;
+    assert_eq!(met.outage_fallbacks, n as u64);
+    // the speculative result did the cloud compute exactly once per batch —
+    // attributed as the group's launch pair, never double-counted
+    assert_eq!(met.edge_launches, 3 * met.batches);
+    assert_eq!(met.cloud_launches, 2 * met.cloud_groups);
+    assert_eq!(met.cloud_groups, met.batches, "coalescing off: one group per batch");
+    let s = met.spec.snapshot();
+    assert_eq!(s.issued, met.batches, "one speculative launch per batch");
+    assert_eq!(s.used, met.batches, "outages happen after the continuation is consumed");
+    assert_eq!(s.wasted, 0);
+}
+
+#[test]
+fn router_shutdown_with_speculation_in_flight_resolves_every_launch() {
+    // Shut the router down while producers are mid-stream and speculative
+    // launches are in flight: the pipeline must drain without hanging,
+    // answer every accepted request exactly once, and resolve every issued
+    // speculative launch as used or wasted — nothing leaks, nothing double-
+    // counts.
+    let model = speculation_service_model();
+    for round in 0..3u64 {
+        let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+        let link = LinkSim::new(NetworkProfile::four_g(), 21 + round);
+        let config = ServiceConfig {
+            policy: PolicyKind::Fixed(2),
+            alpha: 0.9, // a mix of exits (killed launches) and offloads (used)
+            beta: 1.0,
+            batcher: BatcherConfig {
+                batch_sizes: model.batch_sizes().to_vec(),
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            coalesce: Default::default(),
+            speculate: SpeculateMode::On,
+        };
+        let router = Router::new(RouterConfig { max_inflight: 32 });
+        let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+        // the service runs concurrently so the shutdown below really lands
+        // while batches (and their speculative launches) are in flight
+        let service_thread = {
+            let router = Arc::clone(&router);
+            let bc = config.batcher.clone();
+            std::thread::spawn(move || {
+                service.run_pipelined(router, bc).unwrap();
+                service
+            })
+        };
+        let producer = {
+            let router = Arc::clone(&router);
+            std::thread::spawn(move || {
+                let (tx, rx) = std::sync::mpsc::channel();
+                let mut accepted = 0usize;
+                for t in speculation_tokens(200) {
+                    if router.submit(t, tx.clone()).is_none() {
+                        break;
+                    }
+                    accepted += 1;
+                }
+                drop(tx);
+                let mut replies = 0usize;
+                while rx.recv().is_ok() {
+                    replies += 1;
+                }
+                (accepted, replies)
+            })
+        };
+        // let some speculative launches get airborne, then pull the plug
+        std::thread::sleep(std::time::Duration::from_millis(3 + round as u64));
+        router.shutdown();
+        let service = service_thread.join().unwrap();
+        let (accepted, replies) = producer.join().unwrap();
+        assert_eq!(replies, accepted, "round {round}: accepted {accepted}, answered {replies}");
+        assert_eq!(service.metrics.served, accepted as u64);
+        let s = service.metrics.spec.snapshot();
+        assert_eq!(
+            s.used + s.wasted,
+            s.issued,
+            "round {round}: speculative launches leaked across shutdown: {s:?}"
+        );
+        assert_eq!(
+            service.metrics.cloud_launches,
+            2 * service.metrics.cloud_groups,
+            "round {round}: wasted speculative work bled into the launch counters"
+        );
+    }
 }
 
 #[test]

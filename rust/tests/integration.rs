@@ -319,7 +319,7 @@ fn full_coordinator_round_trip_answers_every_request() {
     // router -> batcher -> service over a real model (or the synthetic
     // reference model); every submitted request gets exactly one reply and
     // the metrics agree.
-    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::service::{PolicyKind, SpeculateMode};
     use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 
     let n = 40usize;
@@ -337,6 +337,7 @@ fn full_coordinator_round_trip_answers_every_request() {
             max_wait: std::time::Duration::from_millis(2),
         },
         coalesce: Default::default(),
+        speculate: SpeculateMode::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -376,7 +377,7 @@ fn pipelined_matches_serial_decisions() {
     // The staged pipeline must make exactly the decisions the serial loop
     // makes for the same arrival order: same per-request prediction, exit
     // layer and offload flag, and the same bandit arm statistics.
-    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::service::{PolicyKind, SpeculateMode};
     use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 
     let n = 25usize;
@@ -397,6 +398,7 @@ fn pipelined_matches_serial_decisions() {
                     max_wait: std::time::Duration::from_millis(2),
                 },
                 coalesce: Default::default(),
+                speculate: SpeculateMode::from_env(),
             };
             let router = Router::new(RouterConfig::default());
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -432,7 +434,7 @@ fn pipelined_service_answers_concurrent_producers_in_order() {
     // Under concurrent producers the pipeline must answer every request
     // exactly once, deliver each client's replies in its submission order,
     // and agree with the served-request metric.
-    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::service::{PolicyKind, SpeculateMode};
     use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -452,6 +454,7 @@ fn pipelined_service_answers_concurrent_producers_in_order() {
             max_wait: std::time::Duration::from_millis(2),
         },
         coalesce: Default::default(),
+        speculate: SpeculateMode::from_env(),
     };
     let router = Router::new(RouterConfig { max_inflight: 32 });
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -498,7 +501,7 @@ fn one_fused_launch_per_partition_verified_by_counters() {
     // forward_rest (+ final head) launch pair per coalesced group — on
     // every backend (the launch units are backend-agnostic; see
     // runtime/mod.rs).
-    use splitee::coordinator::service::{CoalesceConfig, PolicyKind};
+    use splitee::coordinator::service::{CoalesceConfig, PolicyKind, SpeculateMode};
     use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 
     let n = 40usize;
@@ -524,6 +527,7 @@ fn one_fused_launch_per_partition_verified_by_counters() {
             max_wait: std::time::Duration::from_millis(2),
         },
         coalesce: CoalesceConfig::default(),
+        speculate: SpeculateMode::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -564,7 +568,7 @@ fn coalesced_offload_groups_merge_adjacent_batches_and_preserve_results() {
     // batches with the same static split must coalesce into one fused cloud
     // launch, and every per-request answer must match the serial path where
     // each batch's continuation runs alone.
-    use splitee::coordinator::service::{CoalesceConfig, PolicyKind};
+    use splitee::coordinator::service::{CoalesceConfig, PolicyKind, SpeculateMode};
     use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 
     // 10 prefilled requests form batches of [8, 1, 1]: the full batch is
@@ -601,6 +605,7 @@ fn coalesced_offload_groups_merge_adjacent_batches_and_preserve_results() {
                 enabled: true,
                 max_wait: std::time::Duration::from_secs(1),
             },
+            speculate: SpeculateMode::from_env(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -643,7 +648,7 @@ fn coalesced_offload_groups_merge_adjacent_batches_and_preserve_results() {
 
 #[test]
 fn service_outage_falls_back_on_device() {
-    use splitee::coordinator::service::PolicyKind;
+    use splitee::coordinator::service::{PolicyKind, SpeculateMode};
     use splitee::coordinator::{Batcher, BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
 
     let n = 8usize;
@@ -662,6 +667,7 @@ fn service_outage_falls_back_on_device() {
             max_wait: std::time::Duration::from_millis(1),
         },
         coalesce: Default::default(),
+        speculate: SpeculateMode::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);

@@ -1,0 +1,456 @@
+//! Deterministic speculation/concurrency harness — the gate for the
+//! speculative edge continuation (kill-on-exit).
+//!
+//! The invariant under test: **speculation is invisible**.  With
+//! speculation on, per-request outputs are bit-identical and bandit
+//! decisions are exactly the serial-path decisions for any arrival order,
+//! and the wasted-launch accounting balances (`used + wasted == issued`).
+//! Everything here runs on the always-available reference backend with
+//! synthetic weights (plus one pjrt-gated lane test when that backend is
+//! built), driven through `util/prop.rs` so every failing case replays from
+//! its reported seed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitee::coordinator::service::{CoalesceConfig, PolicyKind, SpeculateMode};
+use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::runtime::{Backend, SpecCounters, SpecLane, SpecSnapshot};
+use splitee::sim::LinkSim;
+use splitee::tensor::TensorI32;
+use splitee::util::prop::{check, PropConfig};
+use splitee::util::rng::Rng;
+
+const VOCAB: usize = 64;
+const SEQ: usize = 8;
+
+fn synthetic_model(layers: usize, seed: u64, batch_sizes: Vec<usize>) -> Arc<MultiExitModel> {
+    let weights = ModelWeights::synthetic(layers, 16, 32, VOCAB, SEQ, 2, seed);
+    Arc::new(
+        MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            2,
+            SEQ,
+            batch_sizes,
+            &Backend::reference(),
+        )
+        .expect("synthetic reference model"),
+    )
+}
+
+fn random_tokens(rng: &mut Rng, n: usize) -> Vec<TensorI32> {
+    (0..n)
+        .map(|_| {
+            TensorI32::new(
+                vec![1, SEQ],
+                (0..SEQ).map(|_| rng.below(VOCAB as u64) as i32).collect(),
+            )
+            .unwrap()
+        })
+        .collect()
+}
+
+/// Everything one serving run produces that speculation must not change —
+/// plus the speculation accounting that it introduces.
+#[derive(Debug, PartialEq)]
+struct Decisions {
+    /// (id, prediction, confidence bits, infer_layer, offloaded) per request
+    replies: Vec<(u64, usize, u32, usize, bool)>,
+    /// bandit arm statistics, if the policy is a bandit
+    arms: Option<Vec<(u64, f64)>>,
+    /// mean cost in lambda units (reward-side accounting)
+    cost_mean_bits: u64,
+    offloaded: u64,
+}
+
+struct RunOutcome {
+    decisions: Decisions,
+    spec: SpecSnapshot,
+    batches: u64,
+    edge_launches: u64,
+    cloud_launches: u64,
+    cloud_groups: u64,
+    coalesced_batches: u64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_service(
+    model: &Arc<MultiExitModel>,
+    policy: PolicyKind,
+    alpha: f64,
+    speculate: SpeculateMode,
+    coalesce: CoalesceConfig,
+    tokens: &[TensorI32],
+    link_seed: u64,
+    pipelined: bool,
+) -> RunOutcome {
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let mut link = LinkSim::new(NetworkProfile::three_g(), link_seed);
+    link.outage_rate = 0.0;
+    let config = ServiceConfig {
+        policy,
+        alpha,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: Duration::from_millis(2),
+        },
+        coalesce,
+        speculate,
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(model), cm, link, &config);
+    service.link.outage_rate = 0.0;
+    let (tx, rx) = std::sync::mpsc::channel();
+    for t in tokens {
+        router.submit(t.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    // pre-filled queue + shutdown: batch formation is deterministic, so
+    // every run over the same arrival order sees the same batch sequence
+    router.shutdown();
+    if pipelined {
+        service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+    } else {
+        service.run_serial(Arc::clone(&router), config.batcher.clone()).unwrap();
+    }
+    let mut replies: Vec<(u64, usize, u32, usize, bool)> = Vec::new();
+    while let Ok(r) = rx.recv() {
+        replies.push((r.id, r.prediction, r.confidence.to_bits(), r.infer_layer, r.offloaded));
+    }
+    replies.sort_unstable();
+    let met = &service.metrics;
+    RunOutcome {
+        decisions: Decisions {
+            replies,
+            arms: service.bandit_summary().map(|(_, arms)| arms),
+            cost_mean_bits: met.cost_lambda.mean().to_bits(),
+            offloaded: met.offloaded,
+        },
+        spec: met.spec.snapshot(),
+        batches: met.batches,
+        edge_launches: met.edge_launches,
+        cloud_launches: met.cloud_launches,
+        cloud_groups: met.cloud_groups,
+        coalesced_batches: met.coalesced_batches,
+    }
+}
+
+#[test]
+fn speculation_on_off_bit_identical_and_same_decisions() {
+    // Randomized seeds, splits, batch menus, policies and arrival orders:
+    // serial (never speculates), pipelined+off and pipelined+on must agree
+    // on every output bit and every decision, and the on-run's speculation
+    // accounting must balance.
+    check(
+        PropConfig { cases: 10, seed: 0x5BEC_0004 },
+        |rng, size| {
+            let layers = 3 + rng.below(3) as usize; // 3..=5
+            let n = 4 + rng.below((8 + size / 4) as u64) as usize;
+            let menu = match rng.below(3) {
+                0 => vec![1, 8],
+                1 => vec![1, 4],
+                _ => vec![4],
+            };
+            let policy = match rng.below(4) {
+                0 => PolicyKind::SplitEe,
+                1 => PolicyKind::SplitEeS,
+                2 => PolicyKind::Fixed(1 + rng.below(layers as u64) as usize),
+                _ => PolicyKind::FinalExit,
+            };
+            // spans "everything exits" to "everything offloads"
+            let alpha = 0.5 + 0.6 * rng.next_f64();
+            let seed = rng.next_u64();
+            let order = rng.permutation(n);
+            (layers, n, menu, policy, alpha, seed, order)
+        },
+        |(layers, n, menu, policy, alpha, seed, order)| {
+            let model = synthetic_model(*layers, *seed, menu.clone());
+            let mut rng = Rng::new(*seed ^ 0xA11CE);
+            let pool = random_tokens(&mut rng, *n);
+            let arrival: Vec<TensorI32> = order.iter().map(|&i| pool[i].clone()).collect();
+            // coalescing off: group formation under static splits is
+            // wall-clock-dependent, which would make the launch-count
+            // comparisons below nondeterministic; the dedicated coalescing
+            // tests pin the merge behaviour with controlled deadlines
+            let no_coalesce = CoalesceConfig { enabled: false, max_wait: Duration::ZERO };
+
+            let serial = run_service(
+                &model, *policy, *alpha, SpeculateMode::Off, no_coalesce, &arrival, 42, false,
+            );
+            let off = run_service(
+                &model, *policy, *alpha, SpeculateMode::Off, no_coalesce, &arrival, 42, true,
+            );
+            let on = run_service(
+                &model, *policy, *alpha, SpeculateMode::On, no_coalesce, &arrival, 42, true,
+            );
+
+            splitee::prop_assert!(
+                serial.decisions.replies.len() == *n,
+                "serial answered {} of {n}",
+                serial.decisions.replies.len()
+            );
+            splitee::prop_assert!(
+                off.decisions == serial.decisions,
+                "pipelined(off) drifted from serial"
+            );
+            splitee::prop_assert!(
+                on.decisions == serial.decisions,
+                "pipelined(on) drifted from serial: speculation leaked into outputs/decisions"
+            );
+            // launch accounting must be indistinguishable from the off path
+            splitee::prop_assert!(
+                on.edge_launches == off.edge_launches,
+                "edge launches drifted: on {} vs off {}",
+                on.edge_launches,
+                off.edge_launches
+            );
+            splitee::prop_assert!(
+                on.cloud_launches == off.cloud_launches
+                    && on.cloud_groups == off.cloud_groups,
+                "cloud launch attribution drifted: on {}/{} vs off {}/{}",
+                on.cloud_launches,
+                on.cloud_groups,
+                off.cloud_launches,
+                off.cloud_groups
+            );
+            // speculation accounting balances; off-paths never issue
+            splitee::prop_assert!(
+                off.spec == SpecSnapshot::default() && serial.spec == SpecSnapshot::default(),
+                "speculation off must issue nothing: {:?} / {:?}",
+                off.spec,
+                serial.spec
+            );
+            splitee::prop_assert!(
+                on.spec.used + on.spec.wasted == on.spec.issued,
+                "unbalanced speculation accounting: {:?}",
+                on.spec
+            );
+            // every batch that could speculate did (split < L on a
+            // transparent backend), except under FinalExit where split == L
+            if matches!(policy, PolicyKind::FinalExit)
+                || matches!(policy, PolicyKind::Fixed(k) if *k >= *layers)
+            {
+                splitee::prop_assert!(
+                    on.spec.issued == 0,
+                    "split == L must not speculate: {:?}",
+                    on.spec
+                );
+            } else if matches!(policy, PolicyKind::Fixed(_)) {
+                splitee::prop_assert!(
+                    on.spec.issued == on.batches,
+                    "fixed split < L must speculate once per batch: {:?} over {} batches",
+                    on.spec,
+                    on.batches
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn speculative_launch_matches_forward_rest_exit_bitexact() {
+    // The lane-level transparency property behind the service invariant:
+    // the speculative full-batch continuation equals the non-speculative
+    // `forward_rest_exit` bit for bit — both over the full batch and after
+    // gathering an arbitrary row subset first (gather-then-compute vs
+    // compute-then-gather).
+    let model = synthetic_model(4, 0xB17E, vec![1, 8]);
+    let lane = SpecLane::new();
+    let counters = SpecCounters::new();
+    let mut expected_issued = 0u64;
+    check(
+        PropConfig { cases: 16, seed: 0xFEE1 },
+        |rng, _size| {
+            let b = 1 + rng.below(8) as usize;
+            let split = 1 + rng.below(3) as usize; // 1-based, < L
+            let tokens: Vec<i32> =
+                (0..b * SEQ).map(|_| rng.below(VOCAB as u64) as i32).collect();
+            let rows: Vec<usize> = (0..b).filter(|_| rng.chance(0.5)).collect();
+            (b, split, tokens, rows)
+        },
+        |(b, split, tokens, rows)| {
+            let t = TensorI32::new(vec![*b, SEQ], tokens.clone()).unwrap();
+            let (h, _out) = model.run_split(&t, split - 1).unwrap();
+            let handle = model
+                .speculate_rest_exit(&lane, Arc::new(h.clone()), split - 1, &counters)
+                .unwrap();
+            let direct = model.forward_rest_exit(&h, split - 1).unwrap();
+            let spec = handle.take().map_err(|e| format!("take failed: {e:#}"))?;
+            expected_issued += 1;
+            for (i, (a, c)) in spec.head.conf.iter().zip(&direct.conf).enumerate() {
+                splitee::prop_assert!(
+                    a.to_bits() == c.to_bits(),
+                    "row {i}: speculative conf {a} != direct {c}"
+                );
+            }
+            // gather-then-compute must agree with reading rows out of the
+            // full-batch speculative result — the decision-transparency
+            // contract the cloud stage relies on
+            if !rows.is_empty() {
+                let gathered = h.gather_rows(rows).unwrap();
+                let g_out = model.forward_rest_exit(&gathered, split - 1).unwrap();
+                for (gi, &row) in rows.iter().enumerate() {
+                    splitee::prop_assert!(
+                        g_out.conf[gi].to_bits() == spec.head.conf[row].to_bits(),
+                        "row {row}: gathered conf {} != speculative {}",
+                        g_out.conf[gi],
+                        spec.head.conf[row]
+                    );
+                    splitee::prop_assert!(
+                        g_out.pred[gi] == spec.head.probs.slice_rows(row, row + 1)
+                            .unwrap()
+                            .argmax_rows()
+                            .unwrap()[0],
+                        "row {row}: gathered pred != speculative pred"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+    let s = counters.snapshot();
+    assert_eq!(s.issued, expected_issued);
+    assert_eq!(s.used, expected_issued, "every property case consumed its launch");
+    assert_eq!(s.wasted, 0);
+}
+
+#[test]
+fn zero_wait_coalescing_with_speculation_stays_singleton() {
+    // CoalesceConfig::max_wait == 0 with speculation on: every group
+    // flushes as a singleton served from its speculative result, and the
+    // answers still match the serial path exactly.
+    let model = synthetic_model(5, 0xC0A1, vec![1, 8]);
+    let mut rng = Rng::new(0x0DD5);
+    let arrival = random_tokens(&mut rng, 10); // forms batches [8, 1, 1]
+    let zero_wait = CoalesceConfig { enabled: true, max_wait: Duration::from_secs(0) };
+    let serial = run_service(
+        &model, PolicyKind::Fixed(2), 1.1, SpeculateMode::Off, zero_wait, &arrival, 5, false,
+    );
+    let on = run_service(
+        &model, PolicyKind::Fixed(2), 1.1, SpeculateMode::On, zero_wait, &arrival, 5, true,
+    );
+    assert_eq!(on.decisions, serial.decisions, "zero-wait speculation changed answers");
+    assert_eq!(on.batches, 3);
+    assert_eq!(on.decisions.offloaded, 10, "alpha > 1 offloads every row");
+    assert_eq!(on.coalesced_batches, 0, "max_wait 0 must never merge");
+    assert_eq!(on.cloud_groups, 3);
+    assert_eq!(on.cloud_launches, 2 * on.cloud_groups, "fused pair per singleton group");
+    assert_eq!(
+        (on.spec.issued, on.spec.used, on.spec.wasted),
+        (3, 3, 0),
+        "all-singleton groups must consume every speculative launch"
+    );
+}
+
+#[test]
+fn speculative_hidden_ahead_of_verdict_never_mixes_into_coalesced_groups() {
+    // Two adjacent singleton batches whose speculative continuations are
+    // still in flight reach the cloud stage under a generous coalescing
+    // deadline.  The merge must kill the pending launches (wasted) and run
+    // one fused gathered launch — a coalesced group never consumes
+    // speculative rows — while the full batch ahead of them serves from its
+    // own speculative result.  Answers match the serial path either way.
+    let model = synthetic_model(5, 0xC0A2, vec![1, 8]);
+    let mut rng = Rng::new(0x0DD7);
+    let arrival = random_tokens(&mut rng, 10); // forms batches [8, 1, 1]
+    let merge_wait = CoalesceConfig { enabled: true, max_wait: Duration::from_secs(1) };
+    let serial = run_service(
+        &model, PolicyKind::Fixed(2), 1.1, SpeculateMode::Off, merge_wait, &arrival, 5, false,
+    );
+    let on = run_service(
+        &model, PolicyKind::Fixed(2), 1.1, SpeculateMode::On, merge_wait, &arrival, 5, true,
+    );
+    assert_eq!(on.decisions, serial.decisions, "merging over speculation changed answers");
+    assert_eq!(on.batches, 3);
+    assert_eq!(on.coalesced_batches, 1, "the singleton pair must merge");
+    assert_eq!(on.cloud_groups, 2, "full batch + merged pair");
+    assert_eq!(
+        on.cloud_launches,
+        2 * on.cloud_groups,
+        "one fused forward_rest + head pair per group, speculative or gathered"
+    );
+    assert_eq!(
+        (on.spec.issued, on.spec.used, on.spec.wasted),
+        (3, 1, 2),
+        "merged members' pending launches must resolve wasted, the singleton's used"
+    );
+}
+
+#[test]
+fn speculation_leaves_reward_and_cost_accounting_untouched() {
+    // The sim cost model must be speculation-blind: lambda-unit costs and
+    // energy are functions of the decisions alone, so their accumulators
+    // must agree bit for bit between on and off runs (simulated wall-time
+    // metrics are measured and may differ; rewards must not).
+    let model = synthetic_model(4, 0x5EED5, vec![1, 8]);
+    let mut rng = Rng::new(0x91AD);
+    let arrival = random_tokens(&mut rng, 17);
+    for policy in [PolicyKind::SplitEe, PolicyKind::SplitEeS, PolicyKind::Fixed(2)] {
+        let off = run_service(
+            &model, policy, 0.72, SpeculateMode::Off, CoalesceConfig::default(), &arrival, 9,
+            true,
+        );
+        let on = run_service(
+            &model, policy, 0.72, SpeculateMode::On, CoalesceConfig::default(), &arrival, 9,
+            true,
+        );
+        assert_eq!(
+            on.decisions.cost_mean_bits, off.decisions.cost_mean_bits,
+            "{policy:?}: speculative compute leaked into cost accounting"
+        );
+        assert_eq!(on.decisions, off.decisions, "{policy:?}: decisions drifted");
+    }
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn speculative_launch_resolves_on_the_pjrt_backend() {
+    // The lane is backend-agnostic: a pjrt-loaded executor runs speculative
+    // launches too (results agree to the usual cross-executable tolerance;
+    // the serving path still never consumes them — speculation_transparent
+    // is false there).
+    use splitee::config::Manifest;
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPLITEE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let backend = Backend::pjrt().expect("pjrt backend");
+    let model = MultiExitModel::load(&manifest, &backend, "sst2", "elasticbert").unwrap();
+    assert!(!model.speculation_transparent(), "pjrt results must not be consumed verbatim");
+    let b = 8usize;
+    let tokens = TensorI32::new(
+        vec![b, manifest.model.seq_len],
+        (0..(b * manifest.model.seq_len) as i32)
+            .map(|i| (i * 11 + 3) % manifest.model.vocab as i32)
+            .collect(),
+    )
+    .unwrap();
+    let split = 5usize; // 1-based
+    let (h, _out) = model.run_split(&tokens, split - 1).unwrap();
+    let lane = SpecLane::new();
+    let counters = SpecCounters::new();
+    let handle =
+        model.speculate_rest_exit(&lane, Arc::new(h.clone()), split - 1, &counters).unwrap();
+    let direct = model.forward_rest_exit(&h, split - 1).unwrap();
+    let spec = handle.take().expect("pjrt speculative launch resolves");
+    if model.has_fused_ranges() {
+        assert_eq!(spec.launches, 2, "one fused chain launch + one head launch");
+    } else {
+        assert!(spec.launches >= 2, "per-block fallback still counts launches");
+    }
+    for (i, (a, c)) in spec.head.conf.iter().zip(&direct.conf).enumerate() {
+        assert!((a - c).abs() < 2e-3, "row {i}: speculative {a} vs direct {c}");
+    }
+    let s = counters.snapshot();
+    assert_eq!((s.issued, s.used, s.wasted), (1, 1, 0));
+}
