@@ -7,7 +7,8 @@
 //! cargo run --release --example serve_stream -- \
 //!     [--dataset imdb] [--requests 500] [--network 4g] [--rate 200] \
 //!     [--backend auto|reference|pjrt] [--speculate on|off|auto] \
-//!     [--policy splitee|splitee-s|final] [--tcp 127.0.0.1:7878]
+//!     [--link static|markov|markov:SEED|trace:PATH] \
+//!     [--policy splitee|splitee-s|contextual|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
 //! With `--tcp`, a TCP front-end is exposed instead of the internal replay
@@ -24,7 +25,7 @@ use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::{Dataset, SampleStream};
 use splitee::model::MultiExitModel;
 use splitee::runtime::Backend;
-use splitee::sim::LinkSim;
+use splitee::sim::{LinkScenario, LinkSim};
 use splitee::util::args::Args;
 use splitee::util::rng::Rng;
 
@@ -46,6 +47,7 @@ fn main() -> Result<()> {
     let policy = match args.get_or("policy", "splitee") {
         "splitee" => PolicyKind::SplitEe,
         "splitee-s" => PolicyKind::SplitEeS,
+        "contextual" => PolicyKind::Contextual,
         "final" => PolicyKind::FinalExit,
         other => anyhow::bail!("unknown policy {other:?}"),
     };
@@ -66,6 +68,7 @@ fn main() -> Result<()> {
         },
         coalesce: Default::default(),
         speculate: SpeculateMode::from_name(&settings.speculate)?,
+        link: LinkScenario::from_name(&settings.link)?,
     };
 
     let router = Router::new(RouterConfig { max_inflight: 256 });

@@ -27,7 +27,7 @@ use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
 use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::Backend;
-use splitee::sim::LinkSim;
+use splitee::sim::{LinkScenario, LinkSim};
 use splitee::tensor::TensorI32;
 use splitee::util::bench::BenchSuite;
 use splitee::util::rng::Rng;
@@ -116,6 +116,9 @@ fn main() {
                     },
                     coalesce: Default::default(),
                     speculate,
+                    // static link: these labels stay comparable with every
+                    // earlier PR's BENCH_serving.json
+                    link: LinkScenario::default(),
                 };
                 let router = Router::new(RouterConfig::default());
                 let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -163,6 +166,73 @@ fn main() {
                 }
             });
         }
+    }
+
+    // Dynamic-link leg: the same closed-loop workload over the canonical
+    // markov scenario, for the stationary bandit and the context-aware
+    // policy.  Besides the headline req/s these emit per-link-state req/s
+    // and split histograms (`*_link_<state>_*` keys), the trajectory the
+    // contextual policy is expected to move: its per-state modal split
+    // shifts with the state while SplitEE holds one split everywhere.
+    let mut link_json: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+    for (label, kind) in [
+        ("serve_200req_splitee_markov", PolicyKind::SplitEe),
+        ("serve_200req_contextual_markov", PolicyKind::Contextual),
+    ] {
+        suite.bench_items(label, 0, 3, n as f64, || {
+            let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+            let link = LinkSim::new(NetworkProfile::three_g(), 7);
+            let config = ServiceConfig {
+                policy: kind,
+                alpha,
+                beta: 1.0,
+                batcher: BatcherConfig {
+                    batch_sizes: model.batch_sizes().to_vec(),
+                    max_wait: Duration::from_millis(2),
+                },
+                coalesce: Default::default(),
+                speculate: SpeculateMode::Off,
+                link: LinkScenario::from_name("markov").expect("canonical markov scenario"),
+            };
+            let router = Router::new(RouterConfig::default());
+            let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+            let producer = {
+                let router = Arc::clone(&router);
+                let tokens: Vec<_> = request_tokens.clone();
+                std::thread::spawn(move || {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    for t in tokens {
+                        if router.submit(t, tx.clone()).is_none() {
+                            break;
+                        }
+                    }
+                    drop(tx);
+                    while rx.recv().is_ok() {}
+                    router.shutdown();
+                })
+            };
+            let bc = config.batcher.clone();
+            service.run(Arc::clone(&router), bc).expect("serve");
+            producer.join().unwrap();
+            assert_eq!(service.metrics.served, n as u64);
+            for (state, s) in &service.metrics.link_states {
+                let prefix = format!("{label}_link_{state}");
+                link_json.insert(format!("{prefix}_served"), Json::Num(s.served as f64));
+                link_json.insert(format!("{prefix}_batches"), Json::Num(s.batches as f64));
+                let rps = if s.wall_ms > 0.0 { s.served as f64 / (s.wall_ms / 1e3) } else { 0.0 };
+                link_json.insert(format!("{prefix}_rps"), Json::Num(rps));
+                link_json.insert(
+                    format!("{prefix}_offload_rate"),
+                    Json::Num(s.offloaded as f64 / s.served.max(1) as f64),
+                );
+                let hist: std::collections::BTreeMap<String, Json> = s
+                    .split_hist
+                    .iter()
+                    .map(|(split, count)| (format!("L{split}"), Json::Num(*count as f64)))
+                    .collect();
+                link_json.insert(format!("{prefix}_split_hist"), Json::Obj(hist));
+            }
+        });
     }
 
     // raw backend roofline for comparison: back-to-back full-depth batches
@@ -230,6 +300,9 @@ fn main() {
     }
     for (k, v) in extras {
         baseline.insert(k, Json::Num(v));
+    }
+    for (k, v) in link_json {
+        baseline.insert(k, v);
     }
     baseline.insert("raw_roofline_rps".to_string(), Json::Num(roofline_rps));
     baseline.insert(

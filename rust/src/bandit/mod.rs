@@ -3,7 +3,10 @@
 //! SplitEE (Algorithm 1) is classical UCB1 over the `L` candidate split
 //! layers with reward eq. 1; SplitEE-S additionally updates every arm
 //! `j <= i_t` from side observations.  These primitives are policy-agnostic —
-//! the policies in [`crate::policy`] compose them with the cost model.
+//! the policies in [`crate::policy`] compose them with the cost model: one
+//! [`Ucb`] per deployment for the paper's stationary setting, one per link
+//! context for the time-varying setting
+//! ([`crate::policy::ContextualSplitPolicy`]).
 
 /// Running statistics of one arm.
 #[derive(Debug, Clone, Default, PartialEq)]

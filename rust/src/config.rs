@@ -239,6 +239,10 @@ pub struct Settings {
     /// (auto = on when the backend is decision-transparent and the host has
     /// spare parallelism; parsed into `coordinator::SpeculateMode`)
     pub speculate: String,
+    /// uplink scenario: `static`, `markov`, `markov:<seed>` or
+    /// `trace:<path>` (parsed into `sim::link::LinkScenario`; dynamic
+    /// scenarios vary bandwidth/latency/offload-cost per batch)
+    pub link: String,
     /// cost-confidence conversion factor mu (paper: 0.1)
     pub mu: f64,
     /// UCB exploration parameter beta (paper: 1.0)
@@ -258,6 +262,7 @@ impl Default for Settings {
             results_dir: PathBuf::from("results"),
             backend: "auto".to_string(),
             speculate: "auto".to_string(),
+            link: "static".to_string(),
             mu: 0.1,
             beta: 1.0,
             offload_cost: 5.0,
@@ -284,9 +289,14 @@ impl Settings {
         if let Some(sp) = args.get("speculate") {
             s.speculate = sp.to_string();
         }
+        if let Some(link) = args.get("link") {
+            s.link = link.to_string();
+        }
         // single source of truth for the accepted values (and the error
-        // message) is the coordinator's parser
+        // messages) are the coordinator's and the scenario engine's parsers;
+        // a trace file is read eagerly here so a bad path fails at startup
         crate::coordinator::service::SpeculateMode::from_name(&s.speculate)?;
+        crate::sim::link::LinkScenario::from_name(&s.link)?;
         s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
         s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
         s.offload_cost = args.get_num("o", s.offload_cost).map_err(anyhow::Error::msg)?;
@@ -377,14 +387,16 @@ mod tests {
         assert_eq!(s.offload_cost, 3.0);
         assert_eq!(s.backend, "auto", "backend defaults to auto");
         assert_eq!(s.speculate, "auto", "speculation defaults to auto");
+        assert_eq!(s.link, "static", "link scenario defaults to static");
         let args = Args::parse(
-            ["x", "--backend", "reference", "--speculate", "on"]
+            ["x", "--backend", "reference", "--speculate", "on", "--link", "markov:9"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         let s = Settings::from_args(&args).unwrap();
         assert_eq!(s.backend, "reference");
         assert_eq!(s.speculate, "on");
+        assert_eq!(s.link, "markov:9");
     }
 
     #[test]
@@ -394,6 +406,15 @@ mod tests {
         let args = Args::parse(["x", "--mu", "-1"].iter().map(|s| s.to_string()));
         assert!(Settings::from_args(&args).is_err());
         let args = Args::parse(["x", "--speculate", "maybe"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
+        let args = Args::parse(["x", "--link", "wobbly"].iter().map(|s| s.to_string()));
+        let err = Settings::from_args(&args).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("wobbly") && msg.contains("static"), "unhelpful error: {msg}");
+        // a trace scenario with a missing file fails at configuration time
+        let args = Args::parse(
+            ["x", "--link", "trace:/no/such/file.trace"].iter().map(|s| s.to_string()),
+        );
         assert!(Settings::from_args(&args).is_err());
     }
 }

@@ -1,11 +1,41 @@
 //! Serving metrics: latency, throughput, exit-layer distribution, offload
 //! rate, cost accounting — everything `splitee serve` reports.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::runtime::SpecCounters;
 use crate::util::stats::{LatencyHistogram, Welford};
+
+/// Per-link-state serving accounting: how much traffic each instantaneous
+/// link condition saw and which splits the policy chose under it.  Keyed by
+/// the [`crate::sim::link::LinkState::label`]; the static scenario keeps
+/// everything under one `"static"` entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LinkStateStat {
+    /// batches served while the link was in this state
+    pub batches: u64,
+    /// requests served while the link was in this state
+    pub served: u64,
+    pub offloaded: u64,
+    pub outage_fallbacks: u64,
+    /// wall-clock milliseconds attributed to this state (per-state req/s in
+    /// the serving bench = `served / wall_ms`)
+    pub wall_ms: f64,
+    /// chosen split layer (1-based) -> batches decided that way in this
+    /// state — the per-state split histogram the contextual policy is
+    /// expected to shift across states
+    pub split_hist: BTreeMap<usize, u64>,
+}
+
+impl LinkStateStat {
+    /// The most frequently chosen split in this state (1-based), if any
+    /// batch was served.
+    pub fn modal_split(&self) -> Option<usize> {
+        self.split_hist.iter().max_by_key(|(_, &c)| c).map(|(&s, _)| s)
+    }
+}
 
 /// Aggregated metrics for a serving session.
 #[derive(Debug)]
@@ -43,6 +73,16 @@ pub struct ServingMetrics {
     /// is ordered so a mid-flight read never shows `used + wasted > issued`
     /// (field-by-field loads in the wrong order would).
     pub spec: Arc<SpecCounters>,
+    /// per-link-state traffic and split-choice accounting (dynamic-link
+    /// scenarios; one `"static"` entry under a fixed link)
+    pub link_states: BTreeMap<String, LinkStateStat>,
+    /// wall-clock mark of the previous batch's reply: the inter-reply
+    /// interval is attributed to the *completing* batch's link state.
+    /// `None` until the first batch, so service setup time is charged to no
+    /// state.  (Under closed-loop replay — the serving bench — inter-reply
+    /// time is serving time, so per-state req/s is meaningful; under an
+    /// open-loop workload arrival idle lands on the next completing batch.)
+    last_link_mark: Option<Instant>,
 }
 
 impl ServingMetrics {
@@ -66,6 +106,8 @@ impl ServingMetrics {
             cloud_groups: 0,
             coalesced_batches: 0,
             spec: SpecCounters::new(),
+            link_states: BTreeMap::new(),
+            last_link_mark: None,
         }
     }
 
@@ -113,6 +155,37 @@ impl ServingMetrics {
     pub fn record_launches(&mut self, edge: u64, cloud: u64) {
         self.edge_launches += edge;
         self.cloud_launches += cloud;
+    }
+
+    /// Record one batch against the link state it was served under: traffic
+    /// counts, the chosen split (the per-state split histogram) and the
+    /// wall-clock time since the previous batch (per-state req/s).
+    pub fn record_link_state(
+        &mut self,
+        label: &str,
+        split: usize,
+        served: usize,
+        offloaded: u64,
+        outage_fallbacks: u64,
+    ) {
+        let now = Instant::now();
+        let dt_ms = self
+            .last_link_mark
+            .map(|m| now.duration_since(m).as_secs_f64() * 1e3)
+            .unwrap_or(0.0);
+        self.last_link_mark = Some(now);
+        // allocate the key only on the first sighting of a label — this runs
+        // once per batch on the reply path
+        if !self.link_states.contains_key(label) {
+            self.link_states.insert(label.to_string(), LinkStateStat::default());
+        }
+        let s = self.link_states.get_mut(label).expect("entry just ensured");
+        s.batches += 1;
+        s.served += served as u64;
+        s.offloaded += offloaded;
+        s.outage_fallbacks += outage_fallbacks;
+        s.wall_ms += dt_ms;
+        *s.split_hist.entry(split).or_insert(0) += 1;
     }
 
     /// Record one cloud-stage group by how many offload-contributing
@@ -195,6 +268,22 @@ impl ServingMetrics {
             spec.wasted,
             100.0 * spec.hit_rate(),
         ));
+        if !self.link_states.is_empty()
+            && (self.link_states.len() > 1 || !self.link_states.contains_key("static"))
+        {
+            for (label, s) in &self.link_states {
+                let hist: Vec<String> =
+                    s.split_hist.iter().map(|(l, c)| format!("L{l}:{c}")).collect();
+                out.push_str(&format!(
+                    "link[{label}]  {} batches  {} req  offload {:.1}%  outages {}  splits {}\n",
+                    s.batches,
+                    s.served,
+                    100.0 * s.offloaded as f64 / s.served.max(1) as f64,
+                    s.outage_fallbacks,
+                    hist.join(" "),
+                ));
+            }
+        }
         out.push_str("exit layers: ");
         for (layer, &count) in self.per_layer.iter().enumerate().skip(1) {
             if count > 0 {
@@ -262,5 +351,37 @@ mod tests {
         let m = ServingMetrics::new(12);
         assert_eq!(m.offload_rate(), 0.0);
         let _ = m.report();
+    }
+
+    #[test]
+    fn link_state_records_accumulate_per_label() {
+        let mut m = ServingMetrics::new(6);
+        m.record_link_state("good", 2, 8, 3, 0);
+        m.record_link_state("good", 2, 8, 0, 0);
+        m.record_link_state("good", 4, 1, 1, 0);
+        m.record_link_state("degraded", 5, 8, 2, 1);
+        let good = &m.link_states["good"];
+        assert_eq!(good.batches, 3);
+        assert_eq!(good.served, 17);
+        assert_eq!(good.offloaded, 4);
+        assert_eq!(good.split_hist[&2], 2);
+        assert_eq!(good.split_hist[&4], 1);
+        assert_eq!(good.modal_split(), Some(2));
+        let deg = &m.link_states["degraded"];
+        assert_eq!(deg.batches, 1);
+        assert_eq!(deg.outage_fallbacks, 1);
+        assert_eq!(deg.modal_split(), Some(5));
+        assert!(good.wall_ms >= 0.0 && deg.wall_ms >= 0.0);
+        let r = m.report();
+        assert!(r.contains("link[good]"), "{r}");
+        assert!(r.contains("link[degraded]"), "{r}");
+    }
+
+    #[test]
+    fn static_only_link_stats_stay_out_of_the_report() {
+        let mut m = ServingMetrics::new(6);
+        m.record_link_state("static", 3, 8, 0, 0);
+        assert!(!m.report().contains("link["), "single static entry is noise");
+        assert_eq!(m.link_states["static"].batches, 1);
     }
 }

@@ -19,7 +19,10 @@
 //! decisions are identical to serial execution for a fixed arrival order —
 //! including with speculative edge continuation enabled (the edge stage
 //! overlaps the post-split continuation with the exit-head verdict,
-//! kill-on-exit; see `service` module docs and `tests/speculation.rs`).
+//! kill-on-exit; see `service` module docs and `tests/speculation.rs`), and
+//! including under a time-varying uplink (the link scenario is stepped once
+//! per batch in the reply stage; see
+//! [`crate::sim::link::LinkScenario`] and the `service` module docs).
 
 pub mod batcher;
 pub mod metrics;

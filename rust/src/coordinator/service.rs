@@ -73,6 +73,27 @@
 //! Issued/used/wasted lifecycle counts live in `ServingMetrics::spec`
 //! (`SpecCounters`, consistent snapshots).
 //!
+//! # Dynamic link scenarios and the context-aware split policy
+//!
+//! The uplink need not be constant: [`ServiceConfig::link`] selects a
+//! [`LinkScenario`] (`--link static|markov|trace:<path>`) that is stepped
+//! **once per batch, in batch order, in the reply stage** — the only stage
+//! holding mutable policy/link state.  The sampled [`LinkState`] is what the
+//! batch is served under: its effective profile drives the uplink
+//! simulation, its instantaneous offloading cost replaces the cost model's
+//! `o` for this batch's rewards ([`LinkState::effective_cost`]), an outage
+//! state forces the on-device fallback, and its **context** id keys the
+//! [`ContextualSplitPolicy`] ([`PolicyKind::Contextual`]) — the split is
+//! chosen from the context observed at decision time and the realised
+//! rewards are credited back to that same context.  Because the scenario
+//! advances deterministically (seeded Markov chain or trace replay) and
+//! both the advance and the reward updates are serialized in the reply
+//! stage, the pipelined path stays decision-identical to serial replay of
+//! the same link trace; `--link static` draws no extra randomness and
+//! leaves the cost model untouched, so it reproduces the fixed-link
+//! behaviour bit for bit.  Per-state traffic and split-choice histograms
+//! land in `ServingMetrics::link_states`.
+//!
 //! [`Service::run_serial`] keeps the single-threaded reference path; both
 //! paths share the same stage functions, so their per-request outputs are
 //! identical by construction (asserted by `tests/integration.rs`).
@@ -87,11 +108,12 @@ use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::ServingMetrics;
 use crate::coordinator::router::{Response, Router};
 use crate::cost::CostModel;
+use crate::cost::NetworkProfile;
 use crate::model::{plan_batches_fused, ExitOutput, HiddenState, MultiExitModel};
-use crate::policy::{SplitEePolicy, SplitEeSPolicy};
+use crate::policy::{ContextualSplitPolicy, SplitEePolicy, SplitEeSPolicy};
 use crate::runtime::{thread_launches, SpecCounters, SpecHandle, SpecLane, SpecResult};
 use crate::sim::device::{CloudSim, EdgeSim};
-use crate::sim::link::{LinkSim, TransferResult};
+use crate::sim::link::{LinkScenario, LinkSim, LinkState, TransferResult};
 use crate::tensor::TensorF32;
 
 /// Bound on in-flight batches between adjacent pipeline stages.  Small on
@@ -106,6 +128,9 @@ pub enum PolicyKind {
     SplitEe,
     /// UCB with side observations (section 4.2)
     SplitEeS,
+    /// context-aware UCB: independent arm statistics per link context, for
+    /// time-varying uplink scenarios (I-SplitEE-style adaptation)
+    Contextual,
     /// fixed split layer (1-based)
     Fixed(usize),
     /// no split: every sample to the final layer on-device
@@ -162,12 +187,17 @@ impl SpeculateMode {
     /// Test-matrix hook: `SPLITEE_SPECULATE=on|off|auto` (default `Off`
     /// when unset).  The integration and speculation suites build their
     /// services with this, so CI gates both speculation paths over the same
-    /// tests.  An unparseable value panics rather than silently testing the
-    /// off path under an "on" job label.
+    /// tests.  An unparseable value panics — naming the variable, the
+    /// rejected value and the accepted values — rather than silently
+    /// testing the off path under an "on" job label.
     pub fn from_env() -> SpeculateMode {
         match std::env::var("SPLITEE_SPECULATE") {
-            Ok(v) => SpeculateMode::from_name(&v)
-                .expect("SPLITEE_SPECULATE must be on, off or auto"),
+            Ok(v) => match SpeculateMode::from_name(&v) {
+                Ok(m) => m,
+                Err(_) => panic!(
+                    "SPLITEE_SPECULATE={v:?} is invalid — accepted values: on, off, auto"
+                ),
+            },
             Err(_) => SpeculateMode::Off,
         }
     }
@@ -186,22 +216,31 @@ pub struct ServiceConfig {
     pub coalesce: CoalesceConfig,
     /// speculative edge continuation past the split (kill-on-exit)
     pub speculate: SpeculateMode,
+    /// time-varying uplink scenario, stepped once per batch.  The service
+    /// clones this, so every service built from one config replays the
+    /// identical condition sequence; [`LinkScenario::Static`] (the
+    /// `Default`) is the fixed-link behaviour, bit for bit.
+    pub link: LinkScenario,
 }
 
 /// Policy state held by the service.
 enum PolicyState {
     SplitEe(SplitEePolicy),
     SplitEeS(SplitEeSPolicy),
+    Contextual(ContextualSplitPolicy),
     Fixed(usize),
     FinalExit,
 }
 
 impl PolicyState {
-    /// Next split layer (1-based) from the current bandit state.
-    fn choose_split(&mut self, n_layers: usize) -> usize {
+    /// Next split layer (1-based) from the current bandit state.  `context`
+    /// is the link context observed at decision time — only the contextual
+    /// policy reads it.
+    fn choose_split(&mut self, n_layers: usize, context: usize) -> usize {
         match self {
             PolicyState::SplitEe(p) => p.choose_split(),
             PolicyState::SplitEeS(p) => p.choose_split(),
+            PolicyState::Contextual(p) => p.choose_split(context),
             PolicyState::Fixed(k) => *k,
             PolicyState::FinalExit => n_layers,
         }
@@ -571,6 +610,12 @@ fn cloud_stage_group(
 /// bandit updates, metrics and reply delivery.  Everything stateful lives
 /// here, in batch order — this is what keeps pipelined decisions identical
 /// to the serial path.
+///
+/// `state` is the instantaneous link condition this batch was decided and
+/// served under (stepped by the caller, once per batch): it modulates the
+/// uplink profile, replaces the offloading cost for this batch's rewards,
+/// forces the on-device fallback during an outage, and keys the contextual
+/// policy's updates.
 #[allow(clippy::too_many_arguments)]
 fn reply_stage(
     work: ReplyWork,
@@ -582,8 +627,16 @@ fn reply_stage(
     link: &mut LinkSim,
     policy: &mut PolicyState,
     metrics: &mut ServingMetrics,
+    state: &LinkState,
 ) {
     let l = n_layers;
+    // this batch's rewards/costs are charged at the instantaneous
+    // communication cost (identity under the static scenario)
+    let cost = &state.effective_cost(cost);
+    if !state.outage {
+        // the uplink simulator serves this batch at the sampled condition
+        link.profile = state.profile;
+    }
     let ReplyWork {
         batch,
         exit_out,
@@ -608,7 +661,14 @@ fn reply_stage(
     // (pred, conf, extra_latency_ms, outage) for rows that were offloaded
     let mut final_by_row: Vec<Option<(usize, f32, f64, bool)>> = vec![None; n_real];
     for cr in cloud_out {
-        match link.transfer(payload) {
+        // a scenario-level outage fails every transfer deterministically
+        // (no rng drawn); otherwise the stochastic link decides
+        let result = if state.outage {
+            TransferResult::Outage
+        } else {
+            link.transfer(payload)
+        };
+        match result {
             TransferResult::Delivered { ms, .. } => {
                 final_by_row[cr.row] = Some((cr.pred, cr.conf, ms + cr.cloud_ms, false));
             }
@@ -621,6 +681,9 @@ fn reply_stage(
             }
         }
     }
+    let state_offloads = final_by_row.iter().flatten().filter(|r| !r.3).count() as u64;
+    let state_outages = final_by_row.iter().flatten().filter(|r| r.3).count() as u64;
+    metrics.record_link_state(&state.label, split, n_real, state_offloads, state_outages);
 
     for (row, req) in batch.requests.iter().enumerate() {
         let queue_ms = batch
@@ -659,6 +722,10 @@ fn reply_stage(
 
         match policy {
             PolicyState::SplitEe(p) => p.record(split, reward),
+            // keyed by the context observed at decision time — `state` is
+            // exactly the condition under which this batch's split was
+            // chosen, whatever the link has drifted to since
+            PolicyState::Contextual(p) => p.record(state.context, split, reward),
             PolicyState::SplitEeS(p) => {
                 let mut prefix: Vec<f32> = prefix_conf.iter().map(|layer| layer[row]).collect();
                 prefix.push(exit_out.conf[row]);
@@ -695,6 +762,13 @@ pub struct Service {
     pub edge: EdgeSim,
     pub cloud: CloudSim,
     pub link: LinkSim,
+    /// time-varying uplink scenario, stepped once per batch in the reply
+    /// stage (see the module docs)
+    scenario: LinkScenario,
+    /// the configured profile the scenario modulates — kept separately
+    /// because `link.profile` is overwritten per batch with the effective
+    /// one, and compounding modulations would drift
+    base_profile: NetworkProfile,
     policy: PolicyState,
     alpha: f64,
     coalesce: CoalesceConfig,
@@ -718,6 +792,12 @@ impl Service {
             PolicyKind::SplitEeS => {
                 PolicyState::SplitEeS(SplitEeSPolicy::new(l, config.alpha, config.beta))
             }
+            PolicyKind::Contextual => PolicyState::Contextual(ContextualSplitPolicy::new(
+                l,
+                config.link.n_contexts(),
+                config.alpha,
+                config.beta,
+            )),
             PolicyKind::Fixed(k) => PolicyState::Fixed(k.clamp(1, l)),
             PolicyKind::FinalExit => PolicyState::FinalExit,
         };
@@ -750,17 +830,14 @@ impl Service {
             cost,
             edge: EdgeSim::default(),
             cloud: CloudSim::default(),
+            scenario: config.link.clone(),
+            base_profile: link.profile,
             link,
             policy,
             alpha: config.alpha,
             coalesce: config.coalesce,
             spec_lane: speculate.then(SpecLane::new),
         }
-    }
-
-    fn choose_split(&mut self) -> usize {
-        let l = self.model.n_layers();
-        self.policy.choose_split(l)
     }
 
     fn side_info(&self) -> bool {
@@ -804,21 +881,28 @@ impl Service {
         // replies), so only they ever wait out the coalescing deadline.
         let coalesce_wait = coalesce.enabled && static_split.is_some();
 
+        let base_profile = self.base_profile;
+
         let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(PIPELINE_DEPTH);
         let (edge_tx, edge_rx) = mpsc::sync_channel::<EdgeWork>(PIPELINE_DEPTH);
         let (cloud_tx, cloud_rx) = mpsc::sync_channel::<ReplyWork>(PIPELINE_DEPTH);
         // split tokens: reply stage -> edge stage.  At most one token is in
         // flight per batch; the seed token below covers the first batch.
         let (split_tx, split_rx) = mpsc::channel::<usize>();
-        if static_split.is_none() {
-            let _ = split_tx.send(self.policy.choose_split(l));
-        }
         // the edge stage's handle on the speculation lane + the shared
         // lifecycle counters (cloned before `self` is destructured below)
         let spec_lane = self.spec_lane.clone();
         let spec_counters = Arc::clone(&self.metrics.spec);
 
-        let Service { model, policy, metrics, link, .. } = self;
+        let Service { model, policy, metrics, link, scenario, .. } = self;
+        // The link scenario advances once per batch, here in the reply
+        // stage's ownership: the state sampled when a batch's split is
+        // chosen is the state its replies are accounted (and its contextual
+        // updates keyed) under — the same sequence the serial loop walks.
+        let mut cur_state = scenario.next_state(&base_profile);
+        if static_split.is_none() {
+            let _ = split_tx.send(policy.choose_split(l, cur_state.context));
+        }
         let model_edge = Arc::clone(model);
         let model_cloud = Arc::clone(model);
         let router_batcher = Arc::clone(&router);
@@ -938,13 +1022,16 @@ impl Service {
             // Updates are serialized here in batch order; the next split is
             // released only after they are applied.
             while let Ok(work) = cloud_rx.recv() {
-                reply_stage(work, l, side, &cost, &edge, &cloud, link, policy, metrics);
+                reply_stage(
+                    work, l, side, &cost, &edge, &cloud, link, policy, metrics, &cur_state,
+                );
+                // Advance the link and decide for the batch after this one.
+                // A final state/token may go unconsumed when the stream
+                // ends; `choose` without a subsequent update only advances
+                // the UCB round counter, never the arm statistics.
+                cur_state = scenario.next_state(&base_profile);
                 if static_split.is_none() {
-                    // The token for the batch after this one.  A final token
-                    // may go unconsumed when the stream ends; `choose`
-                    // without a subsequent update only advances the UCB round
-                    // counter, never the arm statistics.
-                    let _ = split_tx.send(policy.choose_split(l));
+                    let _ = split_tx.send(policy.choose_split(l, cur_state.context));
                 }
             }
 
@@ -970,7 +1057,11 @@ impl Service {
     /// share runs as a group of one — identical math to a coalesced group.
     pub fn serve_batch(&mut self, batch: Batch) -> Result<()> {
         let l = self.model.n_layers();
-        let split = self.choose_split();
+        // one scenario step per batch, observed before the split decision —
+        // the exact sequence the pipelined reply stage walks
+        let base_profile = self.base_profile;
+        let state = self.scenario.next_state(&base_profile);
+        let split = self.policy.choose_split(l, state.context);
         let side = self.side_info();
         // The serial path never speculates: it is the pristine reference
         // whose decisions the speculative pipeline must reproduce exactly
@@ -989,18 +1080,32 @@ impl Service {
             &mut self.link,
             &mut self.policy,
             &mut self.metrics,
+            &state,
         );
         Ok(())
     }
 
-    /// Current bandit state summary, if the policy is a bandit.
+    /// Current bandit state summary, if the policy is a bandit.  For the
+    /// contextual policy this is the context-aggregated view (total pulls
+    /// per arm, pull-weighted mean reward); use
+    /// [`Service::contextual_summary`] for the per-context statistics.
     pub fn bandit_summary(&self) -> Option<(usize, Vec<(u64, f64)>)> {
         let ucb = match &self.policy {
             PolicyState::SplitEe(p) => p.ucb(),
             PolicyState::SplitEeS(p) => p.ucb(),
+            PolicyState::Contextual(p) => return Some(p.aggregate_summary()),
             _ => return None,
         };
         let arms = (0..ucb.k()).map(|i| (ucb.arm(i).n, ucb.arm(i).q)).collect();
         Some((ucb.best_empirical() + 1, arms))
+    }
+
+    /// Per-context arm statistics `(pulls, mean reward)` when the policy is
+    /// context-aware; outer index is the link context id.
+    pub fn contextual_summary(&self) -> Option<Vec<Vec<(u64, f64)>>> {
+        match &self.policy {
+            PolicyState::Contextual(p) => Some(p.per_context_arms()),
+            _ => None,
+        }
     }
 }

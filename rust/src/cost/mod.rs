@@ -5,10 +5,17 @@
 //! (`lambda1`) and exit-head inference (`lambda2 = lambda1 / 6` — the paper
 //! counts 5 matmuls to process a layer and 1 to infer).  Offloading costs
 //! `o ∈ {1..5} * lambda` depending on the network generation.
+//!
+//! Under a dynamic link (`--link markov|trace:<path>`) the offloading cost
+//! is no longer a constant: [`offload_lambda_for_uplink`] maps the
+//! instantaneous uplink bandwidth into the paper's `1..=5` range and
+//! [`CostModel::with_offload`] charges one batch's rewards at that
+//! instantaneous cost, leaving every other knob untouched (see
+//! [`crate::sim::link`]).
 
 pub mod network;
 
-pub use network::NetworkProfile;
+pub use network::{offload_lambda_for_uplink, NetworkProfile};
 
 /// The paper's cost/reward model.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -83,6 +90,16 @@ impl CostModel {
     pub fn final_exit_cost(&self) -> f64 {
         self.lambda * self.n_layers as f64
     }
+
+    /// A copy of this model with the offloading cost replaced — how the
+    /// dynamic-link scenarios charge the *instantaneous* communication cost
+    /// (`o` re-derived from the sampled link state) without touching any
+    /// other knob.  `offload_lambda` is in lambda units, like
+    /// [`CostModel::paper`]'s first argument.
+    pub fn with_offload(mut self, offload_lambda: f64) -> CostModel {
+        self.offload = offload_lambda * self.lambda;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -148,6 +165,19 @@ mod tests {
             assert!(c.compute_cost_splitee(i) < c.compute_cost_splitee(i + 1));
             assert!(c.compute_cost_cascade(i) < c.compute_cost_cascade(i + 1));
         }
+    }
+
+    #[test]
+    fn with_offload_replaces_only_the_offload_cost() {
+        let c = cm();
+        let cheap = c.with_offload(1.0);
+        assert!((cheap.offload - 1.0).abs() < 1e-12);
+        assert_eq!(cheap.lambda1, c.lambda1);
+        assert_eq!(cheap.mu, c.mu);
+        // exit rewards are untouched; offload rewards shift by mu * delta_o
+        assert_eq!(cheap.reward_exit(3, 0.9, false), c.reward_exit(3, 0.9, false));
+        let shift = c.reward_offload(3, 0.9, false) - cheap.reward_offload(3, 0.9, false);
+        assert!((shift - c.mu * 4.0).abs() < 1e-12);
     }
 
     #[test]

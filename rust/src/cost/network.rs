@@ -91,6 +91,40 @@ impl NetworkProfile {
     pub fn transfer_ms(&self, payload_bytes: usize) -> f64 {
         self.base_latency_ms + (payload_bytes as f64 * 8.0 / 1e6) / self.uplink_mbps * 1e3
     }
+
+    /// A modulated copy of this profile: bandwidth and latency scaled by the
+    /// instantaneous link condition, with the offloading cost re-derived from
+    /// the *effective* bandwidth via [`offload_lambda_for_uplink`].  This is
+    /// how the dynamic-link scenarios ([`crate::sim::link::LinkScenario`])
+    /// turn a base profile into a time-varying one.
+    pub fn scaled(&self, bandwidth_scale: f64, latency_scale: f64) -> NetworkProfile {
+        let uplink_mbps = (self.uplink_mbps * bandwidth_scale).max(1e-6);
+        NetworkProfile {
+            kind: self.kind,
+            offload_lambda: offload_lambda_for_uplink(uplink_mbps),
+            base_latency_ms: self.base_latency_ms * latency_scale,
+            uplink_mbps,
+            loss_rate: self.loss_rate,
+        }
+    }
+}
+
+/// Map an instantaneous uplink bandwidth to the paper's offloading cost `o`
+/// (lambda units, clamped to the paper's `1..=5` range).
+///
+/// The interpolation is logarithmic, anchored at the two extremes the paper
+/// tabulates — Wi-Fi (100 Mbit/s, `o = 1`) and 3G (1.5 Mbit/s, `o = 5`) —
+/// so the static profiles land close to their hand-assigned costs (4G:
+/// ~3.2 vs 3.5, 5G: ~1.7 vs 2.0) while a *time-varying* link gets a
+/// continuous, monotone cost the dynamic scenarios can sample per batch.
+pub fn offload_lambda_for_uplink(uplink_mbps: f64) -> f64 {
+    const HI_MBPS: f64 = 100.0; // Wi-Fi anchor, o = 1
+    const LO_MBPS: f64 = 1.5; // 3G anchor,  o = 5
+    if uplink_mbps <= 0.0 {
+        return 5.0;
+    }
+    let t = (HI_MBPS.ln() - uplink_mbps.ln()) / (HI_MBPS.ln() - LO_MBPS.ln());
+    (1.0 + 4.0 * t).clamp(1.0, 5.0)
 }
 
 #[cfg(test)]
@@ -124,6 +158,47 @@ mod tests {
         assert_eq!(NetworkProfile::by_name("4g").unwrap().kind, NetworkKind::FourG);
         assert_eq!(NetworkProfile::by_name("3g").unwrap().kind, NetworkKind::ThreeG);
         assert!(NetworkProfile::by_name("2g").is_none());
+    }
+
+    #[test]
+    fn offload_lambda_interpolation_hits_anchors_and_is_monotone() {
+        assert!((offload_lambda_for_uplink(100.0) - 1.0).abs() < 1e-9);
+        assert!((offload_lambda_for_uplink(1.5) - 5.0).abs() < 1e-9);
+        // clamped outside the anchored range, worst case for a dead link
+        assert_eq!(offload_lambda_for_uplink(1000.0), 1.0);
+        assert_eq!(offload_lambda_for_uplink(0.01), 5.0);
+        assert_eq!(offload_lambda_for_uplink(0.0), 5.0);
+        let mut prev = offload_lambda_for_uplink(0.5);
+        for mbps in [1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0, 200.0] {
+            let o = offload_lambda_for_uplink(mbps);
+            assert!(o <= prev, "o must fall as bandwidth rises ({mbps} Mbps)");
+            prev = o;
+        }
+        // the static profiles' hand-assigned costs are near the curve
+        for p in NetworkProfile::all() {
+            let derived = offload_lambda_for_uplink(p.uplink_mbps);
+            assert!(
+                (derived - p.offload_lambda).abs() < 0.6,
+                "{:?}: derived {derived:.2} vs assigned {}",
+                p.kind,
+                p.offload_lambda
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_profile_modulates_bandwidth_latency_and_cost() {
+        let base = NetworkProfile::wifi();
+        let degraded = base.scaled(0.015, 4.0);
+        assert_eq!(degraded.kind, base.kind);
+        assert!((degraded.uplink_mbps - 1.5).abs() < 1e-9);
+        assert!((degraded.base_latency_ms - 8.0).abs() < 1e-9);
+        assert!((degraded.offload_lambda - 5.0).abs() < 1e-9, "1.5 Mbps is the o=5 anchor");
+        // identity scaling re-derives only the offload cost
+        let same = base.scaled(1.0, 1.0);
+        assert_eq!(same.uplink_mbps, base.uplink_mbps);
+        assert_eq!(same.base_latency_ms, base.base_latency_ms);
+        assert!((same.offload_lambda - 1.0).abs() < 1e-9);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! cloud, and decides **per sample** whether to exit at the split layer or
 //! offload.
 //!
-//! Three-layer architecture (see DESIGN.md):
+//! Three-layer architecture (the full module map, request data flow and
+//! test-suite invariants live in the repository's `ARCHITECTURE.md`):
 //!
 //! * **L1** — Pallas kernels (attention / ffn / exit head), authored in
 //!   `python/compile/kernels/`, validated against a pure-jnp oracle;
@@ -15,18 +16,33 @@
 //! * **L3** — this crate: the pluggable-backend [`runtime`] (an
 //!   always-available pure-Rust `reference` backend, plus the PJRT backend
 //!   behind the `pjrt` cargo feature), the multi-exit [`model`] executor,
-//!   the [`policy`] zoo (SplitEE, SplitEE-S and the paper's baselines), the
-//!   edge/cloud [`sim`]ulator, the serving [`coordinator`] and the
+//!   the [`policy`] zoo (SplitEE, SplitEE-S, the paper's baselines and the
+//!   context-aware [`policy::ContextualSplitPolicy`]), the edge/cloud
+//!   [`sim`]ulator with its dynamic-link scenario engine
+//!   ([`sim::link::LinkScenario`]), the serving [`coordinator`] and the
 //!   [`experiments`] harness that regenerates every table and figure of the
 //!   paper.
 //!
-//! Quick start (after `make artifacts && cargo build --release`):
+//! The three deployment-facing switches every serving entry point takes:
+//!
+//! * `--backend auto|reference|pjrt` — which [`runtime::Backend`] executes
+//!   the model (`reference` runs everywhere, no artifacts needed);
+//! * `--speculate on|off|auto` — the edge stage's speculative continuation
+//!   past the split ([`coordinator::SpeculateMode`], kill-on-exit,
+//!   decision-invariant);
+//! * `--link static|markov|markov:<seed>|trace:<path>` — the uplink
+//!   scenario ([`sim::link::LinkScenario`]): fixed, Markov-modulated, or a
+//!   replayed trace; pair dynamic links with `--policy contextual`.
+//!
+//! Quick start (after `make artifacts && cargo build --release`; see the
+//! repository `README.md` for the artifact-free reference-backend path):
 //!
 //! ```text
 //! splitee table2             # paper Table 2
 //! splitee figures            # paper Figures 3-6
 //! splitee regret             # paper Figure 7
 //! splitee serve --dataset imdb --requests 200
+//! splitee serve --policy contextual --link markov
 //! ```
 
 pub mod bandit;

@@ -25,7 +25,7 @@ use splitee::experiments::{ablations, figures, regret, report, sec5_4, table2,
                            ConfidenceCache};
 use splitee::model::MultiExitModel;
 use splitee::runtime::Backend;
-use splitee::sim::LinkSim;
+use splitee::sim::{LinkScenario, LinkSim};
 use splitee::util::args::Args;
 use splitee::util::logging;
 use splitee::util::rng::Rng;
@@ -107,8 +107,9 @@ Subcommands
   ablations    --which beta|mu|alpha|side|all [--dataset imdb]
   serve        live co-inference serving
                [--dataset imdb] [--requests 200] [--policy splitee|splitee-s|
-                fixed:K|final] [--network wifi|5g|4g|3g] [--listen ADDR]
-                [--speculate on|off|auto]
+                contextual|fixed:K|final] [--network wifi|5g|4g|3g]
+                [--listen ADDR] [--speculate on|off|auto]
+                [--link static|markov|markov:SEED|trace:PATH]
 
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
@@ -120,6 +121,10 @@ Common flags
                     on exit: on|off|auto (default: auto — on when the
                     backend is decision-transparent and the host has spare
                     parallelism)
+  --link SCENARIO   uplink scenario: static|markov|markov:SEED|trace:PATH
+                    (default: static — the fixed --network profile; markov
+                    and trace vary bandwidth/latency/offload-cost per batch;
+                    pair with --policy contextual for per-context splits)
   --o N             offloading cost in lambda units (default: 5)
   --mu X            cost weight in the reward (default: 0.1)
   --beta X          UCB exploration (default: 1.0)
@@ -237,6 +242,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
     let policy = match args.get_or("policy", "splitee") {
         "splitee" => PolicyKind::SplitEe,
         "splitee-s" => PolicyKind::SplitEeS,
+        "contextual" => PolicyKind::Contextual,
         "final" => PolicyKind::FinalExit,
         other => {
             if let Some(k) = other.strip_prefix("fixed:") {
@@ -248,6 +254,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
     };
     let network = NetworkProfile::by_name(args.get_or("network", "3g"))
         .context("--network must be wifi|5g|4g|3g")?;
+    let scenario = LinkScenario::from_name(&settings.link)?;
 
     let model = Arc::new(MultiExitModel::load(
         &manifest, &backend, &task.name, "elasticbert",
@@ -265,6 +272,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
         },
         coalesce: Default::default(),
         speculate: SpeculateMode::from_name(&settings.speculate)?,
+        link: scenario,
     };
 
     let router = Router::new(RouterConfig::default());
@@ -306,6 +314,15 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
         println!("bandit: best empirical split = layer {best}");
         for (i, (n, q)) in arms.iter().enumerate() {
             println!("  L{:<2} pulls {:<6} Q {:+.4}", i + 1, n, q);
+        }
+    }
+    if let Some(per_ctx) = service.contextual_summary() {
+        for (ctx, arms) in per_ctx.iter().enumerate() {
+            let modal = arms.iter().enumerate().max_by_key(|(_, (n, _))| *n).map(|(i, _)| i + 1);
+            let pulls: u64 = arms.iter().map(|(n, _)| n).sum();
+            if let Some(modal) = modal.filter(|_| pulls > 0) {
+                println!("context {ctx}: {pulls} pulls, modal split = layer {modal}");
+            }
         }
     }
     anyhow::ensure!(got == n_requests, "expected {n_requests} replies, got {got}");

@@ -1,0 +1,198 @@
+//! Context-aware split selection: independent UCB bandits per link context.
+//!
+//! SplitEE's bandit assumes a stationary environment; when the uplink is
+//! time-varying the optimal split moves with it (I-SplitEE, Bajpai et al.
+//! 2024; Dynamic Split Computing, Bakhtiarnia et al. 2022).  The serving
+//! coordinator discretizes the instantaneous link condition into a small
+//! **context** id ([`crate::sim::link::LinkState::context`]) and this policy
+//! keeps one [`Ucb`] per context: the split is chosen from the bandit of the
+//! context observed *at decision time*, and the realised reward is credited
+//! back to that same context — never to whatever state the link drifted to
+//! meanwhile.  That keying rule is what keeps the pipelined serving path
+//! decision-identical to serial replay of the same link trace.
+
+use crate::bandit::Ucb;
+
+/// UCB-over-splits, one independent bandit per link context
+/// (`PolicyKind::Contextual` on the serving path).
+///
+/// With a single context (the static link scenario) this degenerates to
+/// exactly [`crate::policy::SplitEePolicy`]'s arm dynamics.
+#[derive(Debug, Clone)]
+pub struct ContextualSplitPolicy {
+    /// one bandit per context, each over the L split-layer arms
+    ucbs: Vec<Ucb>,
+    /// exit threshold alpha (calibrated on source validation data)
+    pub alpha: f64,
+}
+
+impl ContextualSplitPolicy {
+    /// `n_contexts` comes from the configured link scenario
+    /// (`LinkScenario::n_contexts`); zero is clamped to one so a degenerate
+    /// scenario still yields a usable policy.
+    pub fn new(n_layers: usize, n_contexts: usize, alpha: f64, beta: f64) -> ContextualSplitPolicy {
+        let n_contexts = n_contexts.max(1);
+        ContextualSplitPolicy {
+            ucbs: (0..n_contexts).map(|_| Ucb::new(n_layers, beta)).collect(),
+            alpha,
+        }
+    }
+
+    pub fn n_contexts(&self) -> usize {
+        self.ucbs.len()
+    }
+
+    /// The bandit for one context (convergence reporting, tests).
+    pub fn ucb(&self, context: usize) -> &Ucb {
+        &self.ucbs[context.min(self.ucbs.len() - 1)]
+    }
+
+    /// Serving-path API: pick the next split layer (1-based) for the context
+    /// observed at decision time.
+    pub fn choose_split(&mut self, context: usize) -> usize {
+        let i = context.min(self.ucbs.len() - 1);
+        self.ucbs[i].choose() + 1
+    }
+
+    /// Serving-path API: credit the realised reward to the (context, split)
+    /// pair observed at decision time.
+    pub fn record(&mut self, context: usize, split_1based: usize, reward: f64) {
+        let i = context.min(self.ucbs.len() - 1);
+        self.ucbs[i].update(split_1based - 1, reward);
+    }
+
+    /// Per-context arm statistics `(pulls, mean reward)` — outer index is
+    /// the context id.
+    pub fn per_context_arms(&self) -> Vec<Vec<(u64, f64)>> {
+        self.ucbs
+            .iter()
+            .map(|u| (0..u.k()).map(|i| (u.arm(i).n, u.arm(i).q)).collect())
+            .collect()
+    }
+
+    /// Context-aggregated summary in the shape `Service::bandit_summary`
+    /// reports: per arm, total pulls across contexts and the pull-weighted
+    /// mean reward, plus the 1-based arm with the most total pulls (the
+    /// "best" split has no single answer under a shifting context — modal
+    /// play is the honest aggregate).
+    pub fn aggregate_summary(&self) -> (usize, Vec<(u64, f64)>) {
+        let k = self.ucbs[0].k();
+        let mut arms = vec![(0u64, 0.0f64); k];
+        for u in &self.ucbs {
+            for (i, arm) in arms.iter_mut().enumerate() {
+                let a = u.arm(i);
+                arm.0 += a.n;
+                arm.1 += a.q * a.n as f64;
+            }
+        }
+        for arm in &mut arms {
+            if arm.0 > 0 {
+                arm.1 /= arm.0 as f64;
+            }
+        }
+        let modal = arms
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, (n, _))| *n)
+            .map(|(i, _)| i + 1)
+            .unwrap_or(1);
+        (modal, arms)
+    }
+
+    /// Forget all learned state, every context.
+    pub fn reset(&mut self) {
+        for u in &mut self.ucbs {
+            u.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contexts_keep_independent_arm_statistics() {
+        let mut p = ContextualSplitPolicy::new(4, 2, 0.8, 1.0);
+        // pull and reward only in context 0
+        for _ in 0..8 {
+            let s = p.choose_split(0);
+            p.record(0, s, 0.5);
+        }
+        assert_eq!(p.ucb(0).t, 8);
+        assert_eq!(p.ucb(1).t, 0, "context 1 must be untouched");
+        for i in 0..4 {
+            assert_eq!(p.ucb(1).arm(i).n, 0);
+        }
+        // context 1 still warm-starts from arm 1 in layer order
+        assert_eq!(p.choose_split(1), 1);
+    }
+
+    #[test]
+    fn per_context_argmax_separates_with_scripted_rewards() {
+        // Deterministic reward tables with different argmaxes per context:
+        // the policy must converge to each context's own best split.
+        let rewards = [
+            [0.9f64, 0.5, 0.4, 0.3], // context 0: split 1 optimal
+            [0.3, 0.4, 0.5, 0.9],    // context 1: split 4 optimal
+        ];
+        let mut p = ContextualSplitPolicy::new(4, 2, 0.8, 0.5);
+        let mut counts = [[0u64; 4]; 2];
+        for round in 0..400 {
+            let ctx = round % 2;
+            let s = p.choose_split(ctx);
+            counts[ctx][s - 1] += 1;
+            p.record(ctx, s, rewards[ctx][s - 1]);
+        }
+        let modal0 = counts[0].iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0 + 1;
+        let modal1 = counts[1].iter().enumerate().max_by_key(|(_, &c)| c).unwrap().0 + 1;
+        assert_eq!(modal0, 1, "counts {counts:?}");
+        assert_eq!(modal1, 4, "counts {counts:?}");
+        let (_, arms) = p.aggregate_summary();
+        let total: u64 = arms.iter().map(|(n, _)| n).sum();
+        assert_eq!(total, 400, "one update per round across contexts");
+    }
+
+    #[test]
+    fn single_context_matches_plain_splitee_dynamics() {
+        use crate::policy::SplitEePolicy;
+        let mut a = ContextualSplitPolicy::new(6, 1, 0.8, 1.0);
+        let mut b = SplitEePolicy::new(6, 0.8, 1.0);
+        for round in 0..100 {
+            let sa = a.choose_split(0);
+            let sb = b.choose_split();
+            assert_eq!(sa, sb, "round {round}");
+            let r = ((round * 7) % 10) as f64 / 10.0;
+            a.record(0, sa, r);
+            b.record(sb, r);
+        }
+    }
+
+    #[test]
+    fn out_of_range_context_clamps_instead_of_panicking() {
+        let mut p = ContextualSplitPolicy::new(3, 2, 0.8, 1.0);
+        let s = p.choose_split(99);
+        p.record(99, s, 0.1);
+        assert_eq!(p.ucb(1).t, 1, "clamped to the last context");
+    }
+
+    #[test]
+    fn zero_contexts_clamps_to_one() {
+        let p = ContextualSplitPolicy::new(3, 0, 0.8, 1.0);
+        assert_eq!(p.n_contexts(), 1);
+    }
+
+    #[test]
+    fn reset_clears_every_context() {
+        let mut p = ContextualSplitPolicy::new(3, 2, 0.8, 1.0);
+        for ctx in 0..2 {
+            let s = p.choose_split(ctx);
+            p.record(ctx, s, 1.0);
+        }
+        p.reset();
+        for ctx in 0..2 {
+            assert_eq!(p.ucb(ctx).t, 0);
+            assert_eq!(p.ucb(ctx).arm(0).n, 0);
+        }
+    }
+}

@@ -6,14 +6,23 @@
 //! labels) through [`SampleView`], decides where to split and whether to
 //! exit or offload, and returns an [`Outcome`] with the layer whose
 //! prediction is used plus the accumulated cost in lambda units.
+//!
+//! The [`contextual`] module extends the zoo past the paper's stationary
+//! setting: [`ContextualSplitPolicy`] keeps independent per-link-context arm
+//! statistics for the serving path's time-varying uplink scenarios
+//! (`--link markov|trace:<path>`; see [`crate::sim::link`]).  It is a
+//! serving-path policy (it needs the coordinator's link context), so unlike
+//! the rest of the zoo it does not implement the offline [`Policy`] trait.
 
 pub mod adaptive;
 pub mod baselines;
+pub mod contextual;
 pub mod splitee;
 
 pub use adaptive::{AdaptiveThresholdPolicy, PerSamplePolicy};
 pub use baselines::{DeeBertPolicy, ElasticBertPolicy, FinalExitPolicy, FixedSplitPolicy,
                     RandomExitPolicy};
+pub use contextual::ContextualSplitPolicy;
 pub use splitee::{SplitEePolicy, SplitEeSPolicy};
 
 use crate::cost::CostModel;

@@ -1,11 +1,38 @@
-//! Edge->cloud uplink simulator: latency, jitter, retransmissions, outages.
+//! Edge->cloud uplink simulator: latency, jitter, retransmissions, outages —
+//! and the **dynamic-link scenario engine** that makes the uplink
+//! time-varying.
 //!
-//! Wraps a [`NetworkProfile`] with stochastic behaviour for the serving
-//! simulator and for failure-injection tests (the paper's related work — LEE
-//! / DEE — motivates exactly the service-outage scenario; SplitEE degrades
-//! to on-device final exit when the link reports an outage).
+//! Two layers live here:
+//!
+//! * [`LinkSim`] wraps a [`NetworkProfile`] with stochastic per-transfer
+//!   behaviour (jitter, loss/retransmission, outage) for the serving
+//!   simulator and for failure-injection tests (the paper's related work —
+//!   LEE / DEE — motivates exactly the service-outage scenario; SplitEE
+//!   degrades to on-device final exit when the link reports an outage).
+//! * [`LinkScenario`] produces the *instantaneous* link condition, one
+//!   [`LinkState`] per served batch: `static` (the fixed profile, the
+//!   paper's setting), `markov` (a seeded Markov-modulated good / degraded /
+//!   outage chain, the I-SplitEE-style time-varying setting), or
+//!   `trace:<path>` (replay of a recorded [`LinkTrace`] file).  The sampled
+//!   state carries an effective [`NetworkProfile`] plus the instantaneous
+//!   offloading cost, and discretizes into a small **context** id the
+//!   context-aware split policy
+//!   ([`crate::policy::ContextualSplitPolicy`]) keys its per-context arm
+//!   statistics by.
+//!
+//! Scenario selection is plumbed through `--link static|markov|trace:<path>`
+//! on the binary and `examples/serve_stream.rs` (see
+//! [`LinkScenario::from_name`]), and through `SPLITEE_LINK` for the test
+//! suites ([`LinkScenario::from_env`]).  Everything is deterministic from
+//! the scenario's seed / trace, which is what keeps pipelined serving
+//! decision-identical to serial replay under a time-varying link.
 
-use crate::cost::NetworkProfile;
+use std::path::Path;
+use std::sync::{Arc, OnceLock};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::cost::{offload_lambda_for_uplink, CostModel, NetworkProfile};
 use crate::util::rng::Rng;
 
 /// Outcome of one simulated transfer.
@@ -56,11 +83,433 @@ impl LinkSim {
         }
     }
 
-    /// Payload size of offloading split-layer activations: [T, D] f32 plus a
-    /// small header.  (The paper notes `o` depends on the *input* size and
+    /// Payload size of offloading split-layer activations: `T * D` f32 plus
+    /// a small header.  (The paper notes `o` depends on the *input* size and
     /// the network; we ship the hidden state like SPINN-style splits.)
     pub fn activation_payload(seq_len: usize, d_model: usize) -> usize {
         seq_len * d_model * 4 + 64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic-link scenario engine
+// ---------------------------------------------------------------------------
+
+/// The instantaneous uplink condition for one served batch, sampled from a
+/// [`LinkScenario`] at offload time.
+///
+/// The reply stage threads this through the whole batch: the effective
+/// `profile` drives the uplink simulation, `offload_lambda` (when present)
+/// replaces the cost model's communication cost `o` for this batch's
+/// rewards, and `context` keys the contextual split policy's arm statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkState {
+    /// effective instantaneous profile (bandwidth / latency / loss)
+    pub profile: NetworkProfile,
+    /// the link is in total outage: every offload falls back on-device
+    pub outage: bool,
+    /// discretized context id, `< LinkScenario::n_contexts()`
+    pub context: usize,
+    /// human-readable state label (metrics / bench keys); shared, so the
+    /// per-batch state sample never allocates
+    pub label: Arc<str>,
+    /// instantaneous offloading cost in lambda units; `None` means "use the
+    /// configured cost" (the static scenario — bit-compatible with a fixed
+    /// link)
+    pub offload_lambda: Option<f64>,
+}
+
+impl LinkState {
+    /// The static scenario's state: the base profile, untouched cost.
+    fn fixed(base: &NetworkProfile) -> LinkState {
+        static LABEL: OnceLock<Arc<str>> = OnceLock::new();
+        LinkState {
+            profile: *base,
+            outage: false,
+            context: 0,
+            label: LABEL.get_or_init(|| Arc::from("static")).clone(),
+            offload_lambda: None,
+        }
+    }
+
+    /// The cost model this batch's rewards are computed under: the base
+    /// model with the offloading cost replaced by the instantaneous one
+    /// (identity for the static scenario, so static replay is bit-exact).
+    pub fn effective_cost(&self, base: &CostModel) -> CostModel {
+        match self.offload_lambda {
+            Some(o) => base.with_offload(o),
+            None => *base,
+        }
+    }
+}
+
+/// One state of the Markov-modulated link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MarkovState {
+    /// shared label: cloning the per-batch [`LinkState`] costs a refcount,
+    /// not an allocation
+    pub label: Arc<str>,
+    /// multiplier on the base profile's uplink bandwidth
+    pub bandwidth_scale: f64,
+    /// multiplier on the base profile's one-way latency
+    pub latency_scale: f64,
+    /// total outage: transfers fail deterministically in this state
+    pub outage: bool,
+}
+
+/// A seeded Markov-modulated link model: a chain over [`MarkovState`]s,
+/// stepped once per served batch.
+///
+/// The state sequence is a pure function of the seed (xoshiro256**), so two
+/// services built from the same scenario replay identical conditions — the
+/// property the serial-vs-pipelined decision-equivalence tests rely on.
+#[derive(Debug, Clone)]
+pub struct MarkovLink {
+    states: Vec<MarkovState>,
+    /// row-stochastic transition matrix, `transition[from][to]`
+    transition: Vec<Vec<f64>>,
+    cur: usize,
+    rng: Rng,
+}
+
+impl MarkovLink {
+    /// Build a chain from explicit states and a row-stochastic transition
+    /// matrix, starting in state `start`.
+    pub fn new(
+        states: Vec<MarkovState>,
+        transition: Vec<Vec<f64>>,
+        start: usize,
+        seed: u64,
+    ) -> Result<MarkovLink> {
+        if states.is_empty() {
+            bail!("markov link needs at least one state");
+        }
+        if start >= states.len() {
+            bail!("markov start state {start} out of range ({} states)", states.len());
+        }
+        if transition.len() != states.len() {
+            bail!(
+                "markov transition matrix has {} rows for {} states",
+                transition.len(),
+                states.len()
+            );
+        }
+        for (i, row) in transition.iter().enumerate() {
+            if row.len() != states.len() {
+                bail!("markov transition row {i} has {} entries, want {}", row.len(), states.len());
+            }
+            if row.iter().any(|&p| !p.is_finite() || p < 0.0) {
+                bail!("markov transition row {i} has a negative or non-finite probability");
+            }
+            let sum: f64 = row.iter().sum();
+            if (sum - 1.0).abs() > 1e-6 {
+                bail!("markov transition row {i} sums to {sum}, want 1");
+            }
+        }
+        Ok(MarkovLink { states, transition, cur: start, rng: Rng::new(seed) })
+    }
+
+    /// The canonical three-state scenario the `--link markov` CLI value
+    /// selects: a sticky *good* link (the base profile as-is), a sticky
+    /// *degraded* link (~8% bandwidth, 4x latency — a congested cell), and a
+    /// rare short *outage*.
+    pub fn default_scenario(seed: u64) -> MarkovLink {
+        let states = vec![
+            MarkovState {
+                label: "good".into(),
+                bandwidth_scale: 1.0,
+                latency_scale: 1.0,
+                outage: false,
+            },
+            MarkovState {
+                label: "degraded".into(),
+                bandwidth_scale: 0.08,
+                latency_scale: 4.0,
+                outage: false,
+            },
+            MarkovState {
+                label: "outage".into(),
+                bandwidth_scale: 0.0,
+                latency_scale: 1.0,
+                outage: true,
+            },
+        ];
+        let transition = vec![
+            vec![0.90, 0.09, 0.01],
+            vec![0.15, 0.80, 0.05],
+            vec![0.30, 0.30, 0.40],
+        ];
+        MarkovLink::new(states, transition, 0, seed).expect("canonical scenario is valid")
+    }
+
+    /// Advance one batch: sample the next state from the current row.
+    /// Returns the new state index.
+    pub fn step(&mut self) -> usize {
+        self.cur = self.rng.weighted(&self.transition[self.cur]);
+        self.cur
+    }
+
+    pub fn states(&self) -> &[MarkovState] {
+        &self.states
+    }
+}
+
+/// One segment of a recorded link trace: hold the given condition for
+/// `batches` served batches.  `uplink_mbps == 0` records an outage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSegment {
+    pub batches: u64,
+    pub uplink_mbps: f64,
+    pub latency_ms: f64,
+    pub loss_rate: f64,
+}
+
+/// A recorded link trace, replayable (looping) through
+/// [`LinkScenario::Trace`].
+///
+/// The on-disk format is line-oriented text: `#` comments and blank lines
+/// are ignored; every other line is four whitespace-separated fields,
+/// `batches uplink_mbps latency_ms loss_rate`.  [`LinkTrace::to_text`] and
+/// [`LinkTrace::parse`] round-trip exactly (Rust's float `Display` is
+/// shortest-round-trip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkTrace {
+    pub segments: Vec<TraceSegment>,
+}
+
+impl LinkTrace {
+    /// Parse the text format.  Errors name the offending line.
+    pub fn parse(text: &str) -> Result<LinkTrace> {
+        let mut segments = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 4 {
+                bail!(
+                    "link trace line {}: want 4 fields `batches uplink_mbps latency_ms \
+                     loss_rate`, got {} in {line:?}",
+                    lineno + 1,
+                    fields.len()
+                );
+            }
+            let batches: u64 = fields[0].parse().with_context(|| {
+                format!("link trace line {}: batches {:?}", lineno + 1, fields[0])
+            })?;
+            if batches == 0 {
+                bail!("link trace line {}: a segment must span at least one batch", lineno + 1);
+            }
+            let num = |i: usize, name: &str| -> Result<f64> {
+                fields[i].parse::<f64>().with_context(|| {
+                    format!("link trace line {}: {name} {:?}", lineno + 1, fields[i])
+                })
+            };
+            let seg = TraceSegment {
+                batches,
+                uplink_mbps: num(1, "uplink_mbps")?,
+                latency_ms: num(2, "latency_ms")?,
+                loss_rate: num(3, "loss_rate")?,
+            };
+            if !seg.uplink_mbps.is_finite()
+                || !seg.latency_ms.is_finite()
+                || seg.uplink_mbps < 0.0
+                || seg.latency_ms < 0.0
+            {
+                bail!(
+                    "link trace line {}: bandwidth/latency must be finite and non-negative",
+                    lineno + 1
+                );
+            }
+            if !(0.0..=1.0).contains(&seg.loss_rate) {
+                // NaN fails the range test too — rejected here, not downstream
+                bail!("link trace line {}: loss_rate must be in [0, 1]", lineno + 1);
+            }
+            segments.push(seg);
+        }
+        if segments.is_empty() {
+            bail!("link trace has no segments");
+        }
+        Ok(LinkTrace { segments })
+    }
+
+    /// Serialize back to the text format parsed by [`LinkTrace::parse`].
+    pub fn to_text(&self) -> String {
+        let mut out = String::from(
+            "# splitee-link-trace v1\n# batches uplink_mbps latency_ms loss_rate\n",
+        );
+        for s in &self.segments {
+            out.push_str(&format!(
+                "{} {} {} {}\n",
+                s.batches, s.uplink_mbps, s.latency_ms, s.loss_rate
+            ));
+        }
+        out
+    }
+
+    pub fn load(path: &Path) -> Result<LinkTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading link trace {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parsing link trace {path:?}"))
+    }
+}
+
+/// Discretize an instantaneous uplink into the trace scenario's context
+/// buckets (the contextual policy's arms are kept per bucket).
+fn quality_bucket(uplink_mbps: f64, outage: bool) -> usize {
+    if outage || uplink_mbps <= 0.0 {
+        3
+    } else if uplink_mbps >= 25.0 {
+        0
+    } else if uplink_mbps >= 5.0 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Shared bucket labels, so trace replay's per-batch state sample never
+/// allocates.
+fn bucket_label(context: usize) -> Arc<str> {
+    static LABELS: OnceLock<[Arc<str>; 4]> = OnceLock::new();
+    LABELS.get_or_init(|| ["good".into(), "fair".into(), "poor".into(), "outage".into()])
+        [context]
+        .clone()
+}
+
+/// Seed `--link markov` resolves to when none is given (`markov:<seed>`
+/// overrides it).
+pub const DEFAULT_MARKOV_SEED: u64 = 0x11A5;
+
+/// A time-varying uplink scenario, stepped once per served batch.
+///
+/// Cloning a scenario clones its *replay position and seed state*, so every
+/// service built from one configured scenario observes the identical
+/// condition sequence — serial and pipelined runs of the same arrival order
+/// therefore make bit-identical decisions (asserted by
+/// `tests/integration.rs::pipelined_matches_serial_decisions`).
+#[derive(Debug, Clone, Default)]
+pub enum LinkScenario {
+    /// the fixed base profile — exactly the pre-scenario behaviour, bit for
+    /// bit (no extra randomness is drawn, the cost model is untouched)
+    #[default]
+    Static,
+    /// seeded Markov-modulated link
+    Markov(MarkovLink),
+    /// looping replay of a recorded [`LinkTrace`]
+    Trace {
+        trace: LinkTrace,
+        /// current segment index
+        seg: usize,
+        /// batches left in the current segment
+        left: u64,
+    },
+}
+
+impl LinkScenario {
+    /// Parse a `--link` value: `static`, `markov`, `markov:<seed>` or
+    /// `trace:<path>` (the trace file is read eagerly so a bad path fails at
+    /// configuration time, not mid-serve).
+    pub fn from_name(name: &str) -> Result<LinkScenario> {
+        if name == "static" {
+            return Ok(LinkScenario::Static);
+        }
+        if name == "markov" {
+            return Ok(LinkScenario::Markov(MarkovLink::default_scenario(DEFAULT_MARKOV_SEED)));
+        }
+        if let Some(seed) = name.strip_prefix("markov:") {
+            let seed: u64 = seed
+                .parse()
+                .with_context(|| format!("markov seed {seed:?} is not a u64"))?;
+            return Ok(LinkScenario::Markov(MarkovLink::default_scenario(seed)));
+        }
+        if let Some(path) = name.strip_prefix("trace:") {
+            let trace = LinkTrace::load(Path::new(path))?;
+            let left = trace.segments[0].batches;
+            return Ok(LinkScenario::Trace { trace, seg: 0, left });
+        }
+        bail!(
+            "unknown link scenario {name:?} — accepted values: static, markov, \
+             markov:<seed>, trace:<path>"
+        )
+    }
+
+    /// Test-matrix hook: `SPLITEE_LINK=static|markov|markov:<seed>|
+    /// trace:<path>` (default `Static` when unset).  An invalid value
+    /// panics with the variable name and the accepted values rather than
+    /// silently testing the static path under a dynamic-link job label.
+    pub fn from_env() -> LinkScenario {
+        match std::env::var("SPLITEE_LINK") {
+            Ok(v) => match LinkScenario::from_name(&v) {
+                Ok(s) => s,
+                Err(e) => panic!("SPLITEE_LINK={v:?} is invalid: {e:#}"),
+            },
+            Err(_) => LinkScenario::Static,
+        }
+    }
+
+    /// Scenario family name (reports / bench JSON).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkScenario::Static => "static",
+            LinkScenario::Markov(_) => "markov",
+            LinkScenario::Trace { .. } => "trace",
+        }
+    }
+
+    /// Number of distinct context ids [`LinkState::context`] can take — the
+    /// contextual split policy sizes its per-context bandits with this.
+    pub fn n_contexts(&self) -> usize {
+        match self {
+            LinkScenario::Static => 1,
+            LinkScenario::Markov(m) => m.states.len(),
+            LinkScenario::Trace { .. } => 4, // good / fair / poor / outage
+        }
+    }
+
+    /// Advance one batch and return the instantaneous link condition, as a
+    /// modulation of the configured base profile.
+    pub fn next_state(&mut self, base: &NetworkProfile) -> LinkState {
+        match self {
+            LinkScenario::Static => LinkState::fixed(base),
+            LinkScenario::Markov(m) => {
+                let idx = m.step();
+                let s = &m.states[idx];
+                let profile = base.scaled(s.bandwidth_scale.max(1e-6), s.latency_scale);
+                LinkState {
+                    offload_lambda: Some(profile.offload_lambda),
+                    profile,
+                    outage: s.outage,
+                    context: idx,
+                    label: s.label.clone(),
+                }
+            }
+            LinkScenario::Trace { trace, seg, left } => {
+                let s = trace.segments[*seg].clone();
+                *left -= 1;
+                if *left == 0 {
+                    *seg = (*seg + 1) % trace.segments.len();
+                    *left = trace.segments[*seg].batches;
+                }
+                let outage = s.uplink_mbps <= 0.0;
+                let context = quality_bucket(s.uplink_mbps, outage);
+                let profile = NetworkProfile {
+                    kind: base.kind,
+                    offload_lambda: offload_lambda_for_uplink(s.uplink_mbps),
+                    base_latency_ms: s.latency_ms,
+                    uplink_mbps: s.uplink_mbps.max(1e-6),
+                    loss_rate: s.loss_rate,
+                };
+                LinkState {
+                    offload_lambda: Some(profile.offload_lambda),
+                    profile,
+                    outage,
+                    context,
+                    label: bucket_label(context),
+                }
+            }
+        }
     }
 }
 
@@ -115,5 +564,233 @@ mod tests {
     #[test]
     fn payload_accounts_activation_size() {
         assert_eq!(LinkSim::activation_payload(32, 64), 32 * 64 * 4 + 64);
+    }
+
+    // ---- dynamic-link scenario engine ------------------------------------
+
+    #[test]
+    fn static_scenario_is_the_identity() {
+        let base = NetworkProfile::three_g();
+        let mut sc = LinkScenario::Static;
+        assert_eq!(sc.n_contexts(), 1);
+        for _ in 0..10 {
+            let s = sc.next_state(&base);
+            assert_eq!(s.profile, base);
+            assert!(!s.outage);
+            assert_eq!(s.context, 0);
+            assert_eq!(s.offload_lambda, None, "static must not touch the cost model");
+            let cm = CostModel::paper(5.0, 0.1, 12);
+            assert_eq!(s.effective_cost(&cm), cm);
+        }
+    }
+
+    #[test]
+    fn markov_link_is_seed_reproducible() {
+        let base = NetworkProfile::four_g();
+        let run = |seed: u64| -> Vec<usize> {
+            let mut sc = LinkScenario::Markov(MarkovLink::default_scenario(seed));
+            (0..200).map(|_| sc.next_state(&base).context).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay the same state sequence");
+        assert_ne!(run(7), run(8), "different seeds must diverge");
+        // a clone replays from the same position
+        let mut a = LinkScenario::Markov(MarkovLink::default_scenario(3));
+        for _ in 0..17 {
+            a.next_state(&base);
+        }
+        let mut b = a.clone();
+        let sa: Vec<usize> = (0..50).map(|_| a.next_state(&base).context).collect();
+        let sb: Vec<usize> = (0..50).map(|_| b.next_state(&base).context).collect();
+        assert_eq!(sa, sb, "clone must carry the replay position and rng state");
+    }
+
+    #[test]
+    fn markov_states_modulate_profile_and_cost() {
+        let base = NetworkProfile::wifi();
+        let mut sc = LinkScenario::Markov(MarkovLink::default_scenario(11));
+        assert_eq!(sc.n_contexts(), 3);
+        let mut seen = [false; 3];
+        for _ in 0..500 {
+            let s = sc.next_state(&base);
+            seen[s.context] = true;
+            match &*s.label {
+                "good" => {
+                    assert!(!s.outage);
+                    assert_eq!(s.profile.uplink_mbps, base.uplink_mbps);
+                    assert!((s.offload_lambda.unwrap() - 1.0).abs() < 1e-9);
+                }
+                "degraded" => {
+                    assert!(!s.outage);
+                    assert!(s.profile.uplink_mbps < base.uplink_mbps);
+                    assert!(s.profile.base_latency_ms > base.base_latency_ms);
+                    assert!(s.offload_lambda.unwrap() > 1.5, "degraded offload must cost more");
+                }
+                "outage" => assert!(s.outage),
+                other => panic!("unknown state {other}"),
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "500 steps must visit every canonical state");
+    }
+
+    #[test]
+    fn markov_validation_rejects_bad_chains() {
+        let st = |l: &str| MarkovState {
+            label: l.into(),
+            bandwidth_scale: 1.0,
+            latency_scale: 1.0,
+            outage: false,
+        };
+        assert!(MarkovLink::new(vec![], vec![], 0, 1).is_err(), "empty chain");
+        assert!(
+            MarkovLink::new(vec![st("a")], vec![vec![1.0]], 1, 1).is_err(),
+            "start out of range"
+        );
+        assert!(
+            MarkovLink::new(vec![st("a"), st("b")], vec![vec![1.0, 0.0]], 0, 1).is_err(),
+            "missing transition row"
+        );
+        assert!(
+            MarkovLink::new(vec![st("a"), st("b")], vec![vec![0.5, 0.4], vec![0.5, 0.5]], 0, 1)
+                .is_err(),
+            "row must sum to 1"
+        );
+        assert!(
+            MarkovLink::new(vec![st("a"), st("b")], vec![vec![1.5, -0.5], vec![0.5, 0.5]], 0, 1)
+                .is_err(),
+            "negative probability"
+        );
+        assert!(
+            MarkovLink::new(
+                vec![st("a"), st("b")],
+                vec![vec![f64::NAN, 0.5], vec![0.5, 0.5]],
+                0,
+                1
+            )
+            .is_err(),
+            "NaN probability (NaN defeats both the sign and the row-sum check)"
+        );
+        assert!(MarkovLink::new(
+            vec![st("a"), st("b")],
+            vec![vec![0.5, 0.5], vec![0.1, 0.9]],
+            0,
+            1
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn trace_round_trips_its_file_format() {
+        let trace = LinkTrace {
+            segments: vec![
+                TraceSegment { batches: 6, uplink_mbps: 100.0, latency_ms: 2.0, loss_rate: 0.001 },
+                TraceSegment { batches: 4, uplink_mbps: 1.5, latency_ms: 100.0, loss_rate: 0.03 },
+                TraceSegment { batches: 2, uplink_mbps: 0.0, latency_ms: 0.0, loss_rate: 0.0 },
+            ],
+        };
+        let text = trace.to_text();
+        let parsed = LinkTrace::parse(&text).expect("own output must parse");
+        assert_eq!(parsed, trace, "parse(to_text(t)) must be the identity");
+        // comments and blank lines are tolerated
+        let decorated = format!("\n# hello\n{text}\n# trailing\n");
+        assert_eq!(LinkTrace::parse(&decorated).unwrap(), trace);
+    }
+
+    #[test]
+    fn trace_parse_rejects_malformed_lines_with_line_numbers() {
+        for (bad, needle) in [
+            ("1 2 3", "4 fields"),
+            ("1 2 3 4 5", "4 fields"),
+            ("0 10 5 0.0", "at least one batch"),
+            ("x 10 5 0.0", "batches"),
+            ("1 -1 5 0.0", "non-negative"),
+            // "nan" *parses* as f64::NAN, so validation must reject it
+            ("1 nan 5 0.0", "finite"),
+            ("1 10 nan 0.0", "finite"),
+            ("1 10 5 nan", "loss_rate"),
+            ("1 10 5 1.5", "loss_rate"),
+            ("# only comments\n", "no segments"),
+        ] {
+            let err = LinkTrace::parse(bad).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{bad:?}: unhelpful error {msg}");
+        }
+        // line numbers point at the offending line, past comments
+        let err = LinkTrace::parse("# header\n1 10 5 0.0\nbroken line here x\n").unwrap_err();
+        assert!(format!("{err:#}").contains("line 3"), "{err:#}");
+    }
+
+    #[test]
+    fn trace_replay_holds_segments_and_wraps_around() {
+        let trace = LinkTrace::parse("2 100 2 0\n1 1.5 80 0\n").unwrap();
+        let left = trace.segments[0].batches;
+        let mut sc = LinkScenario::Trace { trace, seg: 0, left };
+        assert_eq!(sc.n_contexts(), 4);
+        let base = NetworkProfile::four_g();
+        let labels: Vec<String> =
+            (0..7).map(|_| sc.next_state(&base).label.to_string()).collect();
+        assert_eq!(
+            labels,
+            vec!["good", "good", "poor", "good", "good", "poor", "good"],
+            "2-batch good segment, 1-batch poor segment, looped"
+        );
+        let s = sc.next_state(&base);
+        assert_eq!(&*s.label, "good");
+        assert_eq!(s.profile.uplink_mbps, 100.0);
+        assert_eq!(s.profile.base_latency_ms, 2.0);
+        assert!((s.offload_lambda.unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_outage_segments_flag_outage() {
+        let trace = LinkTrace::parse("1 0 0 0\n1 50 10 0\n").unwrap();
+        let left = trace.segments[0].batches;
+        let mut sc = LinkScenario::Trace { trace, seg: 0, left };
+        let base = NetworkProfile::wifi();
+        let s = sc.next_state(&base);
+        assert!(s.outage);
+        assert_eq!(&*s.label, "outage");
+        assert_eq!(s.context, 3);
+        let s = sc.next_state(&base);
+        assert!(!s.outage);
+        assert_eq!(&*s.label, "good");
+    }
+
+    #[test]
+    fn scenario_from_name_parses_and_rejects() {
+        assert!(matches!(LinkScenario::from_name("static").unwrap(), LinkScenario::Static));
+        assert!(matches!(LinkScenario::from_name("markov").unwrap(), LinkScenario::Markov(_)));
+        assert!(matches!(
+            LinkScenario::from_name("markov:42").unwrap(),
+            LinkScenario::Markov(_)
+        ));
+        // markov:<seed> really selects the seed
+        let base = NetworkProfile::four_g();
+        let mut a = LinkScenario::from_name("markov:42").unwrap();
+        let mut b = LinkScenario::Markov(MarkovLink::default_scenario(42));
+        for _ in 0..50 {
+            assert_eq!(a.next_state(&base), b.next_state(&base));
+        }
+        // errors are contextful and list the accepted values
+        let err = LinkScenario::from_name("5g-only").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("5g-only") && msg.contains("static") && msg.contains("trace:"));
+        let err = LinkScenario::from_name("markov:not-a-seed").unwrap_err();
+        assert!(format!("{err:#}").contains("not-a-seed"));
+        let err = LinkScenario::from_name("trace:/no/such/trace.txt").unwrap_err();
+        assert!(format!("{err:#}").contains("/no/such/trace.txt"));
+    }
+
+    #[test]
+    fn scenario_trace_from_name_loads_files() {
+        let p = std::env::temp_dir()
+            .join(format!("splitee_link_trace_{}.txt", std::process::id()));
+        std::fs::write(&p, "3 40 8 0.002\n2 2 60 0.01\n").unwrap();
+        let mut sc = LinkScenario::from_name(&format!("trace:{}", p.display())).unwrap();
+        assert_eq!(sc.name(), "trace");
+        let base = NetworkProfile::wifi();
+        let labels: Vec<String> =
+            (0..5).map(|_| sc.next_state(&base).label.to_string()).collect();
+        assert_eq!(labels, vec!["good", "good", "good", "poor", "poor"]);
+        std::fs::remove_file(&p).unwrap();
     }
 }

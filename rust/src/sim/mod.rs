@@ -3,14 +3,24 @@
 //! The paper's deployment (figure 1) runs layers `1..=i` on a mobile device,
 //! ships the split-layer activations over a mobile network, and finishes on
 //! a GPU cloud.  This module reproduces that *timing and energy* behaviour
-//! around the real PJRT computation: the compute happens for real (CPU), and
-//! the simulator scales edge compute time, adds link latency from the
-//! [`NetworkProfile`], and accounts energy/cost per the paper's lambda model.
+//! around the real computation: the compute happens for real (on whatever
+//! backend is selected), and the simulator scales edge compute time, adds
+//! link latency from the [`NetworkProfile`], and accounts energy/cost per
+//! the paper's lambda model.
+//!
+//! The [`link`] module additionally hosts the **dynamic-link scenario
+//! engine** ([`LinkScenario`] / [`LinkState`]): a time-varying uplink
+//! (seeded Markov modulation or trace replay, `--link
+//! static|markov|trace:<path>`) sampled once per served batch, which the
+//! serving coordinator threads through the uplink simulation, the
+//! instantaneous offloading cost and the context-aware split policy.
+//!
+//! [`NetworkProfile`]: crate::cost::NetworkProfile
 
 pub mod device;
 pub mod link;
 pub mod pipeline;
 
 pub use device::{CloudSim, EdgeSim};
-pub use link::LinkSim;
+pub use link::{LinkScenario, LinkSim, LinkState, LinkTrace, MarkovLink};
 pub use pipeline::{CoInferencePipeline, SampleTrace};

@@ -16,7 +16,7 @@ use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
 use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::Backend;
-use splitee::sim::link::{LinkSim, TransferResult};
+use splitee::sim::link::{LinkScenario, LinkSim, TransferResult};
 use splitee::tensor::TensorI32;
 
 fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
@@ -224,6 +224,7 @@ fn link_outage_with_speculation_in_flight_resolves_cleanly() {
         },
         coalesce: CoalesceConfig { enabled: false, max_wait: std::time::Duration::ZERO },
         speculate: SpeculateMode::On,
+        link: LinkScenario::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -275,6 +276,7 @@ fn router_shutdown_with_speculation_in_flight_resolves_every_launch() {
             },
             coalesce: Default::default(),
             speculate: SpeculateMode::On,
+            link: LinkScenario::from_env(),
         };
         let router = Router::new(RouterConfig { max_inflight: 32 });
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);

@@ -18,7 +18,7 @@ use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, Service
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::{Backend, SpecCounters, SpecLane, SpecSnapshot};
-use splitee::sim::LinkSim;
+use splitee::sim::{LinkScenario, LinkSim};
 use splitee::tensor::TensorI32;
 use splitee::util::prop::{check, PropConfig};
 use splitee::util::rng::Rng;
@@ -101,6 +101,7 @@ fn run_service(
         },
         coalesce,
         speculate,
+        link: LinkScenario::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(model), cm, link, &config);
