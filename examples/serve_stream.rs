@@ -8,6 +8,8 @@
 //!     [--dataset imdb] [--requests 500] [--network 4g] [--rate 200] \
 //!     [--backend auto|reference|pjrt] [--speculate on|off|auto] \
 //!     [--link static|markov|markov:SEED|trace:PATH] \
+//!     [--replicas N] [--dispatch round-robin|least-loaded] \
+//!     [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]] \
 //!     [--policy splitee|splitee-s|contextual|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
@@ -69,6 +71,7 @@ fn main() -> Result<()> {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_name(&settings.speculate)?,
         link: LinkScenario::from_name(&settings.link)?,
+        replicas: settings.replica_config()?,
     };
 
     let router = Router::new(RouterConfig { max_inflight: 256 });

@@ -119,6 +119,7 @@ fn main() {
                     // static link: these labels stay comparable with every
                     // earlier PR's BENCH_serving.json
                     link: LinkScenario::default(),
+                    replicas: Default::default(),
                 };
                 let router = Router::new(RouterConfig::default());
                 let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -193,6 +194,7 @@ fn main() {
                 coalesce: Default::default(),
                 speculate: SpeculateMode::Off,
                 link: LinkScenario::from_name("markov").expect("canonical markov scenario"),
+                replicas: Default::default(),
             };
             let router = Router::new(RouterConfig::default());
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -231,6 +233,81 @@ fn main() {
                     .map(|(split, count)| (format!("L{split}"), Json::Num(*count as f64)))
                     .collect();
                 link_json.insert(format!("{prefix}_split_hist"), Json::Obj(hist));
+            }
+        });
+    }
+
+    // Faulted-pool leg: the fixed-split workload through a 3-replica cloud
+    // tier with a deterministic kill + flaky schedule — the robustness
+    // trajectory across PRs.  Emits pool dispatch/retry/breaker counters
+    // (`*_pool_*` and `*_replica<i>_dispatched` keys) next to the headline
+    // req/s, so fault-handling overhead is visible in the same JSON the
+    // healthy legs write.
+    {
+        let label = "serve_200req_fixed4_faulted_pool";
+        suite.bench_items(label, 0, 3, n as f64, || {
+            let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+            let link = LinkSim::new(NetworkProfile::three_g(), 7);
+            let config = ServiceConfig {
+                policy: PolicyKind::Fixed(4),
+                alpha,
+                beta: 1.0,
+                batcher: BatcherConfig {
+                    batch_sizes: model.batch_sizes().to_vec(),
+                    max_wait: Duration::from_millis(2),
+                },
+                coalesce: Default::default(),
+                speculate: SpeculateMode::Off,
+                link: LinkScenario::default(),
+                replicas: splitee::coordinator::ReplicaConfig {
+                    n: 3,
+                    faults: splitee::sim::FaultSchedule::from_name("kill@3:0|flaky@1:0.2,seed=11")
+                        .expect("bench fault schedule"),
+                    ..Default::default()
+                },
+            };
+            let router = Router::new(RouterConfig::default());
+            let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+            let producer = {
+                let router = Arc::clone(&router);
+                let tokens: Vec<_> = request_tokens.clone();
+                std::thread::spawn(move || {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    for t in tokens {
+                        if router.submit(t, tx.clone()).is_none() {
+                            break;
+                        }
+                    }
+                    drop(tx);
+                    while rx.recv().is_ok() {}
+                    router.shutdown();
+                })
+            };
+            let bc = config.batcher.clone();
+            service.run(Arc::clone(&router), bc).expect("serve");
+            producer.join().unwrap();
+            assert_eq!(service.metrics.served, n as u64);
+            let pool = service.metrics.pool.snapshot();
+            assert!(pool.balanced(), "pool accounting identity broken: {pool:?}");
+            let met = &service.metrics;
+            extras.insert(format!("{label}_p50_ms"), met.latency.percentile_us(50.0) / 1e3);
+            extras.insert(format!("{label}_p99_ms"), met.latency.percentile_us(99.0) / 1e3);
+            extras.insert(format!("{label}_pool_dispatched"), pool.dispatched() as f64);
+            extras.insert(format!("{label}_pool_completed"), pool.completed() as f64);
+            extras.insert(format!("{label}_pool_rerouted"), pool.rerouted() as f64);
+            extras.insert(format!("{label}_pool_retries"), pool.retries as f64);
+            extras.insert(
+                format!("{label}_pool_fallback_groups"),
+                pool.fallback_groups as f64,
+            );
+            extras.insert(format!("{label}_pool_breaker_opens"), pool.breaker_opens() as f64);
+            extras.insert(
+                format!("{label}_pool_breaker_open_rejections"),
+                pool.breaker_open_rejections as f64,
+            );
+            extras.insert(format!("{label}_pool_backoff_ms"), pool.backoff_ms);
+            for (i, r) in pool.replicas.iter().enumerate() {
+                extras.insert(format!("{label}_replica{i}_dispatched"), r.dispatched as f64);
             }
         });
     }

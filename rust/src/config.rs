@@ -243,6 +243,16 @@ pub struct Settings {
     /// `trace:<path>` (parsed into `sim::link::LinkScenario`; dynamic
     /// scenarios vary bandwidth/latency/offload-cost per batch)
     pub link: String,
+    /// cloud-tier replica lanes (>= 1; parsed into
+    /// `coordinator::ReplicaConfig`)
+    pub replicas: usize,
+    /// replica dispatch policy: "round-robin" or "least-loaded"
+    pub dispatch: String,
+    /// deterministic replica fault schedule: "" / "none", or
+    /// `kill@<batch>:<replica>|slow@<batch>:<replica>x<factor>|`
+    /// `flaky@<replica>:<p>` events joined by `|`, optionally with a
+    /// trailing `,seed=<n>` (parsed into `sim::faults::FaultSchedule`)
+    pub faults: String,
     /// cost-confidence conversion factor mu (paper: 0.1)
     pub mu: f64,
     /// UCB exploration parameter beta (paper: 1.0)
@@ -263,6 +273,9 @@ impl Default for Settings {
             backend: "auto".to_string(),
             speculate: "auto".to_string(),
             link: "static".to_string(),
+            replicas: 1,
+            dispatch: "round-robin".to_string(),
+            faults: String::new(),
             mu: 0.1,
             beta: 1.0,
             offload_cost: 5.0,
@@ -292,11 +305,23 @@ impl Settings {
         if let Some(link) = args.get("link") {
             s.link = link.to_string();
         }
+        if let Some(d) = args.get("dispatch") {
+            s.dispatch = d.to_string();
+        }
+        if let Some(f) = args.get("faults") {
+            s.faults = f.to_string();
+        }
         // single source of truth for the accepted values (and the error
         // messages) are the coordinator's and the scenario engine's parsers;
         // a trace file is read eagerly here so a bad path fails at startup
         crate::coordinator::service::SpeculateMode::from_name(&s.speculate)?;
         crate::sim::link::LinkScenario::from_name(&s.link)?;
+        crate::coordinator::replicas::DispatchPolicy::from_name(&s.dispatch)?;
+        crate::sim::faults::FaultSchedule::from_name(&s.faults)?;
+        s.replicas = args.get_num("replicas", s.replicas).map_err(anyhow::Error::msg)?;
+        if s.replicas == 0 {
+            bail!("--replicas must be a positive integer");
+        }
         s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
         s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
         s.offload_cost = args.get_num("o", s.offload_cost).map_err(anyhow::Error::msg)?;
@@ -314,6 +339,19 @@ impl Settings {
             bail!("--reps must be positive");
         }
         Ok(s)
+    }
+
+    /// The cloud-tier replica-pool configuration these settings describe
+    /// (`--replicas` / `--dispatch` / `--faults`; the retry/breaker knobs
+    /// keep their defaults).  Values were validated by [`Settings::
+    /// from_args`], but hand-built settings re-validate here.
+    pub fn replica_config(&self) -> Result<crate::coordinator::ReplicaConfig> {
+        Ok(crate::coordinator::ReplicaConfig {
+            n: self.replicas.max(1),
+            dispatch: crate::coordinator::replicas::DispatchPolicy::from_name(&self.dispatch)?,
+            faults: crate::sim::faults::FaultSchedule::from_name(&self.faults)?,
+            ..crate::coordinator::ReplicaConfig::default()
+        })
     }
 }
 
@@ -397,6 +435,44 @@ mod tests {
         assert_eq!(s.backend, "reference");
         assert_eq!(s.speculate, "on");
         assert_eq!(s.link, "markov:9");
+    }
+
+    #[test]
+    fn settings_replica_flags_parse_and_round_trip() {
+        let s = Settings::from_args(&Args::parse(["x"].iter().map(|s| s.to_string()))).unwrap();
+        assert_eq!((s.replicas, s.dispatch.as_str()), (1, "round-robin"));
+        assert!(s.faults.is_empty());
+        let cfg = s.replica_config().unwrap();
+        assert_eq!(cfg.n, 1);
+        assert!(cfg.faults.is_empty());
+
+        let args = Args::parse(
+            ["x", "--replicas", "3", "--dispatch", "least-loaded", "--faults",
+             "kill@2:0|flaky@1:0.25,seed=7"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let s = Settings::from_args(&args).unwrap();
+        let cfg = s.replica_config().unwrap();
+        assert_eq!(cfg.n, 3);
+        assert_eq!(
+            cfg.dispatch,
+            crate::coordinator::replicas::DispatchPolicy::LeastLoaded
+        );
+        assert_eq!(cfg.faults.name(), "kill@2:0|flaky@1:0.25,seed=7");
+    }
+
+    #[test]
+    fn settings_rejects_bad_replica_flags() {
+        for bad in [
+            vec!["x", "--replicas", "0"],
+            vec!["x", "--dispatch", "fastest"],
+            vec!["x", "--faults", "explode@1:2"],
+            vec!["x", "--faults", "flaky@0:1.5"],
+        ] {
+            let args = Args::parse(bad.iter().map(|s| s.to_string()));
+            assert!(Settings::from_args(&args).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

@@ -23,8 +23,12 @@ pub struct BatcherConfig {
 }
 
 impl BatcherConfig {
+    /// The preferred (largest compiled) batch size.  Panic-free: an empty
+    /// size menu — rejected by [`Batcher::new`], but representable in a
+    /// hand-built config — degrades to single-row batches rather than
+    /// panicking inside the batcher thread.
     pub fn preferred(&self) -> usize {
-        *self.batch_sizes.iter().max().expect("batch sizes")
+        self.batch_sizes.iter().max().copied().unwrap_or(1)
     }
 }
 

@@ -2,11 +2,227 @@
 //! rate, cost accounting — everything `splitee serve` reports.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::runtime::SpecCounters;
 use crate::util::stats::{LatencyHistogram, Welford};
+
+/// Per-replica dispatch accounting for the fault-tolerant cloud tier
+/// ([`crate::coordinator::replicas`]).  Shared atomics: the pool (on the
+/// cloud-stage thread) records; reporting threads snapshot.  All ordering
+/// is `Relaxed` — a single dispatcher writes, and readers only consume
+/// totals after the serve loop has joined.
+#[derive(Debug, Default)]
+pub struct ReplicaCounters {
+    /// dispatch attempts routed to this replica (probes included)
+    pub dispatched: AtomicU64,
+    /// attempts that returned a deadline-respecting result
+    pub completed: AtomicU64,
+    /// failed attempts whose group was re-dispatched to another attempt
+    pub rerouted: AtomicU64,
+    /// failed attempts that exhausted the retry budget, degrading the group
+    /// to on-device final-exit inference
+    pub fallback: AtomicU64,
+    /// attempts that exceeded the offload deadline (subset of the failures)
+    pub timeouts: AtomicU64,
+    /// circuit-breaker transitions into the open state (a failed half-open
+    /// probe re-opening the breaker counts again)
+    pub breaker_opens: AtomicU64,
+    /// half-open probe dispatches admitted after the breaker cooldown
+    pub probes: AtomicU64,
+    /// simulated busy microseconds attributed to this replica's completions
+    busy_us: AtomicU64,
+    /// successor of the last completed dispatch sequence (0 = none yet):
+    /// the per-replica reply-ordering invariance check
+    last_seq: AtomicU64,
+    /// completions observed out of per-replica dispatch order (the weaker
+    /// determinism contract requires this to stay 0)
+    pub order_violations: AtomicU64,
+}
+
+impl ReplicaCounters {
+    /// Attribute simulated busy time to this replica.
+    pub fn add_busy_ms(&self, ms: f64) {
+        self.busy_us.fetch_add((ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    /// Record a completed dispatch and check per-replica order invariance:
+    /// completions must land in the same order the replica was dispatched.
+    pub fn record_completion(&self, seq: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let prev = self.last_seq.swap(seq + 1, Ordering::Relaxed);
+        if prev > seq {
+            self.order_violations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> ReplicaStat {
+        ReplicaStat {
+            dispatched: self.dispatched.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rerouted: self.rerouted.load(Ordering::Relaxed),
+            fallback: self.fallback.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            probes: self.probes.load(Ordering::Relaxed),
+            busy_ms: self.busy_us.load(Ordering::Relaxed) as f64 / 1e3,
+            order_violations: self.order_violations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one replica's counters (see [`ReplicaCounters`]
+/// for field semantics).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ReplicaStat {
+    /// dispatch attempts routed to this replica
+    pub dispatched: u64,
+    /// attempts that completed
+    pub completed: u64,
+    /// failed attempts that re-routed elsewhere
+    pub rerouted: u64,
+    /// failed attempts that degraded their group to the edge
+    pub fallback: u64,
+    /// deadline timeouts among the failures
+    pub timeouts: u64,
+    /// breaker open transitions
+    pub breaker_opens: u64,
+    /// half-open probes admitted
+    pub probes: u64,
+    /// simulated busy milliseconds
+    pub busy_ms: f64,
+    /// per-replica completion-order violations (must stay 0)
+    pub order_violations: u64,
+}
+
+/// Pool-wide dispatch accounting for the replica tier, plus the per-replica
+/// breakdown.  Created by the service with the pool and shared into
+/// [`ServingMetrics::pool`].
+#[derive(Debug)]
+pub struct PoolCounters {
+    replicas: Vec<ReplicaCounters>,
+    retries: AtomicU64,
+    fallback_groups: AtomicU64,
+    fallback_rows: AtomicU64,
+    breaker_open_rejections: AtomicU64,
+    backoff_us: AtomicU64,
+}
+
+impl PoolCounters {
+    /// Counters for a pool of `n` replicas.
+    pub fn new(n: usize) -> Arc<PoolCounters> {
+        Arc::new(PoolCounters {
+            replicas: (0..n).map(|_| ReplicaCounters::default()).collect(),
+            retries: AtomicU64::new(0),
+            fallback_groups: AtomicU64::new(0),
+            fallback_rows: AtomicU64::new(0),
+            breaker_open_rejections: AtomicU64::new(0),
+            backoff_us: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of replicas these counters cover.
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// One replica's counters.  Panics on an out-of-range id — the pool
+    /// sizes the counters, so that is a bug, not an operational state.
+    pub fn replica(&self, i: usize) -> &ReplicaCounters {
+        &self.replicas[i]
+    }
+
+    /// Record a retry (a failed attempt followed by another dispatch).
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a group degraded to on-device final-exit inference.
+    pub fn note_fallback_group(&self, rows: u64) {
+        self.fallback_groups.fetch_add(1, Ordering::Relaxed);
+        self.fallback_rows.fetch_add(rows, Ordering::Relaxed);
+    }
+
+    /// Record a group that could not dispatch at all because every
+    /// replica's breaker was open (edge-only service).
+    pub fn note_breaker_open_rejection(&self) {
+        self.breaker_open_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulate simulated backoff wait time.
+    pub fn add_backoff_ms(&self, ms: f64) {
+        self.backoff_us.fetch_add((ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> PoolStat {
+        PoolStat {
+            replicas: self.replicas.iter().map(ReplicaCounters::snapshot).collect(),
+            retries: self.retries.load(Ordering::Relaxed),
+            fallback_groups: self.fallback_groups.load(Ordering::Relaxed),
+            fallback_rows: self.fallback_rows.load(Ordering::Relaxed),
+            breaker_open_rejections: self.breaker_open_rejections.load(Ordering::Relaxed),
+            backoff_ms: self.backoff_us.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+/// Point-in-time copy of a pool's counters.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PoolStat {
+    /// per-replica breakdown, indexed by replica id
+    pub replicas: Vec<ReplicaStat>,
+    /// failed attempts that were re-dispatched (equals the rerouted total)
+    pub retries: u64,
+    /// groups degraded to on-device final-exit inference
+    pub fallback_groups: u64,
+    /// offloaded rows served by that degradation
+    pub fallback_rows: u64,
+    /// groups rejected outright because every breaker was open
+    pub breaker_open_rejections: u64,
+    /// accumulated simulated backoff wait (ms)
+    pub backoff_ms: f64,
+}
+
+impl PoolStat {
+    /// Total dispatch attempts across replicas.
+    pub fn dispatched(&self) -> u64 {
+        self.replicas.iter().map(|r| r.dispatched).sum()
+    }
+
+    /// Total completed attempts across replicas.
+    pub fn completed(&self) -> u64 {
+        self.replicas.iter().map(|r| r.completed).sum()
+    }
+
+    /// Total re-routed attempts across replicas.
+    pub fn rerouted(&self) -> u64 {
+        self.replicas.iter().map(|r| r.rerouted).sum()
+    }
+
+    /// Total retry-budget-exhausting attempts across replicas.
+    pub fn fallback(&self) -> u64 {
+        self.replicas.iter().map(|r| r.fallback).sum()
+    }
+
+    /// Total breaker open transitions across replicas.
+    pub fn breaker_opens(&self) -> u64 {
+        self.replicas.iter().map(|r| r.breaker_opens).sum()
+    }
+
+    /// Total per-replica completion-order violations (must stay 0).
+    pub fn order_violations(&self) -> u64 {
+        self.replicas.iter().map(|r| r.order_violations).sum()
+    }
+
+    /// The accounting identity the robustness tests pin: every dispatch
+    /// attempt resolves exactly once as completed, re-routed, or fallback.
+    pub fn balanced(&self) -> bool {
+        self.dispatched() == self.completed() + self.rerouted() + self.fallback()
+    }
+}
 
 /// Per-link-state serving accounting: how much traffic each instantaneous
 /// link condition saw and which splits the policy chose under it.  Keyed by
@@ -73,6 +289,11 @@ pub struct ServingMetrics {
     /// is ordered so a mid-flight read never shows `used + wasted > issued`
     /// (field-by-field loads in the wrong order would).
     pub spec: Arc<SpecCounters>,
+    /// replica-pool dispatch/retry/breaker counters, shared with the
+    /// service's [`crate::coordinator::replicas::ReplicaPool`].  Sized 0
+    /// by [`ServingMetrics::new`]; the service swaps in the pool's counters
+    /// at construction.
+    pub pool: Arc<PoolCounters>,
     /// per-link-state traffic and split-choice accounting (dynamic-link
     /// scenarios; one `"static"` entry under a fixed link)
     pub link_states: BTreeMap<String, LinkStateStat>,
@@ -106,6 +327,7 @@ impl ServingMetrics {
             cloud_groups: 0,
             coalesced_batches: 0,
             spec: SpecCounters::new(),
+            pool: PoolCounters::new(0),
             link_states: BTreeMap::new(),
             last_link_mark: None,
         }
@@ -268,6 +490,43 @@ impl ServingMetrics {
             spec.wasted,
             100.0 * spec.hit_rate(),
         ));
+        let pool = self.pool.snapshot();
+        // a single healthy replica is the classic cloud stage — only print
+        // the pool breakdown when there is a pool story to tell
+        if pool.replicas.len() > 1
+            || pool.retries > 0
+            || pool.fallback_groups > 0
+            || pool.breaker_open_rejections > 0
+        {
+            out.push_str(&format!(
+                "pool     dispatched {}   completed {}   rerouted {}   fallback {} \
+                 ({} groups, {} rows)   retries {}   backoff {:.1} ms   breaker-open \
+                 rejections {}\n",
+                pool.dispatched(),
+                pool.completed(),
+                pool.rerouted(),
+                pool.fallback(),
+                pool.fallback_groups,
+                pool.fallback_rows,
+                pool.retries,
+                pool.backoff_ms,
+                pool.breaker_open_rejections,
+            ));
+            for (i, r) in pool.replicas.iter().enumerate() {
+                out.push_str(&format!(
+                    "replica[{i}]  dispatched {}  completed {}  rerouted {}  fallback {}  \
+                     timeouts {}  breaker opens {}  probes {}  busy {:.1} ms\n",
+                    r.dispatched,
+                    r.completed,
+                    r.rerouted,
+                    r.fallback,
+                    r.timeouts,
+                    r.breaker_opens,
+                    r.probes,
+                    r.busy_ms,
+                ));
+            }
+        }
         if !self.link_states.is_empty()
             && (self.link_states.len() > 1 || !self.link_states.contains_key("static"))
         {
@@ -383,5 +642,60 @@ mod tests {
         m.record_link_state("static", 3, 8, 0, 0);
         assert!(!m.report().contains("link["), "single static entry is noise");
         assert_eq!(m.link_states["static"].batches, 1);
+    }
+
+    #[test]
+    fn pool_counters_snapshot_and_balance() {
+        let pool = PoolCounters::new(2);
+        // replica 0: two clean completions
+        pool.replica(0).dispatched.fetch_add(2, Ordering::Relaxed);
+        pool.replica(0).record_completion(0);
+        pool.replica(0).record_completion(2);
+        pool.replica(0).add_busy_ms(3.5);
+        // replica 1: one failure re-routed, one that exhausted the budget
+        pool.replica(1).dispatched.fetch_add(2, Ordering::Relaxed);
+        pool.replica(1).rerouted.fetch_add(1, Ordering::Relaxed);
+        pool.replica(1).fallback.fetch_add(1, Ordering::Relaxed);
+        pool.replica(1).timeouts.fetch_add(1, Ordering::Relaxed);
+        pool.note_retry();
+        pool.note_fallback_group(8);
+        pool.add_backoff_ms(1.25);
+        let s = pool.snapshot();
+        assert_eq!(s.dispatched(), 4);
+        assert_eq!(s.completed(), 2);
+        assert_eq!(s.rerouted(), 1);
+        assert_eq!(s.fallback(), 1);
+        assert!(s.balanced(), "dispatched == completed + rerouted + fallback");
+        assert_eq!(s.retries, 1);
+        assert_eq!((s.fallback_groups, s.fallback_rows), (1, 8));
+        assert_eq!(s.order_violations(), 0);
+        assert!((s.replicas[0].busy_ms - 3.5).abs() < 1e-9);
+        assert!((s.backoff_ms - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_order_completion_is_detected() {
+        let pool = PoolCounters::new(1);
+        pool.replica(0).record_completion(5);
+        pool.replica(0).record_completion(3);
+        assert_eq!(pool.snapshot().order_violations(), 1);
+    }
+
+    #[test]
+    fn report_stays_quiet_without_pool_activity() {
+        let m = ServingMetrics::new(6);
+        assert!(!m.report().contains("pool"), "empty pool is noise");
+    }
+
+    #[test]
+    fn report_prints_pool_lines_when_the_pool_has_a_story() {
+        let mut m = ServingMetrics::new(6);
+        m.pool = PoolCounters::new(2);
+        m.pool.replica(0).dispatched.fetch_add(1, Ordering::Relaxed);
+        m.pool.replica(0).record_completion(0);
+        let r = m.report();
+        assert!(r.contains("pool     dispatched 1"), "{r}");
+        assert!(r.contains("replica[0]"), "{r}");
+        assert!(r.contains("replica[1]"), "{r}");
     }
 }

@@ -8,7 +8,10 @@
 //!            -> Batcher (dynamic batching to compiled batch sizes;
 //!               condvar deadline wait, no sleep-polling)
 //!            -> edge stage (embed + blocks to the split + exit head)
-//!            -> cloud stage (continuation for offloaded rows)
+//!            -> cloud stage (replica pool: continuation for offloaded
+//!               rows on one of N fault-injectable cloud lanes, with
+//!               deadline/retry, circuit breakers and edge-only
+//!               degradation; see `replicas`)
 //!            -> reply stage (link sim, bandit updates, metrics, replies)
 //! ```
 //!
@@ -26,10 +29,12 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod replicas;
 pub mod router;
 pub mod service;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
-pub use metrics::ServingMetrics;
+pub use metrics::{PoolStat, ServingMetrics};
+pub use replicas::{DispatchPolicy, ReplicaConfig, ReplicaPool};
 pub use router::{Request, Response, Router, RouterConfig};
 pub use service::{CoalesceConfig, Service, ServiceConfig, SpeculateMode};

@@ -1,0 +1,844 @@
+//! Fault-tolerant multi-replica cloud tier.
+//!
+//! The classic SplitEE deployment models the cloud as one immortal worker;
+//! this module generalizes it to a **pool of N replica lanes** (`--replicas
+//! N`), each with its own worker thread, job queue and [`CloudSim`]-derived
+//! profile, and makes the offload path survive injected faults
+//! ([`crate::sim::faults`]):
+//!
+//! * **dispatch** — each offload group goes to one lane, picked round-robin
+//!   or least-loaded ([`DispatchPolicy`]); the dispatcher (the pipeline's
+//!   cloud stage) waits for that group's reply before dispatching the next,
+//!   so reply order — and with it every bandit/metric invariant of the
+//!   single-worker stage — is preserved by construction.
+//! * **deadline + retry** — every dispatch carries a simulated offload
+//!   deadline ([`ReplicaConfig::deadline_ms`]); a failed or timed-out
+//!   attempt re-routes to a different replica with seeded exponential
+//!   backoff (simulated, charged to the group's reply latency), bounded by
+//!   [`ReplicaConfig::max_attempts`].
+//! * **circuit breaker** — consecutive failures open a per-replica breaker;
+//!   an open breaker stops receiving dispatches until its cooldown admits a
+//!   half-open probe.  With *every* breaker open, offloads are rejected
+//!   outright and counted (`breaker_open_rejections`).
+//! * **graceful degradation** — a group that exhausts its retry budget (or
+//!   is rejected with all breakers open) is served **on-device**: the edge
+//!   runs the final-exit continuation itself at edge compute scale, and the
+//!   reply stage accounts those rows exactly like a link-outage fallback.
+//!
+//! **Accounting discipline** (inherited from the speculation PR): every
+//! dispatch attempt resolves exactly once — `dispatched == completed +
+//! rerouted + fallback` at shutdown ([`PoolStat::balanced`]) — and a kill
+//! with groups in flight can never hang the dispatcher (wall-clock watchdog
+//! per attempt).  **Determinism contract** (the weaker replacement for
+//! single-worker bit-identity, see ARCHITECTURE.md): faults are keyed on
+//! the pool's dispatch sequence number and all randomness (flaky draws,
+//! backoff jitter) comes from seeded streams, so identical `(seed, fault
+//! schedule)` runs produce identical replies and counters, and per-replica
+//! completions stay in per-replica dispatch order
+//! ([`ReplicaCounters::record_completion`]).
+//!
+//! **Speculation interaction**: a singleton group carrying a speculative
+//! continuation adopts that result only if the lane the pool dispatches it
+//! to is healthy — the result stands in for *that lane's* compute.  On a
+//! kill/flaky verdict the handle is killed (counted wasted) and the group
+//! re-routes, i.e. it is recomputed on another replica like any failed
+//! dispatch.
+//!
+//! [`PoolStat::balanced`]: crate::coordinator::metrics::PoolStat::balanced
+//! [`ReplicaCounters::record_completion`]:
+//!     crate::coordinator::metrics::ReplicaCounters::record_completion
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::coordinator::metrics::PoolCounters;
+use crate::coordinator::service::{CloudRow, EdgeWork, ReplyWork};
+use crate::model::{plan_batches_fused, ExitOutput, MultiExitModel};
+use crate::runtime::{thread_launches, SpecHandle, SpecResult};
+use crate::sim::device::{CloudSim, EdgeSim};
+use crate::sim::faults::{FaultSchedule, FaultState, FaultVerdict};
+use crate::tensor::TensorF32;
+use crate::util::rng::Rng;
+
+/// Wall-clock bound on waiting for any single lane reply.  Purely a
+/// liveness backstop (simulated deadlines govern behaviour): a wedged lane
+/// thread must never hang the serve loop.
+const WATCHDOG: Duration = Duration::from_secs(60);
+
+/// How the pool picks a lane for the next offload group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// rotate through eligible lanes in id order
+    #[default]
+    RoundRobin,
+    /// lane with the least accumulated simulated busy time (ties to the
+    /// lowest id)
+    LeastLoaded,
+}
+
+impl DispatchPolicy {
+    /// Parse a `--dispatch` value.  Single source of truth for accepted
+    /// names — `config.rs` validates CLI input by calling it eagerly.
+    pub fn from_name(name: &str) -> Result<DispatchPolicy> {
+        match name {
+            "round-robin" | "rr" => Ok(DispatchPolicy::RoundRobin),
+            "least-loaded" | "ll" => Ok(DispatchPolicy::LeastLoaded),
+            other => bail!("--dispatch must be round-robin|least-loaded, got {other:?}"),
+        }
+    }
+
+    /// Canonical name (`from_name(name())` round-trips).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Replica-pool configuration.  The `Default` — one replica, no faults —
+/// reproduces the single-worker cloud stage exactly.
+#[derive(Debug, Clone)]
+pub struct ReplicaConfig {
+    /// number of cloud replica lanes (>= 1)
+    pub n: usize,
+    /// lane-selection policy
+    pub dispatch: DispatchPolicy,
+    /// deterministic fault schedule injected into the pool
+    pub faults: FaultSchedule,
+    /// simulated per-dispatch offload deadline (ms): a reply whose
+    /// simulated cloud latency exceeds this counts as a timeout and
+    /// re-routes
+    pub deadline_ms: f64,
+    /// dispatch attempts per group before degrading to on-device final exit
+    pub max_attempts: usize,
+    /// nominal first-retry backoff (simulated ms); doubles per retry
+    pub backoff_base_ms: f64,
+    /// seed of the backoff jitter stream
+    pub backoff_seed: u64,
+    /// consecutive failures that open a replica's circuit breaker
+    pub breaker_threshold: u32,
+    /// pool dispatch attempts an open breaker waits before admitting a
+    /// half-open probe
+    pub breaker_cooldown: u64,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig {
+            n: 1,
+            dispatch: DispatchPolicy::RoundRobin,
+            faults: FaultSchedule::none(),
+            deadline_ms: 10_000.0,
+            max_attempts: 3,
+            backoff_base_ms: 0.5,
+            backoff_seed: 0xB0FF,
+            breaker_threshold: 3,
+            breaker_cooldown: 8,
+        }
+    }
+}
+
+impl ReplicaConfig {
+    /// Configuration from the `SPLITEE_REPLICAS` / `SPLITEE_FAULTS`
+    /// environment hooks (unset = one healthy replica), for tests and the
+    /// CI fault matrix.  Panics on invalid values, naming the variable.
+    pub fn from_env() -> ReplicaConfig {
+        let n = match std::env::var("SPLITEE_REPLICAS") {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => panic!("SPLITEE_REPLICAS={v:?} is invalid — expected a positive integer"),
+            },
+            Err(_) => 1,
+        };
+        ReplicaConfig { n, faults: FaultSchedule::from_env(), ..ReplicaConfig::default() }
+    }
+}
+
+/// One row's final-layer result as computed by a lane (union-gather order).
+#[derive(Debug)]
+struct LaneRow {
+    pred: usize,
+    conf: f32,
+    /// simulated latency of the launch this row rode in
+    cloud_ms: f64,
+    /// this row's pro-rata share of the launch's simulated busy time
+    share_ms: f64,
+}
+
+/// A lane's answer for one dispatched group.
+#[derive(Debug)]
+struct LaneReply {
+    rows: Vec<LaneRow>,
+    /// executable launches the lane performed for this group (measured on
+    /// the lane thread, attributed iff the reply is used)
+    launches: u64,
+}
+
+/// Work items on a lane's queue.
+enum ReplicaJob {
+    /// run the final-exit continuation for a gathered union of rows
+    Compute {
+        union: Arc<TensorF32>,
+        rows: usize,
+        split: usize,
+        /// this lane's cloud profile for this dispatch
+        sim: CloudSim,
+        /// multiplicative host-time factor from an active `slow@` fault
+        slow: f64,
+        reply: Sender<Result<LaneReply, String>>,
+    },
+    /// an injected flaky failure: answer with an error, compute nothing
+    Fail { reply: Sender<Result<LaneReply, String>> },
+    /// a kill fault or pool shutdown: drop the queue and exit the thread
+    Die,
+}
+
+/// Why one dispatch attempt failed.
+#[derive(Debug, Clone, PartialEq)]
+enum AttemptError {
+    /// the lane is dead (kill fault, or its thread is gone)
+    Dead,
+    /// an injected flaky failure
+    Flaky,
+    /// the reply missed the simulated offload deadline (or the wall-clock
+    /// watchdog fired)
+    Timeout,
+    /// the lane's compute itself errored
+    Lane(String),
+}
+
+/// Per-replica circuit-breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Breaker {
+    /// dispatching normally; `consecutive` failures so far
+    Closed { consecutive: u32 },
+    /// not dispatching; `since` is the pool dispatch sequence at opening —
+    /// after `breaker_cooldown` further attempts a half-open probe is
+    /// admitted
+    Open { since: u64 },
+}
+
+struct ReplicaLane {
+    tx: Sender<ReplicaJob>,
+    handle: Option<JoinHandle<()>>,
+    /// per-lane compute-scale factor on the base profile (1.0 = identical
+    /// to the base; the hook for heterogeneous pools)
+    scale: f64,
+}
+
+/// Immutable description of one group's offload work, shared by every
+/// dispatch attempt.
+struct GroupJob<'a> {
+    model: &'a MultiExitModel,
+    cloud: &'a CloudSim,
+    union: &'a Arc<TensorF32>,
+    rows: usize,
+    split: usize,
+    /// speculative-launch geometry — (padded batch rows, offloaded row ids)
+    /// — when the group is a spec-carrying singleton
+    spec_geom: Option<(usize, Vec<usize>)>,
+}
+
+/// The replica pool: N lanes plus the dispatch/retry/breaker machinery.
+/// Owned by the service; the pipelined serve loop moves a `&mut` into its
+/// cloud stage, the serial path calls it directly — either way there is
+/// exactly one dispatcher, which is what keeps the fault clock (the
+/// dispatch sequence number) deterministic.
+pub struct ReplicaPool {
+    lanes: Vec<ReplicaLane>,
+    breakers: Vec<Breaker>,
+    faults: FaultState,
+    cfg: ReplicaConfig,
+    counters: Arc<PoolCounters>,
+    /// cumulative simulated busy ms per lane (the least-loaded key)
+    load_ms: Vec<f64>,
+    rr_next: usize,
+    /// dispatch attempts so far: the fault schedule's batch clock and the
+    /// breaker cooldown clock
+    seq: u64,
+    backoff_rng: Rng,
+}
+
+impl ReplicaPool {
+    /// Spawn `cfg.n` lanes over a shared model.  Fault events naming a
+    /// replica the pool does not have are inert (warned, never applied).
+    pub fn new(
+        model: Arc<MultiExitModel>,
+        cfg: ReplicaConfig,
+        counters: Arc<PoolCounters>,
+    ) -> ReplicaPool {
+        let n = cfg.n.max(1);
+        for event in cfg.faults.events() {
+            if event.replica() >= n {
+                log::warn!(
+                    "fault event targets replica {} but the pool has {n} — it will never fire",
+                    event.replica()
+                );
+            }
+        }
+        let lanes = (0..n)
+            .map(|i| {
+                let (tx, rx) = mpsc::channel();
+                let model = Arc::clone(&model);
+                let handle = std::thread::Builder::new()
+                    .name(format!("splitee-replica-{i}"))
+                    .spawn(move || lane_loop(&model, rx))
+                    .expect("spawn replica lane");
+                ReplicaLane { tx, handle: Some(handle), scale: 1.0 }
+            })
+            .collect();
+        ReplicaPool {
+            lanes,
+            breakers: vec![Breaker::Closed { consecutive: 0 }; n],
+            faults: FaultState::new(cfg.faults.clone(), n),
+            backoff_rng: Rng::new(cfg.backoff_seed),
+            load_ms: vec![0.0; n],
+            rr_next: 0,
+            seq: 0,
+            cfg,
+            counters,
+        }
+    }
+
+    /// The pool's shared counters (also reachable as `ServingMetrics::pool`).
+    pub fn counters(&self) -> &Arc<PoolCounters> {
+        &self.counters
+    }
+
+    /// Serve one coalesced group of same-split batches: gather every
+    /// batch's offloaded rows into one union, dispatch it to a lane (with
+    /// retry / breaker / degradation as configured), and attribute results
+    /// and simulated time back to each batch.  A group of one is the
+    /// uncoalesced case — the serial path always uses that.  Drop-in
+    /// replacement for the single-worker `cloud_stage_group`: under the
+    /// default config the replies are identical to it, bit for bit.
+    pub(crate) fn serve_group(
+        &mut self,
+        model: &MultiExitModel,
+        edge: &EdgeSim,
+        cloud: &CloudSim,
+        mut group: Vec<EdgeWork>,
+    ) -> Result<Vec<ReplyWork>> {
+        let split = group[0].split;
+
+        // Speculation resolution (see the service module docs): a singleton
+        // group may serve from its speculative result — on whichever lane
+        // the pool dispatches it to, if that lane turns out healthy; a
+        // merged group kills every member's pending launch first, so a
+        // coalesced launch never mixes speculative rows with gathered rows.
+        let mut spec: Option<SpecHandle> = None;
+        if group.len() == 1 {
+            spec = group[0].spec.take();
+        } else {
+            for work in group.iter_mut() {
+                if let Some(handle) = work.spec.take() {
+                    handle.kill();
+                }
+            }
+        }
+        let spec_geom = spec
+            .is_some()
+            .then(|| (group[0].batch.padded_to, group[0].offload_rows.clone()));
+
+        // union gather across the group (host-side, one contiguous copy per
+        // batch) — also the buffer a degraded group's on-device
+        // continuation reads
+        let mut union: Option<TensorF32> = None;
+        let mut origin: Vec<(usize, usize)> = Vec::new(); // (group index, batch row)
+        for (gi, work) in group.iter().enumerate() {
+            if work.offload_rows.is_empty() {
+                continue;
+            }
+            let gathered = work
+                .h
+                .as_ref()
+                .context("offloaded rows without a split-boundary hidden state")?
+                .gather_rows(&work.offload_rows)?;
+            match &mut union {
+                Some(u) => u.extend_rows(&gathered).map_err(|e| anyhow::anyhow!(e))?,
+                None => union = Some(gathered),
+            }
+            origin.extend(work.offload_rows.iter().map(|&r| (gi, r)));
+        }
+
+        let mut cloud_out: Vec<Vec<CloudRow>> =
+            group.iter().map(|w| Vec::with_capacity(w.offload_rows.len())).collect();
+        let mut busy = vec![0.0f64; group.len()];
+        let mut group_launches = 0u64;
+
+        if let Some(union) = union {
+            let union = Arc::new(union);
+            let job = GroupJob { model, cloud, union: &union, rows: origin.len(), split, spec_geom };
+            let (reply, penalty_ms) = self.dispatch_with_retry(&mut spec, &job);
+            match reply {
+                Some(reply) => {
+                    group_launches = reply.launches;
+                    // Per-row attribution: every row in the launch saw the
+                    // same simulated latency, plus the group's accrued
+                    // retry penalty (failure detection + seeded backoff);
+                    // busy time splits pro rata so per-batch accounting
+                    // sums to the launch totals.
+                    for (lr, &(gi, row)) in reply.rows.iter().zip(origin.iter()) {
+                        cloud_out[gi].push(CloudRow {
+                            row,
+                            pred: lr.pred,
+                            conf: lr.conf,
+                            cloud_ms: lr.cloud_ms + penalty_ms,
+                            fallback: false,
+                        });
+                        busy[gi] += lr.share_ms;
+                    }
+                }
+                None => {
+                    // Graceful degradation to on-device final exit: the
+                    // edge runs the continuation itself at edge compute
+                    // scale.  The reply stage accounts these rows exactly
+                    // like an outage fallback (no offload charge, cascade
+                    // cost to the final layer).
+                    self.counters.note_fallback_group(origin.len() as u64);
+                    let launches0 = thread_launches();
+                    let plan = plan_batches_fused(origin.len(), model.batch_sizes());
+                    let mut done = 0usize;
+                    for (bsz, real) in plan {
+                        let chunk = union.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
+                        model.warm_range(bsz, split, model.n_layers())?;
+                        let t0 = Instant::now();
+                        let out = model.forward_rest_exit(&chunk, split - 1)?;
+                        let local_ms = edge.simulated_ms(t0.elapsed().as_secs_f64() * 1e3);
+                        for i in 0..real {
+                            let (gi, row) = origin[done + i];
+                            cloud_out[gi].push(CloudRow {
+                                row,
+                                pred: out.pred[i],
+                                conf: out.conf[i],
+                                cloud_ms: local_ms + penalty_ms,
+                                fallback: true,
+                            });
+                            busy[gi] += local_ms / real as f64;
+                        }
+                        done += real;
+                    }
+                    group_launches = thread_launches() - launches0;
+                }
+            }
+        }
+        // defensive: a handle that survived dispatch (e.g. a zero-offload
+        // group, which cannot carry one) must still resolve
+        if let Some(handle) = spec.take() {
+            handle.kill();
+        }
+
+        // coalescing stats count only batches whose offloads shared the
+        // launch
+        let contributing = group.iter().filter(|w| !w.offload_rows.is_empty()).count();
+        let mut replies = Vec::with_capacity(group.len());
+        for (gi, work) in group.into_iter().enumerate() {
+            let EdgeWork { batch, exit_out, prefix_conf, split, edge_ms, payload, launches, .. } =
+                work;
+            replies.push(ReplyWork {
+                batch,
+                exit_out,
+                prefix_conf,
+                split,
+                edge_ms,
+                payload,
+                cloud_out: std::mem::take(&mut cloud_out[gi]),
+                cloud_busy_ms: busy[gi],
+                edge_launches: launches,
+                cloud_launches: if gi == 0 { group_launches } else { 0 },
+                group: if gi == 0 { Some(contributing) } else { None },
+            });
+        }
+        Ok(replies)
+    }
+
+    /// Dispatch one group with bounded retries: pick a lane, attempt, and
+    /// on failure re-route with seeded exponential backoff.  Returns the
+    /// winning reply (`None` = degrade to on-device final exit) plus the
+    /// accumulated simulated penalty (failure detection time + backoff)
+    /// the group's rows must carry.
+    fn dispatch_with_retry(
+        &mut self,
+        spec: &mut Option<SpecHandle>,
+        job: &GroupJob<'_>,
+    ) -> (Option<LaneReply>, f64) {
+        let mut penalty_ms = 0.0;
+        let mut avoid = None;
+        let max_attempts = self.cfg.max_attempts.max(1);
+        for attempt in 1..=max_attempts {
+            let Some((lane, probe)) = self.select(avoid) else {
+                // every breaker is open inside its cooldown: reject the
+                // offload outright and serve edge-only
+                if let Some(handle) = spec.take() {
+                    handle.kill();
+                }
+                self.counters.note_breaker_open_rejection();
+                return (None, penalty_ms);
+            };
+            match self.attempt(lane, probe, spec, job) {
+                Ok(reply) => {
+                    self.breakers[lane] = Breaker::Closed { consecutive: 0 };
+                    return (Some(reply), penalty_ms);
+                }
+                Err(err) => {
+                    self.on_failure(lane, &err);
+                    penalty_ms += self.failure_detect_ms(&err, job.cloud);
+                    if attempt == max_attempts {
+                        self.counters.replica(lane).fallback.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.counters.replica(lane).rerouted.fetch_add(1, Ordering::Relaxed);
+                        self.counters.note_retry();
+                        penalty_ms += self.backoff_ms(attempt);
+                        avoid = Some(lane);
+                    }
+                }
+            }
+        }
+        (None, penalty_ms)
+    }
+
+    /// Pick a lane for the next dispatch.  `avoid` is the lane that just
+    /// failed this group: a re-route prefers any other eligible lane,
+    /// falling back to the failed one only when it is the sole survivor.
+    /// Returns the lane and whether the dispatch is a half-open probe;
+    /// `None` when every breaker is open inside its cooldown.
+    fn select(&mut self, avoid: Option<usize>) -> Option<(usize, bool)> {
+        let n = self.lanes.len();
+        let mut cands: Vec<(usize, bool)> = (0..n)
+            .filter_map(|i| match self.breakers[i] {
+                Breaker::Closed { .. } => Some((i, false)),
+                Breaker::Open { since } => {
+                    let cooled = self.seq.saturating_sub(since) >= self.cfg.breaker_cooldown;
+                    cooled.then_some((i, true))
+                }
+            })
+            .collect();
+        if cands.len() > 1 {
+            if let Some(avoid) = avoid {
+                cands.retain(|&(i, _)| i != avoid);
+            }
+        }
+        match self.cfg.dispatch {
+            DispatchPolicy::RoundRobin => {
+                for off in 0..n {
+                    let i = (self.rr_next + off) % n;
+                    if let Some(&(lane, probe)) = cands.iter().find(|&&(c, _)| c == i) {
+                        self.rr_next = (lane + 1) % n;
+                        return Some((lane, probe));
+                    }
+                }
+                None
+            }
+            DispatchPolicy::LeastLoaded => cands.into_iter().min_by(|a, b| {
+                self.load_ms[a.0]
+                    .partial_cmp(&self.load_ms[b.0])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.0.cmp(&b.0))
+            }),
+        }
+    }
+
+    /// One dispatch attempt on `lane`: consult the fault schedule, adopt
+    /// the speculative result or compute on the lane, enforce the deadline,
+    /// and on success record completion (order-checked) and busy time.
+    fn attempt(
+        &mut self,
+        lane: usize,
+        probe: bool,
+        spec: &mut Option<SpecHandle>,
+        job: &GroupJob<'_>,
+    ) -> Result<LaneReply, AttemptError> {
+        let seq = self.seq;
+        self.seq += 1;
+        {
+            let c = self.counters.replica(lane);
+            c.dispatched.fetch_add(1, Ordering::Relaxed);
+            if probe {
+                c.probes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let slow = match self.faults.verdict(seq, lane) {
+            FaultVerdict::Killed => {
+                // the replica process dies with this dispatch in flight:
+                // its lane thread exits, and a pending speculative result
+                // is killed on re-route, never consumed
+                let _ = self.lanes[lane].tx.send(ReplicaJob::Die);
+                if let Some(handle) = spec.take() {
+                    handle.kill();
+                }
+                return Err(AttemptError::Dead);
+            }
+            FaultVerdict::Failed => {
+                if let Some(handle) = spec.take() {
+                    handle.kill();
+                }
+                let (rtx, rrx) = mpsc::channel();
+                if self.lanes[lane].tx.send(ReplicaJob::Fail { reply: rtx }).is_err() {
+                    return Err(AttemptError::Dead);
+                }
+                // drain the (error) reply so the failure is synchronous
+                let _ = rrx.recv_timeout(WATCHDOG);
+                return Err(AttemptError::Flaky);
+            }
+            FaultVerdict::Slowed(f) => f,
+            FaultVerdict::Healthy => 1.0,
+        };
+        // healthy (possibly slowed) lane: adopt the speculative result if
+        // the group carries one, otherwise compute on the lane
+        let reply = match spec.take() {
+            Some(handle) => match self.adopt(handle, lane, slow, job) {
+                Some(reply) => reply,
+                // the speculation lane itself failed — recompute on this
+                // replica inside the same attempt; no replica failure is
+                // charged, exactly like the single-worker recompute path
+                None => self.compute_on(lane, slow, job)?,
+            },
+            None => self.compute_on(lane, slow, job)?,
+        };
+        let worst = reply.rows.iter().map(|r| r.cloud_ms).fold(0.0f64, f64::max);
+        if worst > self.cfg.deadline_ms {
+            return Err(AttemptError::Timeout);
+        }
+        let busy: f64 = reply.rows.iter().map(|r| r.share_ms).sum();
+        self.load_ms[lane] += busy;
+        let c = self.counters.replica(lane);
+        c.add_busy_ms(busy);
+        c.record_completion(seq);
+        Ok(reply)
+    }
+
+    /// Consume a speculative result as `lane`'s answer.  `None` means the
+    /// speculation lane failed and the caller should compute normally (the
+    /// handle is already resolved either way).
+    fn adopt(
+        &mut self,
+        handle: SpecHandle,
+        lane: usize,
+        slow: f64,
+        job: &GroupJob<'_>,
+    ) -> Option<LaneReply> {
+        let (padded, offload_rows) = job.spec_geom.as_ref()?;
+        let result = match handle.take() {
+            Ok(result) => result,
+            // already counted wasted by take(); recompute
+            Err(e) => {
+                log::warn!("speculative continuation failed ({e:#}) — recomputing");
+                return None;
+            }
+        };
+        let SpecResult { head, launches, host_ms } = result;
+        let out = match ExitOutput::from_head(head) {
+            Ok(out) => out,
+            Err(e) => {
+                log::warn!("speculative head unusable ({e:#}) — recomputing");
+                return None;
+            }
+        };
+        let real = offload_rows.len();
+        // Normalize the simulated-time basis to the launch this result
+        // replaced (see the service module docs); an active slow fault
+        // scales the host time exactly as it would have scaled the lane's
+        // own compute.
+        let spec_rows = (*padded).max(1);
+        let serial_rows = plan_batches_fused(real, job.model.batch_sizes())
+            .first()
+            .map(|&(bsz, _)| bsz)
+            .unwrap_or(spec_rows);
+        let sim = job.cloud.scaled(self.lanes[lane].scale);
+        let cloud_ms = sim.simulated_ms(host_ms * slow * serial_rows as f64 / spec_rows as f64);
+        let rows = offload_rows
+            .iter()
+            .map(|&row| LaneRow {
+                pred: out.pred[row],
+                conf: out.conf[row],
+                cloud_ms,
+                share_ms: cloud_ms / real as f64,
+            })
+            .collect();
+        Some(LaneReply { rows, launches })
+    }
+
+    /// Send the group's compute to `lane` and wait (watchdog-bounded) for
+    /// its reply.
+    fn compute_on(
+        &mut self,
+        lane: usize,
+        slow: f64,
+        job: &GroupJob<'_>,
+    ) -> Result<LaneReply, AttemptError> {
+        let (rtx, rrx) = mpsc::channel();
+        let msg = ReplicaJob::Compute {
+            union: Arc::clone(job.union),
+            rows: job.rows,
+            split: job.split,
+            sim: job.cloud.scaled(self.lanes[lane].scale),
+            slow,
+            reply: rtx,
+        };
+        if self.lanes[lane].tx.send(msg).is_err() {
+            return Err(AttemptError::Dead);
+        }
+        match rrx.recv_timeout(WATCHDOG) {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(e)) => Err(AttemptError::Lane(e)),
+            // the lane died mid-compute
+            Err(RecvTimeoutError::Disconnected) => Err(AttemptError::Dead),
+            // wedged lane: the watchdog keeps the dispatcher live
+            Err(RecvTimeoutError::Timeout) => Err(AttemptError::Timeout),
+        }
+    }
+
+    /// Breaker bookkeeping for one failed attempt.  Timeouts are counted
+    /// here so every failure site shares one accounting path.
+    fn on_failure(&mut self, lane: usize, err: &AttemptError) {
+        if matches!(err, AttemptError::Timeout) {
+            self.counters.replica(lane).timeouts.fetch_add(1, Ordering::Relaxed);
+        }
+        let opened = match self.breakers[lane] {
+            Breaker::Closed { consecutive } => {
+                let consecutive = consecutive + 1;
+                if consecutive >= self.cfg.breaker_threshold {
+                    self.breakers[lane] = Breaker::Open { since: self.seq };
+                    true
+                } else {
+                    self.breakers[lane] = Breaker::Closed { consecutive };
+                    false
+                }
+            }
+            // a failed half-open probe re-arms the cooldown
+            Breaker::Open { .. } => {
+                self.breakers[lane] = Breaker::Open { since: self.seq };
+                true
+            }
+        };
+        if opened {
+            self.counters.replica(lane).breaker_opens.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Simulated time burned detecting one failed attempt: a timed-out
+    /// dispatch consumed its whole deadline; dead/flaky/errored lanes fail
+    /// at the service boundary.
+    fn failure_detect_ms(&self, err: &AttemptError, cloud: &CloudSim) -> f64 {
+        match err {
+            AttemptError::Timeout => self.cfg.deadline_ms,
+            _ => cloud.service_overhead_ms,
+        }
+    }
+
+    /// Seeded exponential backoff before retry `attempt + 1`: the nominal
+    /// `base * 2^(attempt-1)`, jittered to `[0.5, 1.5)` of nominal from the
+    /// pool's own stream.  Part of the deterministic replay surface, and
+    /// *simulated* — charged to the group's reply latency, never slept.
+    fn backoff_ms(&mut self, attempt: usize) -> f64 {
+        let exp = 1u64 << (attempt - 1).min(16) as u32;
+        let jitter = 0.5 + self.backoff_rng.next_f64();
+        let ms = self.cfg.backoff_base_ms * exp as f64 * jitter;
+        self.counters.add_backoff_ms(ms);
+        ms
+    }
+}
+
+impl Drop for ReplicaPool {
+    fn drop(&mut self) {
+        // Close every lane's queue, then join.  A lane that already died
+        // (kill fault) joins immediately; join errors are swallowed — drop
+        // runs on error unwinds too, and must never double-panic.
+        for lane in self.lanes.iter() {
+            let _ = lane.tx.send(ReplicaJob::Die);
+        }
+        for lane in self.lanes.iter_mut() {
+            if let Some(handle) = lane.handle.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+/// A lane thread's loop: serve jobs until told to die or the pool drops
+/// the queue.  Launch counts are measured here, on the lane's own thread,
+/// and shipped back in the reply — the same convention as the speculation
+/// lane.
+fn lane_loop(model: &MultiExitModel, rx: Receiver<ReplicaJob>) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            ReplicaJob::Die => return,
+            ReplicaJob::Fail { reply } => {
+                let _ = reply.send(Err("injected flaky failure".to_string()));
+            }
+            ReplicaJob::Compute { union, rows, split, sim, slow, reply } => {
+                let result =
+                    lane_compute(model, &union, rows, split, &sim, slow).map_err(|e| {
+                        format!("{e:#}")
+                    });
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+/// The continuation compute for one dispatched union: the exact chunk loop
+/// of the single-worker cloud stage (plan, pad, warm, fused
+/// `forward_rest_exit`), so a healthy one-lane pool is bit-identical to it.
+fn lane_compute(
+    model: &MultiExitModel,
+    union: &TensorF32,
+    rows: usize,
+    split: usize,
+    sim: &CloudSim,
+    slow: f64,
+) -> Result<LaneReply> {
+    let launches0 = thread_launches();
+    let mut out_rows = Vec::with_capacity(rows);
+    let plan = plan_batches_fused(rows, model.batch_sizes());
+    let mut done = 0usize;
+    for (bsz, real) in plan {
+        let chunk = union.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
+        // compile-if-needed before the timed region (see warm_range)
+        model.warm_range(bsz, split, model.n_layers())?;
+        let t0 = Instant::now();
+        let out = model.forward_rest_exit(&chunk, split - 1)?;
+        let cloud_ms = sim.simulated_ms(t0.elapsed().as_secs_f64() * 1e3 * slow);
+        for i in 0..real {
+            out_rows.push(LaneRow {
+                pred: out.pred[i],
+                conf: out.conf[i],
+                cloud_ms,
+                share_ms: cloud_ms / real as f64,
+            });
+        }
+        done += real;
+    }
+    Ok(LaneReply { rows: out_rows, launches: thread_launches() - launches0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_policy_names_round_trip() {
+        for name in ["round-robin", "least-loaded"] {
+            assert_eq!(DispatchPolicy::from_name(name).unwrap().name(), name);
+        }
+        assert_eq!(DispatchPolicy::from_name("rr").unwrap(), DispatchPolicy::RoundRobin);
+        assert_eq!(DispatchPolicy::from_name("ll").unwrap(), DispatchPolicy::LeastLoaded);
+        assert!(DispatchPolicy::from_name("fastest").is_err());
+    }
+
+    #[test]
+    fn default_config_is_the_single_worker_stage() {
+        let cfg = ReplicaConfig::default();
+        assert_eq!(cfg.n, 1);
+        assert_eq!(cfg.dispatch, DispatchPolicy::RoundRobin);
+        assert!(cfg.faults.is_empty());
+        assert!(cfg.max_attempts >= 1);
+        assert!(cfg.breaker_threshold >= 1);
+    }
+}

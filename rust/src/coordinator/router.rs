@@ -5,10 +5,18 @@
 //! requests to the batcher in arrival order.  Property tests assert the two
 //! invariants serving correctness rests on: no request is ever dropped, and
 //! no request is ever duplicated.
+//!
+//! The router is shutdown-path infrastructure: it must keep working while
+//! the rest of the pipeline is tearing down after a stage panic.  Every
+//! lock acquisition therefore recovers from mutex poisoning (the queue
+//! state is a plain `VecDeque` + flags, valid at every instruction, so the
+//! poison bit carries no information here) — a panicking client thread
+//! must not cascade into a router panic on a drain path, possibly inside a
+//! `Drop`, where a second panic aborts the process.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
 use crate::tensor::TensorI32;
@@ -77,6 +85,13 @@ impl Router {
         })
     }
 
+    /// Lock the state, recovering from poisoning (see the module docs: the
+    /// state is valid at every instruction, so a panic elsewhere never
+    /// leaves it inconsistent and shutdown/drain must keep working).
+    fn lock_state(&self) -> MutexGuard<'_, RouterState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// Submit a request; blocks when the in-flight window is full
     /// (backpressure).  Returns the assigned id, or None after shutdown.
     pub fn submit(
@@ -84,9 +99,9 @@ impl Router {
         tokens: TensorI32,
         reply: Sender<Response>,
     ) -> Option<u64> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         while st.accepting && st.queue.len() >= self.config.max_inflight {
-            st = self.space.wait(st).unwrap();
+            st = self.space.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         if !st.accepting {
             return None;
@@ -107,9 +122,9 @@ impl Router {
     /// or the router is shut down (then returns what is left, possibly
     /// empty).
     pub fn pull(&self, max: usize) -> Vec<Request> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         while st.queue.is_empty() && st.accepting {
-            st = self.items.wait(st).unwrap();
+            st = self.items.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         let n = st.queue.len().min(max.max(1));
         let out: Vec<Request> = st.queue.drain(..n).collect();
@@ -124,7 +139,7 @@ impl Router {
     /// request arriving mid-wait is picked up immediately and an empty queue
     /// costs zero CPU.
     pub fn pull_deadline(&self, max: usize, deadline: Instant) -> Vec<Request> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         loop {
             if !st.queue.is_empty() {
                 let n = st.queue.len().min(max.max(1));
@@ -139,25 +154,30 @@ impl Router {
             if now >= deadline {
                 return Vec::new();
             }
-            let (guard, _timeout) = self.items.wait_timeout(st, deadline - now).unwrap();
+            let (guard, _timeout) = self
+                .items
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
             st = guard;
         }
     }
 
-    /// Stop accepting new requests and wake all waiters.
+    /// Stop accepting new requests and wake all waiters.  Must succeed even
+    /// with a poisoned lock — this is the call error paths rely on to
+    /// unwedge blocked stages.
     pub fn shutdown(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.lock_state();
         st.accepting = false;
         self.items.notify_all();
         self.space.notify_all();
     }
 
     pub fn queued(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.lock_state().queue.len()
     }
 
     pub fn is_accepting(&self) -> bool {
-        self.state.lock().unwrap().accepting
+        self.lock_state().accepting
     }
 }
 
@@ -247,6 +267,30 @@ mod tests {
         let (n, waited) = puller.join().unwrap();
         assert_eq!(n, 1);
         assert!(waited < Duration::from_secs(2), "woke after {waited:?}");
+    }
+
+    #[test]
+    fn poisoned_router_still_shuts_down_cleanly() {
+        // A client thread panicking while holding the state lock poisons
+        // the mutex.  The router must still shut down, reject new
+        // submissions and drain what was queued — shutdown-path calls
+        // recover from the poison instead of propagating it.
+        let r = Router::new(RouterConfig::default());
+        let (tx, _rx) = mpsc::channel();
+        r.submit(tokens(), tx.clone()).unwrap();
+        let r2 = Arc::clone(&r);
+        let poisoner = std::thread::spawn(move || {
+            let _guard = r2.state.lock().unwrap();
+            panic!("poison the router state");
+        });
+        assert!(poisoner.join().is_err());
+        assert!(r.state.is_poisoned(), "the panic above must poison the lock");
+        assert_eq!(r.queued(), 1);
+        r.shutdown();
+        assert!(!r.is_accepting());
+        assert!(r.submit(tokens(), tx).is_none());
+        assert_eq!(r.pull(10).len(), 1);
+        assert!(r.pull(10).is_empty());
     }
 
     #[test]

@@ -73,6 +73,30 @@
 //! Issued/used/wasted lifecycle counts live in `ServingMetrics::spec`
 //! (`SpecCounters`, consistent snapshots).
 //!
+//! # Fault-tolerant replica pool (cloud tier)
+//!
+//! The cloud stage does not run the continuation on its own thread: it owns
+//! a [`ReplicaPool`] ([`ServiceConfig::replicas`], `--replicas N`) of
+//! worker lanes and dispatches each coalesced group to one of them —
+//! round-robin or least-loaded — under a simulated offload deadline, with
+//! bounded re-route-and-retry (seeded exponential backoff), per-replica
+//! circuit breakers, and graceful degradation to on-device final-exit
+//! inference when no replica can serve (see
+//! [`crate::coordinator::replicas`] for the machinery and
+//! [`crate::sim::faults`] for the deterministic `--faults` schedule that
+//! exercises it).  Under the default config — one healthy replica — the
+//! pool reproduces the single-worker cloud stage bit for bit, so the
+//! pipelined-matches-serial suites are unaffected.
+//!
+//! With faults enabled, pipelined==serial *bit-identity* no longer holds
+//! (the two paths dispatch in different sequence-number order, so faults
+//! land on different groups); the service instead guarantees the **weaker
+//! determinism contract** asserted by `tests/failure_injection.rs`: every
+//! request is answered exactly once (`dispatched == completed + rerouted +
+//! fallback` at shutdown), per-replica completions happen in per-replica
+//! dispatch order, and two runs with the same `(seed, fault schedule)`
+//! produce bit-identical replies and fault/retry counters.
+//!
 //! # Dynamic link scenarios and the context-aware split policy
 //!
 //! The uplink need not be constant: [`ServiceConfig::link`] selects a
@@ -105,13 +129,14 @@ use std::time::{Duration, Instant};
 use anyhow::{Context as _, Result};
 
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
-use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::metrics::{PoolCounters, ServingMetrics};
+use crate::coordinator::replicas::{ReplicaConfig, ReplicaPool};
 use crate::coordinator::router::{Response, Router};
 use crate::cost::CostModel;
 use crate::cost::NetworkProfile;
-use crate::model::{plan_batches_fused, ExitOutput, HiddenState, MultiExitModel};
+use crate::model::{ExitOutput, HiddenState, MultiExitModel};
 use crate::policy::{ContextualSplitPolicy, SplitEePolicy, SplitEeSPolicy};
-use crate::runtime::{thread_launches, SpecCounters, SpecHandle, SpecLane, SpecResult};
+use crate::runtime::{thread_launches, SpecCounters, SpecHandle, SpecLane};
 use crate::sim::device::{CloudSim, EdgeSim};
 use crate::sim::link::{LinkScenario, LinkSim, LinkState, TransferResult};
 use crate::tensor::TensorF32;
@@ -221,6 +246,10 @@ pub struct ServiceConfig {
     /// identical condition sequence; [`LinkScenario::Static`] (the
     /// `Default`) is the fixed-link behaviour, bit for bit.
     pub link: LinkScenario,
+    /// cloud-tier replica pool: lane count, dispatch policy, fault
+    /// schedule, deadline/retry/breaker parameters.  The `Default` — one
+    /// healthy replica — reproduces the single-worker cloud stage exactly.
+    pub replicas: ReplicaConfig,
 }
 
 /// Policy state held by the service.
@@ -258,59 +287,65 @@ impl PolicyState {
 }
 
 /// What the edge stage hands to the cloud stage for one batch.
-struct EdgeWork {
-    batch: Batch,
+/// `pub(crate)` because the replica pool ([`crate::coordinator::replicas`])
+/// is the cloud stage's serving backend and consumes it directly.
+pub(crate) struct EdgeWork {
+    pub(crate) batch: Batch,
     /// hidden state at the split layer (consumed by the cloud continuation;
     /// this is the one host transfer the split boundary requires) — `None`
     /// when no row offloads, so fully-exiting batches skip the transfer.
     /// Arc-shared with an in-flight speculative launch, so speculation
     /// never copies the activation buffer
-    h: Option<Arc<TensorF32>>,
-    exit_out: ExitOutput,
+    pub(crate) h: Option<Arc<TensorF32>>,
+    pub(crate) exit_out: ExitOutput,
     /// per earlier layer, per row: exit-head confidences (SplitEE-S only)
-    prefix_conf: Vec<Vec<f32>>,
+    pub(crate) prefix_conf: Vec<Vec<f32>>,
     /// rows (by batch index) whose confidence fell below alpha
-    offload_rows: Vec<usize>,
-    split: usize,
-    edge_ms: f64,
+    pub(crate) offload_rows: Vec<usize>,
+    pub(crate) split: usize,
+    pub(crate) edge_ms: f64,
     /// activation payload size for the uplink simulator
-    payload: usize,
+    pub(crate) payload: usize,
     /// executable launches this batch's edge stage performed
-    launches: u64,
+    pub(crate) launches: u64,
     /// in-flight speculative continuation (blocks past the split + final
     /// head over the full batch), issued concurrently with the exit-head
     /// verdict.  `None` when speculation is off or the batch fully exited
     /// (kill-on-exit happens in the edge stage).
-    spec: Option<SpecHandle>,
+    pub(crate) spec: Option<SpecHandle>,
 }
 
 /// One offloaded row's final-layer result from the cloud continuation.
-struct CloudRow {
-    row: usize,
-    pred: usize,
-    conf: f32,
-    cloud_ms: f64,
+pub(crate) struct CloudRow {
+    pub(crate) row: usize,
+    pub(crate) pred: usize,
+    pub(crate) conf: f32,
+    pub(crate) cloud_ms: f64,
+    /// the pool degraded this row to on-device final exit (no replica could
+    /// serve it): `cloud_ms` is already on the edge-time basis, includes
+    /// the retry penalty, and the reply stage must not draw a link transfer
+    pub(crate) fallback: bool,
 }
 
 /// Edge work plus cloud results, ready for the reply stage (the hidden
 /// state has been dropped — replies only need the head outputs).
-struct ReplyWork {
-    batch: Batch,
-    exit_out: ExitOutput,
-    prefix_conf: Vec<Vec<f32>>,
-    split: usize,
-    edge_ms: f64,
-    payload: usize,
-    cloud_out: Vec<CloudRow>,
+pub(crate) struct ReplyWork {
+    pub(crate) batch: Batch,
+    pub(crate) exit_out: ExitOutput,
+    pub(crate) prefix_conf: Vec<Vec<f32>>,
+    pub(crate) split: usize,
+    pub(crate) edge_ms: f64,
+    pub(crate) payload: usize,
+    pub(crate) cloud_out: Vec<CloudRow>,
     /// this batch's share of the simulated cloud compute (pro-rata within
     /// each coalesced launch, so shares sum to the launch totals)
-    cloud_busy_ms: f64,
-    edge_launches: u64,
+    pub(crate) cloud_busy_ms: f64,
+    pub(crate) edge_launches: u64,
     /// cloud-stage launches, attributed to the group head (0 elsewhere)
-    cloud_launches: u64,
+    pub(crate) cloud_launches: u64,
     /// on the group head: how many batches contributed offloaded rows to
     /// the group's launch (0 = the group launched nothing)
-    group: Option<usize>,
+    pub(crate) group: Option<usize>,
 }
 
 /// Edge share: embed + one fused block-range launch to the split + the
@@ -462,150 +497,6 @@ fn edge_stage_after_embed(
     })
 }
 
-/// Cloud share for one coalesced group of same-split batches: gather every
-/// batch's offloaded rows into one tensor, run ≤ 1 fused `forward_rest` +
-/// final-head launch pair per plan chunk (a group bounded by the largest
-/// compiled batch size is exactly one chunk), and attribute results and
-/// simulated time back to each batch.  A group of one is the uncoalesced
-/// case — the serial path always uses that.
-fn cloud_stage_group(
-    model: &MultiExitModel,
-    cloud: &CloudSim,
-    mut group: Vec<EdgeWork>,
-) -> Result<Vec<ReplyWork>> {
-    let split = group[0].split;
-    let launches0 = thread_launches();
-
-    // Speculation resolution.  A *singleton* group whose batch carries a
-    // speculative continuation serves straight from that result — the rows
-    // it needs are direct reads out of the full-batch launch, bit-identical
-    // to the gathered launch on decision-transparent backends.  A *merged*
-    // group kills every member's pending launch first (counted wasted), so
-    // a coalesced launch never mixes speculative rows with gathered rows.
-    let mut spec_result: Option<SpecResult> = None;
-    if group.len() == 1 {
-        if let Some(handle) = group[0].spec.take() {
-            match handle.take() {
-                Ok(r) => spec_result = Some(r),
-                // already counted wasted by take(); recompute below
-                Err(e) => log::warn!("speculative continuation failed ({e:#}) — recomputing"),
-            }
-        }
-    } else {
-        for work in group.iter_mut() {
-            if let Some(handle) = work.spec.take() {
-                handle.kill();
-            }
-        }
-    }
-
-    let mut cloud_out: Vec<Vec<CloudRow>> =
-        group.iter().map(|w| Vec::with_capacity(w.offload_rows.len())).collect();
-    let mut busy = vec![0.0f64; group.len()];
-    // launches attributed to this group: the speculative launch count when
-    // its result did the work, the on-thread delta otherwise — never both
-    let mut spec_launches: Option<u64> = None;
-    if let Some(result) = spec_result {
-        let SpecResult { head, launches, host_ms } = result;
-        let out = ExitOutput::from_head(head)?;
-        let work = &group[0];
-        let real = work.offload_rows.len();
-        // Normalize the simulated-time basis to the launch this result
-        // replaced: the speculative continuation ran the full padded batch,
-        // while the serial path runs the gathered rows padded to a compiled
-        // size.  Compute is row-linear, so scale the measured host time by
-        // that ratio — otherwise a batch where few rows offload would report
-        // inflated cloud latency under speculation (decisions never depend
-        // on measured time, so this is purely a metrics-comparability rule).
-        let spec_rows = work.batch.padded_to.max(1);
-        let serial_rows = plan_batches_fused(real, model.batch_sizes())
-            .first()
-            .map(|&(bsz, _)| bsz)
-            .unwrap_or(spec_rows);
-        let cloud_ms =
-            cloud.simulated_ms(host_ms * serial_rows as f64 / spec_rows as f64);
-        for &row in &work.offload_rows {
-            cloud_out[0].push(CloudRow {
-                row,
-                pred: out.pred[row],
-                conf: out.conf[row],
-                cloud_ms,
-            });
-            busy[0] += cloud_ms / real as f64;
-        }
-        spec_launches = Some(launches);
-    } else {
-        // union gather across the group (host-side, one contiguous copy per
-        // batch)
-        let mut union: Option<TensorF32> = None;
-        let mut origin: Vec<(usize, usize)> = Vec::new(); // (group index, batch row)
-        for (gi, work) in group.iter().enumerate() {
-            if work.offload_rows.is_empty() {
-                continue;
-            }
-            let gathered = work
-                .h
-                .as_ref()
-                .context("offloaded rows without a split-boundary hidden state")?
-                .gather_rows(&work.offload_rows)?;
-            match &mut union {
-                Some(u) => u.extend_rows(&gathered).map_err(|e| anyhow::anyhow!(e))?,
-                None => union = Some(gathered),
-            }
-            origin.extend(work.offload_rows.iter().map(|&r| (gi, r)));
-        }
-
-        if let Some(union) = union {
-            let plan = plan_batches_fused(origin.len(), model.batch_sizes());
-            let mut done = 0usize;
-            for (bsz, real) in plan {
-                let chunk = union.slice_rows(done, done + real)?.pad_rows_to(bsz)?;
-                // compile-if-needed before the timed region (see warm_range)
-                model.warm_range(bsz, split, model.n_layers())?;
-                let t1 = Instant::now();
-                let out = model.forward_rest_exit(&chunk, split - 1)?;
-                let cloud_ms = cloud.simulated_ms(t1.elapsed().as_secs_f64() * 1e3);
-                // Per-row attribution: every row in this launch experienced
-                // the same simulated cloud latency; busy time splits pro rata
-                // so the per-batch accounting sums to the launch total.
-                for i in 0..real {
-                    let (gi, row) = origin[done + i];
-                    cloud_out[gi].push(CloudRow {
-                        row,
-                        pred: out.pred[i],
-                        conf: out.conf[i],
-                        cloud_ms,
-                    });
-                    busy[gi] += cloud_ms / real as f64;
-                }
-                done += real;
-            }
-        }
-    }
-    let cloud_launches = spec_launches.unwrap_or_else(|| thread_launches() - launches0);
-    // coalescing stats count only batches whose offloads shared the launch
-    let contributing = group.iter().filter(|w| !w.offload_rows.is_empty()).count();
-
-    let mut replies = Vec::with_capacity(group.len());
-    for (gi, work) in group.into_iter().enumerate() {
-        let EdgeWork { batch, exit_out, prefix_conf, split, edge_ms, payload, launches, .. } = work;
-        replies.push(ReplyWork {
-            batch,
-            exit_out,
-            prefix_conf,
-            split,
-            edge_ms,
-            payload,
-            cloud_out: std::mem::take(&mut cloud_out[gi]),
-            cloud_busy_ms: busy[gi],
-            edge_launches: launches,
-            cloud_launches: if gi == 0 { cloud_launches } else { 0 },
-            group: if gi == 0 { Some(contributing) } else { None },
-        });
-    }
-    Ok(replies)
-}
-
 /// Reply share: uplink simulation for offloaded rows, reward computation,
 /// bandit updates, metrics and reply delivery.  Everything stateful lives
 /// here, in batch order — this is what keeps pipelined decisions identical
@@ -661,6 +552,15 @@ fn reply_stage(
     // (pred, conf, extra_latency_ms, outage) for rows that were offloaded
     let mut final_by_row: Vec<Option<(usize, f32, f64, bool)>> = vec![None; n_real];
     for cr in cloud_out {
+        // a pool-degraded row already carries its on-device latency (edge
+        // compute basis, plus the simulated retry/backoff penalty): no
+        // transfer is attempted — and no link rng drawn, which keeps the
+        // fault replay deterministic — and the row accounts exactly like an
+        // outage fallback below
+        if cr.fallback {
+            final_by_row[cr.row] = Some((cr.pred, cr.conf, cr.cloud_ms, true));
+            continue;
+        }
         // a scenario-level outage fails every transfer deterministically
         // (no rng drawn); otherwise the stochastic link decides
         let result = if state.outage {
@@ -755,6 +655,25 @@ fn reply_stage(
     }
 }
 
+/// Join a pipeline stage, converting a stage panic into an error naming the
+/// stage — instead of letting the panic propagate (directly, or via
+/// `thread::scope`'s implicit-join re-panic) and abort the whole serve
+/// call.  The payload text is preserved when it is a string, the common
+/// case for `panic!`/`assert!`/`expect`.
+fn join_stage<T>(handle: std::thread::ScopedJoinHandle<'_, Result<T>>, stage: &str) -> Result<T> {
+    match handle.join() {
+        Ok(res) => res,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(anyhow::anyhow!("{stage} stage panicked: {msg}"))
+        }
+    }
+}
+
 /// The serving engine.
 pub struct Service {
     model: Arc<MultiExitModel>,
@@ -774,6 +693,10 @@ pub struct Service {
     coalesce: CoalesceConfig,
     /// the speculation lane (worker thread) when speculation resolved on
     spec_lane: Option<SpecLane>,
+    /// the cloud tier: a pool of replica lanes with fault injection,
+    /// deadline/retry, circuit breakers and edge-only degradation (its
+    /// counters are shared with `metrics.pool`)
+    replicas: ReplicaPool,
     pub metrics: ServingMetrics,
 }
 
@@ -824,8 +747,16 @@ impl Service {
                         .unwrap_or(false)
             }
         };
+        // the pool's counters are shared with the metrics report, so
+        // per-replica accounting survives the pool (and prints with the
+        // rest of the serving summary)
+        let pool_counters = PoolCounters::new(config.replicas.n.max(1));
+        let mut metrics = ServingMetrics::new(l);
+        metrics.pool = Arc::clone(&pool_counters);
+        let replicas = ReplicaPool::new(Arc::clone(&model), config.replicas.clone(), pool_counters);
         Service {
-            metrics: ServingMetrics::new(l),
+            metrics,
+            replicas,
             model,
             cost,
             edge: EdgeSim::default(),
@@ -894,7 +825,7 @@ impl Service {
         let spec_lane = self.spec_lane.clone();
         let spec_counters = Arc::clone(&self.metrics.spec);
 
-        let Service { model, policy, metrics, link, scenario, .. } = self;
+        let Service { model, policy, metrics, link, scenario, replicas, .. } = self;
         // The link scenario advances once per batch, here in the reply
         // stage's ownership: the state sampled when a batch's split is
         // chosen is the state its replies are accounted (and its contextual
@@ -908,14 +839,19 @@ impl Service {
         let router_batcher = Arc::clone(&router);
 
         std::thread::scope(|s| -> Result<()> {
-            // ---- stage 1: batch formation (owns the max_wait deadline)
-            s.spawn(move || {
+            // ---- stage 1: batch formation (owns the max_wait deadline).
+            // The handle is kept (and joined below) so a batcher panic —
+            // e.g. ragged request widths reaching tensor concat — surfaces
+            // as a named error instead of aborting via thread::scope's
+            // implicit-join re-panic.
+            let batcher_handle = s.spawn(move || -> Result<()> {
                 let mut batcher = Batcher::new(router_batcher, batcher_config);
                 while let Some(batch) = batcher.next_batch() {
                     if batch_tx.send(batch).is_err() {
                         break; // downstream stage is gone (error shutdown)
                     }
                 }
+                Ok(())
             });
 
             // ---- stage 2: edge compute
@@ -1005,7 +941,7 @@ impl Service {
                         }
                     }
                     let mut closed = false;
-                    for reply in cloud_stage_group(&model_cloud, &cloud, group)? {
+                    for reply in replicas.serve_group(&model_cloud, &edge, &cloud, group)? {
                         if cloud_tx.send(reply).is_err() {
                             closed = true;
                             break;
@@ -1035,8 +971,12 @@ impl Service {
                 }
             }
 
-            // The reply loop ending means the cloud stage has exited.
-            let cloud_res = cloud_handle.join().expect("cloud stage panicked");
+            // The reply loop ending means the cloud stage has exited (its
+            // sender dropped on return *or* unwind), so this join is
+            // immediate.  Each join converts a stage panic into an error
+            // naming the stage; on any failure the router is shut down so
+            // sibling stages blocked on it unwedge and join too.
+            let cloud_res = join_stage(cloud_handle, "cloud");
             // Unblock an edge stage waiting for a split token...
             drop(split_tx);
             if cloud_res.is_err() {
@@ -1044,11 +984,15 @@ impl Service {
                 // router, so every stage can be joined.
                 router.shutdown();
             }
-            let edge_res = edge_handle.join().expect("edge stage panicked");
+            let edge_res = join_stage(edge_handle, "edge");
             if edge_res.is_err() {
                 router.shutdown();
             }
-            edge_res.and(cloud_res)
+            let batcher_res = join_stage(batcher_handle, "batcher");
+            if batcher_res.is_err() {
+                router.shutdown();
+            }
+            edge_res.and(cloud_res).and(batcher_res)
         })
     }
 
@@ -1068,7 +1012,8 @@ impl Service {
         // (tests/speculation.rs), and with one thread there is nothing to
         // overlap the continuation with.
         let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch, None)?;
-        let mut replies = cloud_stage_group(&self.model, &self.cloud, vec![work])?;
+        let mut replies =
+            self.replicas.serve_group(&self.model, &self.edge, &self.cloud, vec![work])?;
         let work = replies.pop().expect("one reply per batch");
         reply_stage(
             work,

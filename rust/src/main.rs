@@ -110,6 +110,8 @@ Subcommands
                 contextual|fixed:K|final] [--network wifi|5g|4g|3g]
                 [--listen ADDR] [--speculate on|off|auto]
                 [--link static|markov|markov:SEED|trace:PATH]
+                [--replicas N] [--dispatch round-robin|least-loaded]
+                [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]]
 
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
@@ -125,6 +127,14 @@ Common flags
                     (default: static — the fixed --network profile; markov
                     and trace vary bandwidth/latency/offload-cost per batch;
                     pair with --policy contextual for per-context splits)
+  --replicas N      cloud-tier replica lanes (default: 1); offloads retry
+                    on a different replica with backoff, degrade to
+                    on-device final exit when none can serve
+  --dispatch NAME   replica dispatch policy: round-robin|least-loaded
+  --faults SPEC     deterministic replica fault schedule, '|'-joined
+                    kill@BATCH:REPLICA, slow@BATCH:REPLICAxFACTOR and
+                    flaky@REPLICA:P events, optional ',seed=N' trailer
+                    (default: none; also via SPLITEE_FAULTS in tests)
   --o N             offloading cost in lambda units (default: 5)
   --mu X            cost weight in the reward (default: 0.1)
   --beta X          UCB exploration (default: 1.0)
@@ -273,6 +283,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_name(&settings.speculate)?,
         link: scenario,
+        replicas: settings.replica_config()?,
     };
 
     let router = Router::new(RouterConfig::default());

@@ -64,6 +64,14 @@ impl CloudSim {
     pub fn simulated_ms(&self, real_host_ms: f64) -> f64 {
         real_host_ms * self.compute_scale + self.service_overhead_ms
     }
+
+    /// A copy with `factor`-scaled compute speed (service overhead
+    /// unchanged).  The replica pool derives per-lane profiles from one
+    /// base profile this way: `scaled(1.0)` is the homogeneous pool, and a
+    /// `slow@` fault is just a large transient factor.
+    pub fn scaled(&self, factor: f64) -> CloudSim {
+        CloudSim { compute_scale: self.compute_scale * factor, ..*self }
+    }
 }
 
 #[cfg(test)]
@@ -77,6 +85,17 @@ mod tests {
         assert!(e.simulated_ms(10.0) > 10.0);
         assert!(c.simulated_ms(10.0) < 10.0 + c.service_overhead_ms + 10.0);
         assert!(c.simulated_ms(10.0) >= c.service_overhead_ms);
+    }
+
+    #[test]
+    fn scaled_multiplies_compute_not_overhead() {
+        let c = CloudSim::default();
+        let slow = c.scaled(8.0);
+        assert!((slow.compute_scale - 8.0 * c.compute_scale).abs() < 1e-12);
+        assert!((slow.service_overhead_ms - c.service_overhead_ms).abs() < 1e-12);
+        let base = c.simulated_ms(10.0) - c.service_overhead_ms;
+        let scaled = slow.simulated_ms(10.0) - slow.service_overhead_ms;
+        assert!((scaled - 8.0 * base).abs() < 1e-9);
     }
 
     #[test]

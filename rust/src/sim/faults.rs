@@ -1,0 +1,381 @@
+//! Deterministic replica fault schedules (`--faults`).
+//!
+//! The multi-replica cloud tier ([`crate::coordinator::replicas`]) is only
+//! testable if its failures are reproducible, so faults are not drawn from
+//! wall clock or thread timing: every event is keyed on the pool's
+//! **dispatch sequence number** (one tick per dispatch attempt), and the
+//! only randomness — flaky-failure draws — comes from per-replica streams
+//! expanded from one schedule seed.  The same `(seed, schedule)` pair
+//! therefore replays the identical kill/slow/flaky trajectory on every run,
+//! which is the foundation of the weaker determinism contract documented in
+//! ARCHITECTURE.md.
+//!
+//! Grammar (events joined by `|`, optional trailing `,seed=<u64>`):
+//!
+//! - `kill@<batch>:<replica>` — the replica dies at dispatch sequence
+//!   `batch` and stays dead (its lane thread exits; later dispatches fail
+//!   fast).
+//! - `slow@<batch>:<replica>x<factor>` — from dispatch sequence `batch` on,
+//!   the replica's host compute time is multiplied by `factor` (a large
+//!   factor forces offload-deadline timeouts).
+//! - `flaky@<replica>:<p>` — every dispatch to the replica fails with
+//!   probability `p`, drawn from that replica's seeded stream.
+//!
+//! `kill@2:0|flaky@1:0.25,seed=7` kills replica 0 at its first dispatch at
+//! or after sequence 2 and makes replica 1 drop about a quarter of its
+//! dispatches, reproducibly under seed 7.  `SPLITEE_FAULTS` carries the
+//! same grammar into the test suite and CI fault matrix.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Seed used when a schedule does not carry an explicit `,seed=` trailer.
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17;
+
+/// One scheduled fault.  `batch` counts the pool's dispatch attempts — the
+/// deterministic clock every event is keyed on (with coalescing off and no
+/// retries it equals the served batch index).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// the replica dies at dispatch sequence `batch` and never recovers
+    Kill {
+        /// first dispatch sequence at which the replica is dead
+        batch: u64,
+        /// target replica id
+        replica: usize,
+    },
+    /// host compute is `factor`x slower from dispatch sequence `batch` on
+    Slow {
+        /// first dispatch sequence at which the slowdown applies
+        batch: u64,
+        /// target replica id
+        replica: usize,
+        /// multiplicative host-time factor (> 0; overlapping events compose)
+        factor: f64,
+    },
+    /// every dispatch to the replica fails with probability `p`
+    Flaky {
+        /// target replica id
+        replica: usize,
+        /// per-dispatch failure probability in `[0, 1]`
+        p: f64,
+    },
+}
+
+impl FaultEvent {
+    /// The replica this event targets.
+    pub fn replica(&self) -> usize {
+        match *self {
+            FaultEvent::Kill { replica, .. }
+            | FaultEvent::Slow { replica, .. }
+            | FaultEvent::Flaky { replica, .. } => replica,
+        }
+    }
+
+    fn render(&self) -> String {
+        match *self {
+            FaultEvent::Kill { batch, replica } => format!("kill@{batch}:{replica}"),
+            FaultEvent::Slow { batch, replica, factor } => {
+                format!("slow@{batch}:{replica}x{factor}")
+            }
+            FaultEvent::Flaky { replica, p } => format!("flaky@{replica}:{p}"),
+        }
+    }
+}
+
+/// A parsed, immutable fault schedule.  The empty schedule (the `Default`)
+/// injects nothing — a pool running under it behaves exactly like the
+/// single-worker cloud stage it replaced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+    seed: u64,
+}
+
+impl Default for FaultSchedule {
+    fn default() -> Self {
+        FaultSchedule::none()
+    }
+}
+
+impl FaultSchedule {
+    /// The empty schedule: no faults ever fire.
+    pub fn none() -> FaultSchedule {
+        FaultSchedule { events: Vec::new(), seed: DEFAULT_FAULT_SEED }
+    }
+
+    /// True when the schedule carries no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The scheduled events, in declaration order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Seed of the per-replica flaky streams.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Canonical spelling; `from_name(name())` round-trips.
+    pub fn name(&self) -> String {
+        if self.events.is_empty() {
+            return "none".to_string();
+        }
+        let events: Vec<String> = self.events.iter().map(FaultEvent::render).collect();
+        format!("{},seed={}", events.join("|"), self.seed)
+    }
+
+    /// Parse a `--faults` spec.  `""` and `"none"` are the empty schedule;
+    /// anything else must match the grammar in the module docs.  This is
+    /// the single source of truth for accepted values — `config.rs`
+    /// validates CLI input by calling it eagerly.
+    pub fn from_name(spec: &str) -> Result<FaultSchedule> {
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "none" {
+            return Ok(FaultSchedule::none());
+        }
+        let mut parts = spec.splitn(2, ',');
+        let events_str = parts.next().unwrap_or("");
+        let seed = match parts.next() {
+            Some(trailer) => {
+                let value = trailer
+                    .strip_prefix("seed=")
+                    .ok_or_else(|| anyhow!("fault trailer {trailer:?} is not seed=<u64>"))?;
+                value
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("fault seed {value:?} is not a u64"))?
+            }
+            None => DEFAULT_FAULT_SEED,
+        };
+        let mut events = Vec::new();
+        for event in events_str.split('|') {
+            events.push(parse_event(event)?);
+        }
+        Ok(FaultSchedule { events, seed })
+    }
+
+    /// Schedule from the `SPLITEE_FAULTS` environment hook (unset/empty =
+    /// no faults).  Panics on an invalid value, naming the variable — a
+    /// mistyped schedule must not silently serve fault-free.
+    pub fn from_env() -> FaultSchedule {
+        match std::env::var("SPLITEE_FAULTS") {
+            Ok(v) => match FaultSchedule::from_name(&v) {
+                Ok(schedule) => schedule,
+                Err(e) => panic!("SPLITEE_FAULTS={v:?} is invalid: {e:#}"),
+            },
+            Err(_) => FaultSchedule::none(),
+        }
+    }
+}
+
+fn bad_shape(event: &str, shape: &str) -> anyhow::Error {
+    anyhow!("fault event {event:?} must be {shape}")
+}
+
+fn num<T: std::str::FromStr>(event: &str, field: &str) -> Result<T> {
+    field
+        .trim()
+        .parse()
+        .map_err(|_| anyhow!("number {field:?} in fault event {event:?} does not parse"))
+}
+
+fn parse_event(event: &str) -> Result<FaultEvent> {
+    let event = event.trim();
+    let (kind, rest) = event
+        .split_once('@')
+        .ok_or_else(|| anyhow!("fault event {event:?} is not kill@… | slow@… | flaky@…"))?;
+    match kind {
+        "kill" => {
+            let (batch, replica) = rest
+                .split_once(':')
+                .ok_or_else(|| bad_shape(event, "kill@<batch>:<replica>"))?;
+            Ok(FaultEvent::Kill { batch: num(event, batch)?, replica: num(event, replica)? })
+        }
+        "slow" => {
+            let shape = "slow@<batch>:<replica>x<factor>";
+            let (batch, rest) = rest.split_once(':').ok_or_else(|| bad_shape(event, shape))?;
+            let (replica, factor) = rest.split_once('x').ok_or_else(|| bad_shape(event, shape))?;
+            let factor: f64 = num(event, factor)?;
+            if !(factor > 0.0 && factor.is_finite()) {
+                bail!("slow factor in {event:?} must be a positive finite number");
+            }
+            Ok(FaultEvent::Slow { batch: num(event, batch)?, replica: num(event, replica)?, factor })
+        }
+        "flaky" => {
+            let (replica, p) = rest
+                .split_once(':')
+                .ok_or_else(|| bad_shape(event, "flaky@<replica>:<p>"))?;
+            let p: f64 = num(event, p)?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("flaky probability in {event:?} must be in [0, 1]");
+            }
+            Ok(FaultEvent::Flaky { replica: num(event, replica)?, p })
+        }
+        other => bail!("unknown fault kind {other:?} in {event:?} (kill | slow | flaky)"),
+    }
+}
+
+/// Verdict for one dispatch attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultVerdict {
+    /// no event applies: the dispatch proceeds normally
+    Healthy,
+    /// the replica is dead (a kill event at or before this sequence)
+    Killed,
+    /// a flaky draw failed this dispatch
+    Failed,
+    /// compute proceeds with host time multiplied by the factor
+    Slowed(f64),
+}
+
+/// Mutable replay state: the schedule plus one seeded stream per replica.
+/// Flaky draws are consumed in dispatch order on live replicas only, so the
+/// stream position — and with it the whole trajectory — is a pure function
+/// of `(seed, schedule, dispatch sequence)`.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    schedule: FaultSchedule,
+    rngs: Vec<Rng>,
+}
+
+impl FaultState {
+    /// State for a pool of `n_replicas` lanes.
+    pub fn new(schedule: FaultSchedule, n_replicas: usize) -> FaultState {
+        let mut base = Rng::new(schedule.seed);
+        let rngs = (0..n_replicas as u64).map(|i| base.fork(i)).collect();
+        FaultState { schedule, rngs }
+    }
+
+    /// Evaluate the schedule for dispatch `seq` targeting `replica`.
+    /// Precedence: killed > flaky-failed > slowed.  A killed replica never
+    /// consumes a flaky draw (it is dead before the draw would happen).
+    pub fn verdict(&mut self, seq: u64, replica: usize) -> FaultVerdict {
+        let mut slow = 1.0f64;
+        for event in self.schedule.events.iter() {
+            match *event {
+                FaultEvent::Kill { batch, replica: r } if r == replica && seq >= batch => {
+                    return FaultVerdict::Killed;
+                }
+                FaultEvent::Slow { batch, replica: r, factor } if r == replica && seq >= batch => {
+                    slow *= factor;
+                }
+                _ => {}
+            }
+        }
+        for event in self.schedule.events.iter() {
+            if let FaultEvent::Flaky { replica: r, p } = *event {
+                if r == replica && replica < self.rngs.len() && self.rngs[replica].chance(p) {
+                    return FaultVerdict::Failed;
+                }
+            }
+        }
+        if slow != 1.0 {
+            FaultVerdict::Slowed(slow)
+        } else {
+            FaultVerdict::Healthy
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_none_parse_to_the_empty_schedule() {
+        assert!(FaultSchedule::from_name("").unwrap().is_empty());
+        assert!(FaultSchedule::from_name("none").unwrap().is_empty());
+        assert_eq!(FaultSchedule::default().name(), "none");
+    }
+
+    #[test]
+    fn full_grammar_round_trips() {
+        let spec = "kill@2:0|slow@5:1x8|flaky@2:0.25,seed=7";
+        let schedule = FaultSchedule::from_name(spec).unwrap();
+        assert_eq!(schedule.events().len(), 3);
+        assert_eq!(schedule.seed(), 7);
+        assert_eq!(schedule.events()[0], FaultEvent::Kill { batch: 2, replica: 0 });
+        assert_eq!(schedule.events()[1], FaultEvent::Slow { batch: 5, replica: 1, factor: 8.0 });
+        assert_eq!(schedule.events()[2], FaultEvent::Flaky { replica: 2, p: 0.25 });
+        let round = FaultSchedule::from_name(&schedule.name()).unwrap();
+        assert_eq!(round, schedule);
+    }
+
+    #[test]
+    fn seed_defaults_when_omitted() {
+        let schedule = FaultSchedule::from_name("flaky@0:0.5").unwrap();
+        assert_eq!(schedule.seed(), DEFAULT_FAULT_SEED);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_the_grammar_named() {
+        for spec in [
+            "kaboom@1:0",
+            "kill@1",
+            "kill@x:0",
+            "slow@1:0",
+            "slow@1:0x-3",
+            "slow@1:0xinf",
+            "flaky@0:1.5",
+            "flaky@0:0.5,sneed=9",
+            "flaky@0:0.5,seed=banana",
+        ] {
+            assert!(FaultSchedule::from_name(spec).is_err(), "{spec:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn kill_applies_from_its_batch_on() {
+        let schedule = FaultSchedule::from_name("kill@3:1").unwrap();
+        let mut state = FaultState::new(schedule, 2);
+        assert_eq!(state.verdict(2, 1), FaultVerdict::Healthy);
+        assert_eq!(state.verdict(3, 1), FaultVerdict::Killed);
+        assert_eq!(state.verdict(100, 1), FaultVerdict::Killed);
+        assert_eq!(state.verdict(100, 0), FaultVerdict::Healthy);
+    }
+
+    #[test]
+    fn overlapping_slow_events_compose_multiplicatively() {
+        let schedule = FaultSchedule::from_name("slow@0:0x2|slow@4:0x3").unwrap();
+        let mut state = FaultState::new(schedule, 1);
+        assert_eq!(state.verdict(0, 0), FaultVerdict::Slowed(2.0));
+        assert_eq!(state.verdict(4, 0), FaultVerdict::Slowed(6.0));
+    }
+
+    #[test]
+    fn kill_precedes_slow_and_flaky() {
+        let schedule = FaultSchedule::from_name("kill@0:0|slow@0:0x9|flaky@0:1").unwrap();
+        let mut state = FaultState::new(schedule, 1);
+        assert_eq!(state.verdict(0, 0), FaultVerdict::Killed);
+    }
+
+    #[test]
+    fn flaky_trajectory_replays_bit_identically() {
+        let schedule = FaultSchedule::from_name("flaky@0:0.4|flaky@1:0.6,seed=99").unwrap();
+        let mut a = FaultState::new(schedule.clone(), 2);
+        let mut b = FaultState::new(schedule, 2);
+        let trace = |state: &mut FaultState| -> Vec<FaultVerdict> {
+            (0..64).map(|seq| state.verdict(seq, (seq % 2) as usize)).collect()
+        };
+        let ta = trace(&mut a);
+        assert_eq!(ta, trace(&mut b));
+        // p in (0, 1) on both replicas: both outcomes must occur
+        assert!(ta.contains(&FaultVerdict::Failed));
+        assert!(ta.contains(&FaultVerdict::Healthy));
+    }
+
+    #[test]
+    fn flaky_extremes_are_certain() {
+        let schedule = FaultSchedule::from_name("flaky@0:1|flaky@1:0").unwrap();
+        let mut state = FaultState::new(schedule, 2);
+        for seq in 0..16 {
+            assert_eq!(state.verdict(seq, 0), FaultVerdict::Failed);
+            assert_eq!(state.verdict(seq, 1), FaultVerdict::Healthy);
+        }
+    }
+}

@@ -15,12 +15,20 @@
 //! serving coordinator threads through the uplink simulation, the
 //! instantaneous offloading cost and the context-aware split policy.
 //!
+//! The [`faults`] module hosts the **deterministic replica fault schedule**
+//! ([`FaultSchedule`], `--faults kill@…|slow@…|flaky@…`): scripted
+//! kill/slow/flaky events keyed on the replica pool's dispatch sequence,
+//! which the fault-tolerant cloud tier
+//! ([`crate::coordinator::replicas`]) replays bit-identically from a seed.
+//!
 //! [`NetworkProfile`]: crate::cost::NetworkProfile
 
 pub mod device;
+pub mod faults;
 pub mod link;
 pub mod pipeline;
 
 pub use device::{CloudSim, EdgeSim};
+pub use faults::{FaultEvent, FaultSchedule, FaultState, FaultVerdict};
 pub use link::{LinkScenario, LinkSim, LinkState, LinkTrace, MarkovLink};
 pub use pipeline::{CoInferencePipeline, SampleTrace};

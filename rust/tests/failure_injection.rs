@@ -10,13 +10,15 @@ use std::sync::Arc;
 use splitee::config::Manifest;
 use splitee::coordinator::service::{PolicyKind, SpeculateMode};
 use splitee::coordinator::{
-    Batcher, BatcherConfig, CoalesceConfig, Router, RouterConfig, Service, ServiceConfig,
+    Batcher, BatcherConfig, CoalesceConfig, PoolStat, ReplicaConfig, Response, Router,
+    RouterConfig, Service, ServiceConfig,
 };
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
 use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::Backend;
 use splitee::sim::link::{LinkScenario, LinkSim, TransferResult};
+use splitee::sim::FaultSchedule;
 use splitee::tensor::TensorI32;
 
 fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
@@ -225,6 +227,7 @@ fn link_outage_with_speculation_in_flight_resolves_cleanly() {
         coalesce: CoalesceConfig { enabled: false, max_wait: std::time::Duration::ZERO },
         speculate: SpeculateMode::On,
         link: LinkScenario::from_env(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -277,6 +280,7 @@ fn router_shutdown_with_speculation_in_flight_resolves_every_launch() {
             coalesce: Default::default(),
             speculate: SpeculateMode::On,
             link: LinkScenario::from_env(),
+            replicas: Default::default(),
         };
         let router = Router::new(RouterConfig { max_inflight: 32 });
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -328,6 +332,255 @@ fn router_shutdown_with_speculation_in_flight_resolves_every_launch() {
             "round {round}: wasted speculative work bled into the launch counters"
         );
     }
+}
+
+// ---- replica pool under faults -------------------------------------------
+
+/// Run `f` under a watchdog thread: the test fails if `f` neither finishes
+/// nor panics within `secs` — the no-hang half of the robustness contract
+/// ("a replica kill with groups in flight must not wedge the pipeline").
+fn with_watchdog<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Ok(v) => {
+            worker.join().unwrap();
+            v
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            // the worker panicked before sending: surface its panic, not ours
+            if let Err(p) = worker.join() {
+                std::panic::resume_unwind(p);
+            }
+            unreachable!("worker exited without sending a result");
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("pipeline hung: no result within {secs}s");
+        }
+    }
+}
+
+/// Serve `n` requests through the full pipeline with the given replica-pool
+/// configuration.  `alpha = 1.1` under `Fixed(2)` means no row exits early:
+/// every row attempts the offload, so every group exercises the pool.
+/// Replies are collected in arrival order.
+fn run_pool(cfg: ReplicaConfig, n: usize) -> (Service, Vec<Response>) {
+    let model = speculation_service_model();
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::four_g(), 7);
+    let config = ServiceConfig {
+        policy: PolicyKind::Fixed(2),
+        alpha: 1.1,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: std::time::Duration::from_millis(1),
+        },
+        coalesce: CoalesceConfig { enabled: false, max_wait: std::time::Duration::ZERO },
+        speculate: SpeculateMode::from_env(),
+        link: LinkScenario::from_env(),
+        replicas: cfg,
+    };
+    let router = Router::new(RouterConfig { max_inflight: 256 });
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for t in speculation_tokens(n) {
+        router.submit(t, tx.clone()).unwrap();
+    }
+    drop(tx);
+    router.shutdown();
+    service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+    let replies: Vec<Response> = rx.iter().collect();
+    (service, replies)
+}
+
+/// The deterministic projection of a [`PoolStat`]: every count field, but
+/// not the wall-clock-derived `busy_ms`/`backoff_ms` accumulators.
+#[allow(clippy::type_complexity)]
+fn pool_counts(p: &PoolStat) -> (Vec<[u64; 8]>, [u64; 4]) {
+    let per_replica = p
+        .replicas
+        .iter()
+        .map(|r| {
+            [
+                r.dispatched,
+                r.completed,
+                r.rerouted,
+                r.fallback,
+                r.timeouts,
+                r.breaker_opens,
+                r.probes,
+                r.order_violations,
+            ]
+        })
+        .collect();
+    let pool =
+        [p.retries, p.fallback_groups, p.fallback_rows, p.breaker_open_rejections];
+    (per_replica, pool)
+}
+
+#[test]
+fn replica_kill_mid_stream_reroutes_without_loss() {
+    // Replica 0 dies at dispatch sequence 2 with groups still streaming
+    // through a 3-replica pool: every request must still be answered
+    // exactly once, the failed dispatches must re-route (not drop), the
+    // accounting identity must balance, and nothing may hang.
+    let n = 40usize;
+    let (service, replies) = with_watchdog(120, move || {
+        let cfg = ReplicaConfig {
+            n: 3,
+            faults: FaultSchedule::from_name("kill@2:0").unwrap(),
+            ..Default::default()
+        };
+        run_pool(cfg, n)
+    });
+    assert_eq!(replies.len(), n, "dropped or duplicated replies");
+    let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "reply ids must be exactly 0..n");
+    let pool = service.metrics.pool.snapshot();
+    assert!(pool.balanced(), "dispatched != completed + rerouted + fallback: {pool:?}");
+    assert!(pool.rerouted() >= 1, "the kill must force at least one re-route: {pool:?}");
+    assert_eq!(pool.order_violations(), 0, "per-replica completion order violated");
+    assert!(
+        pool.replicas[0].dispatched >= 1,
+        "round-robin must have tried the doomed replica: {pool:?}"
+    );
+    assert_eq!(service.metrics.served, n as u64);
+}
+
+#[test]
+fn all_replicas_down_serves_edge_only_with_breaker_open() {
+    // Both replicas are dead from the first dispatch: after the retry
+    // budgets burn down, both breakers open and every remaining group is
+    // rejected outright — yet every request is still answered, on device,
+    // at the final exit.
+    let n = 40usize;
+    let (service, replies) = with_watchdog(120, move || {
+        let cfg = ReplicaConfig {
+            n: 2,
+            faults: FaultSchedule::from_name("kill@0:0|kill@0:1").unwrap(),
+            ..Default::default()
+        };
+        run_pool(cfg, n)
+    });
+    assert_eq!(replies.len(), n);
+    let n_layers = speculation_service_model().n_layers();
+    for r in &replies {
+        assert!(!r.offloaded, "no replica alive: nothing may count as offloaded");
+        assert_eq!(r.infer_layer, n_layers, "degraded rows run to the final exit");
+    }
+    let pool = service.metrics.pool.snapshot();
+    assert!(pool.balanced(), "accounting identity broken: {pool:?}");
+    assert_eq!(pool.fallback_rows, n as u64, "every offloaded row must degrade: {pool:?}");
+    assert!(
+        pool.breaker_open_rejections >= 1,
+        "with both breakers open, later groups must be rejected outright: {pool:?}"
+    );
+    assert!(pool.breaker_opens() >= 2, "both breakers must open: {pool:?}");
+    assert_eq!(service.metrics.outage_fallbacks, n as u64);
+    let s = service.metrics.spec.snapshot();
+    assert_eq!(s.used + s.wasted, s.issued, "speculative launches leaked: {s:?}");
+}
+
+#[test]
+fn fault_replay_is_bit_identical_across_runs() {
+    // The weaker determinism contract: identical (seed, fault schedule) →
+    // identical replies (values and arrival order) and identical fault /
+    // retry / breaker counters, run to run.  The schedule mixes all three
+    // fault kinds; the absurd slow factor turns replica 2 into a
+    // deterministic deadline-timeout machine from sequence 6 on.
+    let spec = "kill@4:1|flaky@0:0.35|slow@6:2x1000000000,seed=77";
+    let run = move || {
+        let cfg = ReplicaConfig {
+            n: 3,
+            faults: FaultSchedule::from_name(spec).unwrap(),
+            ..Default::default()
+        };
+        let (service, replies) = run_pool(cfg, 48);
+        let trace: Vec<(u64, usize, u32, usize, bool)> = replies
+            .iter()
+            .map(|r| (r.id, r.prediction, r.confidence.to_bits(), r.infer_layer, r.offloaded))
+            .collect();
+        let met = (
+            service.metrics.served,
+            service.metrics.offloaded,
+            service.metrics.outage_fallbacks,
+        );
+        (trace, pool_counts(&service.metrics.pool.snapshot()), met)
+    };
+    let (a, b) = with_watchdog(300, move || (run(), run()));
+    assert_eq!(a.0, b.0, "replies (values or arrival order) diverged across replays");
+    assert_eq!(a.1, b.1, "fault/retry/breaker counters diverged across replays");
+    assert_eq!(a.2, b.2, "serving metrics diverged across replays");
+    // and the run must actually have exercised the machinery it replays
+    let (per_replica, pool) = &a.1;
+    assert!(pool[0] >= 1, "schedule must force at least one retry");
+    assert!(per_replica[2][4] >= 1, "the slow replica must time out at least once");
+    assert_eq!(per_replica.iter().map(|r| r[7]).sum::<u64>(), 0, "order violated");
+}
+
+#[test]
+fn env_fault_matrix_answers_every_request_and_balances_accounting() {
+    // Fault-agnostic invariants, driven by SPLITEE_REPLICAS/SPLITEE_FAULTS
+    // (the CI fault matrix): whatever the environment injects, every
+    // request is answered exactly once, the accounting identity balances,
+    // and per-replica completion order holds.
+    let n = 40usize;
+    let (service, replies) =
+        with_watchdog(120, move || run_pool(ReplicaConfig::from_env(), n));
+    assert_eq!(replies.len(), n, "dropped or duplicated replies under env faults");
+    let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+    let pool = service.metrics.pool.snapshot();
+    assert!(pool.balanced(), "accounting identity broken: {pool:?}");
+    assert_eq!(pool.order_violations(), 0);
+    assert_eq!(service.metrics.served, n as u64);
+    let s = service.metrics.spec.snapshot();
+    assert_eq!(s.used + s.wasted, s.issued, "speculative launches leaked: {s:?}");
+}
+
+#[test]
+fn stage_panic_is_captured_as_an_error_not_an_abort() {
+    // Two requests with different token widths make the batcher's row
+    // concat panic.  `run_pipelined` must catch the panic payload at the
+    // join, shut the router down, and return an error naming the stage —
+    // not abort the process or hang the sibling stages.
+    let (err, router) = with_watchdog(120, || {
+        let model = speculation_service_model();
+        let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+        let link = LinkSim::new(NetworkProfile::four_g(), 7);
+        let config = ServiceConfig {
+            policy: PolicyKind::Fixed(2),
+            alpha: 1.1,
+            beta: 1.0,
+            batcher: BatcherConfig {
+                batch_sizes: model.batch_sizes().to_vec(),
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            coalesce: Default::default(),
+            speculate: SpeculateMode::from_env(),
+            link: LinkScenario::from_env(),
+            replicas: Default::default(),
+        };
+        let router = Router::new(RouterConfig::default());
+        let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+        let (tx, _rx) = std::sync::mpsc::channel();
+        router.submit(TensorI32::zeros(vec![1, 8]), tx.clone()).unwrap();
+        router.submit(TensorI32::zeros(vec![1, 4]), tx).unwrap();
+        router.shutdown();
+        let err = service
+            .run_pipelined(Arc::clone(&router), config.batcher.clone())
+            .expect_err("mismatched token widths must surface as an error");
+        (format!("{err:#}"), router)
+    });
+    assert!(err.contains("batcher stage panicked"), "error must name the stage: {err}");
+    // the failed run left the router closed: no new work can be enqueued
+    let (tx, _rx) = std::sync::mpsc::channel();
+    assert!(router.submit(TensorI32::zeros(vec![1, 8]), tx).is_none());
 }
 
 #[test]

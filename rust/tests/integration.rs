@@ -339,6 +339,7 @@ fn full_coordinator_round_trip_answers_every_request() {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -420,6 +421,7 @@ fn pipelined_matches_serial_decisions() {
                     coalesce: Default::default(),
                     speculate: SpeculateMode::from_env(),
                     link: make_scenario(scenario_name),
+                    replicas: Default::default(),
                 };
                 let router = Router::new(RouterConfig::default());
                 let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -511,6 +513,7 @@ fn static_link_scenario_is_bit_identical_to_no_scenario() {
             coalesce: Default::default(),
             speculate: SpeculateMode::from_env(),
             link: LinkScenario::Static,
+            replicas: Default::default(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -561,6 +564,7 @@ fn pipelined_service_answers_concurrent_producers_in_order() {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig { max_inflight: 32 });
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -635,6 +639,7 @@ fn one_fused_launch_per_partition_verified_by_counters() {
         coalesce: CoalesceConfig::default(),
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -714,6 +719,7 @@ fn coalesced_offload_groups_merge_adjacent_batches_and_preserve_results() {
             },
             speculate: SpeculateMode::from_env(),
             link: LinkScenario::from_env(),
+            replicas: Default::default(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -895,6 +901,7 @@ fn contextual_policy_shifts_split_across_link_states() {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_env(),
         link: scenario(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -966,6 +973,7 @@ fn service_outage_falls_back_on_device() {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);

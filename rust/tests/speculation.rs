@@ -102,6 +102,7 @@ fn run_service(
         coalesce,
         speculate,
         link: LinkScenario::from_env(),
+        replicas: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(model), cm, link, &config);
