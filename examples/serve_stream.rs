@@ -10,6 +10,7 @@
 //!     [--link static|markov|markov:SEED|trace:PATH] \
 //!     [--replicas N] [--dispatch round-robin|least-loaded] \
 //!     [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]] \
+//!     [--snapshot PATH] [--snapshot-every N] \
 //!     [--policy splitee|splitee-s|contextual|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
@@ -30,6 +31,7 @@ use splitee::runtime::Backend;
 use splitee::sim::{LinkScenario, LinkSim};
 use splitee::util::args::Args;
 use splitee::util::rng::Rng;
+use splitee::util::signals;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -76,6 +78,17 @@ fn main() -> Result<()> {
 
     let router = Router::new(RouterConfig { max_inflight: 256 });
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    if let Some(snap_cfg) = settings.snapshot_config() {
+        if service.restore(&snap_cfg.path) {
+            println!(
+                "warm restart: restored learned state from {} ({} batches served)",
+                snap_cfg.path.display(),
+                service.batches_done()
+            );
+        }
+        service.set_snapshot(snap_cfg);
+    }
+    signals::install();
 
     if let Some(addr) = args.get("tcp") {
         // TCP front-end mode: compute thread + socket loop.
@@ -84,12 +97,19 @@ fn main() -> Result<()> {
         let compute = {
             let router = Arc::clone(&router);
             let bc = config.batcher.clone();
-            std::thread::spawn(move || service.run(router, bc))
+            // hand the service back so the final shutdown snapshot can be
+            // written after the socket loop ends
+            std::thread::spawn(move || {
+                let outcome = service.run(router, bc);
+                (service, outcome)
+            })
         };
         let served =
             splitee::server::serve_tcp(listener, Arc::clone(&router), model.seq_len(), Some(n_requests))?;
         router.shutdown();
-        compute.join().expect("compute thread").ok();
+        let (mut service, outcome) = compute.join().expect("compute thread");
+        outcome.ok();
+        service.write_snapshot();
         println!("served {served} TCP requests");
         return Ok(());
     }
@@ -109,7 +129,7 @@ fn main() -> Result<()> {
                 std::thread::sleep(Duration::from_secs_f64(
                     arrival_rng.exponential(rate).min(0.05),
                 ));
-                if router.submit(t, tx.clone()).is_none() {
+                if signals::interrupted() || router.submit(t, tx.clone()).is_none() {
                     break;
                 }
             }
@@ -131,6 +151,7 @@ fn main() -> Result<()> {
     let bc = config.batcher.clone();
     service.run(Arc::clone(&router), bc)?;
     let (got, correct) = producer.join().expect("producer");
+    service.write_snapshot();
 
     println!(
         "\n=== serve_stream report: {dataset_name}, {:?}, network {} ===",
@@ -145,6 +166,10 @@ fn main() -> Result<()> {
     if let Some((best, _)) = service.bandit_summary() {
         println!("bandit converged toward split layer {best}");
     }
-    anyhow::ensure!(got == n_requests, "lost {} requests", n_requests - got);
+    if signals::interrupted() {
+        println!("interrupted: drained {got}/{n_requests} requests before shutdown");
+    } else {
+        anyhow::ensure!(got == n_requests, "lost {} requests", n_requests - got);
+    }
     Ok(())
 }

@@ -386,7 +386,12 @@ fn main() {
         "backend".to_string(),
         Json::Str(model.backend_name().to_string()),
     );
-    if let Err(e) = std::fs::write("BENCH_serving.json", Json::Obj(baseline).to_string()) {
+    // atomic write-then-rename: a crash or overlapping CI job never leaves a
+    // truncated baseline behind for the regression-diff gate to misread
+    if let Err(e) = splitee::util::json::write_atomic(
+        std::path::Path::new("BENCH_serving.json"),
+        &Json::Obj(baseline).to_string(),
+    ) {
         eprintln!("warning: could not write BENCH_serving.json: {e}");
     }
 

@@ -100,6 +100,44 @@ impl Ucb {
         }
         self.t = 0;
     }
+
+    /// Export the learned state (round counter + per-arm pull counts and
+    /// bit-exact mean rewards) for snapshot persistence.  `beta`/`k` are
+    /// configuration, not learned state — they live in the snapshot's config
+    /// fingerprint instead.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        use crate::persist::{arr_f64_hex, u64_hex};
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("t", u64_hex(self.t)),
+            ("n", Json::Arr(self.arms.iter().map(|a| u64_hex(a.n)).collect())),
+            ("q", arr_f64_hex(&self.arms.iter().map(|a| a.q).collect::<Vec<_>>())),
+        ])
+    }
+
+    /// Restore state exported by [`Ucb::export_state`].  The arm count must
+    /// match this instance's `k` — a snapshot from a different action menu
+    /// is a configuration mismatch, not a resumable state.
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::persist::{u64_from_hex, vec_f64_from_hex};
+        let n_arr = v.get("n")?.as_arr()?;
+        let q = vec_f64_from_hex(v.get("q")?)?;
+        if n_arr.len() != self.arms.len() || q.len() != self.arms.len() {
+            anyhow::bail!(
+                "ucb state has {} arms, this policy has {}",
+                n_arr.len(),
+                self.arms.len()
+            );
+        }
+        let t = u64_from_hex(v.get("t")?)?;
+        let n = n_arr.iter().map(u64_from_hex).collect::<anyhow::Result<Vec<_>>>()?;
+        self.t = t;
+        for (arm, (n, q)) in self.arms.iter_mut().zip(n.into_iter().zip(q)) {
+            arm.n = n;
+            arm.q = q;
+        }
+        Ok(())
+    }
 }
 
 /// Cumulative-regret accumulator for one run (paper eq. 3 / figure 7).
@@ -248,6 +286,35 @@ mod tests {
         assert_eq!(ds.first().unwrap().0, 1);
         assert_eq!(ds.last().unwrap().0, 1000);
         assert!((ds.last().unwrap().1 - rt.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn export_import_round_trip_is_bit_exact() {
+        let (ucb, _) = simulate_ucb(&[0.2, 0.5, 0.8], 500, 1.0, 42);
+        let state = ucb.export_state();
+        let mut restored = Ucb::new(3, 1.0);
+        restored.import_state(&state).unwrap();
+        assert_eq!(restored.t, ucb.t);
+        for i in 0..3 {
+            assert_eq!(restored.arm(i).n, ucb.arm(i).n);
+            assert_eq!(restored.arm(i).q.to_bits(), ucb.arm(i).q.to_bits());
+        }
+    }
+
+    #[test]
+    fn import_rejects_arm_count_mismatch_and_tolerates_unknown_fields() {
+        let (ucb, _) = simulate_ucb(&[0.2, 0.8], 100, 1.0, 7);
+        let state = ucb.export_state();
+        let mut wrong_k = Ucb::new(5, 1.0);
+        assert!(wrong_k.import_state(&state).is_err());
+        // a future writer may add fields — the reader must ignore them
+        let mut extended = state.clone();
+        if let crate::util::json::Json::Obj(o) = &mut extended {
+            o.insert("future".into(), crate::util::json::Json::Num(1.0));
+        }
+        let mut restored = Ucb::new(2, 1.0);
+        restored.import_state(&extended).unwrap();
+        assert_eq!(restored.t, ucb.t);
     }
 
     #[test]

@@ -253,6 +253,11 @@ pub struct Settings {
     /// `flaky@<replica>:<p>` events joined by `|`, optionally with a
     /// trailing `,seed=<n>` (parsed into `sim::faults::FaultSchedule`)
     pub faults: String,
+    /// durable-state snapshot path ("" = snapshots disabled; parsed with
+    /// `--snapshot-every` into `persist::SnapshotConfig`)
+    pub snapshot: String,
+    /// write a snapshot every N batches (0 = only at graceful shutdown)
+    pub snapshot_every: u64,
     /// cost-confidence conversion factor mu (paper: 0.1)
     pub mu: f64,
     /// UCB exploration parameter beta (paper: 1.0)
@@ -276,6 +281,8 @@ impl Default for Settings {
             replicas: 1,
             dispatch: "round-robin".to_string(),
             faults: String::new(),
+            snapshot: String::new(),
+            snapshot_every: 0,
             mu: 0.1,
             beta: 1.0,
             offload_cost: 5.0,
@@ -322,6 +329,17 @@ impl Settings {
         if s.replicas == 0 {
             bail!("--replicas must be a positive integer");
         }
+        if let Some(p) = args.get("snapshot") {
+            s.snapshot = p.to_string();
+            if s.snapshot.is_empty() {
+                bail!("--snapshot needs a file path");
+            }
+        }
+        s.snapshot_every =
+            args.get_num("snapshot-every", s.snapshot_every).map_err(anyhow::Error::msg)?;
+        if s.snapshot_every > 0 && s.snapshot.is_empty() {
+            bail!("--snapshot-every needs --snapshot <path>");
+        }
         s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
         s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
         s.offload_cost = args.get_num("o", s.offload_cost).map_err(anyhow::Error::msg)?;
@@ -351,6 +369,20 @@ impl Settings {
             dispatch: crate::coordinator::replicas::DispatchPolicy::from_name(&self.dispatch)?,
             faults: crate::sim::faults::FaultSchedule::from_name(&self.faults)?,
             ..crate::coordinator::ReplicaConfig::default()
+        })
+    }
+
+    /// The durable-state snapshot destination these settings describe
+    /// (`--snapshot` / `--snapshot-every`), falling back to the
+    /// `SPLITEE_SNAPSHOT=<path>[@<every>]` environment hook when the flag
+    /// is absent.  `None` = snapshots disabled.
+    pub fn snapshot_config(&self) -> Option<crate::persist::SnapshotConfig> {
+        if self.snapshot.is_empty() {
+            return crate::persist::SnapshotConfig::from_env();
+        }
+        Some(crate::persist::SnapshotConfig {
+            path: PathBuf::from(&self.snapshot),
+            every: self.snapshot_every,
         })
     }
 }
@@ -460,6 +492,33 @@ mod tests {
             crate::coordinator::replicas::DispatchPolicy::LeastLoaded
         );
         assert_eq!(cfg.faults.name(), "kill@2:0|flaky@1:0.25,seed=7");
+    }
+
+    #[test]
+    fn settings_snapshot_flags_parse_and_validate() {
+        let s = Settings::from_args(&Args::parse(["x"].iter().map(|s| s.to_string()))).unwrap();
+        assert!(s.snapshot.is_empty());
+        assert_eq!(s.snapshot_every, 0);
+
+        let args = Args::parse(
+            ["x", "--snapshot", "state.json", "--snapshot-every", "25"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let s = Settings::from_args(&args).unwrap();
+        let cfg = s.snapshot_config().expect("snapshot configured");
+        assert_eq!(cfg.path, PathBuf::from("state.json"));
+        assert_eq!(cfg.every, 25);
+
+        // --snapshot alone means write-on-shutdown only
+        let args = Args::parse(["x", "--snapshot", "s.json"].iter().map(|s| s.to_string()));
+        let cfg = Settings::from_args(&args).unwrap().snapshot_config().unwrap();
+        assert_eq!(cfg.every, 0);
+
+        // a cadence without a destination is a configuration error
+        let args =
+            Args::parse(["x", "--snapshot-every", "10"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
     }
 
     #[test]

@@ -304,6 +304,8 @@ pub struct ServingMetrics {
     /// time is serving time, so per-state req/s is meaningful; under an
     /// open-loop workload arrival idle lands on the next completing batch.)
     last_link_mark: Option<Instant>,
+    /// durable-state snapshots written this session (periodic + shutdown)
+    pub snapshots_written: u64,
 }
 
 impl ServingMetrics {
@@ -330,7 +332,13 @@ impl ServingMetrics {
             pool: PoolCounters::new(0),
             link_states: BTreeMap::new(),
             last_link_mark: None,
+            snapshots_written: 0,
         }
+    }
+
+    /// Record one durable-state snapshot written to disk.
+    pub fn record_snapshot(&mut self) {
+        self.snapshots_written += 1;
     }
 
     pub fn record_request(
@@ -543,6 +551,9 @@ impl ServingMetrics {
                 ));
             }
         }
+        if self.snapshots_written > 0 {
+            out.push_str(&format!("snapshots written {}\n", self.snapshots_written));
+        }
         out.push_str("exit layers: ");
         for (layer, &count) in self.per_layer.iter().enumerate().skip(1) {
             if count > 0 {
@@ -595,6 +606,16 @@ mod tests {
         assert!(r.contains("launches"));
         assert!(r.contains("spec"));
         assert!(r.contains("L5:1"));
+    }
+
+    #[test]
+    fn snapshot_counter_reports_only_when_nonzero() {
+        let mut m = ServingMetrics::new(6);
+        assert!(!m.report().contains("snapshots written"), "zero snapshots is noise");
+        m.record_snapshot();
+        m.record_snapshot();
+        assert_eq!(m.snapshots_written, 2);
+        assert!(m.report().contains("snapshots written 2"));
     }
 
     #[test]

@@ -63,6 +63,7 @@ use crate::runtime::{thread_launches, SpecHandle, SpecResult};
 use crate::sim::device::{CloudSim, EdgeSim};
 use crate::sim::faults::{FaultSchedule, FaultState, FaultVerdict};
 use crate::tensor::TensorF32;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Wall-clock bound on waiting for any single lane reply.  Purely a
@@ -309,6 +310,85 @@ impl ReplicaPool {
     /// The pool's shared counters (also reachable as `ServingMetrics::pool`).
     pub fn counters(&self) -> &Arc<PoolCounters> {
         &self.counters
+    }
+
+    /// Replayable dispatcher state for snapshot persistence: breaker states,
+    /// per-lane load accounting, round-robin cursor, the dispatch sequence
+    /// number (the fault/breaker clock), and both rng streams.  Lane threads
+    /// and counters are runtime objects, not state — a restarted pool
+    /// re-spawns lanes and resumes the clocks.
+    pub fn export_state(&self) -> Json {
+        use crate::persist::{arr_f64_hex, rng_to_json, u64_hex};
+        let breakers = self
+            .breakers
+            .iter()
+            .map(|b| match *b {
+                Breaker::Closed { consecutive } => Json::obj(vec![
+                    ("kind", Json::Str("closed".into())),
+                    ("consecutive", u64_hex(consecutive as u64)),
+                ]),
+                Breaker::Open { since } => Json::obj(vec![
+                    ("kind", Json::Str("open".into())),
+                    ("since", u64_hex(since)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("breakers", Json::Arr(breakers)),
+            ("load_ms", arr_f64_hex(&self.load_ms)),
+            ("rr_next", u64_hex(self.rr_next as u64)),
+            ("seq", u64_hex(self.seq)),
+            ("backoff_rng", rng_to_json(&self.backoff_rng)),
+            ("faults", self.faults.export_state()),
+        ])
+    }
+
+    /// Restore state exported by [`ReplicaPool::export_state`].  The lane
+    /// count must match (a snapshot from a differently-sized pool is a
+    /// configuration mismatch); everything is parsed and validated before
+    /// any field is mutated, so a bad snapshot leaves the pool untouched.
+    pub fn import_state(&mut self, v: &Json) -> Result<()> {
+        use crate::persist::{rng_from_json, u64_from_hex, vec_f64_from_hex};
+        let n = self.lanes.len();
+        let breakers_arr = v.get("breakers")?.as_arr()?;
+        if breakers_arr.len() != n {
+            bail!("pool snapshot has {} breakers, this pool has {n}", breakers_arr.len());
+        }
+        let breakers = breakers_arr
+            .iter()
+            .map(|b| -> Result<Breaker> {
+                match b.get("kind")?.as_str()? {
+                    "closed" => {
+                        let consecutive = u64_from_hex(b.get("consecutive")?)?;
+                        if consecutive > u32::MAX as u64 {
+                            bail!("breaker consecutive count {consecutive} overflows u32");
+                        }
+                        Ok(Breaker::Closed { consecutive: consecutive as u32 })
+                    }
+                    "open" => Ok(Breaker::Open { since: u64_from_hex(b.get("since")?)? }),
+                    other => bail!("unknown breaker kind {other:?}"),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let load_ms = vec_f64_from_hex(v.get("load_ms")?)?;
+        if load_ms.len() != n {
+            bail!("pool snapshot has {} load entries, this pool has {n}", load_ms.len());
+        }
+        let rr_next = u64_from_hex(v.get("rr_next")?)? as usize;
+        if rr_next >= n {
+            bail!("pool snapshot rr cursor {rr_next} out of range for {n} lanes");
+        }
+        let seq = u64_from_hex(v.get("seq")?)?;
+        let backoff_rng = rng_from_json(v.get("backoff_rng")?)?;
+        let mut faults = self.faults.clone();
+        faults.import_state(v.get("faults")?)?;
+        self.breakers = breakers;
+        self.load_ms = load_ms;
+        self.rr_next = rr_next;
+        self.seq = seq;
+        self.backoff_rng = backoff_rng;
+        self.faults = faults;
+        Ok(())
     }
 
     /// Serve one coalesced group of same-split batches: gather every
@@ -840,5 +920,62 @@ mod tests {
         assert!(cfg.faults.is_empty());
         assert!(cfg.max_attempts >= 1);
         assert!(cfg.breaker_threshold >= 1);
+    }
+
+    #[test]
+    fn pool_state_round_trips_and_rejects_size_mismatch() {
+        use crate::model::ModelWeights;
+        use crate::runtime::Backend;
+        let model = Arc::new(
+            MultiExitModel::from_weights(
+                "synthetic",
+                "reference",
+                ModelWeights::synthetic(3, 8, 16, 32, 4, 2, 0x57A7E),
+                2,
+                4,
+                vec![1],
+                &Backend::reference(),
+            )
+            .unwrap(),
+        );
+        let cfg = ReplicaConfig {
+            n: 2,
+            faults: FaultSchedule::from_name("flaky@0:0.5,seed=9").unwrap(),
+            ..ReplicaConfig::default()
+        };
+        let mut pool = ReplicaPool::new(Arc::clone(&model), cfg.clone(), PoolCounters::new(2));
+        // hand-advance the replayable fields as served traffic would
+        pool.seq = 17;
+        pool.rr_next = 1;
+        pool.load_ms = vec![4.25, 9.5];
+        pool.breakers = vec![Breaker::Closed { consecutive: 2 }, Breaker::Open { since: 11 }];
+        pool.backoff_rng.next_f64();
+        pool.faults.verdict(0, 0);
+        let state = pool.export_state();
+
+        let mut restored = ReplicaPool::new(Arc::clone(&model), cfg.clone(), PoolCounters::new(2));
+        restored.import_state(&state).unwrap();
+        assert_eq!(restored.seq, 17);
+        assert_eq!(restored.rr_next, 1);
+        assert_eq!(restored.breakers, pool.breakers);
+        for (a, b) in restored.load_ms.iter().zip(&pool.load_ms) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // both rng streams resume in lockstep
+        assert_eq!(restored.backoff_rng.next_f64(), pool.backoff_rng.next_f64());
+        for seq in 20..60 {
+            assert_eq!(restored.faults.verdict(seq, 0), pool.faults.verdict(seq, 0));
+        }
+
+        // a snapshot from a 2-lane pool must not load into a 3-lane pool,
+        // and the rejected import must leave the target untouched
+        let mut bigger = ReplicaPool::new(
+            model,
+            ReplicaConfig { n: 3, ..ReplicaConfig::default() },
+            PoolCounters::new(3),
+        );
+        assert!(bigger.import_state(&state).is_err());
+        assert_eq!(bigger.seq, 0);
+        assert_eq!(bigger.breakers, vec![Breaker::Closed { consecutive: 0 }; 3]);
     }
 }

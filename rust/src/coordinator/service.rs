@@ -122,8 +122,9 @@
 //! paths share the same stage functions, so their per-request outputs are
 //! identical by construction (asserted by `tests/integration.rs`).
 
+use std::path::Path;
 use std::sync::mpsc::{self, RecvTimeoutError, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
@@ -135,11 +136,13 @@ use crate::coordinator::router::{Response, Router};
 use crate::cost::CostModel;
 use crate::cost::NetworkProfile;
 use crate::model::{ExitOutput, HiddenState, MultiExitModel};
+use crate::persist::{Snapshot, SnapshotConfig};
 use crate::policy::{ContextualSplitPolicy, SplitEePolicy, SplitEeSPolicy};
 use crate::runtime::{thread_launches, SpecCounters, SpecHandle, SpecLane};
 use crate::sim::device::{CloudSim, EdgeSim};
 use crate::sim::link::{LinkScenario, LinkSim, LinkState, TransferResult};
 use crate::tensor::TensorF32;
+use crate::util::json::Json;
 
 /// Bound on in-flight batches between adjacent pipeline stages.  Small on
 /// purpose: enough to keep every stage busy, shallow enough that queue wait
@@ -253,6 +256,7 @@ pub struct ServiceConfig {
 }
 
 /// Policy state held by the service.
+#[derive(Clone)]
 enum PolicyState {
     SplitEe(SplitEePolicy),
     SplitEeS(SplitEeSPolicy),
@@ -282,6 +286,47 @@ impl PolicyState {
             PolicyState::Fixed(k) => Some(*k),
             PolicyState::FinalExit => Some(n_layers),
             _ => None,
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        match self {
+            PolicyState::SplitEe(_) => "splitee",
+            PolicyState::SplitEeS(_) => "splitee-s",
+            PolicyState::Contextual(_) => "contextual",
+            PolicyState::Fixed(_) => "fixed",
+            PolicyState::FinalExit => "final-exit",
+        }
+    }
+
+    /// Learned state for snapshot persistence, tagged with the policy kind.
+    /// The fixed policies carry no learned state — only the tag, so a
+    /// restore still verifies the snapshot matches the configured policy.
+    fn export_state(&self) -> Json {
+        let mut fields = vec![("kind", Json::Str(self.kind_name().into()))];
+        match self {
+            PolicyState::SplitEe(p) => fields.push(("state", p.export_state())),
+            PolicyState::SplitEeS(p) => fields.push(("state", p.export_state())),
+            PolicyState::Contextual(p) => fields.push(("state", p.export_state())),
+            PolicyState::Fixed(_) | PolicyState::FinalExit => {}
+        }
+        Json::obj(fields)
+    }
+
+    /// Restore state exported by [`PolicyState::export_state`].
+    fn import_state(&mut self, v: &Json) -> Result<()> {
+        let kind = v.get("kind")?.as_str()?;
+        if kind != self.kind_name() {
+            anyhow::bail!(
+                "snapshot holds a {kind:?} policy, this service runs {:?}",
+                self.kind_name()
+            );
+        }
+        match self {
+            PolicyState::SplitEe(p) => p.import_state(v.get("state")?),
+            PolicyState::SplitEeS(p) => p.import_state(v.get("state")?),
+            PolicyState::Contextual(p) => p.import_state(v.get("state")?),
+            PolicyState::Fixed(_) | PolicyState::FinalExit => Ok(()),
         }
     }
 }
@@ -695,9 +740,90 @@ pub struct Service {
     spec_lane: Option<SpecLane>,
     /// the cloud tier: a pool of replica lanes with fault injection,
     /// deadline/retry, circuit breakers and edge-only degradation (its
-    /// counters are shared with `metrics.pool`)
-    replicas: ReplicaPool,
+    /// counters are shared with `metrics.pool`).  Behind a mutex because the
+    /// pipelined loop's cloud stage dispatches through it while the reply
+    /// stage exports its state into periodic snapshots; the cloud stage is
+    /// still the only dispatcher, so the fault clock stays deterministic.
+    replicas: Arc<Mutex<ReplicaPool>>,
+    /// durable-state snapshot destination + cadence (None = no snapshots)
+    snapshot_cfg: Option<SnapshotConfig>,
+    /// configuration fingerprint stamped into (and checked against) every
+    /// snapshot
+    fingerprint: String,
+    /// batches fully accounted by the reply stage — the snapshot's
+    /// consistency point and its `batches` stamp
+    batches_done: u64,
     pub metrics: ServingMetrics,
+}
+
+/// Lock the replica pool, recovering from poisoning: the pool's own state
+/// is import-validated and lane failures are handled inside `serve_group`,
+/// so a panic elsewhere must not wedge serving or snapshotting.
+fn lock_pool(pool: &Mutex<ReplicaPool>) -> MutexGuard<'_, ReplicaPool> {
+    pool.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Configuration fingerprint for snapshot compatibility: everything that
+/// shapes the learned state's meaning (policy + its hyper-parameters, layer
+/// count, link scenario, pool geometry, backend).  Two services with equal
+/// fingerprints interpret each other's snapshots; anything else must cold-
+/// start.  f64 hyper-parameters are fingerprinted by bit pattern — "close"
+/// is not "equal" for replay.
+fn fingerprint_of(config: &ServiceConfig, model: &MultiExitModel) -> String {
+    let policy = match config.policy {
+        PolicyKind::SplitEe => "splitee".to_string(),
+        PolicyKind::SplitEeS => "splitee-s".to_string(),
+        PolicyKind::Contextual => "contextual".to_string(),
+        PolicyKind::Fixed(k) => format!("fixed:{k}"),
+        PolicyKind::FinalExit => "final-exit".to_string(),
+    };
+    format!(
+        "v1 policy={policy} alpha={:016x} beta={:016x} layers={} link={}:{} \
+         replicas={} dispatch={} faults={} backend={}",
+        config.alpha.to_bits(),
+        config.beta.to_bits(),
+        model.n_layers(),
+        config.link.name(),
+        config.link.n_contexts(),
+        config.replicas.n.max(1),
+        config.replicas.dispatch.name(),
+        config.replicas.faults.name(),
+        model.backend_name(),
+    )
+}
+
+/// Assemble and write one snapshot (the reply stage and `serve_batch` call
+/// this at their consistency point; `Service::write_snapshot` at shutdown).
+/// A failed write is logged and survived — persistence is an availability
+/// feature and must never take serving down with it.
+#[allow(clippy::too_many_arguments)]
+fn write_snapshot_parts(
+    cfg: &SnapshotConfig,
+    fingerprint: &str,
+    batches: u64,
+    policy: &PolicyState,
+    link: &LinkSim,
+    scenario: &LinkScenario,
+    replicas: &Mutex<ReplicaPool>,
+    model: &MultiExitModel,
+    metrics: &mut ServingMetrics,
+) {
+    let mut snap = Snapshot::new(fingerprint, batches);
+    snap.insert("policy", policy.export_state());
+    snap.insert("link", link.export_state());
+    snap.insert("scenario", scenario.export_state());
+    snap.insert("pool", lock_pool(replicas).export_state());
+    let keys = model.warm_keys();
+    if !keys.is_empty() {
+        snap.insert("warm_keys", Json::Arr(keys.into_iter().map(Json::Str).collect()));
+    }
+    match snap.save(&cfg.path) {
+        Ok(()) => metrics.record_snapshot(),
+        Err(e) => log::warn!(
+            "snapshot write to {} failed ({e:#}) — serving continues",
+            cfg.path.display()
+        ),
+    }
 }
 
 impl Service {
@@ -754,9 +880,11 @@ impl Service {
         let mut metrics = ServingMetrics::new(l);
         metrics.pool = Arc::clone(&pool_counters);
         let replicas = ReplicaPool::new(Arc::clone(&model), config.replicas.clone(), pool_counters);
+        let fingerprint = fingerprint_of(config, &model);
         Service {
             metrics,
-            replicas,
+            replicas: Arc::new(Mutex::new(replicas)),
+            fingerprint,
             model,
             cost,
             edge: EdgeSim::default(),
@@ -768,7 +896,116 @@ impl Service {
             alpha: config.alpha,
             coalesce: config.coalesce,
             spec_lane: speculate.then(SpecLane::new),
+            snapshot_cfg: None,
+            batches_done: 0,
         }
+    }
+
+    /// Enable durable-state snapshots: write to `cfg.path` every `cfg.every`
+    /// batches (`0` = only when [`Service::write_snapshot`] is called, e.g.
+    /// at shutdown).
+    pub fn set_snapshot(&mut self, cfg: SnapshotConfig) {
+        self.snapshot_cfg = Some(cfg);
+    }
+
+    /// The configuration fingerprint stamped into this service's snapshots.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Batches fully accounted so far (the snapshot consistency clock).
+    pub fn batches_done(&self) -> u64 {
+        self.batches_done
+    }
+
+    /// Warm-restart from a snapshot file.  Returns `true` when the learned
+    /// state was restored; `false` — with a logged reason, never a panic or
+    /// an error — on a missing, corrupt, wrong-version or fingerprint-
+    /// mismatched snapshot, leaving the service cold-started and fully
+    /// usable either way.
+    pub fn restore(&mut self, path: &Path) -> bool {
+        let snap = match Snapshot::load(path, &self.fingerprint) {
+            Some(s) => s,
+            None => return false,
+        };
+        match self.apply_snapshot(&snap) {
+            Ok(()) => {
+                log::info!(
+                    "warm restart from {} ({} batches of learned state)",
+                    path.display(),
+                    snap.batches
+                );
+                true
+            }
+            Err(e) => {
+                log::warn!(
+                    "snapshot {} did not apply ({e:#}) — cold start",
+                    path.display()
+                );
+                false
+            }
+        }
+    }
+
+    /// All-or-nothing snapshot application: every section is staged (or
+    /// internally validated-before-mutate, for the pool) before any service
+    /// state changes, so a failing section can never leave a half-restored
+    /// service.
+    fn apply_snapshot(&mut self, snap: &Snapshot) -> Result<()> {
+        let section = |name: &str| -> Result<&Json> {
+            snap.section(name)
+                .ok_or_else(|| anyhow::anyhow!("snapshot has no {name:?} section"))
+        };
+        let mut policy = self.policy.clone();
+        policy.import_state(section("policy")?).context("policy section")?;
+        let mut link = self.link.clone();
+        link.import_state(section("link")?).context("link section")?;
+        let mut scenario = self.scenario.clone();
+        scenario.import_state(section("scenario")?).context("scenario section")?;
+        // the pool imports last: its import validates everything before
+        // mutating, so a failure here still leaves the whole service cold
+        lock_pool(&self.replicas)
+            .import_state(section("pool")?)
+            .context("pool section")?;
+        self.policy = policy;
+        self.link = link;
+        self.scenario = scenario;
+        self.batches_done = snap.batches;
+        // cache warmup is best-effort: a stale working set must not block a
+        // warm restart of the learned state
+        if let Some(keys) = snap.section("warm_keys") {
+            if let Ok(arr) = keys.as_arr() {
+                let keys: Vec<String> =
+                    arr.iter().filter_map(|k| k.as_str().ok().map(str::to_string)).collect();
+                if let Err(e) = self.model.rewarm(&keys) {
+                    log::warn!("cache re-warm skipped ({e:#})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Write a snapshot now (the graceful-shutdown hook; periodic writes
+    /// happen inside the serve loops).  No-op without a configured snapshot
+    /// destination.  Returns whether a snapshot was written.
+    pub fn write_snapshot(&mut self) -> bool {
+        let cfg = match &self.snapshot_cfg {
+            Some(c) => c,
+            None => return false,
+        };
+        let before = self.metrics.snapshots_written;
+        write_snapshot_parts(
+            cfg,
+            &self.fingerprint,
+            self.batches_done,
+            &self.policy,
+            &self.link,
+            &self.scenario,
+            &self.replicas,
+            &self.model,
+            &mut self.metrics,
+        );
+        self.metrics.snapshots_written > before
     }
 
     fn side_info(&self) -> bool {
@@ -825,7 +1062,19 @@ impl Service {
         let spec_lane = self.spec_lane.clone();
         let spec_counters = Arc::clone(&self.metrics.spec);
 
-        let Service { model, policy, metrics, link, scenario, replicas, .. } = self;
+        let Service {
+            model,
+            policy,
+            metrics,
+            link,
+            scenario,
+            replicas,
+            snapshot_cfg,
+            fingerprint,
+            batches_done,
+            ..
+        } = self;
+        let replicas_cloud = Arc::clone(replicas);
         // The link scenario advances once per batch, here in the reply
         // stage's ownership: the state sampled when a batch's split is
         // chosen is the state its replies are accounted (and its contextual
@@ -940,8 +1189,13 @@ impl Service {
                             }
                         }
                     }
+                    // the pool lock is scoped to the dispatch: released
+                    // before the channel send so the reply stage's snapshot
+                    // export can never deadlock against a blocked send
+                    let replies = lock_pool(&replicas_cloud)
+                        .serve_group(&model_cloud, &edge, &cloud, group)?;
                     let mut closed = false;
-                    for reply in replicas.serve_group(&model_cloud, &edge, &cloud, group)? {
+                    for reply in replies {
                         if cloud_tx.send(reply).is_err() {
                             closed = true;
                             break;
@@ -961,6 +1215,28 @@ impl Service {
                 reply_stage(
                     work, l, side, &cost, &edge, &cloud, link, policy, metrics, &cur_state,
                 );
+                // Snapshot point: this batch is fully accounted and the
+                // scenario/policy have not yet advanced for the next one —
+                // exactly the state a warm restart must resume from.  (The
+                // pool's dispatch clock may already be up to PIPELINE_DEPTH
+                // batches ahead; see ARCHITECTURE.md on the weaker
+                // determinism contract under faults.)
+                *batches_done += 1;
+                if let Some(cfg) = snapshot_cfg.as_ref() {
+                    if cfg.every > 0 && *batches_done % cfg.every == 0 {
+                        write_snapshot_parts(
+                            cfg,
+                            fingerprint,
+                            *batches_done,
+                            policy,
+                            link,
+                            scenario,
+                            replicas,
+                            model,
+                            metrics,
+                        );
+                    }
+                }
                 // Advance the link and decide for the batch after this one.
                 // A final state/token may go unconsumed when the stream
                 // ends; `choose` without a subsequent update only advances
@@ -1012,8 +1288,12 @@ impl Service {
         // (tests/speculation.rs), and with one thread there is nothing to
         // overlap the continuation with.
         let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch, None)?;
-        let mut replies =
-            self.replicas.serve_group(&self.model, &self.edge, &self.cloud, vec![work])?;
+        let mut replies = lock_pool(&self.replicas).serve_group(
+            &self.model,
+            &self.edge,
+            &self.cloud,
+            vec![work],
+        )?;
         let work = replies.pop().expect("one reply per batch");
         reply_stage(
             work,
@@ -1027,6 +1307,25 @@ impl Service {
             &mut self.metrics,
             &state,
         );
+        // same snapshot point as the pipelined reply loop — and on the
+        // serial path the pool's dispatch clock is exactly in step, so the
+        // snapshot is fully consistent
+        self.batches_done += 1;
+        if let Some(cfg) = &self.snapshot_cfg {
+            if cfg.every > 0 && self.batches_done % cfg.every == 0 {
+                write_snapshot_parts(
+                    cfg,
+                    &self.fingerprint,
+                    self.batches_done,
+                    &self.policy,
+                    &self.link,
+                    &self.scenario,
+                    &self.replicas,
+                    &self.model,
+                    &mut self.metrics,
+                );
+            }
+        }
         Ok(())
     }
 

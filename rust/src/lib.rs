@@ -52,6 +52,7 @@ pub mod cost;
 pub mod data;
 pub mod experiments;
 pub mod model;
+pub mod persist;
 pub mod policy;
 pub mod runtime;
 pub mod server;

@@ -29,6 +29,7 @@ use splitee::sim::{LinkScenario, LinkSim};
 use splitee::util::args::Args;
 use splitee::util::logging;
 use splitee::util::rng::Rng;
+use splitee::util::signals;
 
 fn main() {
     let args = Args::from_env();
@@ -112,6 +113,7 @@ Subcommands
                 [--link static|markov|markov:SEED|trace:PATH]
                 [--replicas N] [--dispatch round-robin|least-loaded]
                 [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]]
+                [--snapshot PATH] [--snapshot-every N]
 
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
@@ -135,6 +137,12 @@ Common flags
                     kill@BATCH:REPLICA, slow@BATCH:REPLICAxFACTOR and
                     flaky@REPLICA:P events, optional ',seed=N' trailer
                     (default: none; also via SPLITEE_FAULTS in tests)
+  --snapshot PATH   durable learned-state snapshot: loaded at startup for a
+                    warm restart when PATH exists (fingerprint-checked),
+                    written crash-consistently every N batches and at
+                    shutdown (also via SPLITEE_SNAPSHOT=PATH[@N])
+  --snapshot-every N  snapshot cadence in batches (default: 0 — write only
+                    at graceful shutdown); requires --snapshot
   --o N             offloading cost in lambda units (default: 5)
   --mu X            cost weight in the reward (default: 0.1)
   --beta X          UCB exploration (default: 1.0)
@@ -288,6 +296,14 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
 
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    if let Some(snap_cfg) = settings.snapshot_config() {
+        if service.restore(&snap_cfg.path) {
+            println!("warm restart: restored learned state from {} ({} batches served)",
+                     snap_cfg.path.display(), service.batches_done());
+        }
+        service.set_snapshot(snap_cfg);
+    }
+    signals::install();
 
     // workload generator thread: replay shuffled dataset samples
     let producer = {
@@ -299,7 +315,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
         std::thread::spawn(move || {
             let (tx, rx) = std::sync::mpsc::channel();
             for t in tokens {
-                if router.submit(t, tx.clone()).is_none() {
+                if signals::interrupted() || router.submit(t, tx.clone()).is_none() {
                     break;
                 }
             }
@@ -317,6 +333,9 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
     let batcher_config = config.batcher.clone();
     service.run(Arc::clone(&router), batcher_config)?;
     let got = producer.join().expect("producer join");
+    if service.write_snapshot() {
+        log::info!("final snapshot written ({} batches served)", service.batches_done());
+    }
 
     println!("— serving report ({dataset_name}, policy {:?}, network {:?}) —",
              args.get_or("policy", "splitee"), args.get_or("network", "3g"));
@@ -336,6 +355,10 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
             }
         }
     }
-    anyhow::ensure!(got == n_requests, "expected {n_requests} replies, got {got}");
+    if signals::interrupted() {
+        println!("interrupted: drained {got}/{n_requests} requests before shutdown");
+    } else {
+        anyhow::ensure!(got == n_requests, "expected {n_requests} replies, got {got}");
+    }
     Ok(())
 }

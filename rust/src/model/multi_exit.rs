@@ -235,6 +235,17 @@ impl MultiExitModel {
         Ok(())
     }
 
+    /// Identifiers of the backend's warm compiled units, LRU to MRU
+    /// (snapshot persistence; empty for cache-less backends).
+    pub fn warm_keys(&self) -> Vec<String> {
+        self.exec.warm_keys()
+    }
+
+    /// Re-warm a previously exported working set (stale keys are skipped).
+    pub fn rewarm(&self, keys: &[String]) -> Result<()> {
+        self.exec.rewarm(keys)
+    }
+
     /// Embedding straight to a backend-format hidden state: tokens [B, T] ->
     /// h0 [B, T, D].  Under PJRT, B must be a compiled batch size (callers
     /// batch via [`plan_batches`]).

@@ -1,0 +1,375 @@
+//! Durable learned state: versioned snapshots with crash-consistent
+//! persistence.
+//!
+//! Everything the serving system *learns* online — bandit arm statistics
+//! (aggregate and per-context), the SplitEE-S final-confidence running mean,
+//! the link-scenario position, the replica-pool breaker/dispatch state and
+//! the executable-cache warmup set — lives in memory and dies with the
+//! process, paying the full cold-start exploration regret again on every
+//! restart.  This module makes that state durable:
+//!
+//! - [`Snapshot`] is a versioned envelope (magic + format version + config
+//!   fingerprint) of named state sections, serialized through the in-repo
+//!   [`Json`] substrate (the offline crate cache has no serde).
+//! - [`Snapshot::save`] uses the atomic write-then-rename idiom
+//!   ([`crate::util::json::write_atomic`]): write `<path>.tmp`, fsync,
+//!   rename — a crash at any byte leaves the previous snapshot intact.
+//! - [`Snapshot::load`] is corruption-tolerant by contract: truncated,
+//!   garbage, wrong-magic, wrong-version or fingerprint-mismatched files
+//!   log a warning and return `None` (cold start); they never panic and
+//!   never error.  `tests/persistence.rs` sweeps a truncation through every
+//!   byte offset to pin this.
+//! - The hex codecs ([`f64_hex`]/[`u64_hex`] and friends) carry numeric
+//!   state as bit-pattern strings, because learned state must round-trip
+//!   *bit-exactly*: the JSON `f64` path would lose `-0.0` through the
+//!   integer `Display` fast path, cannot represent NaN/inf at all, and
+//!   rounds `u64` values above 2^53.
+//!
+//! The consistency point is the reply stage: all bandit updates, scenario
+//! advances and metric accounting are serialized there in batch order, so a
+//! snapshot taken between two reply-stage iterations is consistent by
+//! construction (see ARCHITECTURE.md "Durable state & crash recovery").
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// File-format magic. A file without it is not a snapshot at all.
+pub const MAGIC: &str = "splitee-snapshot";
+
+/// Current snapshot format version.  Bump on incompatible layout changes;
+/// old versions cold-start (never a migration panic).
+pub const VERSION: u64 = 1;
+
+// ---------------- bit-exact numeric codecs ----------------
+
+/// An `f64` as its IEEE-754 bit pattern in hex — exact for every value
+/// including `-0.0`, NaN payloads and infinities.
+pub fn f64_hex(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+/// Inverse of [`f64_hex`].
+pub fn f64_from_hex(v: &Json) -> Result<f64> {
+    let s = v.as_str()?;
+    let bits = u64::from_str_radix(s, 16)
+        .with_context(|| format!("bad f64 bit pattern {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// A `u64` in hex — exact beyond the 2^53 integer range of a JSON number.
+pub fn u64_hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Inverse of [`u64_hex`].
+pub fn u64_from_hex(v: &Json) -> Result<u64> {
+    let s = v.as_str()?;
+    u64::from_str_radix(s, 16).with_context(|| format!("bad u64 hex {s:?}"))
+}
+
+/// A slice of `f64` as an array of hex bit patterns.
+pub fn arr_f64_hex(values: &[f64]) -> Json {
+    Json::Arr(values.iter().map(|v| f64_hex(*v)).collect())
+}
+
+/// Inverse of [`arr_f64_hex`].
+pub fn vec_f64_from_hex(v: &Json) -> Result<Vec<f64>> {
+    v.as_arr()?.iter().map(f64_from_hex).collect()
+}
+
+/// An [`Rng`]'s full 256-bit state as four hex words.
+pub fn rng_to_json(rng: &Rng) -> Json {
+    Json::Arr(rng.state().iter().map(|w| u64_hex(*w)).collect())
+}
+
+/// Inverse of [`rng_to_json`].
+pub fn rng_from_json(v: &Json) -> Result<Rng> {
+    let arr = v.as_arr()?;
+    if arr.len() != 4 {
+        bail!("rng state needs 4 words, got {}", arr.len());
+    }
+    let mut s = [0u64; 4];
+    for (slot, w) in s.iter_mut().zip(arr) {
+        *slot = u64_from_hex(w)?;
+    }
+    Ok(Rng::from_state(s))
+}
+
+// ---------------- snapshot scheduling ----------------
+
+/// Where and how often to snapshot (`--snapshot` / `--snapshot-every`, or
+/// the `SPLITEE_SNAPSHOT=<path>[@<every>]` env hook for the suites).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotConfig {
+    /// snapshot file path (loaded at startup, written periodically + on
+    /// graceful shutdown)
+    pub path: PathBuf,
+    /// write every N batches; 0 = only on graceful shutdown
+    pub every: u64,
+}
+
+impl SnapshotConfig {
+    /// `SPLITEE_SNAPSHOT=<path>[@<every-batches>]`, `None` when unset or
+    /// empty.  Invalid values panic naming the variable, like the other
+    /// `SPLITEE_*` hooks — a typo'd test matrix must fail loudly.
+    pub fn from_env() -> Option<SnapshotConfig> {
+        let raw = std::env::var("SPLITEE_SNAPSHOT").ok()?;
+        if raw.is_empty() {
+            return None;
+        }
+        match Self::parse(&raw) {
+            Ok(cfg) => Some(cfg),
+            Err(e) => panic!(
+                "SPLITEE_SNAPSHOT={raw:?}: {e} (expected <path>[@<every-batches>])"
+            ),
+        }
+    }
+
+    /// Parse `<path>[@<every>]`.  An `@` suffix must be a batch count; paths
+    /// containing a literal `@` must use the CLI flags instead.
+    pub fn parse(raw: &str) -> std::result::Result<SnapshotConfig, String> {
+        if raw.is_empty() {
+            return Err("empty snapshot path".to_string());
+        }
+        if let Some((path, every)) = raw.rsplit_once('@') {
+            if path.is_empty() {
+                return Err("empty snapshot path".to_string());
+            }
+            let every: u64 = every
+                .parse()
+                .map_err(|_| format!("bad snapshot interval {every:?}"))?;
+            Ok(SnapshotConfig { path: PathBuf::from(path), every })
+        } else {
+            Ok(SnapshotConfig { path: PathBuf::from(raw), every: 0 })
+        }
+    }
+}
+
+// ---------------- the snapshot envelope ----------------
+
+/// A versioned snapshot of all learned/replayable serving state.
+///
+/// The envelope carries the config fingerprint of the service that wrote it
+/// (policy kind + knobs, scenario, pool shape, backend); a snapshot only
+/// restores into a service with the *same* fingerprint — warm-starting a
+/// 5-layer bandit from a 12-layer run would be silent corruption, not
+/// recovery.  Sections are named [`Json`] blobs; readers ignore unknown
+/// sections and unknown fields inside them, so old snapshots stay loadable
+/// as state grows (forward compatibility is tested per exported struct).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// config fingerprint of the writing service
+    pub fingerprint: String,
+    /// batches fully accounted (reply stage done) when this was taken
+    pub batches: u64,
+    /// named state sections ("policy", "scenario", "link", "pool", "warmup")
+    pub sections: BTreeMap<String, Json>,
+}
+
+impl Snapshot {
+    pub fn new(fingerprint: &str, batches: u64) -> Snapshot {
+        Snapshot { fingerprint: fingerprint.to_string(), batches, sections: BTreeMap::new() }
+    }
+
+    /// Add (or replace) a named state section.
+    pub fn insert(&mut self, name: &str, state: Json) {
+        self.sections.insert(name.to_string(), state);
+    }
+
+    /// A section by name, if present (absent sections cold-start their
+    /// subsystem — that is how old snapshots stay loadable).
+    pub fn section(&self, name: &str) -> Option<&Json> {
+        self.sections.get(name)
+    }
+
+    /// Serialize to the on-disk text form.
+    pub fn to_text(&self) -> String {
+        let mut sections = BTreeMap::new();
+        for (k, v) in &self.sections {
+            sections.insert(k.clone(), v.clone());
+        }
+        Json::obj(vec![
+            ("magic", Json::Str(MAGIC.to_string())),
+            ("version", Json::Num(VERSION as f64)),
+            ("fingerprint", Json::Str(self.fingerprint.clone())),
+            ("batches", u64_hex(self.batches)),
+            ("sections", Json::Obj(sections)),
+        ])
+        .to_string()
+    }
+
+    /// Parse the on-disk text form, validating magic + version.  Errors are
+    /// descriptive but the serving path never surfaces them as failures —
+    /// [`Snapshot::load`] turns every one into a logged cold start.
+    pub fn from_text(text: &str) -> Result<Snapshot> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("not valid JSON: {e}"))?;
+        let magic = v.get("magic")?.as_str()?;
+        if magic != MAGIC {
+            bail!("bad magic {magic:?} (expected {MAGIC:?})");
+        }
+        let version = v.get("version")?.as_i64()?;
+        if version != VERSION as i64 {
+            bail!("unsupported snapshot version {version} (this build reads {VERSION})");
+        }
+        let fingerprint = v.get("fingerprint")?.as_str()?.to_string();
+        let batches = u64_from_hex(v.get("batches")?)?;
+        let sections = v.get("sections")?.as_obj()?.clone();
+        Ok(Snapshot { fingerprint, batches, sections })
+    }
+
+    /// Write atomically: `<path>.tmp` + fsync + rename.  The previous
+    /// snapshot at `path` survives any mid-write crash.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        json::write_atomic(path, &self.to_text())
+            .with_context(|| format!("writing snapshot {path:?}"))
+    }
+
+    /// Load a snapshot for a service whose config fingerprint is
+    /// `expected_fingerprint`.  **Never panics, never errors**: a missing,
+    /// truncated, garbage, wrong-version or mismatched-fingerprint file
+    /// logs a warning and returns `None` — the caller cold-starts.
+    pub fn load(path: &Path, expected_fingerprint: &str) -> Option<Snapshot> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                log::warn!("snapshot {path:?} unreadable ({e}) — cold start");
+                return None;
+            }
+        };
+        let snap = match Snapshot::from_text(&text) {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("snapshot {path:?} rejected ({e:#}) — cold start");
+                return None;
+            }
+        };
+        if snap.fingerprint != expected_fingerprint {
+            log::warn!(
+                "snapshot {path:?} was written by a different configuration \
+                 ({:?} vs this service's {:?}) — cold start",
+                snap.fingerprint,
+                expected_fingerprint
+            );
+            return None;
+        }
+        Some(snap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_hex_is_bit_exact_for_hostile_values() {
+        for v in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5e-300,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            9_007_199_254_740_993.0, // 2^53 + 1 rounds in plain JSON numbers
+        ] {
+            let back = f64_from_hex(&f64_hex(v)).unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} lost bits");
+        }
+    }
+
+    #[test]
+    fn u64_hex_covers_the_full_range() {
+        for v in [0u64, 1, 1 << 53, u64::MAX, 0xDEAD_BEEF_CAFE_F00D] {
+            assert_eq!(u64_from_hex(&u64_hex(v)).unwrap(), v);
+        }
+        assert!(u64_from_hex(&Json::Str("not hex".into())).is_err());
+        assert!(u64_from_hex(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn rng_json_round_trip_resumes_the_stream() {
+        let mut r = Rng::new(0x5EED);
+        for _ in 0..11 {
+            r.next_u64();
+        }
+        let j = rng_to_json(&r);
+        let mut restored = rng_from_json(&j).unwrap();
+        assert_eq!(r.next_u64(), restored.next_u64());
+        assert!(rng_from_json(&Json::Arr(vec![u64_hex(1)])).is_err());
+    }
+
+    #[test]
+    fn snapshot_text_round_trip() {
+        let mut s = Snapshot::new("fp:test", 42);
+        s.insert("policy", Json::obj(vec![("t", u64_hex(7)), ("q", f64_hex(-0.25))]));
+        let back = Snapshot::from_text(&s.to_text()).unwrap();
+        assert_eq!(back, s);
+        assert_eq!(back.batches, 42);
+        assert_eq!(
+            f64_from_hex(back.section("policy").unwrap().get("q").unwrap()).unwrap(),
+            -0.25
+        );
+    }
+
+    #[test]
+    fn unknown_fields_and_sections_are_ignored() {
+        // forward compatibility: a future writer may add envelope fields and
+        // sections this reader has never heard of
+        let s = Snapshot::new("fp", 1);
+        let mut v = json::parse(&s.to_text()).unwrap();
+        if let Json::Obj(o) = &mut v {
+            o.insert("future_field".into(), Json::Str("x".into()));
+            if let Some(Json::Obj(secs)) = o.get_mut("sections") {
+                secs.insert("future_section".into(), Json::Num(1.0));
+            }
+        }
+        let back = Snapshot::from_text(&v.to_string()).unwrap();
+        assert_eq!(back.fingerprint, "fp");
+        assert!(back.section("future_section").is_some());
+        assert!(back.section("never_written").is_none());
+    }
+
+    #[test]
+    fn from_text_rejects_garbage_wrong_magic_wrong_version() {
+        assert!(Snapshot::from_text("").is_err());
+        assert!(Snapshot::from_text("{ not json").is_err());
+        assert!(Snapshot::from_text("{\"magic\":\"other\"}").is_err());
+        let mut s = Snapshot::new("fp", 0);
+        s.insert("x", Json::Null);
+        let future = s.to_text().replace("\"version\":1", "\"version\":999");
+        let err = Snapshot::from_text(&future).unwrap_err().to_string();
+        assert!(err.contains("999"), "error must name the version: {err}");
+    }
+
+    #[test]
+    fn load_is_corruption_tolerant_and_fingerprint_checked() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("splitee_persist_load_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        assert!(Snapshot::load(&path, "fp").is_none(), "missing file cold-starts");
+        let s = Snapshot::new("fp", 3);
+        s.save(&path).unwrap();
+        assert_eq!(Snapshot::load(&path, "fp").unwrap().batches, 3);
+        assert!(Snapshot::load(&path, "other-fp").is_none(), "fingerprint mismatch");
+        std::fs::write(&path, "garbage").unwrap();
+        assert!(Snapshot::load(&path, "fp").is_none(), "garbage cold-starts");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn snapshot_config_parses_path_and_interval() {
+        let c = SnapshotConfig::parse("/tmp/s.json").unwrap();
+        assert_eq!((c.path.to_str().unwrap(), c.every), ("/tmp/s.json", 0));
+        let c = SnapshotConfig::parse("/tmp/s.json@25").unwrap();
+        assert_eq!((c.path.to_str().unwrap(), c.every), ("/tmp/s.json", 25));
+        assert!(SnapshotConfig::parse("").is_err());
+        assert!(SnapshotConfig::parse("@5").is_err());
+        assert!(SnapshotConfig::parse("/tmp/s.json@soon").is_err());
+    }
+}

@@ -105,6 +105,36 @@ impl ContextualSplitPolicy {
             u.reset();
         }
     }
+
+    /// Learned state for snapshot persistence: every context's bandit table.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![(
+            "contexts",
+            crate::util::json::Json::Arr(self.ucbs.iter().map(|u| u.export_state()).collect()),
+        )])
+    }
+
+    /// Restore state exported by [`ContextualSplitPolicy::export_state`].
+    /// The context count must match — a snapshot from a different link
+    /// scenario is a configuration mismatch.
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        let contexts = v.get("contexts")?.as_arr()?;
+        if contexts.len() != self.ucbs.len() {
+            anyhow::bail!(
+                "contextual state has {} contexts, this policy has {}",
+                contexts.len(),
+                self.ucbs.len()
+            );
+        }
+        // validate every context before mutating any, so a bad snapshot
+        // cannot leave the policy half-restored
+        let mut staged = self.ucbs.clone();
+        for (u, state) in staged.iter_mut().zip(contexts) {
+            u.import_state(state)?;
+        }
+        self.ucbs = staged;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +210,58 @@ mod tests {
     fn zero_contexts_clamps_to_one() {
         let p = ContextualSplitPolicy::new(3, 0, 0.8, 1.0);
         assert_eq!(p.n_contexts(), 1);
+    }
+
+    #[test]
+    fn state_round_trip_restores_every_context_bit_exactly() {
+        let mut p = ContextualSplitPolicy::new(4, 3, 0.8, 1.0);
+        for round in 0..60 {
+            let ctx = round % 3;
+            let s = p.choose_split(ctx);
+            p.record(ctx, s, (round as f64) * 0.01 - 0.2);
+        }
+        let state = p.export_state();
+        let mut restored = ContextualSplitPolicy::new(4, 3, 0.8, 1.0);
+        restored.import_state(&state).unwrap();
+        for ctx in 0..3 {
+            assert_eq!(restored.ucb(ctx).t, p.ucb(ctx).t);
+            for i in 0..4 {
+                assert_eq!(restored.ucb(ctx).arm(i).n, p.ucb(ctx).arm(i).n);
+                assert_eq!(
+                    restored.ucb(ctx).arm(i).q.to_bits(),
+                    p.ucb(ctx).arm(i).q.to_bits()
+                );
+            }
+        }
+        // and the continued choices match
+        for ctx in 0..3 {
+            assert_eq!(restored.choose_split(ctx), p.choose_split(ctx));
+        }
+    }
+
+    #[test]
+    fn import_rejects_context_mismatch_without_partial_restore() {
+        let mut p = ContextualSplitPolicy::new(4, 2, 0.8, 1.0);
+        for _ in 0..10 {
+            let s = p.choose_split(0);
+            p.record(0, s, 0.5);
+        }
+        let state = p.export_state();
+        let mut wrong = ContextualSplitPolicy::new(4, 3, 0.8, 1.0);
+        assert!(wrong.import_state(&state).is_err());
+        for ctx in 0..3 {
+            assert_eq!(wrong.ucb(ctx).t, 0, "context {ctx} must stay cold");
+        }
+        // a valid envelope with one corrupted context also leaves no trace
+        let mut corrupt = state.clone();
+        if let crate::util::json::Json::Obj(o) = &mut corrupt {
+            if let Some(crate::util::json::Json::Arr(cs)) = o.get_mut("contexts") {
+                cs[1] = crate::util::json::Json::Str("garbage".into());
+            }
+        }
+        let mut target = ContextualSplitPolicy::new(4, 2, 0.8, 1.0);
+        assert!(target.import_state(&corrupt).is_err());
+        assert_eq!(target.ucb(0).t, 0, "no half-restored state");
     }
 
     #[test]

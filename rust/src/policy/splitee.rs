@@ -34,6 +34,16 @@ impl SplitEePolicy {
     pub fn record(&mut self, split_1based: usize, reward: f64) {
         self.ucb.update(split_1based - 1, reward);
     }
+
+    /// Learned state for snapshot persistence: the bandit table.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![("ucb", self.ucb.export_state())])
+    }
+
+    /// Restore state exported by [`SplitEePolicy::export_state`].
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        self.ucb.import_state(v.get("ucb")?)
+    }
 }
 
 impl Policy for SplitEePolicy {
@@ -123,6 +133,29 @@ impl SplitEeSPolicy {
             };
             self.ucb.update(j0, r);
         }
+    }
+
+    /// Learned state for snapshot persistence: the bandit table plus the
+    /// imputed-C_L running mean (a cost-model running statistic — losing it
+    /// would bias every post-restart side-arm update).
+    pub fn export_state(&self) -> crate::util::json::Json {
+        use crate::persist::{f64_hex, u64_hex};
+        crate::util::json::Json::obj(vec![
+            ("ucb", self.ucb.export_state()),
+            ("mean_conf_final", f64_hex(self.mean_conf_final)),
+            ("n_conf_final", u64_hex(self.n_conf_final)),
+        ])
+    }
+
+    /// Restore state exported by [`SplitEeSPolicy::export_state`].
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        use crate::persist::{f64_from_hex, u64_from_hex};
+        let mean = f64_from_hex(v.get("mean_conf_final")?)?;
+        let n = u64_from_hex(v.get("n_conf_final")?)?;
+        self.ucb.import_state(v.get("ucb")?)?;
+        self.mean_conf_final = mean;
+        self.n_conf_final = n;
+        Ok(())
     }
 }
 
@@ -296,6 +329,52 @@ mod tests {
         assert_eq!(o.split, 1);
         assert!(o.offloaded);
         assert_eq!(o.infer_layer, 12);
+    }
+
+    #[test]
+    fn splitee_state_round_trip_continues_identically() {
+        let mut rng = Rng::new(21);
+        let profile = SynthProfile::generate(200, 12, SynthMix::default(), &mut rng);
+        let c = cm();
+        let mut p = SplitEePolicy::new(12, 0.85, 1.0);
+        run_policy(&mut p, &profile, &c);
+        let mut restored = SplitEePolicy::new(12, 0.85, 1.0);
+        restored.import_state(&p.export_state()).unwrap();
+        // the continued decision streams must be bit-identical
+        let tail = SynthProfile::generate(50, 12, SynthMix::default(), &mut rng);
+        let a = run_policy(&mut p, &tail, &c);
+        let b = run_policy(&mut restored, &tail, &c);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.split, x.offloaded), (y.split, y.offloaded));
+            assert_eq!(x.reward.to_bits(), y.reward.to_bits());
+        }
+    }
+
+    #[test]
+    fn splitee_s_state_round_trip_preserves_imputed_mean() {
+        let mut p = SplitEeSPolicy::new(12, 0.85, 1.0);
+        let c = cm();
+        p.record_prefix(&c, &[0.5, 0.6, 0.7], Some(0.971));
+        p.record_prefix(&c, &[0.4], None);
+        let state = p.export_state();
+        let mut restored = SplitEeSPolicy::new(12, 0.85, 1.0);
+        restored.import_state(&state).unwrap();
+        assert_eq!(restored.n_conf_final, p.n_conf_final);
+        assert_eq!(restored.mean_conf_final.to_bits(), p.mean_conf_final.to_bits());
+        for j in 0..12 {
+            assert_eq!(restored.ucb().arm(j).n, p.ucb().arm(j).n);
+            assert_eq!(restored.ucb().arm(j).q.to_bits(), p.ucb().arm(j).q.to_bits());
+        }
+        // forward compat: unknown fields in the state blob are ignored
+        let mut extended = state.clone();
+        if let crate::util::json::Json::Obj(o) = &mut extended {
+            o.insert("future".into(), crate::util::json::Json::Bool(true));
+        }
+        assert!(restored.import_state(&extended).is_ok());
+        // mismatched arm count is rejected without mutating the target
+        let mut wrong = SplitEeSPolicy::new(5, 0.85, 1.0);
+        assert!(wrong.import_state(&state).is_err());
+        assert_eq!(wrong.ucb().t, 0);
     }
 
     #[test]

@@ -146,6 +146,15 @@ impl<K: Hash + Eq + Clone, V> LruMap<K, V> {
         self.map.insert(key, (self.tick, value));
         evicted
     }
+
+    /// Resident keys ordered least- to most-recently used — the order a warm
+    /// restart must re-insert them in to reproduce this map's eviction
+    /// behaviour exactly (snapshot persistence exports this list).
+    pub fn keys_by_recency(&self) -> Vec<K> {
+        let mut entries: Vec<(u64, &K)> = self.map.iter().map(|(k, (t, _))| (*t, k)).collect();
+        entries.sort_unstable_by_key(|(t, _)| *t);
+        entries.into_iter().map(|(_, k)| k.clone()).collect()
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +254,40 @@ mod tests {
         assert_eq!(s.misses, 2);
         assert_eq!(s.evictions, 1);
         assert_eq!(s.resident, 2);
+    }
+
+    #[test]
+    fn keys_by_recency_orders_lru_to_mru() {
+        let mut lru: LruMap<u32, u32> = LruMap::new(3);
+        lru.insert(1, 10);
+        lru.insert(2, 20);
+        lru.insert(3, 30);
+        lru.get(&1); // order now 2 < 3 < 1
+        assert_eq!(lru.keys_by_recency(), vec![2, 3, 1]);
+        assert!(LruMap::<u32, u32>::new(4).keys_by_recency().is_empty());
+    }
+
+    #[test]
+    fn reinserting_in_recency_order_preserves_eviction_behaviour() {
+        // The warm-restart contract: replaying keys_by_recency() into a fresh
+        // map yields the same eviction sequence as the original map.
+        let mut orig: LruMap<u32, u32> = LruMap::new(3);
+        for k in [5, 9, 2, 7] {
+            orig.insert(k, k * 10);
+        }
+        orig.get(&9);
+        let order = orig.keys_by_recency();
+        let mut rebuilt: LruMap<u32, u32> = LruMap::new(3);
+        for &k in &order {
+            rebuilt.insert(k, k * 10);
+        }
+        assert_eq!(rebuilt.keys_by_recency(), order);
+        // subject both to the same inserts; evictions must match key-for-key
+        for k in [11, 13, 17] {
+            let a = orig.insert(k, k * 10).map(|(key, _)| key);
+            let b = rebuilt.insert(k, k * 10).map(|(key, _)| key);
+            assert_eq!(a, b, "insert {k}");
+        }
     }
 
     #[test]

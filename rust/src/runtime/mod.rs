@@ -239,6 +239,22 @@ pub trait ModelExecutor: Send + Sync + std::fmt::Debug {
     fn cache_stats(&self) -> CacheStats {
         CacheStats::default()
     }
+
+    /// Opaque identifiers of the currently-warm compiled units, ordered
+    /// least- to most-recently used (snapshot persistence exports this so a
+    /// restart can re-warm the same working set).  Empty for backends
+    /// without a compile cache.
+    fn warm_keys(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Re-warm the units named by a previous [`ModelExecutor::warm_keys`]
+    /// call, in the given order.  Keys that no longer resolve (stale
+    /// artifacts) are skipped, not errors — warmup is an optimisation, never
+    /// a correctness dependency.  No-op for cache-less backends.
+    fn rewarm(&self, _keys: &[String]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// A compute backend: a factory for [`ModelExecutor`]s.

@@ -280,6 +280,31 @@ impl FaultState {
             FaultVerdict::Healthy
         }
     }
+
+    /// Replayable state for snapshot persistence: the per-replica flaky
+    /// stream positions.  The schedule itself is configuration (part of the
+    /// snapshot fingerprint), so only the rng cursors are exported.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![(
+            "rngs",
+            crate::util::json::Json::Arr(
+                self.rngs.iter().map(crate::persist::rng_to_json).collect(),
+            ),
+        )])
+    }
+
+    /// Restore state exported by [`FaultState::export_state`].  The stream
+    /// count must match the pool size this state was built for.
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> Result<()> {
+        let arr = v.get("rngs")?.as_arr()?;
+        if arr.len() != self.rngs.len() {
+            bail!("fault snapshot has {} rng streams, this pool has {}", arr.len(), self.rngs.len());
+        }
+        let rngs =
+            arr.iter().map(crate::persist::rng_from_json).collect::<Result<Vec<_>>>()?;
+        self.rngs = rngs;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -367,6 +392,25 @@ mod tests {
         // p in (0, 1) on both replicas: both outcomes must occur
         assert!(ta.contains(&FaultVerdict::Failed));
         assert!(ta.contains(&FaultVerdict::Healthy));
+    }
+
+    #[test]
+    fn fault_state_round_trip_resumes_the_flaky_streams() {
+        let schedule = FaultSchedule::from_name("flaky@0:0.4|flaky@1:0.6,seed=99").unwrap();
+        let mut a = FaultState::new(schedule.clone(), 2);
+        for seq in 0..31 {
+            a.verdict(seq, (seq % 2) as usize);
+        }
+        let state = a.export_state();
+        let mut b = FaultState::new(schedule.clone(), 2);
+        b.import_state(&state).unwrap();
+        for seq in 31..95 {
+            let r = (seq % 2) as usize;
+            assert_eq!(a.verdict(seq, r), b.verdict(seq, r), "seq {seq}");
+        }
+        // stream-count mismatch (different pool size) is rejected
+        let mut wrong = FaultState::new(schedule, 3);
+        assert!(wrong.import_state(&state).is_err());
     }
 
     #[test]

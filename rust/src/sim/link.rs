@@ -45,7 +45,7 @@ pub enum TransferResult {
 }
 
 /// Stochastic uplink.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct LinkSim {
     pub profile: NetworkProfile,
     /// multiplicative jitter spread (0.1 -> +-10%)
@@ -88,6 +88,20 @@ impl LinkSim {
     /// the network; we ship the hidden state like SPINN-style splits.)
     pub fn activation_payload(seq_len: usize, d_model: usize) -> usize {
         seq_len * d_model * 4 + 64
+    }
+
+    /// Replayable state for snapshot persistence: the rng position.  Jitter,
+    /// loss and outage draws consume this stream, so a warm restart that
+    /// skipped it would diverge from the uninterrupted run at the first
+    /// transfer.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![("rng", crate::persist::rng_to_json(&self.rng))])
+    }
+
+    /// Restore state exported by [`LinkSim::export_state`].
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        self.rng = crate::persist::rng_from_json(v.get("rng")?)?;
+        Ok(())
     }
 }
 
@@ -251,6 +265,29 @@ impl MarkovLink {
 
     pub fn states(&self) -> &[MarkovState] {
         &self.states
+    }
+
+    /// Replayable chain position (current state + rng) for snapshot
+    /// persistence.  The state/transition tables are configuration and live
+    /// in the snapshot's fingerprint instead.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("cur", crate::persist::u64_hex(self.cur as u64)),
+            ("rng", crate::persist::rng_to_json(&self.rng)),
+        ])
+    }
+
+    /// Restore a position exported by [`MarkovLink::export_state`].
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        let cur = crate::persist::u64_from_hex(v.get("cur")?)? as usize;
+        if cur >= self.states.len() {
+            bail!("markov snapshot state {cur} out of range ({} states)", self.states.len());
+        }
+        let rng = crate::persist::rng_from_json(v.get("rng")?)?;
+        self.cur = cur;
+        self.rng = rng;
+        Ok(())
     }
 }
 
@@ -508,6 +545,59 @@ impl LinkScenario {
                     context,
                     label: bucket_label(context),
                 }
+            }
+        }
+    }
+
+    /// Replay position for snapshot persistence, tagged by scenario kind so
+    /// a restore into a differently-configured scenario is detected.  The
+    /// scenario definition itself (states, trace contents, seed) is
+    /// configuration — only the cursor is state.
+    pub fn export_state(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            LinkScenario::Static => Json::obj(vec![("kind", Json::Str("static".into()))]),
+            LinkScenario::Markov(m) => Json::obj(vec![
+                ("kind", Json::Str("markov".into())),
+                ("markov", m.export_state()),
+            ]),
+            LinkScenario::Trace { seg, left, .. } => Json::obj(vec![
+                ("kind", Json::Str("trace".into())),
+                ("seg", crate::persist::u64_hex(*seg as u64)),
+                ("left", crate::persist::u64_hex(*left)),
+            ]),
+        }
+    }
+
+    /// Restore a position exported by [`LinkScenario::export_state`].  The
+    /// snapshot's kind must match this scenario's variant, and trace cursors
+    /// must point inside the configured trace.
+    pub fn import_state(&mut self, v: &crate::util::json::Json) -> anyhow::Result<()> {
+        let kind = v.get("kind")?.as_str()?;
+        if kind != self.name() {
+            bail!("snapshot is for a {kind:?} link scenario, this service runs {:?}", self.name());
+        }
+        match self {
+            LinkScenario::Static => Ok(()),
+            LinkScenario::Markov(m) => m.import_state(v.get("markov")?),
+            LinkScenario::Trace { trace, seg, left } => {
+                let new_seg = crate::persist::u64_from_hex(v.get("seg")?)? as usize;
+                let new_left = crate::persist::u64_from_hex(v.get("left")?)?;
+                if new_seg >= trace.segments.len() {
+                    bail!(
+                        "trace snapshot segment {new_seg} out of range ({} segments)",
+                        trace.segments.len()
+                    );
+                }
+                if new_left == 0 || new_left > trace.segments[new_seg].batches {
+                    bail!(
+                        "trace snapshot has {new_left} batches left in a {}-batch segment",
+                        trace.segments[new_seg].batches
+                    );
+                }
+                *seg = new_seg;
+                *left = new_left;
+                Ok(())
             }
         }
     }
@@ -792,5 +882,84 @@ mod tests {
             (0..5).map(|_| sc.next_state(&base).label.to_string()).collect();
         assert_eq!(labels, vec!["good", "good", "good", "poor", "poor"]);
         std::fs::remove_file(&p).unwrap();
+    }
+
+    // ---- snapshot persistence --------------------------------------------
+
+    #[test]
+    fn link_sim_state_round_trip_resumes_the_draw_stream() {
+        let mut a = LinkSim::new(NetworkProfile::three_g(), 9);
+        a.profile.loss_rate = 0.3;
+        let payload = 4000;
+        for _ in 0..25 {
+            a.transfer(payload);
+        }
+        let state = a.export_state();
+        let mut b = LinkSim::new(NetworkProfile::three_g(), 9);
+        b.profile.loss_rate = 0.3;
+        b.import_state(&state).unwrap();
+        for i in 0..50 {
+            assert_eq!(a.transfer(payload), b.transfer(payload), "transfer {i}");
+        }
+    }
+
+    #[test]
+    fn markov_scenario_state_round_trip_replays_identically() {
+        let base = NetworkProfile::four_g();
+        let mut a = LinkScenario::Markov(MarkovLink::default_scenario(3));
+        for _ in 0..23 {
+            a.next_state(&base);
+        }
+        let state = a.export_state();
+        // restore into a *freshly configured* scenario, as a restart would
+        let mut b = LinkScenario::Markov(MarkovLink::default_scenario(3));
+        b.import_state(&state).unwrap();
+        for i in 0..100 {
+            assert_eq!(a.next_state(&base), b.next_state(&base), "batch {i}");
+        }
+    }
+
+    #[test]
+    fn trace_scenario_state_round_trip_resumes_mid_segment() {
+        let base = NetworkProfile::wifi();
+        let trace = LinkTrace::parse("3 40 8 0.002\n2 2 60 0.01\n").unwrap();
+        let left = trace.segments[0].batches;
+        let mut a = LinkScenario::Trace { trace: trace.clone(), seg: 0, left };
+        a.next_state(&base); // now mid-way through segment 0
+        let state = a.export_state();
+        let mut b = LinkScenario::Trace { trace: trace.clone(), seg: 0, left };
+        b.import_state(&state).unwrap();
+        for i in 0..10 {
+            assert_eq!(a.next_state(&base), b.next_state(&base), "batch {i}");
+        }
+        // cursors outside the configured trace are rejected without mutation
+        let bad_seg = crate::util::json::Json::obj(vec![
+            ("kind", crate::util::json::Json::Str("trace".into())),
+            ("seg", crate::persist::u64_hex(7)),
+            ("left", crate::persist::u64_hex(1)),
+        ]);
+        let mut c = LinkScenario::Trace { trace: trace.clone(), seg: 0, left };
+        assert!(c.import_state(&bad_seg).is_err());
+        let bad_left = crate::util::json::Json::obj(vec![
+            ("kind", crate::util::json::Json::Str("trace".into())),
+            ("seg", crate::persist::u64_hex(0)),
+            ("left", crate::persist::u64_hex(99)),
+        ]);
+        assert!(c.import_state(&bad_left).is_err());
+        if let LinkScenario::Trace { seg, left: l, .. } = &c {
+            assert_eq!((*seg, *l), (0, left), "rejected imports must not move the cursor");
+        }
+    }
+
+    #[test]
+    fn scenario_import_rejects_mismatched_kind() {
+        let mut markov = LinkScenario::Markov(MarkovLink::default_scenario(1));
+        let static_state = LinkScenario::Static.export_state();
+        let err = markov.import_state(&static_state).unwrap_err();
+        assert!(format!("{err:#}").contains("static"), "{err:#}");
+        let mut st = LinkScenario::Static;
+        assert!(st.import_state(&markov.export_state()).is_err());
+        // static's own state is trivially restorable
+        assert!(st.import_state(&static_state).is_ok());
     }
 }

@@ -378,6 +378,32 @@ impl fmt::Display for Json {
     }
 }
 
+/// Write `contents` to `path` atomically: write to `<path>.tmp`, fsync,
+/// rename over the destination.  A crash at any byte leaves either the old
+/// file intact or a stray `.tmp` — never a truncated destination.  Used by
+/// snapshot persistence and the bench JSON emitter.
+pub fn write_atomic(path: &std::path::Path, contents: &str) -> std::io::Result<()> {
+    use std::io::Write;
+    let tmp = {
+        let mut os = path.as_os_str().to_owned();
+        os.push(".tmp");
+        std::path::PathBuf::from(os)
+    };
+    {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()?;
+    }
+    match std::fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            // don't leave the orphaned tmp behind a failed rename
+            let _ = std::fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
 fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")?;
     for c in s.chars() {
@@ -520,5 +546,20 @@ mod tests {
     fn integer_display_is_exact() {
         assert_eq!(Json::Num(25000.0).to_string(), "25000");
         assert_eq!(Json::Num(0.1).to_string(), "0.1");
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_cleans_up() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("splitee_json_atomic_{}.json", std::process::id()));
+        write_atomic(&path, "{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"v\":1}");
+        write_atomic(&path, "{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{\"v\":2}");
+        // no temp file survives a successful write
+        let mut tmp_os = path.as_os_str().to_owned();
+        tmp_os.push(".tmp");
+        assert!(!std::path::PathBuf::from(tmp_os).exists());
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -8,5 +8,6 @@ pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;
+pub mod signals;
 pub mod stats;
 pub mod threadpool;

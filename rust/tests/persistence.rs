@@ -1,0 +1,502 @@
+//! Durable learned state: the three crash-recovery contracts.
+//!
+//! (a) **Warm-restart bit-identity** (static link): a service restored from
+//!     a snapshot serves the rest of the stream bit-identically to the same
+//!     service continuing in-process — the process boundary is invisible.
+//! (b) **Kill-mid-stream recovery** (replica faults): periodic snapshots
+//!     written while a replica dies under load restore cleanly, serving
+//!     resumes with the fault regime intact, and the pool accounting
+//!     identity still balances.
+//! (c) **Torn writes**: truncating a snapshot at *every* byte offset makes
+//!     the loader cold-start — it never panics and never half-restores —
+//!     and a leftover `.tmp` beside an intact snapshot is ignored.
+//!
+//! Plus the regret-recovery guarantee: after a restart, the warm-started
+//! bandit's hindsight regret over the next serving window is no worse than
+//! a cold start's over an identical workload (markov link).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use splitee::coordinator::service::{PolicyKind, SpeculateMode};
+use splitee::coordinator::{
+    BatcherConfig, CoalesceConfig, ReplicaConfig, Response, Router, RouterConfig, Service,
+    ServiceConfig,
+};
+use splitee::cost::{CostModel, NetworkProfile};
+use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::persist::{Snapshot, SnapshotConfig};
+use splitee::runtime::Backend;
+use splitee::sim::link::{LinkScenario, LinkSim};
+use splitee::sim::FaultSchedule;
+use splitee::tensor::TensorI32;
+use splitee::util::rng::Rng;
+
+fn service_model() -> Arc<MultiExitModel> {
+    let weights = ModelWeights::synthetic(5, 16, 32, 64, 8, 2, 0xFA11);
+    Arc::new(
+        MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            2,
+            8,
+            vec![1, 8],
+            &Backend::reference(),
+        )
+        .expect("synthetic reference model"),
+    )
+}
+
+fn request_tokens(n: usize) -> Vec<TensorI32> {
+    let mut rng = Rng::new(0x0F_F10AD);
+    (0..n)
+        .map(|_| {
+            TensorI32::new(vec![1, 8], (0..8).map(|_| rng.below(64) as i32).collect()).unwrap()
+        })
+        .collect()
+}
+
+fn config(
+    model: &MultiExitModel,
+    policy: PolicyKind,
+    alpha: f64,
+    scenario: &str,
+    replicas: ReplicaConfig,
+) -> ServiceConfig {
+    ServiceConfig {
+        policy,
+        alpha,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: Duration::from_millis(1),
+        },
+        // coalescing off: deterministic batch -> cloud-group mapping
+        coalesce: CoalesceConfig { enabled: false, max_wait: Duration::ZERO },
+        speculate: SpeculateMode::Off,
+        link: LinkScenario::from_name(scenario).unwrap(),
+        replicas,
+    }
+}
+
+fn fresh_service(cfg: &ServiceConfig, model: &Arc<MultiExitModel>, seed: u64) -> Service {
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::four_g(), seed);
+    Service::new(Arc::clone(model), cm, link, cfg)
+}
+
+/// Serve `tokens` through the full pipeline (submit everything, close the
+/// router, drain) and return the replies in arrival order.
+fn serve(service: &mut Service, cfg: &ServiceConfig, tokens: &[TensorI32]) -> Vec<Response> {
+    let router = Router::new(RouterConfig { max_inflight: 1024 });
+    let (tx, rx) = std::sync::mpsc::channel();
+    for t in tokens {
+        router.submit(t.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    router.shutdown();
+    service.run_pipelined(Arc::clone(&router), cfg.batcher.clone()).unwrap();
+    rx.iter().collect()
+}
+
+/// The bit-level projection of a reply (ids restart per router, so they are
+/// comparable across equal-length phase-2 runs).
+fn reply_bits(replies: &[Response]) -> Vec<(u64, usize, u32, usize, bool)> {
+    replies
+        .iter()
+        .map(|r| (r.id, r.prediction, r.confidence.to_bits(), r.infer_layer, r.offloaded))
+        .collect()
+}
+
+/// Arm statistics with the mean reward as raw bits, for exact comparison.
+fn arm_bits(service: &Service) -> Vec<(u64, u64)> {
+    let (_, arms) = service.bandit_summary().expect("bandit policy");
+    arms.into_iter().map(|(n, q)| (n, q.to_bits())).collect()
+}
+
+fn snap_path(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("splitee_persist_{}_{name}.json", std::process::id()))
+}
+
+/// Run `f` under a watchdog thread: fail if it neither finishes nor panics
+/// within `secs` (the no-hang half of every recovery contract).
+fn with_watchdog<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            worker.join().unwrap();
+            v
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(p) = worker.join() {
+                std::panic::resume_unwind(p);
+            }
+            unreachable!("worker exited without sending a result");
+        }
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("pipeline hung: no result within {secs}s");
+        }
+    }
+}
+
+// ---- contract (a): warm-restart bit-identity ------------------------------
+
+#[test]
+fn warm_restart_is_bit_identical_to_continuing_in_process() {
+    // Service X serves phase 1, snapshots, and keeps serving phase 2 in the
+    // same process.  Service Y is a fresh process stand-in: it restores the
+    // snapshot and serves the identical phase 2.  Every reply and the final
+    // bandit state must match bit for bit — the restart must be invisible.
+    let model = service_model();
+    let tokens = request_tokens(80);
+    let path = snap_path("bit_identity");
+    let _ = std::fs::remove_file(&path);
+
+    let cfg = config(&model, PolicyKind::SplitEe, 0.9, "static", ReplicaConfig::default());
+    let mut x = fresh_service(&cfg, &model, 7);
+    x.set_snapshot(SnapshotConfig { path: path.clone(), every: 0 });
+    let phase1 = serve(&mut x, &cfg, &tokens[..48]);
+    assert_eq!(phase1.len(), 48);
+    assert_eq!(x.batches_done(), 6, "48 requests at batch size 8");
+    assert!(x.write_snapshot(), "graceful-shutdown snapshot must be written");
+
+    let mut y = fresh_service(&cfg, &model, 7);
+    assert_eq!(y.fingerprint(), x.fingerprint());
+    assert!(y.restore(&path), "same-fingerprint snapshot must restore");
+    assert_eq!(y.batches_done(), 6, "the consistency clock travels with the state");
+
+    let x2 = serve(&mut x, &cfg, &tokens[48..]);
+    let y2 = serve(&mut y, &cfg, &tokens[48..]);
+    assert_eq!(
+        reply_bits(&x2),
+        reply_bits(&y2),
+        "restored service diverged from the uninterrupted one"
+    );
+    assert_eq!(arm_bits(&x), arm_bits(&y), "bandit arm statistics diverged");
+    assert_eq!(x.batches_done(), 10);
+    assert_eq!(y.batches_done(), 10);
+
+    // a differently-configured service must refuse the same snapshot
+    let other_cfg =
+        config(&model, PolicyKind::SplitEeS, 0.9, "static", ReplicaConfig::default());
+    let mut z = fresh_service(&other_cfg, &model, 7);
+    assert_ne!(z.fingerprint(), x.fingerprint());
+    assert!(!z.restore(&path), "fingerprint mismatch must cold-start, not restore");
+    assert_eq!(z.batches_done(), 0);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn warm_restart_regret_is_no_worse_than_cold_start() {
+    // Train a bandit for 48 batches on a markov link, snapshot, restore into
+    // a fresh service and serve 16 more batches.  A cold service faces the
+    // same 16-batch workload.  Hindsight regret (best-fixed-arm reward minus
+    // realized reward, each run against its own oracle) must not be worse
+    // for the warm start: the whole point of durable state is not paying the
+    // exploration cost twice.  `mu = 1.0` and `alpha = 1.1` (no early exit)
+    // make the arm gaps pure, well-separated cost differences.
+    let model = service_model();
+    let mk = |m: &Arc<MultiExitModel>, cfg: &ServiceConfig| {
+        let cm = CostModel::paper(5.0, 1.0, m.n_layers());
+        Service::new(Arc::clone(m), cm, LinkSim::new(NetworkProfile::four_g(), 11), cfg)
+    };
+    let train = request_tokens(384);
+    let eval = request_tokens(128);
+    let path = snap_path("regret");
+    let _ = std::fs::remove_file(&path);
+
+    let cfg = config(&model, PolicyKind::SplitEe, 1.1, "markov:5", ReplicaConfig::default());
+    let mut trained = mk(&model, &cfg);
+    trained.set_snapshot(SnapshotConfig { path: path.clone(), every: 0 });
+    serve(&mut trained, &cfg, &train);
+    assert!(trained.write_snapshot());
+
+    // realized reward of a window = sum over arms of (pulls * mean reward),
+    // differenced against the state at the window's start
+    let reward = |arms: &[(u64, u64)]| -> f64 {
+        arms.iter().map(|&(n, q)| n as f64 * f64::from_bits(q)).sum()
+    };
+    let pulls = |arms: &[(u64, u64)]| -> u64 { arms.iter().map(|&(n, _)| n).sum() };
+    // hindsight regret of a window given its per-arm (pulls, reward) deltas
+    let regret = |before: &[(u64, u64)], after: &[(u64, u64)]| -> f64 {
+        let deltas: Vec<(u64, f64)> = before
+            .iter()
+            .zip(after)
+            .map(|(&(n0, q0), &(n1, q1))| {
+                (n1 - n0, n1 as f64 * f64::from_bits(q1) - n0 as f64 * f64::from_bits(q0))
+            })
+            .collect();
+        let best_mean = deltas
+            .iter()
+            .filter(|(n, _)| *n > 0)
+            .map(|&(n, r)| r / n as f64)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let (n_total, r_total) =
+            deltas.iter().fold((0u64, 0.0), |(n, r), &(dn, dr)| (n + dn, r + dr));
+        best_mean * n_total as f64 - r_total
+    };
+
+    let cfg_warm = config(&model, PolicyKind::SplitEe, 1.1, "markov:5", ReplicaConfig::default());
+    let mut warm = mk(&model, &cfg_warm);
+    assert!(warm.restore(&path));
+    let warm_before = arm_bits(&warm);
+    serve(&mut warm, &cfg_warm, &eval);
+    let warm_after = arm_bits(&warm);
+    assert_eq!(
+        pulls(&warm_after),
+        pulls(&warm_before) + 16,
+        "one bandit update per batch, on top of the restored pulls"
+    );
+
+    let cfg_cold = config(&model, PolicyKind::SplitEe, 1.1, "markov:5", ReplicaConfig::default());
+    let mut cold = mk(&model, &cfg_cold);
+    serve(&mut cold, &cfg_cold, &eval);
+    let cold_after = arm_bits(&cold);
+    let cold_before: Vec<(u64, u64)> = cold_after.iter().map(|_| (0, 0.0f64.to_bits())).collect();
+    assert!(
+        cold_after.iter().all(|&(n, _)| n >= 1),
+        "cold start must pay the forced exploration of every arm: {cold_after:?}"
+    );
+
+    let (rw, rc) = (regret(&warm_before, &warm_after), regret(&cold_before, &cold_after));
+    assert!(
+        rw <= rc + 1e-9,
+        "warm restart lost the learning progress: warm regret {rw:.4} > cold {rc:.4} \
+         (warm reward {:.4}, cold reward {:.4})",
+        reward(&warm_after) - reward(&warm_before),
+        reward(&cold_after),
+    );
+    std::fs::remove_file(&path).unwrap();
+}
+
+// ---- contract (b): kill-mid-stream recovery -------------------------------
+
+#[test]
+fn periodic_snapshots_under_replica_kill_restore_and_resume() {
+    // Replica 0 dies at dispatch sequence 2 while periodic snapshots are
+    // being written every 2 batches.  A fresh service restores the last
+    // periodic snapshot — the stand-in for a process killed mid-stream —
+    // and resumes serving under the same fault regime: every request is
+    // answered exactly once, accounting balances, nothing hangs.
+    let path = snap_path("kill_recovery");
+    let _ = std::fs::remove_file(&path);
+    let p = path.clone();
+    let fingerprint = with_watchdog(120, move || {
+        let model = service_model();
+        let replicas = ReplicaConfig {
+            n: 3,
+            faults: FaultSchedule::from_name("kill@2:0").unwrap(),
+            ..Default::default()
+        };
+        let cfg = config(&model, PolicyKind::Fixed(2), 1.1, "static", replicas);
+        let mut service = fresh_service(&cfg, &model, 7);
+        service.set_snapshot(SnapshotConfig { path: p.clone(), every: 2 });
+        let replies = serve(&mut service, &cfg, &request_tokens(40));
+        assert_eq!(replies.len(), 40);
+        assert!(service.metrics.pool.snapshot().balanced());
+        assert_eq!(service.metrics.snapshots_written, 2, "5 batches, cadence 2");
+        service.fingerprint().to_string()
+    });
+
+    // the on-disk snapshot is the batch-4 state, not the final one: the
+    // "crash" happened after the last periodic write
+    let snap = Snapshot::load(&path, &fingerprint).expect("periodic snapshot must load");
+    assert_eq!(snap.batches, 4);
+
+    let p = path.clone();
+    with_watchdog(120, move || {
+        let model = service_model();
+        let replicas = ReplicaConfig {
+            n: 3,
+            faults: FaultSchedule::from_name("kill@2:0").unwrap(),
+            ..Default::default()
+        };
+        let cfg = config(&model, PolicyKind::Fixed(2), 1.1, "static", replicas);
+        let mut service = fresh_service(&cfg, &model, 7);
+        assert!(service.restore(&p), "mid-stream snapshot must restore");
+        assert_eq!(service.batches_done(), 4);
+        service.set_snapshot(SnapshotConfig { path: p.clone(), every: 2 });
+
+        let replies = serve(&mut service, &cfg, &request_tokens(24));
+        assert_eq!(replies.len(), 24, "recovery run dropped or duplicated replies");
+        let mut ids: Vec<u64> = replies.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..24).collect::<Vec<u64>>());
+        let pool = service.metrics.pool.snapshot();
+        assert!(pool.balanced(), "accounting identity broken after recovery: {pool:?}");
+        assert_eq!(pool.order_violations(), 0);
+        assert_eq!(service.metrics.served, 24);
+        assert_eq!(service.batches_done(), 7, "the consistency clock keeps counting");
+
+        assert!(service.write_snapshot());
+        let snap = Snapshot::load(&p, service.fingerprint()).unwrap();
+        assert_eq!(snap.batches, 7, "the shutdown snapshot reflects the resumed run");
+    });
+    std::fs::remove_file(&path).unwrap();
+}
+
+/// CI crash-recovery smoke hook: `SPLITEE_SNAPSHOT=<path>[@N]` turns this
+/// into a snapshot/restore cycle under whatever `SPLITEE_REPLICAS` /
+/// `SPLITEE_FAULTS` the fault matrix injects; without the variable it is a
+/// plain double-run.  Fault-agnostic invariants only: every request answered
+/// exactly once, accounting balanced, restore succeeds when configured.
+#[test]
+fn env_fault_matrix_crash_recovery_smoke() {
+    let snap_cfg = SnapshotConfig::from_env();
+    if let Some(c) = &snap_cfg {
+        let _ = std::fs::remove_file(&c.path);
+    }
+    let env_cfg = snap_cfg.clone();
+    with_watchdog(300, move || {
+        let model = service_model();
+        let cfg = config(&model, PolicyKind::Fixed(2), 1.1, "static", ReplicaConfig::from_env());
+        let mut first = fresh_service(&cfg, &model, 7);
+        if let Some(c) = &env_cfg {
+            first.set_snapshot(c.clone());
+        }
+        let replies = serve(&mut first, &cfg, &request_tokens(40));
+        assert_eq!(replies.len(), 40);
+        assert!(first.metrics.pool.snapshot().balanced());
+        if env_cfg.is_some() {
+            assert!(first.write_snapshot());
+        }
+
+        let mut second = fresh_service(&cfg, &model, 7);
+        if let Some(c) = &env_cfg {
+            assert!(second.restore(&c.path), "snapshot written above must restore");
+            assert_eq!(second.batches_done(), 5);
+        }
+        let replies = serve(&mut second, &cfg, &request_tokens(24));
+        assert_eq!(replies.len(), 24);
+        let pool = second.metrics.pool.snapshot();
+        assert!(pool.balanced(), "accounting identity broken after recovery: {pool:?}");
+        assert_eq!(pool.order_violations(), 0);
+        assert_eq!(second.metrics.served, 24);
+    });
+    if let Some(c) = &snap_cfg {
+        let _ = std::fs::remove_file(&c.path);
+    }
+}
+
+// ---- contract (c): torn writes --------------------------------------------
+
+#[test]
+fn truncation_at_every_byte_offset_cold_starts_never_panics() {
+    // Build a real snapshot (hostile values included), then sweep a torn
+    // write through every prefix length.  Every strict prefix must be
+    // rejected into a cold start; only the complete file loads — and it
+    // loads equal to what was saved.
+    use splitee::persist::{f64_hex, u64_hex};
+    use splitee::util::json::Json;
+
+    let path = snap_path("torn");
+    let mut snap = Snapshot::new("fp:torn", 0xDEAD_BEEF_CAFE);
+    snap.insert(
+        "policy",
+        Json::obj(vec![
+            ("kind", Json::Str("splitee".into())),
+            ("t", u64_hex(u64::MAX)),
+            ("q", f64_hex(-0.0)),
+            ("nan", f64_hex(f64::NAN)),
+        ]),
+    );
+    snap.insert("link", Json::obj(vec![("rng", u64_hex(42))]));
+    snap.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(bytes.len() > 64, "fixture too small to be a meaningful sweep");
+
+    for cut in 0..bytes.len() {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(
+            Snapshot::load(&path, "fp:torn").is_none(),
+            "a {cut}-byte torn prefix of {} bytes must cold-start",
+            bytes.len()
+        );
+    }
+    std::fs::write(&path, &bytes).unwrap();
+    let loaded = Snapshot::load(&path, "fp:torn").expect("the complete file must load");
+    assert_eq!(loaded, snap);
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn leftover_tmp_file_never_shadows_the_intact_snapshot() {
+    // A crash between writing `<path>.tmp` and the rename leaves a stray
+    // tmp file; the loader must keep reading the intact previous snapshot,
+    // and the next save must overwrite the stray without erroring.
+    let path = snap_path("tmp_leftover");
+    let snap = Snapshot::new("fp:tmp", 9);
+    snap.save(&path).unwrap();
+
+    let tmp = {
+        let mut os = path.as_os_str().to_owned();
+        os.push(".tmp");
+        std::path::PathBuf::from(os)
+    };
+    assert!(!tmp.exists(), "atomic save must not leave its tmp file behind");
+    std::fs::write(&tmp, b"{ torn garbage").unwrap();
+    let loaded = Snapshot::load(&path, "fp:tmp").expect("previous snapshot survives");
+    assert_eq!(loaded.batches, 9);
+
+    let newer = Snapshot::new("fp:tmp", 10);
+    newer.save(&path).unwrap();
+    assert!(!tmp.exists(), "save must clean up the stray tmp file via rename");
+    assert_eq!(Snapshot::load(&path, "fp:tmp").unwrap().batches, 10);
+    std::fs::remove_file(&path).unwrap();
+}
+
+// ---- forward compatibility across the full surface ------------------------
+
+#[test]
+fn unknown_fields_in_every_section_still_restore() {
+    // A future writer may extend any state section with fields this build
+    // has never heard of; every importer must ignore them.  Inject a junk
+    // field into the top level of every object-valued section of a real
+    // snapshot and restore it.
+    use splitee::util::json::{self, Json};
+
+    let model = service_model();
+    let replicas = ReplicaConfig {
+        n: 2,
+        faults: FaultSchedule::from_name("flaky@1:0.25,seed=3").unwrap(),
+        ..Default::default()
+    };
+    let cfg = config(&model, PolicyKind::Contextual, 0.9, "markov:5", replicas.clone());
+    let mut writer = fresh_service(&cfg, &model, 7);
+    let path = snap_path("fwd_compat");
+    writer.set_snapshot(SnapshotConfig { path: path.clone(), every: 0 });
+    serve(&mut writer, &cfg, &request_tokens(32));
+    assert!(writer.write_snapshot());
+
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut v = json::parse(&text).unwrap();
+    let mut doctored = 0usize;
+    if let Json::Obj(envelope) = &mut v {
+        envelope.insert("future_envelope_field".into(), Json::Num(1.0));
+        if let Some(Json::Obj(sections)) = envelope.get_mut("sections") {
+            assert!(
+                sections.len() >= 4,
+                "expected policy/link/scenario/pool sections, got {:?}",
+                sections.keys().collect::<Vec<_>>()
+            );
+            for section in sections.values_mut() {
+                if let Json::Obj(o) = section {
+                    o.insert("future_field".into(), Json::Str("ignore me".into()));
+                    doctored += 1;
+                }
+            }
+        }
+    }
+    assert!(doctored >= 4, "sweep must actually touch every exported struct");
+    std::fs::write(&path, v.to_string()).unwrap();
+
+    let cfg2 = config(&model, PolicyKind::Contextual, 0.9, "markov:5", replicas);
+    let mut reader = fresh_service(&cfg2, &model, 7);
+    assert!(reader.restore(&path), "unknown fields must not block a restore");
+    assert_eq!(reader.batches_done(), 4);
+    std::fs::remove_file(&path).unwrap();
+}
