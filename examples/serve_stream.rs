@@ -10,7 +10,7 @@
 //!     [--link static|markov|markov:SEED|trace:PATH] \
 //!     [--replicas N] [--dispatch round-robin|least-loaded] \
 //!     [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]] \
-//!     [--snapshot PATH] [--snapshot-every N] \
+//!     [--snapshot PATH] [--snapshot-every N] [--ref-threads N] \
 //!     [--policy splitee|splitee-s|contextual|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
@@ -37,6 +37,8 @@ fn main() -> Result<()> {
     let args = Args::from_env();
     splitee::util::logging::init(if args.has("quiet") { 0 } else { 1 });
     let settings = Settings::from_args(&args).map_err(anyhow::Error::msg)?;
+    // size the reference backend's kernel pool before any model loads
+    settings.configure_kernel_pool();
 
     let manifest = Manifest::load(&settings.artifacts_dir)?;
     let backend = Backend::from_name(&settings.backend)?;

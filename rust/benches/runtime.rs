@@ -3,12 +3,134 @@
 //! [`Backend::auto`] resolves; without artifacts it measures the synthetic
 //! reference-backend model instead (the suite name records neither — check
 //! the printed backend line when comparing runs).
+//!
+//! Also runs the reference-kernel microbench (blocked vs naive GEMM at
+//! serving shapes, block-forward thread scaling) and merges the results
+//! into `BENCH_serving.json` as `refkernel_*` keys, so the kernel speedup
+//! rides the committed perf trajectory next to the serving numbers.  Run
+//! `cargo bench --bench serving` first so the merge lands in a fresh file.
 
 use splitee::config::Manifest;
 use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::runtime::reference::{matmul_bias, matmul_bias_naive};
 use splitee::runtime::Backend;
 use splitee::tensor::TensorI32;
 use splitee::util::bench::BenchSuite;
+use splitee::util::json::{self, Json};
+
+/// Mean ns/iteration of `f` after a short warmup.
+fn time_ns(iters: u64, mut f: impl FnMut()) -> f64 {
+    for _ in 0..2 {
+        f();
+    }
+    let start = std::time::Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Deterministic pseudo-random fill in [-0.5, 0.5) (LCG, no deps).
+fn lcg_fill(len: usize, seed: u32) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..len)
+        .map(|_| {
+            s = s.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            (s >> 8) as f32 / (1u32 << 24) as f32 - 0.5
+        })
+        .collect()
+}
+
+/// Blocked-vs-naive GEMM and block-forward thread scaling at serving shapes
+/// (d_model = 256).  Returns the `refkernel_*` key set.
+fn refkernel_microbench() -> Vec<(String, f64)> {
+    let mut out: Vec<(String, f64)> = Vec::new();
+
+    // ---- GEMM: [128 x 256] @ [256 x 256] + bias, single thread
+    let (n, d) = (128usize, 256usize);
+    let x = lcg_fill(n * d, 1);
+    let w = lcg_fill(d * d, 2);
+    let bias = lcg_fill(d, 3);
+    let flops = (2 * n * d * d) as f64;
+    let blocked_ns = time_ns(30, || {
+        std::hint::black_box(matmul_bias(&x, &w, &bias, n, d, d));
+    });
+    let naive_ns = time_ns(30, || {
+        std::hint::black_box(matmul_bias_naive(&x, &w, &bias, n, d, d));
+    });
+    let (blocked_gf, naive_gf) = (flops / blocked_ns, flops / naive_ns);
+    println!(
+        "refkernel gemm [{n}x{d}]@[{d}x{d}]: blocked {blocked_gf:.2} GFLOP/s vs \
+         naive {naive_gf:.2} GFLOP/s ({:.2}x)",
+        blocked_gf / naive_gf
+    );
+    out.push(("refkernel_gemm_d256_gflops".to_string(), blocked_gf));
+    out.push(("refkernel_gemm_naive_d256_gflops".to_string(), naive_gf));
+    out.push(("refkernel_gemm_speedup_vs_naive".to_string(), blocked_gf / naive_gf));
+
+    // ---- one transformer block forward, private kernel pools of 1/2/4
+    let (layers, d, ff, vocab, seq, classes) = (2usize, 256usize, 1024usize, 256, 16usize, 2);
+    let b = 8usize;
+    let mut t1_rps = f64::NAN;
+    for threads in [1usize, 2, 4] {
+        let weights = ModelWeights::synthetic(layers, d, ff, vocab, seq, classes, 0x5EED);
+        let model = MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            4,
+            seq,
+            vec![b],
+            &Backend::reference_threads(threads),
+        )
+        .expect("refkernel model");
+        let tokens = TensorI32::new(
+            vec![b, seq],
+            (0..(b * seq) as i32).map(|i| i % vocab as i32).collect(),
+        )
+        .unwrap();
+        let h = model.embed(&tokens).unwrap();
+        let ns = time_ns(10, || {
+            std::hint::black_box(model.block(&h, 0).unwrap());
+        });
+        let rps = b as f64 / (ns / 1e9);
+        println!(
+            "refkernel block fwd d={d} ff={ff} b={b} t={seq} threads={threads}: {rps:.1} rows/s"
+        );
+        if threads == 1 {
+            t1_rps = rps;
+        }
+        out.push((format!("refkernel_block_fwd_t{threads}_rps"), rps));
+        if threads == 4 {
+            out.push(("refkernel_block_scaling_t4".to_string(), rps / t1_rps));
+        }
+    }
+    out
+}
+
+/// Merge the `refkernel_*` keys into `BENCH_serving.json` (written by the
+/// serving bench) without disturbing its other keys; creates a minimal file
+/// when the serving bench has not run yet.
+fn merge_refkernel_keys(keys: Vec<(String, f64)>) {
+    let path = std::path::Path::new("BENCH_serving.json");
+    let mut obj = match std::fs::read_to_string(path).ok().and_then(|s| json::parse(&s).ok()) {
+        Some(Json::Obj(map)) => map,
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("backend".to_string(), Json::Str("reference".to_string()));
+            m
+        }
+    };
+    for (k, v) in keys {
+        obj.insert(k, Json::Num(v));
+    }
+    // atomic write-then-rename, same as the serving bench
+    if let Err(e) = json::write_atomic(path, &Json::Obj(obj).to_string()) {
+        eprintln!("warning: could not write BENCH_serving.json: {e}");
+    } else {
+        println!("refkernel_* keys merged into BENCH_serving.json");
+    }
+}
 
 fn main() {
     let dir = std::path::PathBuf::from(
@@ -77,6 +199,8 @@ fn main() {
     suite.bench_items(&format!("prefix_full_b{cb}"), 3, 30, cb as f64, || {
         std::hint::black_box(model.forward_all_exits(&tokens).unwrap());
     });
+
+    merge_refkernel_keys(refkernel_microbench());
 
     suite.finish();
 }

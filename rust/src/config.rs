@@ -258,6 +258,10 @@ pub struct Settings {
     pub snapshot: String,
     /// write a snapshot every N batches (0 = only at graceful shutdown)
     pub snapshot_every: u64,
+    /// reference-backend kernel-pool threads (`--ref-threads`; 0 = decide
+    /// automatically: the `SPLITEE_REF_THREADS` env hook, else available
+    /// parallelism; applied via [`Settings::configure_kernel_pool`])
+    pub ref_threads: usize,
     /// cost-confidence conversion factor mu (paper: 0.1)
     pub mu: f64,
     /// UCB exploration parameter beta (paper: 1.0)
@@ -283,6 +287,7 @@ impl Default for Settings {
             faults: String::new(),
             snapshot: String::new(),
             snapshot_every: 0,
+            ref_threads: 0,
             mu: 0.1,
             beta: 1.0,
             offload_cost: 5.0,
@@ -340,6 +345,10 @@ impl Settings {
         if s.snapshot_every > 0 && s.snapshot.is_empty() {
             bail!("--snapshot-every needs --snapshot <path>");
         }
+        s.ref_threads = args.get_num("ref-threads", s.ref_threads).map_err(anyhow::Error::msg)?;
+        if args.get("ref-threads").is_some() && s.ref_threads == 0 {
+            bail!("--ref-threads must be a positive thread count");
+        }
         s.mu = args.get_num("mu", s.mu).map_err(anyhow::Error::msg)?;
         s.beta = args.get_num("beta", s.beta).map_err(anyhow::Error::msg)?;
         s.offload_cost = args.get_num("o", s.offload_cost).map_err(anyhow::Error::msg)?;
@@ -370,6 +379,17 @@ impl Settings {
             faults: crate::sim::faults::FaultSchedule::from_name(&self.faults)?,
             ..crate::coordinator::ReplicaConfig::default()
         })
+    }
+
+    /// Apply `--ref-threads` to the reference backend's shared kernel pool.
+    /// Call once at startup, before the first model load — the pool's size
+    /// freezes when it is first used.  A `ref_threads` of 0 leaves the
+    /// automatic sizing (the `SPLITEE_REF_THREADS` env hook, else available
+    /// parallelism) in effect.
+    pub fn configure_kernel_pool(&self) {
+        if self.ref_threads > 0 {
+            crate::runtime::reference::set_kernel_threads(self.ref_threads);
+        }
     }
 
     /// The durable-state snapshot destination these settings describe
@@ -518,6 +538,19 @@ mod tests {
         // a cadence without a destination is a configuration error
         let args =
             Args::parse(["x", "--snapshot-every", "10"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn settings_ref_threads_parse_and_validate() {
+        let s = Settings::from_args(&Args::parse(["x"].iter().map(|s| s.to_string()))).unwrap();
+        assert_eq!(s.ref_threads, 0, "default = automatic kernel-pool sizing");
+        let args = Args::parse(["x", "--ref-threads", "4"].iter().map(|s| s.to_string()));
+        assert_eq!(Settings::from_args(&args).unwrap().ref_threads, 4);
+        // an explicit zero is a configuration error, not silent auto
+        let args = Args::parse(["x", "--ref-threads", "0"].iter().map(|s| s.to_string()));
+        assert!(Settings::from_args(&args).is_err());
+        let args = Args::parse(["x", "--ref-threads", "lots"].iter().map(|s| s.to_string()));
         assert!(Settings::from_args(&args).is_err());
     }
 

@@ -43,6 +43,8 @@ fn main() {
 
 fn run(args: &Args) -> Result<()> {
     let settings = Settings::from_args(args).map_err(|e| anyhow::anyhow!("{e}"))?;
+    // size the reference backend's kernel pool before any model loads
+    settings.configure_kernel_pool();
     let sub = args.subcommand.as_deref().unwrap_or("help");
     match sub {
         "check" => check(&settings),
@@ -143,6 +145,9 @@ Common flags
                     shutdown (also via SPLITEE_SNAPSHOT=PATH[@N])
   --snapshot-every N  snapshot cadence in batches (default: 0 — write only
                     at graceful shutdown); requires --snapshot
+  --ref-threads N   reference-backend kernel-pool threads (default: the
+                    SPLITEE_REF_THREADS env hook, else available
+                    parallelism; numerics are bit-identical for every N)
   --o N             offloading cost in lambda units (default: 5)
   --mu X            cost weight in the reward (default: 0.1)
   --beta X          UCB exploration (default: 1.0)

@@ -270,9 +270,20 @@ pub struct Backend {
 }
 
 impl Backend {
-    /// The pure-Rust reference backend (always available).
+    /// The pure-Rust reference backend (always available).  Models loaded
+    /// through it fan kernels onto the shared process-wide kernel pool
+    /// (`--ref-threads` / `SPLITEE_REF_THREADS`, default = available
+    /// parallelism).
     pub fn reference() -> Backend {
-        Backend { inner: Arc::new(ReferenceBackend) }
+        Backend { inner: Arc::new(ReferenceBackend::default()) }
+    }
+
+    /// The reference backend with a **private** kernel pool of exactly `n`
+    /// threads per loaded model.  Numerics are bit-identical for every `n`
+    /// (the kernels partition outputs, never reductions) — this exists so
+    /// tests and benches can compare thread counts inside one process.
+    pub fn reference_threads(n: usize) -> Backend {
+        Backend { inner: Arc::new(ReferenceBackend::with_threads(n)) }
     }
 
     /// The PJRT backend over a fresh CPU client (only in `pjrt` builds).

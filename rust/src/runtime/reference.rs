@@ -11,11 +11,29 @@
 //! many layers it covers), which keeps launch-count metrics comparable with
 //! the PJRT partition path.
 //!
-//! Naive loops on purpose: this backend exists so the full stack builds,
-//! tests and benches **everywhere** — correctness and portability first,
-//! with per-row work laid out so the obvious SIMD/thread upgrades stay easy.
+//! # Kernel design: blocked, parallel, bit-exact
+//!
+//! The kernels are blocked and multi-threaded but **bit-identical to the
+//! naive serial loops for every thread count, including 1**.  The rule that
+//! makes that possible: *partition the output, never the reduction axis*.
+//! Every output row (GEMM), (sample, head) pair (attention) and row chunk
+//! (LayerNorm / GELU / residual add) is owned by exactly one task, and each
+//! output element accumulates its reduction terms in the same ascending
+//! serial order as the naive loop ([`matmul_bias_naive`] is kept as the
+//! oracle the tile-boundary tests compare against).  No atomics, no
+//! tree-reductions, no FMA contraction — chunking and thread count can then
+//! never change a single bit.  `speculation_transparent`, the fused-range
+//! bit-exactness suite and the golden fixtures all pin this.
+//!
+//! Fan-out runs on a **dedicated kernel pool** (`SPLITEE_REF_THREADS` /
+//! `--ref-threads`, default = available parallelism), never on
+//! [`crate::util::threadpool::global`]: the experiment and serving layers
+//! already occupy the global pool's workers, and nesting `scope_map` across
+//! two distinct pools is deadlock-free by construction (same-pool re-entry
+//! runs inline).
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -24,6 +42,7 @@ use super::{
 };
 use crate::model::weights::ModelWeights;
 use crate::tensor::{TensorF32, TensorI32};
+use crate::util::threadpool::ThreadPool;
 
 /// LayerNorm epsilon — matches `ref.py::layer_norm`.
 const LN_EPS: f32 = 1e-5;
@@ -31,6 +50,359 @@ const LN_EPS: f32 = 1e-5;
 const GELU_C: f32 = 0.797_884_56;
 /// Entropy log floor — matches `ref.py::exit_head_ref`.
 const ENT_EPS: f32 = 1e-12;
+
+/// GEMM k-tile: one tile of `w` rows (`GEMM_KC * m` floats) stays hot in
+/// cache while it feeds every output row.
+const GEMM_KC: usize = 128;
+/// GEMM m-tile: output columns processed per pass, sized so a `w` tile row
+/// plus four output row segments fit in L1.
+const GEMM_NC: usize = 256;
+/// GEMM register-blocked row count: the micro-kernel streams one `w` tile
+/// row into this many output rows at once, quartering `w` traffic.
+const GEMM_MR: usize = 4;
+/// Fan-out floor: a task never owns fewer rows than this, so tiny inputs
+/// skip the pool instead of paying per-job overhead.
+const MIN_ROWS_PER_TASK: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Dedicated kernel pool
+
+/// Thread count requested via [`set_kernel_threads`] (0 = decide
+/// automatically from the env hook / machine).
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(0);
+/// The process-wide kernel pool, created on first shared-pool model load.
+static KERNEL_POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+
+/// Set the shared kernel pool's size — the `--ref-threads` hook.  Takes
+/// effect on the first model load; once the pool exists its size is fixed
+/// for the process, and a mismatched later request only logs a warning.
+/// `0` means "decide automatically": the `SPLITEE_REF_THREADS` env hook if
+/// set, else the machine's available parallelism.
+pub fn set_kernel_threads(n: usize) {
+    KERNEL_THREADS.store(n, Ordering::SeqCst);
+    if let Some(pool) = KERNEL_POOL.get() {
+        if n > 0 && pool.worker_count() != n {
+            log::warn!(
+                "reference kernel pool already running with {} threads — \
+                 ref-threads={n} ignored for this process",
+                pool.worker_count()
+            );
+        }
+    }
+}
+
+/// Resolve the kernel-pool size: [`set_kernel_threads`] if set, else the
+/// `SPLITEE_REF_THREADS` env hook (invalid values fail loudly, naming the
+/// variable), else available parallelism.
+fn configured_kernel_threads() -> usize {
+    let set = KERNEL_THREADS.load(Ordering::SeqCst);
+    if set > 0 {
+        return set;
+    }
+    if let Ok(v) = std::env::var("SPLITEE_REF_THREADS") {
+        return match v.trim().parse::<usize>() {
+            Ok(n) if n > 0 => n,
+            _ => panic!(
+                "SPLITEE_REF_THREADS={v:?} is invalid — expected a positive \
+                 integer kernel-pool thread count"
+            ),
+        };
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// The dedicated compute pool shared-pool executors fan kernels onto.
+///
+/// Deliberately distinct from [`crate::util::threadpool::global`]: the
+/// experiment/serving layers already run *on* the global pool's workers, and
+/// kernel fan-out from those workers onto a second pool is the supported
+/// nesting pattern — two pools never wait on each other's queues, and
+/// same-pool re-entry runs inline in `scope_map` — so model math can never
+/// deadlock against an outer `scope_map`.
+fn kernel_pool() -> Arc<ThreadPool> {
+    Arc::clone(KERNEL_POOL.get_or_init(|| Arc::new(ThreadPool::new(configured_kernel_threads()))))
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+
+/// Rows each task owns when fanning `rows` of per-row work over `pool`: an
+/// even split across workers, floored at [`MIN_ROWS_PER_TASK`].  Returns
+/// `rows` (i.e. "stay serial") for single-worker pools.
+fn rows_per_task(pool: &ThreadPool, rows: usize) -> usize {
+    if pool.worker_count() <= 1 {
+        return rows.max(1);
+    }
+    rows.div_ceil(pool.worker_count()).max(MIN_ROWS_PER_TASK)
+}
+
+/// Apply `f` to contiguous row chunks of `buf` (row width `row_w`) in
+/// parallel.  Each row is owned by exactly one task — output partitioning —
+/// so any per-row math is bit-identical to the serial pass for every worker
+/// count.  `f` receives the starting row index of its chunk.
+fn par_rows<F>(pool: &ThreadPool, buf: &mut [f32], row_w: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Send + Sync,
+{
+    if buf.is_empty() {
+        return;
+    }
+    debug_assert!(row_w > 0 && buf.len() % row_w == 0);
+    let rows = buf.len() / row_w;
+    let per = rows_per_task(pool, rows);
+    if per >= rows {
+        f(0, buf);
+        return;
+    }
+    let tasks: Vec<(usize, &mut [f32])> = buf.chunks_mut(per * row_w).enumerate().collect();
+    pool.scope_map(tasks, |(ci, chunk)| f(ci * per, chunk));
+}
+
+/// Zip-fan-out: split `a` into `a_chunk`-sized pieces and `b` into
+/// `b_chunk`-sized pieces and hand piece `i` of each to `f(i, ..)` on the
+/// pool.  Both slices must split into the same number of pieces; each piece
+/// pair is owned by exactly one task.
+fn par_zip_chunks<F>(
+    pool: &ThreadPool,
+    a: &mut [f32],
+    a_chunk: usize,
+    b: &mut [f32],
+    b_chunk: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Send + Sync,
+{
+    if a.is_empty() || a_chunk == 0 || b_chunk == 0 {
+        return;
+    }
+    debug_assert_eq!(a.len() / a_chunk, b.len() / b_chunk);
+    let tasks: Vec<(usize, (&mut [f32], &mut [f32]))> =
+        a.chunks_mut(a_chunk).zip(b.chunks_mut(b_chunk)).enumerate().collect();
+    if pool.worker_count() <= 1 || tasks.len() <= 1 {
+        for (i, (ac, bc)) in tasks {
+            f(i, ac, bc);
+        }
+        return;
+    }
+    pool.scope_map(tasks, |(i, (ac, bc))| f(i, ac, bc));
+}
+
+/// `x += y`, row-partitioned over the pool.  Each element is touched by
+/// exactly one task and gets exactly one add — order-free, bit-exact.
+fn add_rows(pool: &ThreadPool, x: &mut [f32], y: &[f32], row_w: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    par_rows(pool, x, row_w, |r0, chunk| {
+        let ys = &y[r0 * row_w..r0 * row_w + chunk.len()];
+        for (xv, yv) in chunk.iter_mut().zip(ys) {
+            *xv += yv;
+        }
+    });
+}
+
+/// The naive triple loop: `out[n, m] = x[n, k] @ w[k, m] + bias[m]`,
+/// row-major, ascending-k accumulation.  This is the numerics **oracle**:
+/// the blocked kernel and its parallel fan-out are required (and tested) to
+/// be bit-identical to it for every shape and thread count.
+pub fn matmul_bias_naive(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), k * m);
+    debug_assert_eq!(bias.len(), m);
+    let mut out = vec![0f32; n * m];
+    for i in 0..n {
+        let xi = &x[i * k..(i + 1) * k];
+        let oi = &mut out[i * m..(i + 1) * m];
+        oi.copy_from_slice(bias);
+        for (kk, &xv) in xi.iter().enumerate() {
+            let wrow = &w[kk * m..(kk + 1) * m];
+            for j in 0..m {
+                oi[j] += xv * wrow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Serial blocked GEMM over a row block: `out[rows, m] = x[rows, k] @ w +
+/// bias`.
+///
+/// Loop order is k-tile → m-tile → [`GEMM_MR`]-row micro-kernel.  The k
+/// tiles are visited in ascending order and each `out[i][j]` accumulates its
+/// k terms within a tile in ascending order too, so the per-element
+/// accumulation sequence is exactly the naive loop's — bit-identical results
+/// by construction; tiling only changes *which* elements are in flight, not
+/// any element's own order of operations.  The inner loops run over zipped
+/// equal-length subslices, so the hot path carries no bounds checks and
+/// autovectorizes.
+fn gemm_block(
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    rows: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(out.len(), rows * m);
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(w.len(), k * m);
+    debug_assert_eq!(bias.len(), m);
+    if rows == 0 || m == 0 {
+        return;
+    }
+    for orow in out.chunks_exact_mut(m) {
+        orow.copy_from_slice(bias);
+    }
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + GEMM_KC).min(k);
+        let mut j0 = 0;
+        while j0 < m {
+            let j1 = (j0 + GEMM_NC).min(m);
+            let mut r = 0;
+            // micro-kernel: one pass over a w tile row feeds GEMM_MR output
+            // rows, so each w element is loaded once per GEMM_MR rows
+            while r + GEMM_MR <= rows {
+                let block = &mut out[r * m..(r + GEMM_MR) * m];
+                let (o0, rest) = block.split_at_mut(m);
+                let (o1, rest) = rest.split_at_mut(m);
+                let (o2, o3) = rest.split_at_mut(m);
+                let (o0, o1, o2, o3) =
+                    (&mut o0[j0..j1], &mut o1[j0..j1], &mut o2[j0..j1], &mut o3[j0..j1]);
+                let xr = &x[r * k..(r + GEMM_MR) * k];
+                for kk in k0..k1 {
+                    let (x0, x1, x2, x3) = (xr[kk], xr[k + kk], xr[2 * k + kk], xr[3 * k + kk]);
+                    let wrow = &w[kk * m + j0..kk * m + j1];
+                    for ((((wj, a0), a1), a2), a3) in wrow
+                        .iter()
+                        .zip(o0.iter_mut())
+                        .zip(o1.iter_mut())
+                        .zip(o2.iter_mut())
+                        .zip(o3.iter_mut())
+                    {
+                        *a0 += x0 * wj;
+                        *a1 += x1 * wj;
+                        *a2 += x2 * wj;
+                        *a3 += x3 * wj;
+                    }
+                }
+                r += GEMM_MR;
+            }
+            // remainder rows, one at a time
+            while r < rows {
+                let orow = &mut out[r * m + j0..r * m + j1];
+                let xr = &x[r * k..(r + 1) * k];
+                for kk in k0..k1 {
+                    let xv = xr[kk];
+                    let wrow = &w[kk * m + j0..kk * m + j1];
+                    for (a, wj) in orow.iter_mut().zip(wrow) {
+                        *a += xv * wj;
+                    }
+                }
+                r += 1;
+            }
+            j0 = j1;
+        }
+        k0 = k1;
+    }
+}
+
+/// `out[n, m] = x[n, k] @ w[k, m] + bias[m]` via the blocked kernel on the
+/// calling thread.  Bit-identical to [`matmul_bias_naive`] for every shape
+/// (asserted by the tile-boundary tests).
+pub fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n * m];
+    gemm_block(&mut out, x, w, bias, n, k, m);
+    out
+}
+
+/// [`matmul_bias`] with the row loop fanned out over `pool`.  Output rows
+/// are partitioned across tasks; the reduction (k) axis never is, so the
+/// result is bit-identical to the serial kernel for every thread count.
+pub fn matmul_bias_par(
+    pool: &ThreadPool,
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    let mut out = vec![0f32; n * m];
+    gemm_into(pool, &mut out, x, w, bias, n, k, m);
+    out
+}
+
+/// Blocked GEMM into a caller-provided buffer, row-parallel over `pool`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_into(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) {
+    debug_assert_eq!(out.len(), n * m);
+    if n == 0 || m == 0 {
+        return;
+    }
+    let per = rows_per_task(pool, n);
+    if per >= n {
+        gemm_block(out, x, w, bias, n, k, m);
+        return;
+    }
+    let tasks: Vec<(usize, &mut [f32])> = out.chunks_mut(per * m).enumerate().collect();
+    pool.scope_map(tasks, |(ci, chunk)| {
+        let r0 = ci * per;
+        let rows = chunk.len() / m;
+        gemm_block(chunk, &x[r0 * k..(r0 + rows) * k], w, bias, rows, k, m);
+    });
+}
+
+/// Reusable scratch for the block math: one allocation set serves every
+/// layer of a `run_blocks` / `forward_all_exits` sweep instead of ~7 fresh
+/// `Vec`s per block.  Stale contents never leak: every kernel writing into a
+/// buffer initializes each element it covers (GEMM from the bias row,
+/// attention from a zero fill, LayerNorm/copy from the input).
+#[derive(Default)]
+struct Workspace {
+    /// LN output, then reused as the projection output of each sublayer.
+    hn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention output in head-major layout `[B][heads][T][dh]` — each
+    /// (sample, head) task owns one contiguous `T * dh` chunk.
+    o_heads: Vec<f32>,
+    /// Attention output transposed back to row-major `[B*T, D]`.
+    o: Vec<f32>,
+    /// FFN hidden activations `[B*T, F]`.
+    ffn: Vec<f32>,
+    /// Per-(sample, head) score rows, `B * heads` chunks of length `T`.
+    scores: Vec<f32>,
+}
+
+impl Workspace {
+    fn ensure(&mut self, n: usize, d: usize, f: usize, b: usize, heads: usize, t: usize) {
+        self.hn.resize(n * d, 0.0);
+        self.q.resize(n * d, 0.0);
+        self.k.resize(n * d, 0.0);
+        self.v.resize(n * d, 0.0);
+        self.o_heads.resize(n * d, 0.0);
+        self.o.resize(n * d, 0.0);
+        self.ffn.resize(n * f, 0.0);
+        self.scores.resize(b * heads * t, 0.0);
+    }
+}
 
 /// Host-tensor activation handle (the reference backend's [`HiddenRepr`]).
 #[derive(Debug)]
@@ -47,8 +419,24 @@ impl HiddenRepr for HostHidden {
 }
 
 /// The always-available pure-Rust backend.
+///
+/// By default every loaded model shares the process-wide kernel pool (sized
+/// by [`set_kernel_threads`] / `SPLITEE_REF_THREADS`);
+/// [`ReferenceBackend::with_threads`] instead gives each loaded model a
+/// private pool of exactly `n` workers — that is what lets one test process
+/// compare several thread counts bit for bit.
 #[derive(Debug, Clone, Copy, Default)]
-pub struct ReferenceBackend;
+pub struct ReferenceBackend {
+    threads: Option<usize>,
+}
+
+impl ReferenceBackend {
+    /// Backend whose executors run kernels on a private `n`-thread pool
+    /// (tests and benches; production paths use the shared pool).
+    pub fn with_threads(n: usize) -> ReferenceBackend {
+        ReferenceBackend { threads: Some(n.max(1)) }
+    }
+}
 
 impl ComputeBackend for ReferenceBackend {
     fn name(&self) -> &'static str {
@@ -56,13 +444,18 @@ impl ComputeBackend for ReferenceBackend {
     }
 
     fn load_model(&self, spec: &ModelSpec<'_>) -> Result<Box<dyn ModelExecutor>> {
-        Ok(Box::new(ReferenceExecutor::new(spec)?))
+        let pool = match self.threads {
+            Some(n) => Arc::new(ThreadPool::new(n)),
+            None => kernel_pool(),
+        };
+        Ok(Box::new(ReferenceExecutor::new(spec, pool)?))
     }
 }
 
 /// One model bound to the reference math.
 pub(crate) struct ReferenceExecutor {
     weights: Arc<ModelWeights>,
+    pool: Arc<ThreadPool>,
     n_heads: usize,
     d_model: usize,
     n_layers: usize,
@@ -74,12 +467,13 @@ impl std::fmt::Debug for ReferenceExecutor {
             .field("layers", &self.n_layers)
             .field("d_model", &self.d_model)
             .field("heads", &self.n_heads)
+            .field("kernel_threads", &self.pool.worker_count())
             .finish()
     }
 }
 
 impl ReferenceExecutor {
-    fn new(spec: &ModelSpec<'_>) -> Result<ReferenceExecutor> {
+    fn new(spec: &ModelSpec<'_>, pool: Arc<ThreadPool>) -> Result<ReferenceExecutor> {
         let weights = Arc::clone(&spec.weights);
         let tok = &weights.embed[0];
         if tok.ndim() != 2 {
@@ -96,6 +490,7 @@ impl ReferenceExecutor {
         Ok(ReferenceExecutor {
             n_layers: weights.n_layers,
             weights,
+            pool,
             n_heads: spec.n_heads,
             d_model,
         })
@@ -107,6 +502,18 @@ impl ReferenceExecutor {
             .downcast_ref::<HostHidden>()
             .map(|hh| &hh.0)
             .context("hidden state does not belong to the reference backend")
+    }
+
+    /// Validate a [B, T, D] activation and return (B, T).
+    fn check_hidden(&self, h: &TensorF32) -> Result<(usize, usize)> {
+        if h.ndim() != 3 || h.shape()[2] != self.d_model {
+            bail!(
+                "hidden state must be [B, T, {}], got {:?}",
+                self.d_model,
+                h.shape()
+            );
+        }
+        Ok((h.shape()[0], h.shape()[1]))
     }
 
     /// Embedding math: tokens [B, T] -> h0 [B, T, D].
@@ -147,12 +554,14 @@ impl ReferenceExecutor {
                 }
             }
         }
-        layer_norm_rows(&mut h, d, ln_g.data(), ln_b.data());
+        let (g, bb) = (ln_g.data(), ln_b.data());
+        par_rows(&self.pool, &mut h, d, |_, rows| layer_norm_rows(rows, d, g, bb));
         TensorF32::new(vec![b, t, d], h).map_err(|e| anyhow::anyhow!(e))
     }
 
-    /// One transformer block (pre-LN attention + pre-LN FFN, both residual).
-    fn block_math(&self, x: Vec<f32>, b: usize, t: usize, layer: usize) -> Vec<f32> {
+    /// One transformer block (pre-LN attention + pre-LN FFN, both residual),
+    /// in place over the flat [B*T, D] activation, scratch from `ws`.
+    fn block_math(&self, x: &mut [f32], b: usize, t: usize, layer: usize, ws: &mut Workspace) {
         // BLOCK_PARAM_ORDER: ln1_g ln1_b wq bq wk bk wv bv wo bo
         //                    ln2_g ln2_b w1 b1 w2 b2
         let p = &self.weights.blocks[layer];
@@ -160,104 +569,114 @@ impl ReferenceExecutor {
         let heads = self.n_heads;
         let dh = d / heads;
         let n = b * t;
+        let f = p[12].shape()[1];
+        let pool = &*self.pool;
+        ws.ensure(n, d, f, b, heads, t);
 
         // ---- attention: x + (softmax(QK^T / sqrt(dh)) V) Wo + bo
-        let mut hn = x.clone();
-        layer_norm_rows(&mut hn, d, p[0].data(), p[1].data());
-        let q = matmul_bias(&hn, p[2].data(), p[3].data(), n, d, d);
-        let k = matmul_bias(&hn, p[4].data(), p[5].data(), n, d, d);
-        let v = matmul_bias(&hn, p[6].data(), p[7].data(), n, d, d);
+        ws.hn.copy_from_slice(x);
+        {
+            let (g, bb) = (p[0].data(), p[1].data());
+            par_rows(pool, &mut ws.hn, d, |_, rows| layer_norm_rows(rows, d, g, bb));
+        }
+        gemm_into(pool, &mut ws.q, &ws.hn, p[2].data(), p[3].data(), n, d, d);
+        gemm_into(pool, &mut ws.k, &ws.hn, p[4].data(), p[5].data(), n, d, d);
+        gemm_into(pool, &mut ws.v, &ws.hn, p[6].data(), p[7].data(), n, d, d);
         let scale = 1.0 / (dh as f32).sqrt();
-        let mut o = vec![0f32; n * d];
-        let mut scores = vec![0f32; t];
-        for bi in 0..b {
-            for hi in 0..heads {
+        {
+            // one task per (sample, head): task i owns o_heads chunk i
+            // ([T, dh], head-major) and scores chunk i ([T]) exclusively
+            let (q, kmat, v) = (&ws.q[..], &ws.k[..], &ws.v[..]);
+            par_zip_chunks(pool, &mut ws.o_heads, t * dh, &mut ws.scores, t, |task, orow, scores| {
+                let (bi, hi) = (task / heads, task % heads);
                 let hoff = hi * dh;
+                orow.fill(0.0);
                 for ti in 0..t {
                     let qoff = (bi * t + ti) * d + hoff;
                     for (si, s) in scores.iter_mut().enumerate() {
                         let koff = (bi * t + si) * d + hoff;
                         let mut dot = 0f32;
-                        for dd in 0..dh {
-                            dot += q[qoff + dd] * k[koff + dd];
+                        for (qv, kv) in q[qoff..qoff + dh].iter().zip(&kmat[koff..koff + dh]) {
+                            dot += qv * kv;
                         }
                         *s = dot * scale;
                     }
-                    softmax_inplace(&mut scores);
-                    let ooff = (bi * t + ti) * d + hoff;
-                    for (si, &w) in scores.iter().enumerate() {
+                    softmax_inplace(scores);
+                    let ot = &mut orow[ti * dh..(ti + 1) * dh];
+                    for (si, &wgt) in scores.iter().enumerate() {
                         let voff = (bi * t + si) * d + hoff;
-                        for dd in 0..dh {
-                            o[ooff + dd] += w * v[voff + dd];
+                        for (ov, vv) in ot.iter_mut().zip(&v[voff..voff + dh]) {
+                            *ov += wgt * vv;
                         }
                     }
                 }
-            }
+            });
         }
-        let proj = matmul_bias(&o, p[8].data(), p[9].data(), n, d, d);
-        let mut x = x;
-        for i in 0..n * d {
-            x[i] += proj[i];
+        {
+            // deterministic transpose back to row-major [B*T, D]
+            let o_heads = &ws.o_heads[..];
+            par_rows(pool, &mut ws.o, d, |r0, chunk| {
+                for (ri, orow) in chunk.chunks_exact_mut(d).enumerate() {
+                    let row = r0 + ri;
+                    let (bi, ti) = (row / t, row % t);
+                    for hi in 0..heads {
+                        let src = ((bi * heads + hi) * t + ti) * dh;
+                        orow[hi * dh..(hi + 1) * dh].copy_from_slice(&o_heads[src..src + dh]);
+                    }
+                }
+            });
         }
+        gemm_into(pool, &mut ws.hn, &ws.o, p[8].data(), p[9].data(), n, d, d);
+        add_rows(pool, x, &ws.hn, d);
 
         // ---- FFN: x + W2 gelu(W1 LN2(x) + b1) + b2
-        let f = p[12].shape()[1];
-        let mut hn = x.clone();
-        layer_norm_rows(&mut hn, d, p[10].data(), p[11].data());
-        let mut a = matmul_bias(&hn, p[12].data(), p[13].data(), n, d, f);
-        for v in a.iter_mut() {
-            *v = gelu_tanh(*v);
+        ws.hn.copy_from_slice(x);
+        {
+            let (g, bb) = (p[10].data(), p[11].data());
+            par_rows(pool, &mut ws.hn, d, |_, rows| layer_norm_rows(rows, d, g, bb));
         }
-        let proj = matmul_bias(&a, p[14].data(), p[15].data(), n, f, d);
-        for i in 0..n * d {
-            x[i] += proj[i];
-        }
-        x
+        gemm_into(pool, &mut ws.ffn, &ws.hn, p[12].data(), p[13].data(), n, d, f);
+        par_rows(pool, &mut ws.ffn, f, |_, chunk| {
+            for v in chunk.iter_mut() {
+                *v = gelu_tanh(*v);
+            }
+        });
+        gemm_into(pool, &mut ws.hn, &ws.ffn, p[14].data(), p[15].data(), n, f, d);
+        add_rows(pool, x, &ws.hn, d);
     }
 
     /// Blocks `start..end` over a [B, T, D] tensor.
     fn run_blocks(&self, h: &TensorF32, start: usize, end: usize) -> Result<TensorF32> {
-        if h.ndim() != 3 || h.shape()[2] != self.d_model {
-            bail!(
-                "hidden state must be [B, T, {}], got {:?}",
-                self.d_model,
-                h.shape()
-            );
-        }
+        let (b, t) = self.check_hidden(h)?;
         if start >= end || end > self.n_layers {
             bail!(
                 "block range [{start}, {end}) out of bounds (L = {})",
                 self.n_layers
             );
         }
-        let (b, t) = (h.shape()[0], h.shape()[1]);
         let mut x = h.data().to_vec();
+        let mut ws = Workspace::default();
         for layer in start..end {
-            x = self.block_math(x, b, t, layer);
+            self.block_math(&mut x, b, t, layer, &mut ws);
         }
         TensorF32::new(vec![b, t, self.d_model], x).map_err(|e| anyhow::anyhow!(e))
     }
 
-    /// Exit head after `layer` over a [B, T, D] tensor.
-    fn head_math(&self, h: &TensorF32, layer: usize) -> Result<HeadOut> {
+    /// Exit head after `layer` over a flat [B, T, D] activation — borrowed,
+    /// so `forward_all_exits` never clones the activation between layers.
+    fn head_math(&self, h: &[f32], b: usize, t: usize, layer: usize) -> Result<HeadOut> {
         if layer >= self.n_layers {
             bail!("layer {layer} out of range (L = {})", self.n_layers);
         }
-        if h.ndim() != 3 || h.shape()[2] != self.d_model {
-            bail!(
-                "hidden state must be [B, T, {}], got {:?}",
-                self.d_model,
-                h.shape()
-            );
-        }
         // HEAD_PARAM_ORDER: ln_g ln_b wc bc
         let p = &self.weights.heads[layer];
-        let (b, t, d) = (h.shape()[0], h.shape()[1], self.d_model);
+        let d = self.d_model;
+        debug_assert_eq!(h.len(), b * t * d);
         let c = p[2].shape()[1];
         // [CLS] pooling: row 0 of every sample
         let mut cls = vec![0f32; b * d];
         for bi in 0..b {
-            cls[bi * d..(bi + 1) * d].copy_from_slice(&h.data()[bi * t * d..bi * t * d + d]);
+            cls[bi * d..(bi + 1) * d].copy_from_slice(&h[bi * t * d..bi * t * d + d]);
         }
         layer_norm_rows(&mut cls, d, p[0].data(), p[1].data());
         let mut logits = matmul_bias(&cls, p[2].data(), p[3].data(), b, d, c);
@@ -307,13 +726,16 @@ impl ModelExecutor for ReferenceExecutor {
     }
 
     fn exit_head(&self, h: &Hidden, layer: usize) -> Result<HeadOut> {
-        let out = self.head_math(self.host_of(h)?, layer)?;
+        let ht = self.host_of(h)?;
+        let (b, t) = self.check_hidden(ht)?;
+        let out = self.head_math(ht.data(), b, t, layer)?;
         count_launch();
         Ok(out)
     }
 
     fn exit_head_host(&self, h: &TensorF32, layer: usize) -> Result<HeadOut> {
-        let out = self.head_math(h, layer)?;
+        let (b, t) = self.check_hidden(h)?;
+        let out = self.head_math(h.data(), b, t, layer)?;
         count_launch();
         Ok(out)
     }
@@ -325,12 +747,11 @@ impl ModelExecutor for ReferenceExecutor {
         count_launch();
         let (b, t) = (h0.shape()[0], h0.shape()[1]);
         let mut x = h0.into_data();
+        let mut ws = Workspace::default();
         let mut out = Vec::with_capacity(self.n_layers);
         for layer in 0..self.n_layers {
-            x = self.block_math(x, b, t, layer);
-            let h = TensorF32::new(vec![b, t, self.d_model], x.clone())
-                .map_err(|e| anyhow::anyhow!(e))?;
-            out.push(self.head_math(&h, layer)?);
+            self.block_math(&mut x, b, t, layer, &mut ws);
+            out.push(self.head_math(&x, b, t, layer)?);
         }
         Ok(out)
     }
@@ -346,8 +767,10 @@ impl ModelExecutor for ReferenceExecutor {
         // reduce within a sample, never across the batch), so computing the
         // continuation over the full padded batch and reading out rows is
         // bit-identical to gathering first — the invariant
-        // `reference_batched_execution_matches_single` pins.  Speculative
-        // results are therefore safe to consume verbatim.
+        // `reference_batched_execution_matches_single` pins.  The parallel
+        // kernels preserve this: tasks partition output rows, never the
+        // reduction axis, so thread count cannot change a bit either.
+        // Speculative results are therefore safe to consume verbatim.
         true
     }
 }
@@ -363,26 +786,6 @@ fn layer_norm_rows(x: &mut [f32], d: usize, g: &[f32], b: &[f32]) {
             row[j] = (row[j] - mu) * inv * g[j] + b[j];
         }
     }
-}
-
-/// out[n, m] = x[n, k] @ w[k, m] + bias[m] (row-major, k-outer accumulation).
-fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), n * k);
-    debug_assert_eq!(w.len(), k * m);
-    debug_assert_eq!(bias.len(), m);
-    let mut out = vec![0f32; n * m];
-    for i in 0..n {
-        let xi = &x[i * k..(i + 1) * k];
-        let oi = &mut out[i * m..(i + 1) * m];
-        oi.copy_from_slice(bias);
-        for (kk, &xv) in xi.iter().enumerate() {
-            let wrow = &w[kk * m..(kk + 1) * m];
-            for j in 0..m {
-                oi[j] += xv * wrow[j];
-            }
-        }
-    }
-    out
 }
 
 /// Numerically stable in-place softmax over one row.
@@ -406,6 +809,17 @@ fn gelu_tanh(v: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Deterministic pseudo-random fill in [-0.5, 0.5) (LCG, no deps).
+    fn fill(len: usize, seed: u32) -> Vec<f32> {
+        let mut s = seed | 1;
+        (0..len)
+            .map(|_| {
+                s = s.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+                (s >> 8) as f32 / (1u32 << 24) as f32 - 0.5
+            })
+            .collect()
+    }
 
     #[test]
     fn layer_norm_zero_mean_unit_var() {
@@ -433,6 +847,43 @@ mod tests {
         let bias = [10.0, 20.0];
         let out = matmul_bias(&x, &w, &bias, 2, 3, 2);
         assert_eq!(out, vec![1.0 + 3.0 + 10.0, 2.0 + 3.0 + 20.0, 4.0 + 6.0 + 10.0, 5.0 + 6.0 + 20.0]);
+    }
+
+    #[test]
+    fn blocked_gemm_is_bit_identical_to_naive_at_tile_boundaries() {
+        // rows around the GEMM_MR micro-kernel (incl. 0- and 1-row inputs),
+        // k around the GEMM_KC tile, m around the GEMM_NC tile
+        let ns = [0usize, 1, GEMM_MR - 1, GEMM_MR, GEMM_MR + 1, 2 * GEMM_MR + 3];
+        let ks = [0usize, 1, 7, GEMM_KC - 1, GEMM_KC, GEMM_KC + 1];
+        let ms = [1usize, 5, GEMM_NC - 1, GEMM_NC, GEMM_NC + 1];
+        for (ci, &n) in ns.iter().enumerate() {
+            for (cj, &k) in ks.iter().enumerate() {
+                for (cl, &m) in ms.iter().enumerate() {
+                    let seed = (ci * 100 + cj * 10 + cl) as u32 + 1;
+                    let x = fill(n * k, seed);
+                    let w = fill(k * m, seed.wrapping_mul(31));
+                    let bias = fill(m, seed.wrapping_mul(131));
+                    let blocked = matmul_bias(&x, &w, &bias, n, k, m);
+                    let naive = matmul_bias_naive(&x, &w, &bias, n, k, m);
+                    assert_eq!(blocked, naive, "shape n={n} k={k} m={m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_gemm_is_bit_identical_to_serial_for_every_thread_count() {
+        let (n, k, m) = (37, 65, 43);
+        let x = fill(n * k, 3);
+        let w = fill(k * m, 5);
+        let bias = fill(m, 7);
+        let serial = matmul_bias(&x, &w, &bias, n, k, m);
+        assert_eq!(serial, matmul_bias_naive(&x, &w, &bias, n, k, m));
+        for threads in [1usize, 2, 4, 7] {
+            let pool = ThreadPool::new(threads);
+            let par = matmul_bias_par(&pool, &x, &w, &bias, n, k, m);
+            assert_eq!(par, serial, "threads={threads}");
+        }
     }
 
     #[test]
@@ -470,7 +921,7 @@ mod tests {
             cache_batch: 1,
             manifest: None,
         };
-        let exec = ReferenceExecutor::new(&spec).unwrap();
+        let exec = ReferenceExecutor::new(&spec, Arc::new(ThreadPool::new(2))).unwrap();
         let tokens = TensorI32::new(vec![1, 4], vec![0, 1, 2, 3]).unwrap();
         let h = exec.embed(&tokens).unwrap();
         assert!(exec.blocks(&h, 1, 1).is_err(), "empty range");
@@ -496,7 +947,7 @@ mod tests {
             cache_batch: 2,
             manifest: None,
         };
-        let exec = ReferenceExecutor::new(&spec).unwrap();
+        let exec = ReferenceExecutor::new(&spec, Arc::new(ThreadPool::new(3))).unwrap();
         let tokens = TensorI32::new(vec![2, 4], vec![5, 1, 9, 3, 0, 31, 7, 2]).unwrap();
         let h0 = exec.embed(&tokens).unwrap();
         let h1 = exec.blocks(&h0, 0, 2).unwrap();

@@ -395,7 +395,7 @@ mod tests {
             cache_batch: 4,
             manifest: None,
         };
-        Arc::from(ReferenceBackend.load_model(&spec).expect("reference executor"))
+        Arc::from(ReferenceBackend::default().load_model(&spec).expect("reference executor"))
     }
 
     fn hidden(exec: &Arc<dyn ModelExecutor>, b: usize) -> Arc<TensorF32> {

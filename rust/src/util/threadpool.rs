@@ -7,12 +7,21 @@
 //! work-stealing; the abstraction still lets multi-core machines parallelise
 //! experiment repetitions.
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    /// Identity of the pool this thread is a worker of (the address of its
+    /// `Shared` block), or 0 for threads that are not pool workers.  Lets
+    /// [`ThreadPool::scope_map`] detect re-entrant calls from its own
+    /// workers and fall back to running inline instead of starving itself.
+    static WORKER_OF: Cell<usize> = const { Cell::new(0) };
+}
 
 /// Process-wide shared pool, sized to the host, created on first use.
 /// Experiment fan-out (`run_policy_repeated`) borrows caches and cost models
@@ -98,6 +107,12 @@ impl ThreadPool {
     /// returning — that barrier is what makes lending borrowed data to the
     /// worker threads sound.
     ///
+    /// Calling this from a worker thread of the *same* pool is safe: the
+    /// call is detected and runs the whole map inline on the caller (a
+    /// worker that submitted jobs and then blocked on the barrier would
+    /// starve itself — it *is* the thread that was supposed to drain the
+    /// queue).  Nesting across different pools parallelizes normally.
+    ///
     /// A job that panics is reported here as a "job panicked" panic after
     /// the barrier (the worker survives; see `worker_loop`).
     pub fn scope_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
@@ -106,6 +121,10 @@ impl ThreadPool {
         R: Send + 'env,
         F: Fn(T) -> R + Send + Sync + 'env,
     {
+        if WORKER_OF.with(|w| w.get()) == Arc::as_ptr(&self.shared) as usize {
+            // re-entrant call from one of our own workers: run inline
+            return items.into_iter().map(f).collect();
+        }
         let f = Arc::new(f);
         let results: Arc<Mutex<Vec<Option<R>>>> =
             Arc::new(Mutex::new((0..items.len()).map(|_| None).collect()));
@@ -121,8 +140,9 @@ impl ThreadPool {
             // here has been consumed (run to completion or unwound — the
             // worker decrements `in_flight` either way and the job's
             // captures are dropped during unwinding), so nothing captured
-            // by `job` outlives this call.  Must not be called from a
-            // worker of this same pool (the barrier would starve itself).
+            // by `job` outlives this call.  Self-pool re-entrancy (a worker
+            // submitting and then blocking on its own barrier) is excluded
+            // by the inline fallback above.
             let job: Job = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
             };
@@ -145,6 +165,7 @@ impl ThreadPool {
 }
 
 fn worker_loop(shared: Arc<Shared>) {
+    WORKER_OF.with(|w| w.set(Arc::as_ptr(&shared) as usize));
     loop {
         let job = {
             let mut queue = shared.queue.lock().unwrap();
@@ -251,6 +272,45 @@ mod tests {
     fn scope_map_surfaces_job_panics() {
         let pool = ThreadPool::new(2);
         let _ = pool.scope_map(vec![0u64], |_| -> u64 { panic!("inner failure") });
+    }
+
+    #[test]
+    fn scope_map_from_own_worker_runs_inline_instead_of_deadlocking() {
+        // 1 worker makes the old failure mode deterministic: the worker
+        // submits jobs only it could run, then blocks on the barrier —
+        // forever.  The inline fallback must complete the map instead.
+        let pool = Arc::new(ThreadPool::new(1));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let inner_pool = Arc::clone(&pool);
+        pool.submit(move || {
+            let out = inner_pool.scope_map(vec![1u64, 2, 3], |x| x * 2);
+            tx.send(out).unwrap();
+        });
+        let out = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("re-entrant scope_map must run inline, not deadlock");
+        assert_eq!(out, vec![2, 4, 6]);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn scope_map_across_different_pools_still_parallelizes() {
+        // nesting pools (global experiment pool -> kernel pool) is the
+        // supported pattern: a worker of pool A fanning out on pool B takes
+        // the normal submit path and B's workers do the work
+        let a = Arc::new(ThreadPool::new(1));
+        let b = Arc::new(ThreadPool::new(2));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let b2 = Arc::clone(&b);
+        a.submit(move || {
+            let out = b2.scope_map((0..16u64).collect::<Vec<_>>(), |x| x + 1);
+            tx.send(out).unwrap();
+        });
+        let out = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("cross-pool nesting must complete");
+        assert_eq!(out, (1..=16).collect::<Vec<u64>>());
+        a.wait_idle();
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! Parallel-vs-serial bit-exactness for the reference kernels.
+//!
+//! The reference backend's blocked/parallel kernels promise **bit-identical**
+//! numerics for every thread count: tasks partition outputs (rows, (sample,
+//! head) pairs), never the reduction axis, and every element accumulates in
+//! the naive serial order.  These tests pin that promise end to end through
+//! the public model API — embed, fused block ranges, exit heads, the offload
+//! continuation and the all-exits sweep — over a spread of randomized
+//! (B, T, D, heads, layers) shapes, comparing private kernel pools of 2, 4
+//! and 7 workers against the single-threaded result.  (The CI build-test
+//! matrix additionally runs the whole suite under `SPLITEE_REF_THREADS`
+//! 1 and 4, covering the shared-pool env path.)
+
+use splitee::model::{ExitOutput, ModelWeights, MultiExitModel};
+use splitee::runtime::Backend;
+use splitee::tensor::TensorI32;
+use splitee::util::rng::Rng;
+
+const VOCAB: usize = 64;
+const CLASSES: usize = 3;
+
+/// (b, t, d, heads, layers, ff) — head widths vary (8, 5, ...), one shape is
+/// large enough (B*T = 32 rows) that the GEMM row fan-out genuinely splits.
+const SHAPES: [(usize, usize, usize, usize, usize, usize); 5] = [
+    (1, 4, 16, 2, 2, 32),
+    (3, 8, 32, 4, 3, 64),
+    (2, 6, 24, 3, 4, 48),
+    (4, 8, 32, 4, 3, 80),
+    (5, 3, 20, 4, 2, 40),
+];
+
+fn model_for(shape: (usize, usize, usize, usize, usize, usize), threads: usize) -> MultiExitModel {
+    let (b, t, d, heads, layers, ff) = shape;
+    // same seed per shape -> identical weights under every thread count
+    let weights = ModelWeights::synthetic(layers, d, ff, VOCAB, t, CLASSES, 0xA11CE);
+    MultiExitModel::from_weights(
+        "synthetic",
+        "reference",
+        weights,
+        heads,
+        t,
+        vec![b],
+        &Backend::reference_threads(threads),
+    )
+    .expect("synthetic reference model")
+}
+
+struct Outputs {
+    embed: Vec<f32>,
+    full: Vec<f32>,
+    rest: Vec<f32>,
+    head: ExitOutput,
+    sweep: Vec<ExitOutput>,
+}
+
+fn run(shape: (usize, usize, usize, usize, usize, usize), threads: usize) -> Outputs {
+    let (b, t, _d, _heads, layers, _ff) = shape;
+    let model = model_for(shape, threads);
+    let mut rng = Rng::new(0xBEEF ^ ((b * 31 + t) as u64));
+    let tokens = TensorI32::new(
+        vec![b, t],
+        (0..b * t).map(|_| rng.below(VOCAB as u64) as i32).collect(),
+    )
+    .unwrap();
+    let h0 = model.embed(&tokens).unwrap();
+    let full = model.forward_range(&h0, 0, layers).unwrap();
+    // split mid-stack: edge prefix, exit head at the split, cloud rest
+    let split_layer = (layers - 1) / 2;
+    let mid = model.forward_range(&h0, 0, split_layer + 1).unwrap();
+    let head = model.exit_head(&mid, split_layer).unwrap();
+    let rest = model.forward_rest(mid, split_layer).unwrap();
+    let sweep = model.forward_all_exits(&tokens).unwrap();
+    Outputs {
+        embed: h0.into_data(),
+        full: full.into_data(),
+        rest: rest.into_data(),
+        head,
+        sweep,
+    }
+}
+
+fn assert_head_eq(a: &ExitOutput, b: &ExitOutput, tag: &str) {
+    assert_eq!(a.probs.data(), b.probs.data(), "probs differ: {tag}");
+    assert_eq!(a.conf, b.conf, "conf differs: {tag}");
+    assert_eq!(a.ent, b.ent, "ent differs: {tag}");
+    assert_eq!(a.pred, b.pred, "pred differs: {tag}");
+}
+
+#[test]
+fn reference_numerics_bit_identical_across_thread_counts() {
+    for &shape in SHAPES.iter() {
+        let base = run(shape, 1);
+        for threads in [2usize, 4, 7] {
+            let par = run(shape, threads);
+            let tag = format!("shape {shape:?} threads {threads}");
+            assert_eq!(par.embed, base.embed, "embed differs: {tag}");
+            assert_eq!(par.full, base.full, "full range differs: {tag}");
+            assert_eq!(par.rest, base.rest, "continuation differs: {tag}");
+            assert_head_eq(&par.head, &base.head, &tag);
+            assert_eq!(par.sweep.len(), base.sweep.len(), "sweep depth: {tag}");
+            for (l, (p, s)) in par.sweep.iter().zip(&base.sweep).enumerate() {
+                assert_head_eq(p, s, &format!("{tag} sweep layer {l}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_on_one_pool_are_bit_stable() {
+    // scheduling nondeterminism must never surface in the numbers: the same
+    // model on the same multi-worker pool answers identically every time
+    let shape = SHAPES[3];
+    let (b, t, ..) = shape;
+    let model = model_for(shape, 4);
+    let tokens = TensorI32::new(vec![b, t], vec![7; b * t]).unwrap();
+    let first = model.forward_all_exits(&tokens).unwrap();
+    for round in 0..3 {
+        let again = model.forward_all_exits(&tokens).unwrap();
+        for (l, (a, f)) in again.iter().zip(&first).enumerate() {
+            assert_head_eq(a, f, &format!("round {round} layer {l}"));
+        }
+    }
+}
