@@ -14,8 +14,10 @@
 //!     [--policy splitee|splitee-s|contextual|final] [--tcp 127.0.0.1:7878]
 //! ```
 //!
-//! With `--tcp`, a TCP front-end is exposed instead of the internal replay
-//! workload; send comma-separated token lines (see rust/src/server/).
+//! With `--tcp`, the concurrent TCP front-end is exposed instead of the
+//! internal replay workload; send comma-separated token lines, optionally
+//! preceded by a `hello {"client":NAME,"link":wifi|5g|4g|3g}` identity line
+//! (see rust/src/server/).  Replies carry the request line number as `id`.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -106,12 +108,20 @@ fn main() -> Result<()> {
                 (service, outcome)
             })
         };
-        let served =
-            splitee::server::serve_tcp(listener, Arc::clone(&router), model.seq_len(), Some(n_requests))?;
+        let counters = splitee::server::ServerCounters::new();
+        let served = splitee::server::serve_tcp(
+            listener,
+            Arc::clone(&router),
+            model.seq_len(),
+            Some(n_requests),
+            splitee::server::ServerConfig::default(),
+            Arc::clone(&counters),
+        )?;
         router.shutdown();
         let (mut service, outcome) = compute.join().expect("compute thread");
         outcome.ok();
         service.write_snapshot();
+        println!("{}", counters.snapshot());
         println!("served {served} TCP requests");
         return Ok(());
     }

@@ -312,6 +312,86 @@ fn main() {
         });
     }
 
+    // TCP front-end leg: the same model behind the concurrent network
+    // serving plane (`serve_tcp`), driven by the open-loop fleet generator
+    // over loopback — so the trajectory includes socket + admission-control
+    // overhead and client-observed (wall-clock) tail latency, not just the
+    // in-process simulated numbers.  `serve_tcp_rps` sits under the >10%
+    // regression gate like every other `_rps` key.
+    {
+        let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+        let link = LinkSim::new(NetworkProfile::three_g(), 7);
+        let config = ServiceConfig {
+            policy: PolicyKind::SplitEe,
+            alpha,
+            beta: 1.0,
+            batcher: BatcherConfig {
+                batch_sizes: model.batch_sizes().to_vec(),
+                max_wait: Duration::from_millis(2),
+            },
+            coalesce: Default::default(),
+            speculate: SpeculateMode::Off,
+            link: LinkScenario::default(),
+            replicas: Default::default(),
+        };
+        let router = Router::new(RouterConfig::default());
+        let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let counters = splitee::server::ServerCounters::new();
+        let compute = {
+            let router = Arc::clone(&router);
+            let bc = config.batcher.clone();
+            std::thread::spawn(move || service.run(router, bc).expect("serve"))
+        };
+        let front = {
+            let router = Arc::clone(&router);
+            let counters = Arc::clone(&counters);
+            let seq = model.seq_len();
+            std::thread::spawn(move || {
+                splitee::server::serve_tcp(
+                    listener,
+                    router,
+                    seq,
+                    None,
+                    splitee::server::ServerConfig::default(),
+                    counters,
+                )
+                .expect("serve_tcp")
+            })
+        };
+        // moderate open-loop rate the pipeline can sustain: the gated rps
+        // key then tracks the generator's deterministic pacing, while p99
+        // tracks real end-to-end socket latency
+        let cfg = splitee::sim::LoadgenConfig {
+            requests: 600,
+            clients: 32,
+            conns: 16,
+            seq_len: model.seq_len(),
+            vocab: 256,
+            mean_rps: 400.0,
+            seed: 0xBE9C,
+            ..Default::default()
+        };
+        let report = splitee::sim::loadgen::run(&addr, &cfg).expect("loadgen fleet");
+        router.shutdown();
+        front.join().expect("front join");
+        compute.join().expect("compute join");
+        let stat = counters.snapshot();
+        assert!(stat.balanced(), "tcp accounting identity broken: {stat:?}");
+        assert!(report.balanced(), "client-side accounting broken");
+        println!(
+            "  serve_tcp leg: {:.0} req/s served, p99 {:.2} ms, shed {:.1}%",
+            report.served_rps(),
+            report.latency.percentile_us(99.0) / 1e3,
+            100.0 * report.shed_rate()
+        );
+        extras.insert("serve_tcp_rps".to_string(), report.served_rps());
+        extras.insert("serve_tcp_p50_ms".to_string(), report.latency.percentile_us(50.0) / 1e3);
+        extras.insert("serve_tcp_p99_ms".to_string(), report.latency.percentile_us(99.0) / 1e3);
+        extras.insert("serve_tcp_shed_rate".to_string(), report.shed_rate());
+    }
+
     // raw backend roofline for comparison: back-to-back full-depth batches
     let roofline_rps = {
         let b = *model.batch_sizes().iter().max().unwrap();

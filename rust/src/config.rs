@@ -253,6 +253,9 @@ pub struct Settings {
     /// `flaky@<replica>:<p>` events joined by `|`, optionally with a
     /// trailing `,seed=<n>` (parsed into `sim::faults::FaultSchedule`)
     pub faults: String,
+    /// TCP bind address for the `serve` front end ("" = in-process serving
+    /// only; validated as a socket address at parse time)
+    pub listen: String,
     /// durable-state snapshot path ("" = snapshots disabled; parsed with
     /// `--snapshot-every` into `persist::SnapshotConfig`)
     pub snapshot: String,
@@ -285,6 +288,7 @@ impl Default for Settings {
             replicas: 1,
             dispatch: "round-robin".to_string(),
             faults: String::new(),
+            listen: String::new(),
             snapshot: String::new(),
             snapshot_every: 0,
             ref_threads: 0,
@@ -333,6 +337,13 @@ impl Settings {
         s.replicas = args.get_num("replicas", s.replicas).map_err(anyhow::Error::msg)?;
         if s.replicas == 0 {
             bail!("--replicas must be a positive integer");
+        }
+        if let Some(addr) = args.get("listen") {
+            s.listen = addr.to_string();
+            // fail at startup like --link/--faults, not at bind time
+            s.listen
+                .parse::<std::net::SocketAddr>()
+                .with_context(|| format!("--listen wants host:port, got {:?}", s.listen))?;
         }
         if let Some(p) = args.get("snapshot") {
             s.snapshot = p.to_string();
@@ -552,6 +563,19 @@ mod tests {
         assert!(Settings::from_args(&args).is_err());
         let args = Args::parse(["x", "--ref-threads", "lots"].iter().map(|s| s.to_string()));
         assert!(Settings::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn settings_listen_parses_and_validates() {
+        let s = Settings::from_args(&Args::parse(["x"].iter().map(|s| s.to_string()))).unwrap();
+        assert!(s.listen.is_empty(), "default = no TCP front end");
+        let args =
+            Args::parse(["x", "--listen", "127.0.0.1:7070"].iter().map(|s| s.to_string()));
+        assert_eq!(Settings::from_args(&args).unwrap().listen, "127.0.0.1:7070");
+        for bad in ["localhost", "127.0.0.1", "no:such:port", ":-1"] {
+            let args = Args::parse(["x", "--listen", bad].iter().map(|s| s.to_string()));
+            assert!(Settings::from_args(&args).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

@@ -142,6 +142,7 @@ mod tests {
             tokens: TensorI32::new(vec![1, 4], vec![id_marker; 4]).unwrap(),
             submitted_at: Instant::now(),
             reply: tx,
+            tag: None,
         }
     }
 

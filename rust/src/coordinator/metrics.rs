@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::coordinator::router::ClientTag;
 use crate::runtime::SpecCounters;
 use crate::util::stats::{LatencyHistogram, Welford};
 
@@ -253,6 +254,32 @@ impl LinkStateStat {
     }
 }
 
+/// Per-cohort serving accounting for the network front end: one row per
+/// registered client identity (`client:<name>`) and one per link profile
+/// (`link:<profile>`).  Attribution-only — cohort rows never feed back into
+/// the decision path, so tagged and untagged traffic make identical
+/// split/exit choices.
+#[derive(Debug, Clone, Default)]
+pub struct CohortStat {
+    /// requests served to this cohort
+    pub served: u64,
+    /// served requests that offloaded to the cloud tier
+    pub offloaded: u64,
+    /// end-to-end latency of this cohort's requests
+    pub latency: LatencyHistogram,
+}
+
+impl CohortStat {
+    /// Offloaded fraction of this cohort's served requests.
+    pub fn offload_rate(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.offloaded as f64 / self.served as f64
+        }
+    }
+}
+
 /// Aggregated metrics for a serving session.
 #[derive(Debug)]
 pub struct ServingMetrics {
@@ -297,6 +324,10 @@ pub struct ServingMetrics {
     /// per-link-state traffic and split-choice accounting (dynamic-link
     /// scenarios; one `"static"` entry under a fixed link)
     pub link_states: BTreeMap<String, LinkStateStat>,
+    /// per-client / per-link-cohort rows for TCP traffic that announced an
+    /// identity via the `hello` line (keys `client:<name>` and
+    /// `link:<profile>`); empty for anonymous or in-process traffic
+    pub cohorts: BTreeMap<String, CohortStat>,
     /// wall-clock mark of the previous batch's reply: the inter-reply
     /// interval is attributed to the *completing* batch's link state.
     /// `None` until the first batch, so service setup time is charged to no
@@ -331,6 +362,7 @@ impl ServingMetrics {
             spec: SpecCounters::new(),
             pool: PoolCounters::new(0),
             link_states: BTreeMap::new(),
+            cohorts: BTreeMap::new(),
             last_link_mark: None,
             snapshots_written: 0,
         }
@@ -416,6 +448,21 @@ impl ServingMetrics {
         s.outage_fallbacks += outage_fallbacks;
         s.wall_ms += dt_ms;
         *s.split_hist.entry(split).or_insert(0) += 1;
+    }
+
+    /// Attribute one served request to its connection's cohorts: the named
+    /// client row and the link-profile row both advance.  Called from the
+    /// reply stage only for requests that carried a
+    /// [`ClientTag`]; anonymous traffic leaves `cohorts` empty.
+    pub fn record_cohort(&mut self, tag: &ClientTag, offloaded: bool, latency_ms: f64) {
+        for key in [format!("client:{}", tag.client), format!("link:{}", tag.link)] {
+            let c = self.cohorts.entry(key).or_default();
+            c.served += 1;
+            if offloaded {
+                c.offloaded += 1;
+            }
+            c.latency.record_us(latency_ms * 1e3);
+        }
     }
 
     /// Record one cloud-stage group by how many offload-contributing
@@ -551,6 +598,38 @@ impl ServingMetrics {
                 ));
             }
         }
+        if !self.cohorts.is_empty() {
+            // link rows are always few (4 profiles); client rows can be a
+            // whole fleet — print the busiest handful and summarize the rest
+            const MAX_CLIENT_ROWS: usize = 8;
+            for (key, c) in self.cohorts.iter().filter(|(k, _)| k.starts_with("link:")) {
+                out.push_str(&format!(
+                    "cohort[{key}]  {} req  offload {:.1}%  p50 {:.2} ms  p99 {:.2} ms\n",
+                    c.served,
+                    100.0 * c.offload_rate(),
+                    c.latency.percentile_us(50.0) / 1e3,
+                    c.latency.percentile_us(99.0) / 1e3,
+                ));
+            }
+            let mut clients: Vec<(&String, &CohortStat)> =
+                self.cohorts.iter().filter(|(k, _)| k.starts_with("client:")).collect();
+            clients.sort_by(|a, b| b.1.served.cmp(&a.1.served).then(a.0.cmp(b.0)));
+            for (key, c) in clients.iter().take(MAX_CLIENT_ROWS) {
+                out.push_str(&format!(
+                    "cohort[{key}]  {} req  offload {:.1}%  p50 {:.2} ms  p99 {:.2} ms\n",
+                    c.served,
+                    100.0 * c.offload_rate(),
+                    c.latency.percentile_us(50.0) / 1e3,
+                    c.latency.percentile_us(99.0) / 1e3,
+                ));
+            }
+            if clients.len() > MAX_CLIENT_ROWS {
+                out.push_str(&format!(
+                    "cohort   ... +{} more clients\n",
+                    clients.len() - MAX_CLIENT_ROWS
+                ));
+            }
+        }
         if self.snapshots_written > 0 {
             out.push_str(&format!("snapshots written {}\n", self.snapshots_written));
         }
@@ -663,6 +742,51 @@ mod tests {
         m.record_link_state("static", 3, 8, 0, 0);
         assert!(!m.report().contains("link["), "single static entry is noise");
         assert_eq!(m.link_states["static"].batches, 1);
+    }
+
+    #[test]
+    fn cohort_rows_accumulate_per_client_and_per_link() {
+        let mut m = ServingMetrics::new(6);
+        let a = ClientTag { client: "edge-a".into(), link: "wifi".into() };
+        let b = ClientTag { client: "edge-b".into(), link: "wifi".into() };
+        m.record_cohort(&a, true, 4.0);
+        m.record_cohort(&a, false, 6.0);
+        m.record_cohort(&b, true, 10.0);
+        assert_eq!(m.cohorts["client:edge-a"].served, 2);
+        assert_eq!(m.cohorts["client:edge-a"].offloaded, 1);
+        assert_eq!(m.cohorts["client:edge-b"].served, 1);
+        // both clients share the wifi link row
+        assert_eq!(m.cohorts["link:wifi"].served, 3);
+        assert_eq!(m.cohorts["link:wifi"].offloaded, 2);
+        assert!((m.cohorts["client:edge-b"].offload_rate() - 1.0).abs() < 1e-12);
+        let r = m.report();
+        assert!(r.contains("cohort[link:wifi]"), "{r}");
+        assert!(r.contains("cohort[client:edge-a]"), "{r}");
+    }
+
+    #[test]
+    fn cohort_report_caps_client_rows() {
+        let mut m = ServingMetrics::new(6);
+        for i in 0..12 {
+            let t = ClientTag { client: format!("c{i:02}"), link: "4g".into() };
+            // distinct served counts so the sort order is deterministic
+            for _ in 0..=i {
+                m.record_cohort(&t, false, 1.0);
+            }
+        }
+        let r = m.report();
+        assert!(r.contains("cohort[link:4g]"), "{r}");
+        assert!(r.contains("+4 more clients"), "{r}");
+        // busiest client printed, quietest elided
+        assert!(r.contains("cohort[client:c11]"), "{r}");
+        assert!(!r.contains("cohort[client:c00]"), "{r}");
+    }
+
+    #[test]
+    fn untagged_sessions_report_no_cohort_lines() {
+        let mut m = ServingMetrics::new(6);
+        m.record_request(3, false, false, 5.0, 0.5, 1.0, 1.0);
+        assert!(!m.report().contains("cohort["), "anonymous traffic is noise-free");
     }
 
     #[test]

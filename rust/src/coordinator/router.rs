@@ -21,6 +21,18 @@ use std::time::Instant;
 
 use crate::tensor::TensorI32;
 
+/// Identity a network client registered with its `hello` line: attribution
+/// only.  The reply stage keys per-client / per-link cohort rows in
+/// [`crate::coordinator::metrics::ServingMetrics`] off it; it never touches
+/// the decision path, so tagged and untagged submission produce bit-identical
+/// bandit decisions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClientTag {
+    pub client: String,
+    /// link profile name (`wifi|5g|4g|3g`, or `unspecified`)
+    pub link: String,
+}
+
 /// An inference request: one tokenised sample.
 #[derive(Debug)]
 pub struct Request {
@@ -30,6 +42,9 @@ pub struct Request {
     pub submitted_at: Instant,
     /// reply channel
     pub reply: Sender<Response>,
+    /// optional per-client identity for cohort attribution (shared, not
+    /// cloned, per request — a connection submits thousands of these)
+    pub tag: Option<Arc<ClientTag>>,
 }
 
 /// The served answer.
@@ -42,6 +57,17 @@ pub struct Response {
     pub infer_layer: usize,
     pub offloaded: bool,
     pub latency_ms: f64,
+}
+
+/// Outcome of a non-blocking [`Router::try_submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// queued; the reply channel will receive exactly one [`Response`]
+    Accepted(u64),
+    /// in-flight window full — load-shed, nothing was queued
+    Shed,
+    /// the router no longer accepts requests
+    Shutdown,
 }
 
 /// Router limits.
@@ -99,6 +125,18 @@ impl Router {
         tokens: TensorI32,
         reply: Sender<Response>,
     ) -> Option<u64> {
+        self.submit_tagged(tokens, reply, None)
+    }
+
+    /// [`Router::submit`] with an optional client tag for cohort
+    /// attribution.  In-process producers use the untagged wrapper; the TCP
+    /// front end threads each connection's registered identity through here.
+    pub fn submit_tagged(
+        &self,
+        tokens: TensorI32,
+        reply: Sender<Response>,
+        tag: Option<Arc<ClientTag>>,
+    ) -> Option<u64> {
         let mut st = self.lock_state();
         while st.accepting && st.queue.len() >= self.config.max_inflight {
             st = self.space.wait(st).unwrap_or_else(PoisonError::into_inner);
@@ -106,6 +144,37 @@ impl Router {
         if !st.accepting {
             return None;
         }
+        Some(self.enqueue(&mut st, tokens, reply, tag))
+    }
+
+    /// Non-blocking admission: accept if the in-flight window has room,
+    /// otherwise report the overload instead of waiting.  This is the
+    /// load-shedding path of the network front end — a shed client gets an
+    /// immediate `{"error":"shed"}` reply, never a hang — while in-process
+    /// producers keep the blocking [`Router::submit`] backpressure.
+    pub fn try_submit(
+        &self,
+        tokens: TensorI32,
+        reply: Sender<Response>,
+        tag: Option<Arc<ClientTag>>,
+    ) -> Admission {
+        let mut st = self.lock_state();
+        if !st.accepting {
+            return Admission::Shutdown;
+        }
+        if st.queue.len() >= self.config.max_inflight {
+            return Admission::Shed;
+        }
+        Admission::Accepted(self.enqueue(&mut st, tokens, reply, tag))
+    }
+
+    fn enqueue(
+        &self,
+        st: &mut RouterState,
+        tokens: TensorI32,
+        reply: Sender<Response>,
+        tag: Option<Arc<ClientTag>>,
+    ) -> u64 {
         let id = st.next_id;
         st.next_id += 1;
         st.queue.push_back(Request {
@@ -113,9 +182,10 @@ impl Router {
             tokens,
             submitted_at: Instant::now(),
             reply,
+            tag,
         });
         self.items.notify_one();
-        Some(id)
+        id
     }
 
     /// Pull up to `max` requests, blocking until at least one is available
@@ -267,6 +337,37 @@ mod tests {
         let (n, waited) = puller.join().unwrap();
         assert_eq!(n, 1);
         assert!(waited < Duration::from_secs(2), "woke after {waited:?}");
+    }
+
+    #[test]
+    fn try_submit_sheds_instead_of_blocking() {
+        let r = Router::new(RouterConfig { max_inflight: 2 });
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(r.try_submit(tokens(), tx.clone(), None), Admission::Accepted(0));
+        assert_eq!(r.try_submit(tokens(), tx.clone(), None), Admission::Accepted(1));
+        // window full: an immediate shed, not a hang, and nothing queued
+        let t0 = Instant::now();
+        assert_eq!(r.try_submit(tokens(), tx.clone(), None), Admission::Shed);
+        assert!(t0.elapsed() < std::time::Duration::from_millis(50));
+        assert_eq!(r.queued(), 2);
+        // draining reopens the window
+        let _ = r.pull(1);
+        assert_eq!(r.try_submit(tokens(), tx.clone(), None), Admission::Accepted(2));
+        r.shutdown();
+        assert_eq!(r.try_submit(tokens(), tx, None), Admission::Shutdown);
+    }
+
+    #[test]
+    fn tags_ride_the_request_without_perturbing_ids() {
+        let r = Router::new(RouterConfig::default());
+        let (tx, _rx) = mpsc::channel();
+        let tag = Arc::new(ClientTag { client: "edge-7".into(), link: "4g".into() });
+        let a = r.submit_tagged(tokens(), tx.clone(), Some(Arc::clone(&tag))).unwrap();
+        let b = r.submit(tokens(), tx).unwrap();
+        assert_eq!((a, b), (0, 1));
+        let pulled = r.pull(2);
+        assert_eq!(pulled[0].tag.as_deref(), Some(&*tag));
+        assert!(pulled[1].tag.is_none());
     }
 
     #[test]

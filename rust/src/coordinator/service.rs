@@ -689,6 +689,9 @@ fn reply_stage(
             cost_l,
             energy,
         );
+        if let Some(tag) = &req.tag {
+            metrics.record_cohort(tag, offloaded, latency);
+        }
         let _ = req.reply.send(Response {
             id: req.id,
             prediction: pred,

@@ -17,6 +17,19 @@ pub enum NetworkKind {
     ThreeG,
 }
 
+impl NetworkKind {
+    /// Canonical lowercase name, the one [`NetworkProfile::by_name`] parses
+    /// and the per-cohort metrics key on.
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkKind::WiFi => "wifi",
+            NetworkKind::FiveG => "5g",
+            NetworkKind::FourG => "4g",
+            NetworkKind::ThreeG => "3g",
+        }
+    }
+}
+
 /// Link model: paper-cost plus simulator latency/bandwidth.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NetworkProfile {
@@ -158,6 +171,14 @@ mod tests {
         assert_eq!(NetworkProfile::by_name("4g").unwrap().kind, NetworkKind::FourG);
         assert_eq!(NetworkProfile::by_name("3g").unwrap().kind, NetworkKind::ThreeG);
         assert!(NetworkProfile::by_name("2g").is_none());
+    }
+
+    #[test]
+    fn kind_name_roundtrips_through_by_name() {
+        for p in NetworkProfile::all() {
+            let named = NetworkProfile::by_name(p.kind.name()).unwrap();
+            assert_eq!(named.kind, p.kind);
+        }
     }
 
     #[test]

@@ -23,9 +23,10 @@ use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::{Dataset, SampleStream};
 use splitee::experiments::{ablations, figures, regret, report, sec5_4, table2,
                            ConfidenceCache};
-use splitee::model::MultiExitModel;
+use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::Backend;
-use splitee::sim::{LinkScenario, LinkSim};
+use splitee::server::{serve_tcp, ServerConfig, ServerCounters};
+use splitee::sim::{loadgen as fleet, LinkScenario, LinkSim};
 use splitee::util::args::Args;
 use splitee::util::logging;
 use splitee::util::rng::Rng;
@@ -84,6 +85,7 @@ fn run(args: &Args) -> Result<()> {
             Ok(())
         }
         "serve" => serve(args, &settings),
+        "loadgen" => loadgen(args, &settings),
         "help" | _ => {
             println!("{}", HELP);
             if sub != "help" {
@@ -116,6 +118,18 @@ Subcommands
                 [--replicas N] [--dispatch round-robin|least-loaded]
                 [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]]
                 [--snapshot PATH] [--snapshot-every N]
+               with --listen HOST:PORT requests arrive over a concurrent
+               TCP front end (newline JSON; optional first line
+               hello {\"client\":NAME,\"link\":wifi|5g|4g|3g} registers a
+               cohort; replies carry the request line number as id;
+               over-capacity requests shed with retry_after_ms, never hang)
+  loadgen      open-loop fleet load generator (seeded Pareto arrivals,
+               diurnal/surge phases, heavy-tailed per-client mixes)
+               [--requests 2000] [--clients 64] [--conns 32] [--stalled 0]
+               [--rps 2000] [--network wifi|5g|4g|3g]
+               [--addr HOST:PORT [--seq-len N] [--vocab N]]
+               without --addr it self-hosts a synthetic serving plane on
+               loopback and enforces the shed-accounting identity
 
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
@@ -310,34 +324,81 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
     }
     signals::install();
 
-    // workload generator thread: replay shuffled dataset samples
-    let producer = {
-        let router = Arc::clone(&router);
-        let mut rng = Rng::new(settings.seed);
-        let stream: Vec<usize> =
-            SampleStream::shuffled(&dataset, &mut rng).take(n_requests).collect();
-        let tokens: Vec<_> = stream.iter().map(|&i| dataset.sample_tokens(i)).collect();
-        std::thread::spawn(move || {
-            let (tx, rx) = std::sync::mpsc::channel();
-            for t in tokens {
-                if signals::interrupted() || router.submit(t, tx.clone()).is_none() {
-                    break;
+    let tcp_mode = !settings.listen.is_empty();
+    let (mut service, got) = if tcp_mode {
+        // network front end: the compute loop runs on a background thread,
+        // the concurrent accept loop on this one
+        let listener = std::net::TcpListener::bind(&settings.listen)
+            .with_context(|| format!("binding {}", settings.listen))?;
+        let local = listener.local_addr().context("local addr")?;
+        println!("listening on {local} ({n_requests} request budget)");
+        let compute = {
+            let router = Arc::clone(&router);
+            let batcher_config = config.batcher.clone();
+            std::thread::spawn(move || {
+                let outcome = service.run(router, batcher_config);
+                (service, outcome)
+            })
+        };
+        // Ctrl-C unblocks the accept loop by shutting the router down
+        let watchdog = {
+            let router = Arc::clone(&router);
+            std::thread::spawn(move || {
+                while router.is_accepting() {
+                    if signals::interrupted() {
+                        router.shutdown();
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(50));
                 }
-            }
-            drop(tx);
-            // drain replies (the service loop also records metrics)
-            let mut got = 0usize;
-            while rx.recv().is_ok() {
-                got += 1;
-            }
-            router.shutdown();
-            got
-        })
-    };
+            })
+        };
+        let counters = ServerCounters::new();
+        let served = serve_tcp(
+            listener,
+            Arc::clone(&router),
+            model.seq_len(),
+            Some(n_requests),
+            ServerConfig::default(),
+            Arc::clone(&counters),
+        )?;
+        router.shutdown();
+        let _ = watchdog.join();
+        let (service, outcome) = compute.join().expect("compute join");
+        outcome?;
+        println!("{}", counters.snapshot());
+        (service, served)
+    } else {
+        // workload generator thread: replay shuffled dataset samples
+        let producer = {
+            let router = Arc::clone(&router);
+            let mut rng = Rng::new(settings.seed);
+            let stream: Vec<usize> =
+                SampleStream::shuffled(&dataset, &mut rng).take(n_requests).collect();
+            let tokens: Vec<_> = stream.iter().map(|&i| dataset.sample_tokens(i)).collect();
+            std::thread::spawn(move || {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for t in tokens {
+                    if signals::interrupted() || router.submit(t, tx.clone()).is_none() {
+                        break;
+                    }
+                }
+                drop(tx);
+                // drain replies (the service loop also records metrics)
+                let mut got = 0usize;
+                while rx.recv().is_ok() {
+                    got += 1;
+                }
+                router.shutdown();
+                got
+            })
+        };
 
-    let batcher_config = config.batcher.clone();
-    service.run(Arc::clone(&router), batcher_config)?;
-    let got = producer.join().expect("producer join");
+        let batcher_config = config.batcher.clone();
+        service.run(Arc::clone(&router), batcher_config)?;
+        let got = producer.join().expect("producer join");
+        (service, got)
+    };
     if service.write_snapshot() {
         log::info!("final snapshot written ({} batches served)", service.batches_done());
     }
@@ -362,8 +423,126 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
     }
     if signals::interrupted() {
         println!("interrupted: drained {got}/{n_requests} requests before shutdown");
+    } else if tcp_mode {
+        // in-flight pipelined requests may finish just past the budget
+        anyhow::ensure!(got >= n_requests, "expected >= {n_requests} replies, got {got}");
     } else {
         anyhow::ensure!(got == n_requests, "expected {n_requests} replies, got {got}");
     }
+    Ok(())
+}
+
+/// `splitee loadgen` — open-loop fleet load generation against the TCP
+/// front end.  With `--addr` it drives an already-running server; without,
+/// it self-hosts a synthetic-model serving plane on loopback (no artifacts
+/// needed), drives it, and checks the shed-accounting identity.
+fn loadgen(args: &Args, settings: &Settings) -> Result<()> {
+    let mut cfg = fleet::LoadgenConfig {
+        seed: settings.seed,
+        ..Default::default()
+    };
+    cfg.requests = args.get_num("requests", cfg.requests).map_err(anyhow::Error::msg)?;
+    cfg.clients = args.get_num("clients", cfg.clients).map_err(anyhow::Error::msg)?;
+    cfg.conns = args.get_num("conns", cfg.conns).map_err(anyhow::Error::msg)?;
+    cfg.stall_conns = args.get_num("stalled", cfg.stall_conns).map_err(anyhow::Error::msg)?;
+    cfg.mean_rps = args.get_num("rps", cfg.mean_rps).map_err(anyhow::Error::msg)?;
+    if cfg.clients == 0 || cfg.conns == 0 || cfg.requests == 0 {
+        bail!("--clients, --conns and --requests must be positive");
+    }
+
+    if let Some(addr) = args.get("addr") {
+        // external target: the server's seq_len/vocab must be supplied when
+        // they differ from the synthetic defaults
+        cfg.seq_len = args.get_num("seq-len", cfg.seq_len).map_err(anyhow::Error::msg)?;
+        cfg.vocab = args.get_num("vocab", cfg.vocab).map_err(anyhow::Error::msg)?;
+        let report = fleet::run(addr, &cfg)?;
+        println!("{report}");
+        return Ok(());
+    }
+
+    // self-hosted: a synthetic reference-backend serving plane on loopback
+    const SYN_LAYERS: usize = 6;
+    const SYN_SEQ: usize = 8;
+    const SYN_VOCAB: usize = 64;
+    cfg.seq_len = SYN_SEQ;
+    cfg.vocab = SYN_VOCAB;
+    let weights = ModelWeights::synthetic(SYN_LAYERS, 16, 32, SYN_VOCAB, SYN_SEQ, 2, 0xFEED);
+    let model = Arc::new(MultiExitModel::from_weights(
+        "synthetic",
+        "reference",
+        weights,
+        2,
+        SYN_SEQ,
+        vec![1, 8],
+        &Backend::reference(),
+    )?);
+    let cm = CostModel::paper(settings.offload_cost, settings.mu, model.n_layers());
+    let link = LinkSim::new(
+        NetworkProfile::by_name(args.get_or("network", "wifi"))
+            .context("--network must be wifi|5g|4g|3g")?,
+        settings.seed ^ 0x11,
+    );
+    let config = ServiceConfig {
+        policy: PolicyKind::SplitEe,
+        alpha: 0.7,
+        beta: settings.beta,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        coalesce: Default::default(),
+        speculate: SpeculateMode::from_name(&settings.speculate)?,
+        link: LinkScenario::from_name(&settings.link)?,
+        replicas: settings.replica_config()?,
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").context("bind loopback")?;
+    let addr = listener.local_addr().context("local addr")?.to_string();
+    let counters = ServerCounters::new();
+    let compute = {
+        let router = Arc::clone(&router);
+        let batcher_config = config.batcher.clone();
+        std::thread::spawn(move || service.run(router, batcher_config))
+    };
+    let front = {
+        let router = Arc::clone(&router);
+        let counters = Arc::clone(&counters);
+        let seq_len = model.seq_len();
+        std::thread::spawn(move || {
+            serve_tcp(listener, router, seq_len, None, ServerConfig::default(), counters)
+        })
+    };
+
+    println!(
+        "loadgen: {} requests, {} clients over {} conns (+{} stalled), target {:.0} rps -> {addr}",
+        cfg.requests, cfg.clients, cfg.conns, cfg.stall_conns, cfg.mean_rps
+    );
+    let report = fleet::run(&addr, &cfg);
+    router.shutdown();
+    let served = front.join().expect("front-end join")?;
+    compute.join().expect("compute join")?;
+    let report = report?;
+    let stat = counters.snapshot();
+    println!("{report}");
+    println!("{stat}");
+    anyhow::ensure!(
+        stat.balanced(),
+        "shed accounting violated: submitted {} != served {} + shed {} + rejected {}",
+        stat.submitted,
+        stat.served,
+        stat.shed,
+        stat.rejected
+    );
+    anyhow::ensure!(
+        report.balanced(),
+        "client-side accounting violated: sent {} != served {} + shed {} + rejected {}",
+        report.sent,
+        report.served,
+        report.shed,
+        report.rejected
+    );
+    log::info!("front end answered {served} requests");
     Ok(())
 }

@@ -1,96 +1,462 @@
-//! TCP front-end: a line-oriented protocol over the coordinator.
+//! TCP front-end: a concurrent line-oriented protocol over the coordinator.
 //!
-//! Protocol (one request per line):
+//! Protocol (one request per line, replies correlated by line number):
 //!
 //! ```text
+//!     -> hello {"client":"edge-7","link":"4g"}\n      (optional first line)
+//!     <- {"hello":"edge-7","link":"4g"}\n
 //!     -> 12,907,34,...,101\n          (seq_len comma-separated token ids)
 //!     <- {"id":0,"pred":1,"conf":0.93,"layer":4,"offloaded":false,
 //!         "latency_ms":2.41}\n
 //! ```
 //!
-//! Malformed lines get `{"error": "..."}` and the connection stays open.
-//! Used by `splitee serve --listen <addr>` and the `serve_stream` example's
-//! `--tcp` mode.
+//! `id` is the 0-based request line number on the connection (the hello line
+//! and blank lines don't count), so a pipelining client can match replies to
+//! requests.  Malformed lines get `{"error":"...","id":N}` and the
+//! connection stays open; over-capacity requests get an immediate
+//! `{"error":"shed","id":N,"retry_after_ms":M}` and are *not* queued.
+//!
+//! Concurrency model: the accept loop spawns one thread per connection
+//! (bounded by [`ServerConfig::max_connections`]); each connection runs a
+//! reader that submits every parsed line to the router immediately
+//! (pipelining), a reply pump that pairs router replies with correlation
+//! ids, and a writer that owns the socket's send side — so a stalled or
+//! slow client can never block accepts, other clients, or the compute
+//! pipeline.  The accounting identity
+//! `submitted == served + shed + rejected` holds over [`ServerCounters`]
+//! once the server has quiesced.
+//!
+//! Used by `splitee serve --listen <addr>`, `splitee loadgen`, and the
+//! `serve_stream` example's `--tcp` mode.
 
 pub mod protocol;
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::router::Router;
+use crate::coordinator::router::{Admission, ClientTag, Response, Router};
 use crate::tensor::TensorI32;
-use protocol::{format_error, format_response, parse_tokens};
+use protocol::{
+    format_error, format_error_id, format_hello_ack, format_response, format_shed, parse_hello,
+    parse_tokens,
+};
 
-/// Serve connections until `max_requests` have been answered (None = forever).
-/// The compute loop runs elsewhere (a `Service::run` thread on the same
-/// router); this function only handles socket I/O.
-pub fn serve_tcp(
-    listener: TcpListener,
-    router: Arc<Router>,
-    seq_len: usize,
-    max_requests: Option<usize>,
-) -> Result<usize> {
-    let mut answered = 0usize;
-    listener.set_nonblocking(false).ok();
-    loop {
-        if let Some(maxr) = max_requests {
-            if answered >= maxr {
-                return Ok(answered);
-            }
-        }
-        let (stream, peer) = listener.accept().context("accept")?;
-        log::info!("connection from {peer}");
-        match handle_connection(stream, &router, seq_len, max_requests.map(|m| m - answered)) {
-            Ok(n) => answered += n,
-            Err(e) => log::warn!("connection error: {e:#}"),
-        }
-        if !router.is_accepting() {
-            return Ok(answered);
+/// Front-end limits and timeouts.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// maximum simultaneously served connections; extra accepts get an
+    /// error line and an immediate close
+    pub max_connections: usize,
+    /// per-connection cap on accepted-but-unanswered requests; beyond it
+    /// the connection's own traffic is shed before reaching the router
+    pub max_pending_per_conn: usize,
+    /// retry hint carried by shed replies
+    pub shed_retry_after_ms: u64,
+    /// socket read timeout: how often a blocked reader wakes to check the
+    /// stop flag (teardown latency, not a client-visible deadline)
+    pub read_timeout: Duration,
+    /// accept-loop poll interval while no connection is pending
+    pub accept_poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_connections: 256,
+            max_pending_per_conn: 128,
+            shed_retry_after_ms: 25,
+            read_timeout: Duration::from_millis(50),
+            accept_poll: Duration::from_millis(2),
         }
     }
 }
 
+/// Shared request/connection accounting for the front end.  Shared atomics:
+/// connection threads record, the accept loop and tests snapshot.  All
+/// ordering is `Relaxed` — each counter is independently monotone and the
+/// identity is only asserted after the server has quiesced.
+#[derive(Debug, Default)]
+pub struct ServerCounters {
+    /// request lines taken off sockets (excludes hello/quit/blank lines)
+    pub submitted: AtomicU64,
+    /// requests whose reply arrived from the pipeline — counted at
+    /// `recv()`, *not* after the socket write, so a vanished client can't
+    /// make the serve budget over-serve
+    pub served: AtomicU64,
+    /// requests refused by admission control (router window or
+    /// per-connection pending cap full); the client got a shed line
+    pub shed: AtomicU64,
+    /// requests that failed to parse or arrived during shutdown
+    pub rejected: AtomicU64,
+    /// connections accepted into a serving thread
+    pub conn_accepted: AtomicU64,
+    /// connections turned away at the connection cap (not part of the
+    /// request identity — no request line was ever read)
+    pub conn_rejected: AtomicU64,
+}
+
+impl ServerCounters {
+    pub fn new() -> Arc<ServerCounters> {
+        Arc::new(ServerCounters::default())
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> ServerStat {
+        ServerStat {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            conn_accepted: self.conn_accepted.load(Ordering::Relaxed),
+            conn_rejected: self.conn_rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of [`ServerCounters`] (field semantics there).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServerStat {
+    pub submitted: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    pub conn_accepted: u64,
+    pub conn_rejected: u64,
+}
+
+impl ServerStat {
+    /// The accounting identity the server tests pin: once quiesced, every
+    /// submitted request resolved exactly once as served, shed, or
+    /// rejected.  (Mid-flight, accepted-but-unanswered requests make
+    /// `submitted` run ahead.)
+    pub fn balanced(&self) -> bool {
+        self.submitted == self.served + self.shed + self.rejected
+    }
+
+    /// Fraction of submitted requests that were load-shed.
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+}
+
+impl std::fmt::Display for ServerStat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tcp      submitted {}   served {}   shed {} ({:.1}%)   rejected {}   \
+             conns {} accepted, {} at-capacity",
+            self.submitted,
+            self.served,
+            self.shed,
+            100.0 * self.shed_rate(),
+            self.rejected,
+            self.conn_accepted,
+            self.conn_rejected,
+        )
+    }
+}
+
+/// Serve connections concurrently until `budget` requests have been
+/// answered (None = until the router shuts down).  The compute loop runs
+/// elsewhere (a `Service::run` thread on the same router); this function
+/// only handles socket I/O.  Returns the number of requests answered during
+/// this call, after joining every connection thread.
+pub fn serve_tcp(
+    listener: TcpListener,
+    router: Arc<Router>,
+    seq_len: usize,
+    budget: Option<usize>,
+    config: ServerConfig,
+    counters: Arc<ServerCounters>,
+) -> Result<usize> {
+    listener.set_nonblocking(true).context("listener set_nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
+    let base_served = counters.served.load(Ordering::Relaxed);
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    let answered =
+        |counters: &ServerCounters| (counters.served.load(Ordering::Relaxed) - base_served) as usize;
+
+    loop {
+        if budget.map(|b| answered(&counters) >= b).unwrap_or(false) {
+            break;
+        }
+        if !router.is_accepting() {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                if active.load(Ordering::Relaxed) >= config.max_connections {
+                    counters.conn_rejected.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("rejecting {peer}: at connection capacity");
+                    let mut s = stream;
+                    let _ = s.write_all(format_error("server at connection capacity").as_bytes());
+                    continue; // drop closes the socket
+                }
+                counters.conn_accepted.fetch_add(1, Ordering::Relaxed);
+                active.fetch_add(1, Ordering::Relaxed);
+                log::info!("connection from {peer}");
+                let router = Arc::clone(&router);
+                let counters = Arc::clone(&counters);
+                let stop = Arc::clone(&stop);
+                let active = Arc::clone(&active);
+                let config = config.clone();
+                handles.push(std::thread::spawn(move || {
+                    let r = handle_connection(stream, &router, seq_len, &config, &counters, &stop);
+                    active.fetch_sub(1, Ordering::Relaxed);
+                    match r {
+                        Ok(n) => log::info!("connection {peer} closed after {n} replies"),
+                        Err(e) => log::warn!("connection {peer} error: {e:#}"),
+                    }
+                }));
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(config.accept_poll);
+            }
+            Err(e) => {
+                stop.store(true, Ordering::Relaxed);
+                for h in handles {
+                    let _ = h.join();
+                }
+                return Err(e).context("accept");
+            }
+        }
+        // reap finished connection threads so the vec stays bounded
+        handles.retain(|h| !h.is_finished());
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(answered(&counters))
+}
+
 /// Handle one client connection; returns the number of answered requests.
+///
+/// Three roles share the connection so a slow socket never blocks the
+/// pipeline: the calling thread reads and submits lines (pipelined — it
+/// never waits for a reply), a pump thread pairs each router reply with its
+/// correlation id (valid because per-connection replies arrive in
+/// submission order) and counts it served the moment `recv()` succeeds, and
+/// a writer thread owns the send side, draining reply lines even after a
+/// write failure so accounting stays exact.
 pub fn handle_connection(
     stream: TcpStream,
     router: &Router,
     seq_len: usize,
-    budget: Option<usize>,
+    config: &ServerConfig,
+    counters: &ServerCounters,
+    stop: &AtomicBool,
 ) -> Result<usize> {
-    let mut writer = stream.try_clone().context("clone stream")?;
-    let reader = BufReader::new(stream);
-    let mut answered = 0usize;
-    for line in reader.lines() {
-        let line = line.context("read line")?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        if line.trim() == "quit" {
-            break;
-        }
-        match parse_tokens(&line, seq_len) {
-            Ok(tokens) => {
-                let (tx, rx) = mpsc::channel();
-                let Some(_id) = router.submit(TensorI32::new(vec![1, seq_len], tokens)
-                    .map_err(|e| anyhow::anyhow!(e))?, tx) else {
-                    writer.write_all(format_error("server shutting down").as_bytes())?;
-                    break;
-                };
-                let resp = rx.recv().context("reply channel closed")?;
-                writer.write_all(format_response(&resp).as_bytes())?;
-                answered += 1;
-                if budget.map(|b| answered >= b).unwrap_or(false) {
-                    break;
+    stream
+        .set_read_timeout(Some(config.read_timeout))
+        .context("set_read_timeout")?;
+    let writer_stream = stream.try_clone().context("clone stream")?;
+    let (out_tx, out_rx) = mpsc::channel::<String>();
+    let (corr_tx, corr_rx) = mpsc::channel::<u64>();
+    let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+    let pending = AtomicUsize::new(0);
+    let served_here = AtomicUsize::new(0);
+
+    std::thread::scope(|s| -> Result<()> {
+        // writer: sole owner of the send side
+        s.spawn(move || {
+            let mut w = writer_stream;
+            let mut broken = false;
+            for line in out_rx {
+                if !broken && w.write_all(line.as_bytes()).is_err() {
+                    // client gone: keep draining so senders never block and
+                    // the pump's served/rejected accounting continues
+                    broken = true;
                 }
             }
-            Err(msg) => {
-                writer.write_all(format_error(&msg).as_bytes())?;
-            }
+        });
+
+        // reply pump: pair replies with correlation ids, in order
+        {
+            let out_tx = out_tx.clone();
+            let pending = &pending;
+            let served_here = &served_here;
+            s.spawn(move || {
+                while let Ok(corr) = corr_rx.recv() {
+                    match resp_rx.recv() {
+                        Ok(resp) => {
+                            counters.served.fetch_add(1, Ordering::Relaxed);
+                            served_here.fetch_add(1, Ordering::Relaxed);
+                            pending.fetch_sub(1, Ordering::Relaxed);
+                            let _ = out_tx.send(format_response(corr, &resp));
+                        }
+                        Err(_) => {
+                            // pipeline tore down before serving this request
+                            counters.rejected.fetch_add(1, Ordering::Relaxed);
+                            pending.fetch_sub(1, Ordering::Relaxed);
+                            let _ = out_tx.send(format_error_id(corr, "server shutting down"));
+                        }
+                    }
+                }
+            });
         }
+
+        // reader: this thread — parse lines, submit immediately, never wait
+        // for replies
+        let mut reader = BufReader::new(stream);
+        let mut tag: Option<Arc<ClientTag>> = None;
+        let mut first_line = true;
+        let mut corr: u64 = 0;
+        let mut line = String::new();
+        let result: Result<()> = loop {
+            // a chatty client never hits the read timeout, so teardown must
+            // also be observed between lines
+            if stop.load(Ordering::Relaxed) {
+                break Ok(());
+            }
+            match reader.read_line(&mut line) {
+                Ok(0) => break Ok(()), // EOF
+                Ok(_) if !line.ends_with('\n') => {
+                    // final unterminated line before EOF
+                }
+                Ok(_) => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    // timeout may leave a partial line in `line`: keep it
+                    // and resume reading unless the server is tearing down
+                    if stop.load(Ordering::Relaxed) {
+                        break Ok(());
+                    }
+                    continue;
+                }
+                Err(e) => break Err(e).context("read line"),
+            }
+            let trimmed = line.trim().to_string();
+            let at_eof = !line.ends_with('\n');
+            line.clear();
+            if trimmed.is_empty() {
+                if at_eof {
+                    break Ok(());
+                }
+                continue;
+            }
+            if first_line {
+                first_line = false;
+                if let Some(hello) = parse_hello(&trimmed) {
+                    match hello {
+                        Ok(t) => {
+                            let t = Arc::new(t);
+                            let _ = out_tx.send(format_hello_ack(&t));
+                            tag = Some(t);
+                        }
+                        Err(msg) => {
+                            let _ = out_tx.send(format_error(&msg));
+                        }
+                    }
+                    continue;
+                }
+            }
+            if trimmed == "quit" {
+                break Ok(());
+            }
+            let this_corr = corr;
+            corr += 1;
+            counters.submitted.fetch_add(1, Ordering::Relaxed);
+            match parse_tokens(&trimmed, seq_len) {
+                Err(msg) => {
+                    counters.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = out_tx.send(format_error_id(this_corr, &msg));
+                }
+                Ok(toks) => {
+                    if pending.load(Ordering::Relaxed) >= config.max_pending_per_conn {
+                        counters.shed.fetch_add(1, Ordering::Relaxed);
+                        let _ = out_tx
+                            .send(format_shed(this_corr, config.shed_retry_after_ms));
+                    } else {
+                        match TensorI32::new(vec![1, seq_len], toks) {
+                            Err(e) => {
+                                counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                let _ = out_tx.send(format_error_id(this_corr, &e.to_string()));
+                            }
+                            Ok(t) => match router.try_submit(t, resp_tx.clone(), tag.clone()) {
+                                Admission::Accepted(_) => {
+                                    pending.fetch_add(1, Ordering::Relaxed);
+                                    let _ = corr_tx.send(this_corr);
+                                }
+                                Admission::Shed => {
+                                    counters.shed.fetch_add(1, Ordering::Relaxed);
+                                    let _ = out_tx.send(format_shed(
+                                        this_corr,
+                                        config.shed_retry_after_ms,
+                                    ));
+                                }
+                                Admission::Shutdown => {
+                                    counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                    let _ = out_tx.send(format_error_id(
+                                        this_corr,
+                                        "server shutting down",
+                                    ));
+                                    break Ok(());
+                                }
+                            },
+                        }
+                    }
+                }
+            }
+            if at_eof {
+                break Ok(());
+            }
+        };
+        // closing these lets the pump drain outstanding replies and exit,
+        // then the writer flush and exit; the scope joins both
+        drop(resp_tx);
+        drop(corr_tx);
+        drop(out_tx);
+        result
+    })?;
+    Ok(served_here.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_identity_and_shed_rate() {
+        let c = ServerCounters::new();
+        c.submitted.fetch_add(10, Ordering::Relaxed);
+        c.served.fetch_add(7, Ordering::Relaxed);
+        c.shed.fetch_add(2, Ordering::Relaxed);
+        c.rejected.fetch_add(1, Ordering::Relaxed);
+        let s = c.snapshot();
+        assert!(s.balanced());
+        assert!((s.shed_rate() - 0.2).abs() < 1e-12);
+        // one more in flight: identity intentionally not yet satisfied
+        c.submitted.fetch_add(1, Ordering::Relaxed);
+        assert!(!c.snapshot().balanced());
     }
-    Ok(answered)
+
+    #[test]
+    fn empty_stat_does_not_divide_by_zero() {
+        let s = ServerStat::default();
+        assert!(s.balanced());
+        assert_eq!(s.shed_rate(), 0.0);
+        let line = s.to_string();
+        assert!(line.contains("submitted 0"), "{line}");
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = ServerConfig::default();
+        assert!(c.max_connections > 0);
+        assert!(c.max_pending_per_conn > 0);
+        assert!(c.read_timeout > Duration::ZERO);
+        assert!(c.accept_poll > Duration::ZERO);
+    }
 }

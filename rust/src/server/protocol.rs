@@ -1,7 +1,15 @@
 //! Wire format of the TCP front-end.
+//!
+//! Line-oriented: each request is one comma-separated token line; each reply
+//! is one JSON line carrying the request's **correlation id** — the 0-based
+//! line number of the request on its connection — so a pipelining client can
+//! match replies to requests without assuming ordering.  An optional first
+//! line `hello {"client":"...","link":"wifi|5g|4g|3g"}` registers the
+//! connection's identity and link profile for per-cohort metrics.
 
-use crate::coordinator::router::Response;
-use crate::util::json::Json;
+use crate::coordinator::router::{ClientTag, Response};
+use crate::cost::NetworkProfile;
+use crate::util::json::{self, Json};
 
 /// Parse a comma-separated token line; must have exactly `seq_len` ids.
 pub fn parse_tokens(line: &str, seq_len: usize) -> Result<Vec<i32>, String> {
@@ -26,10 +34,12 @@ pub fn parse_tokens(line: &str, seq_len: usize) -> Result<Vec<i32>, String> {
         .collect()
 }
 
-/// Serialise a served response as a JSON line.
-pub fn format_response(r: &Response) -> String {
+/// Serialise a served response as a JSON line.  `corr` is the connection's
+/// correlation id (the request's line number), emitted exactly — routing it
+/// through f64 would corrupt ids above 2^53.
+pub fn format_response(corr: u64, r: &Response) -> String {
     let j = Json::obj(vec![
-        ("id", Json::Num(r.id as f64)),
+        ("id", Json::UInt(corr)),
         ("pred", Json::Num(r.prediction as f64)),
         ("conf", Json::Num(r.confidence as f64)),
         ("layer", Json::Num(r.infer_layer as f64)),
@@ -39,15 +49,82 @@ pub fn format_response(r: &Response) -> String {
     format!("{j}\n")
 }
 
-/// Serialise an error as a JSON line.
+/// Serialise a connection-level error (no request to correlate) as a JSON
+/// line.
 pub fn format_error(msg: &str) -> String {
     format!("{}\n", Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+}
+
+/// Serialise a per-request error, correlated to the offending line.
+pub fn format_error_id(corr: u64, msg: &str) -> String {
+    let j = Json::obj(vec![
+        ("error", Json::Str(msg.to_string())),
+        ("id", Json::UInt(corr)),
+    ]);
+    format!("{j}\n")
+}
+
+/// Serialise a load-shed rejection: the request was *not* queued and the
+/// client should retry after the hinted delay.
+pub fn format_shed(corr: u64, retry_after_ms: u64) -> String {
+    let j = Json::obj(vec![
+        ("error", Json::Str("shed".to_string())),
+        ("id", Json::UInt(corr)),
+        ("retry_after_ms", Json::UInt(retry_after_ms)),
+    ]);
+    format!("{j}\n")
+}
+
+/// Parse an optional `hello {...}` identity line.
+///
+/// Returns `None` when the line is not a hello at all (it should be treated
+/// as a request), `Some(Err)` when it is a malformed hello, and
+/// `Some(Ok(tag))` on success.  `client` is required; `link` is optional and
+/// must name a known [`NetworkProfile`] (defaults to `"unspecified"`).
+pub fn parse_hello(line: &str) -> Option<Result<ClientTag, String>> {
+    let rest = line.trim().strip_prefix("hello")?;
+    if !rest.starts_with([' ', '\t', '{']) {
+        return None; // e.g. a token line that happens to start with "hello"
+    }
+    Some(parse_hello_body(rest.trim()))
+}
+
+fn parse_hello_body(body: &str) -> Result<ClientTag, String> {
+    let v = json::parse(body).map_err(|e| format!("bad hello payload: {e}"))?;
+    let client = v
+        .opt("client")
+        .and_then(|c| c.as_str().ok())
+        .ok_or_else(|| "hello payload needs a \"client\" string".to_string())?
+        .to_string();
+    if client.is_empty() {
+        return Err("hello client must be non-empty".to_string());
+    }
+    let link = match v.opt("link") {
+        None => "unspecified".to_string(),
+        Some(l) => {
+            let name = l
+                .as_str()
+                .map_err(|_| "hello link must be a string".to_string())?;
+            let p = NetworkProfile::by_name(name)
+                .ok_or_else(|| format!("unknown link profile {name:?} (wifi|5g|4g|3g)"))?;
+            p.kind.name().to_string()
+        }
+    };
+    Ok(ClientTag { client, link })
+}
+
+/// Serialise the acknowledgement of a hello line.
+pub fn format_hello_ack(tag: &ClientTag) -> String {
+    let j = Json::obj(vec![
+        ("hello", Json::Str(tag.client.clone())),
+        ("link", Json::Str(tag.link.clone())),
+    ]);
+    format!("{j}\n")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::json;
 
     #[test]
     fn parse_valid_line() {
@@ -69,24 +146,94 @@ mod tests {
     #[test]
     fn response_roundtrips_as_json() {
         let r = Response {
-            id: 7,
+            id: 999, // router id: NOT what goes on the wire
             prediction: 1,
             confidence: 0.93,
             infer_layer: 4,
             offloaded: true,
             latency_ms: 2.4567,
         };
-        let line = format_response(&r);
+        let line = format_response(7, &r);
         let v = json::parse(line.trim()).unwrap();
-        assert_eq!(v.get("id").unwrap().as_i64().unwrap(), 7);
+        assert_eq!(v.get("id").unwrap().as_u64().unwrap(), 7);
         assert_eq!(v.get("layer").unwrap().as_i64().unwrap(), 4);
         assert!(v.get("offloaded").unwrap().as_bool().unwrap());
         assert!((v.get("latency_ms").unwrap().as_f64().unwrap() - 2.457).abs() < 1e-9);
     }
 
     #[test]
+    fn correlation_id_is_exact_at_u64_max() {
+        // f64 can only represent even numbers near 2^64; the integer path
+        // must carry the id bit-exactly
+        let r = Response {
+            id: 0,
+            prediction: 0,
+            confidence: 0.5,
+            infer_layer: 1,
+            offloaded: false,
+            latency_ms: 1.0,
+        };
+        for corr in [u64::MAX, u64::MAX - 1, (1u64 << 53) + 1] {
+            let v = json::parse(format_response(corr, &r).trim()).unwrap();
+            assert_eq!(v.get("id").unwrap().as_u64().unwrap(), corr);
+        }
+        let line = format_response(u64::MAX, &r);
+        assert!(line.contains("18446744073709551615"), "{line}");
+    }
+
+    #[test]
     fn error_line_is_json() {
         let v = json::parse(format_error("boom \"x\"").trim()).unwrap();
         assert_eq!(v.get("error").unwrap().as_str().unwrap(), "boom \"x\"");
+    }
+
+    #[test]
+    fn correlated_error_and_shed_lines() {
+        let v = json::parse(format_error_id(3, "expected 8 tokens").trim()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_u64().unwrap(), 3);
+        assert!(v.get("error").unwrap().as_str().unwrap().contains("tokens"));
+        let v = json::parse(format_shed(9, 25).trim()).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str().unwrap(), "shed");
+        assert_eq!(v.get("id").unwrap().as_u64().unwrap(), 9);
+        assert_eq!(v.get("retry_after_ms").unwrap().as_u64().unwrap(), 25);
+    }
+
+    #[test]
+    fn hello_parses_identity_and_link() {
+        let t = parse_hello(r#"hello {"client":"edge-7","link":"5g"}"#)
+            .expect("is a hello")
+            .expect("valid");
+        assert_eq!(t.client, "edge-7");
+        assert_eq!(t.link, "5g");
+        // link optional
+        let t = parse_hello(r#"hello {"client":"x"}"#).unwrap().unwrap();
+        assert_eq!(t.link, "unspecified");
+        // case-insensitive profile lookup normalizes to the canonical name
+        let t = parse_hello(r#"hello {"client":"x","link":"WiFi"}"#).unwrap().unwrap();
+        assert_eq!(t.link, "wifi");
+    }
+
+    #[test]
+    fn hello_rejects_malformed_payloads() {
+        assert!(parse_hello("hello {not json}").unwrap().is_err());
+        assert!(parse_hello(r#"hello {"link":"wifi"}"#).unwrap().is_err());
+        assert!(parse_hello(r#"hello {"client":""}"#).unwrap().is_err());
+        assert!(parse_hello(r#"hello {"client":"x","link":"carrier-pigeon"}"#)
+            .unwrap()
+            .is_err());
+        // not hellos at all
+        assert!(parse_hello("1,2,3,4").is_none());
+        assert!(parse_hello("helloworld").is_none());
+    }
+
+    #[test]
+    fn hello_ack_roundtrips() {
+        let tag = ClientTag { client: "edge-1".into(), link: "wifi".into() };
+        let v = json::parse(format_hello_ack(&tag).trim()).unwrap();
+        assert_eq!(v.get("hello").unwrap().as_str().unwrap(), "edge-1");
+        assert_eq!(v.get("link").unwrap().as_str().unwrap(), "wifi");
+        // acks carry no "id": the reply pump must not confuse them with
+        // request replies
+        assert!(v.opt("id").is_none());
     }
 }

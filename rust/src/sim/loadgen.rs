@@ -1,0 +1,542 @@
+//! Open-loop fleet load generator for the TCP front end.
+//!
+//! Simulates a fleet of edge clients firing at the serving plane the way
+//! deployed traffic does: a seeded **heavy-tailed (Pareto) arrival process**
+//! (bursts and lulls, not Poisson smoothness), **diurnal/surge phases** that
+//! scale the offered rate across the run, and **per-client request mixes**
+//! (each client has a Pareto-distributed activity weight and its own token
+//! template).  Clients are multiplexed over a bounded set of pipelined TCP
+//! connections, each registering a per-connection identity + link profile
+//! via the `hello` line, so the server's per-cohort metrics light up.
+//!
+//! Open-loop means send times come from the schedule, not from replies — an
+//! overloaded server sees the full offered rate and must shed, which is
+//! exactly the behaviour the admission-control tests and the `loadgen`
+//! bench leg measure.  The schedule is generated up front from the seed
+//! ([`schedule`]), so two runs with the same config offer identical
+//! traffic.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json;
+use crate::util::rng::Rng;
+use crate::util::stats::LatencyHistogram;
+
+/// One workload phase: `fraction` of the request volume offered at
+/// `rate_mul` times the base rate.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub name: &'static str,
+    pub fraction: f64,
+    pub rate_mul: f64,
+}
+
+/// Load-generator parameters.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// simulated client identities (heavy-tailed activity mix)
+    pub clients: usize,
+    /// TCP connections the clients multiplex over
+    pub conns: usize,
+    /// total requests to offer
+    pub requests: usize,
+    /// tokens per request line (must match the served model)
+    pub seq_len: usize,
+    /// token id range for the synthetic request mixes
+    pub vocab: usize,
+    pub seed: u64,
+    /// base offered rate, requests/s (phases scale it)
+    pub mean_rps: f64,
+    /// Pareto shape for inter-arrivals and client weights (>1 for a finite
+    /// mean; smaller = heavier tail)
+    pub pareto_alpha: f64,
+    /// diurnal/surge phases, in order; fractions should sum to ~1
+    pub phases: Vec<Phase>,
+    /// extra connections that send a request burst and then never read —
+    /// the stalled-client stressor
+    pub stall_conns: usize,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            clients: 64,
+            conns: 32,
+            requests: 2000,
+            seq_len: 8,
+            vocab: 64,
+            seed: 0x10AD,
+            mean_rps: 2000.0,
+            pareto_alpha: 1.5,
+            phases: vec![
+                Phase { name: "night", fraction: 0.2, rate_mul: 0.3 },
+                Phase { name: "day", fraction: 0.5, rate_mul: 1.0 },
+                Phase { name: "surge", fraction: 0.2, rate_mul: 4.0 },
+                Phase { name: "cooldown", fraction: 0.1, rate_mul: 1.0 },
+            ],
+            stall_conns: 0,
+        }
+    }
+}
+
+/// One scheduled request: offset from the run start, and the client firing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub at: Duration,
+    pub client: usize,
+}
+
+/// Pareto sample with scale `x_m` and shape `alpha` (inverse transform:
+/// `x_m * u^(-1/alpha)`, support `[x_m, inf)`).
+fn pareto(rng: &mut Rng, x_m: f64, alpha: f64) -> f64 {
+    let u = rng.next_f64().max(1e-12);
+    x_m * u.powf(-1.0 / alpha)
+}
+
+/// Generate the full arrival schedule deterministically from the seed:
+/// Pareto inter-arrivals with mean `1/mean_rps`, compressed/stretched by
+/// the phase rate multipliers, each event assigned to a client by its
+/// heavy-tailed activity weight.
+pub fn schedule(cfg: &LoadgenConfig) -> Vec<Event> {
+    assert!(cfg.pareto_alpha > 1.0, "need a finite-mean Pareto shape");
+    assert!(cfg.clients > 0 && cfg.mean_rps > 0.0);
+    let mut rng = Rng::new(cfg.seed);
+    // per-client activity weights: a few clients dominate the mix
+    let weights: Vec<f64> =
+        (0..cfg.clients).map(|_| pareto(&mut rng, 1.0, cfg.pareto_alpha)).collect();
+    // scale so the Pareto mean x_m * a/(a-1) equals the target gap
+    let x_m = (cfg.pareto_alpha - 1.0) / (cfg.pareto_alpha * cfg.mean_rps);
+    let mut out = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    for i in 0..cfg.requests {
+        let gap = pareto(&mut rng, x_m, cfg.pareto_alpha);
+        t += gap / phase_rate_mul(&cfg.phases, i, cfg.requests);
+        out.push(Event {
+            at: Duration::from_secs_f64(t),
+            client: rng.weighted(&weights),
+        });
+    }
+    out
+}
+
+/// The rate multiplier in effect for request `i` of `n`: phases partition
+/// the request volume by their fractions.
+fn phase_rate_mul(phases: &[Phase], i: usize, n: usize) -> f64 {
+    if phases.is_empty() || n == 0 {
+        return 1.0;
+    }
+    let progress = i as f64 / n as f64;
+    let total: f64 = phases.iter().map(|p| p.fraction).sum();
+    let mut acc = 0.0;
+    for p in phases {
+        acc += p.fraction / total.max(1e-12);
+        if progress < acc {
+            return p.rate_mul.max(1e-6);
+        }
+    }
+    phases.last().map(|p| p.rate_mul).unwrap_or(1.0).max(1e-6)
+}
+
+/// The deterministic token line client `client` sends (its "request mix").
+fn token_line(client: usize, seq_len: usize, vocab: usize) -> String {
+    let mut s = String::with_capacity(seq_len * 4);
+    for j in 0..seq_len {
+        if j > 0 {
+            s.push(',');
+        }
+        s.push_str(&((client.wrapping_mul(131).wrapping_add(j * 17)) % vocab.max(1)).to_string());
+    }
+    s.push('\n');
+    s
+}
+
+/// Aggregated outcome of a load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub wall_s: f64,
+    /// request lines written to sockets (excludes the stalled burst)
+    pub sent: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub rejected: u64,
+    /// requests written by stalled connections (never read back)
+    pub stalled_sent: u64,
+    pub latency: LatencyHistogram,
+    /// sent requests per link profile
+    pub per_link: BTreeMap<String, u64>,
+}
+
+impl LoadReport {
+    pub fn achieved_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.sent as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn served_rps(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.served as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn shed_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.sent as f64
+        }
+    }
+
+    /// Every sent request came back exactly once (served, shed or
+    /// rejected).  Only meaningful after the server drained — the run
+    /// waits for every reader, so it holds unless replies were lost.
+    pub fn balanced(&self) -> bool {
+        self.sent == self.served + self.shed + self.rejected
+    }
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "offered {} requests in {:.2}s ({:.1} rps offered, {:.1} rps served)",
+            self.sent,
+            self.wall_s,
+            self.achieved_rps(),
+            self.served_rps(),
+        )?;
+        writeln!(
+            f,
+            "served {}   shed {} ({:.1}%)   rejected {}   stalled-sent {}",
+            self.served,
+            self.shed,
+            100.0 * self.shed_rate(),
+            self.rejected,
+            self.stalled_sent,
+        )?;
+        writeln!(
+            f,
+            "latency  p50 {:.2} ms   p99 {:.2} ms   mean {:.2} ms   max {:.2} ms",
+            self.latency.percentile_us(50.0) / 1e3,
+            self.latency.percentile_us(99.0) / 1e3,
+            self.latency.mean_us() / 1e3,
+            self.latency.max_us() / 1e3,
+        )?;
+        let links: Vec<String> =
+            self.per_link.iter().map(|(l, n)| format!("{l}:{n}")).collect();
+        write!(f, "links    {}", links.join("  "))
+    }
+}
+
+/// Per-connection tally, merged into the [`LoadReport`].
+#[derive(Debug, Default)]
+struct ConnResult {
+    sent: u64,
+    served: u64,
+    shed: u64,
+    rejected: u64,
+    latency: LatencyHistogram,
+}
+
+const LINKS: [&str; 4] = ["wifi", "5g", "4g", "3g"];
+
+/// Drive the fleet against a serving plane at `addr` and collect the
+/// report.  Blocks until every (non-stalled) connection has sent its
+/// schedule and read back a reply for every request; stalled connections
+/// are then released.  The server must keep serving for the duration —
+/// shut its router down only after this returns.
+pub fn run(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport> {
+    let events = schedule(cfg);
+    let conns = cfg.conns.max(1);
+    let mut per_conn: Vec<Vec<Event>> = (0..conns).map(|_| Vec::new()).collect();
+    for e in &events {
+        per_conn[e.client % conns].push(*e);
+    }
+
+    let stop = Arc::new(AtomicBool::new(false));
+    // shared start line so per-connection pacing stays aligned
+    let start = Instant::now() + Duration::from_millis(50);
+
+    // stalled stressors first, so they hold their connections during the run
+    let mut stall_handles = Vec::new();
+    for si in 0..cfg.stall_conns {
+        let addr = addr.to_string();
+        let stop = Arc::clone(&stop);
+        let seq_len = cfg.seq_len;
+        let vocab = cfg.vocab;
+        stall_handles.push(thread::spawn(move || -> Result<u64> {
+            let mut w = TcpStream::connect(&addr).context("stalled connect")?;
+            w.write_all(
+                format!("hello {{\"client\":\"stalled-{si:02}\",\"link\":\"3g\"}}\n").as_bytes(),
+            )?;
+            // a burst it never reads replies for: the server's reply path
+            // must absorb this without blocking anyone else
+            let mut sent = 0u64;
+            for _ in 0..64 {
+                w.write_all(token_line(usize::MAX - si, seq_len, vocab).as_bytes())?;
+                sent += 1;
+            }
+            while !stop.load(Ordering::Relaxed) {
+                thread::sleep(Duration::from_millis(10));
+            }
+            Ok(sent)
+        }));
+    }
+
+    let mut handles = Vec::new();
+    for (ci, evs) in per_conn.into_iter().enumerate() {
+        let addr = addr.to_string();
+        let link = LINKS[Rng::new(cfg.seed ^ 0xC0 ^ ci as u64).below(4) as usize].to_string();
+        let seq_len = cfg.seq_len;
+        let vocab = cfg.vocab;
+        handles.push((
+            link.clone(),
+            thread::spawn(move || conn_worker(&addr, ci, &link, evs, seq_len, vocab, start)),
+        ));
+    }
+
+    let mut report = LoadReport {
+        wall_s: 0.0,
+        sent: 0,
+        served: 0,
+        shed: 0,
+        rejected: 0,
+        stalled_sent: 0,
+        latency: LatencyHistogram::new(),
+        per_link: BTreeMap::new(),
+    };
+    for (link, h) in handles {
+        let r = h.join().map_err(|_| anyhow::anyhow!("loadgen connection panicked"))??;
+        report.sent += r.sent;
+        report.served += r.served;
+        report.shed += r.shed;
+        report.rejected += r.rejected;
+        report.latency.merge(&r.latency);
+        *report.per_link.entry(link).or_insert(0) += r.sent;
+    }
+    report.wall_s = start.elapsed().as_secs_f64().max(0.0);
+    stop.store(true, Ordering::Relaxed);
+    for h in stall_handles {
+        if let Ok(Ok(sent)) = h.join() {
+            report.stalled_sent += sent;
+        }
+    }
+    Ok(report)
+}
+
+/// One pipelined connection: a sender paced by the schedule and a reader
+/// that correlates replies back to send times by id.
+fn conn_worker(
+    addr: &str,
+    ci: usize,
+    link: &str,
+    events: Vec<Event>,
+    seq_len: usize,
+    vocab: usize,
+    start: Instant,
+) -> Result<ConnResult> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let mut w = stream.try_clone().context("clone stream")?;
+    w.write_all(format!("hello {{\"client\":\"fleet-{ci:04}\",\"link\":\"{link}\"}}\n").as_bytes())
+        .context("hello")?;
+
+    let send_times: Arc<Mutex<Vec<Instant>>> = Arc::new(Mutex::new(Vec::new()));
+    let reader = {
+        let send_times = Arc::clone(&send_times);
+        thread::spawn(move || {
+            let mut served = 0u64;
+            let mut shed = 0u64;
+            let mut rejected = 0u64;
+            let mut latency = LatencyHistogram::new();
+            for line in BufReader::new(stream).lines() {
+                let Ok(line) = line else { break };
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    continue;
+                }
+                let Ok(v) = json::parse(trimmed) else { continue };
+                // the hello ack has no id: not a request reply
+                let Some(id) = v.opt("id").and_then(|x| x.as_u64().ok()) else { continue };
+                match v.opt("error").and_then(|e| e.as_str().ok()) {
+                    None => {
+                        served += 1;
+                        let sent = {
+                            let times =
+                                send_times.lock().unwrap_or_else(PoisonError::into_inner);
+                            times.get(id as usize).copied()
+                        };
+                        if let Some(sent) = sent {
+                            latency.record_us(sent.elapsed().as_secs_f64() * 1e6);
+                        }
+                    }
+                    Some("shed") => shed += 1,
+                    Some(_) => rejected += 1,
+                }
+            }
+            (served, shed, rejected, latency)
+        })
+    };
+
+    let mut sent = 0u64;
+    for e in &events {
+        let target = start + e.at;
+        let now = Instant::now();
+        if target > now {
+            thread::sleep(target - now);
+        }
+        {
+            let mut times = send_times.lock().unwrap_or_else(PoisonError::into_inner);
+            times.push(Instant::now());
+        }
+        w.write_all(token_line(e.client, seq_len, vocab).as_bytes())
+            .context("send request")?;
+        sent += 1;
+    }
+    // quit closes the server side once every pending reply has drained;
+    // the reader then sees EOF
+    w.write_all(b"quit\n").context("send quit")?;
+    let (served, shed, rejected, latency) =
+        reader.join().map_err(|_| anyhow::anyhow!("reader panicked"))?;
+    Ok(ConnResult { sent, served, shed, rejected, latency })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> LoadgenConfig {
+        LoadgenConfig { requests: 500, clients: 16, conns: 8, ..LoadgenConfig::default() }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_monotone() {
+        let cfg = small_cfg();
+        let a = schedule(&cfg);
+        let b = schedule(&cfg);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), cfg.requests);
+        for w in a.windows(2) {
+            assert!(w[1].at >= w[0].at, "arrival times must be non-decreasing");
+        }
+        assert!(a.iter().all(|e| e.client < cfg.clients));
+        let c = schedule(&LoadgenConfig { seed: 0xDEAD, ..small_cfg() });
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn schedule_hits_the_target_rate_roughly() {
+        // with ~uniform phases the mean gap is 1/mean_rps; Pareto tails are
+        // noisy, so only pin the order of magnitude
+        let cfg = LoadgenConfig {
+            requests: 4000,
+            mean_rps: 1000.0,
+            phases: vec![Phase { name: "flat", fraction: 1.0, rate_mul: 1.0 }],
+            ..small_cfg()
+        };
+        let s = schedule(&cfg);
+        let span = s.last().unwrap().at.as_secs_f64();
+        let rps = cfg.requests as f64 / span;
+        assert!(
+            rps > cfg.mean_rps * 0.3 && rps < cfg.mean_rps * 3.0,
+            "offered {rps:.0} rps vs target {} rps",
+            cfg.mean_rps
+        );
+    }
+
+    #[test]
+    fn surge_phase_compresses_inter_arrivals() {
+        let cfg = LoadgenConfig {
+            requests: 2000,
+            phases: vec![
+                Phase { name: "calm", fraction: 0.5, rate_mul: 1.0 },
+                Phase { name: "surge", fraction: 0.5, rate_mul: 8.0 },
+            ],
+            ..small_cfg()
+        };
+        let s = schedule(&cfg);
+        let half = cfg.requests / 2;
+        let calm_span = s[half - 1].at.as_secs_f64() - s[0].at.as_secs_f64();
+        let surge_span = s.last().unwrap().at.as_secs_f64() - s[half].at.as_secs_f64();
+        // same request count in each half; the surged half should be much
+        // shorter (8x rate, generous 2x slack for tail noise)
+        assert!(
+            surge_span < calm_span / 2.0,
+            "surge span {surge_span:.3}s vs calm span {calm_span:.3}s"
+        );
+    }
+
+    #[test]
+    fn client_mix_is_heavy_tailed() {
+        let cfg = LoadgenConfig { requests: 4000, clients: 32, ..small_cfg() };
+        let s = schedule(&cfg);
+        let mut counts = vec![0u64; cfg.clients];
+        for e in &s {
+            counts[e.client] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let uniform = (cfg.requests / cfg.clients) as u64;
+        assert!(
+            max > uniform * 2,
+            "heaviest client sent {max}, uniform share {uniform} — not heavy-tailed"
+        );
+    }
+
+    #[test]
+    fn pareto_respects_scale_and_phase_lookup_covers_edges() {
+        let mut rng = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(pareto(&mut rng, 0.25, 1.5) >= 0.25);
+        }
+        let phases = vec![
+            Phase { name: "a", fraction: 0.5, rate_mul: 2.0 },
+            Phase { name: "b", fraction: 0.5, rate_mul: 0.5 },
+        ];
+        assert_eq!(phase_rate_mul(&phases, 0, 100), 2.0);
+        assert_eq!(phase_rate_mul(&phases, 99, 100), 0.5);
+        assert_eq!(phase_rate_mul(&[], 5, 100), 1.0);
+    }
+
+    #[test]
+    fn token_lines_parse_back_and_differ_per_client() {
+        let a = token_line(3, 8, 64);
+        let b = token_line(4, 8, 64);
+        assert_ne!(a, b, "per-client request mixes must differ");
+        let toks: Vec<i32> = a
+            .trim()
+            .split(',')
+            .map(|t| t.parse().expect("integer token"))
+            .collect();
+        assert_eq!(toks.len(), 8);
+        assert!(toks.iter().all(|&t| t >= 0 && t < 64));
+    }
+
+    #[test]
+    fn empty_report_does_not_divide_by_zero() {
+        let r = LoadReport {
+            wall_s: 0.0,
+            sent: 0,
+            served: 0,
+            shed: 0,
+            rejected: 0,
+            stalled_sent: 0,
+            latency: LatencyHistogram::new(),
+            per_link: BTreeMap::new(),
+        };
+        assert!(r.balanced());
+        assert_eq!(r.achieved_rps(), 0.0);
+        assert_eq!(r.shed_rate(), 0.0);
+        let _ = r.to_string();
+    }
+}

@@ -23,12 +23,19 @@
 //!
 //! [`NetworkProfile`]: crate::cost::NetworkProfile
 
+//! The [`loadgen`] module hosts the **open-loop fleet load generator**
+//! ([`LoadgenConfig`] / [`LoadReport`], `splitee loadgen`): seeded Pareto
+//! arrivals with diurnal/surge phases, driven over pipelined TCP
+//! connections against the network front end ([`crate::server`]).
+
 pub mod device;
 pub mod faults;
 pub mod link;
+pub mod loadgen;
 pub mod pipeline;
 
 pub use device::{CloudSim, EdgeSim};
 pub use faults::{FaultEvent, FaultSchedule, FaultState, FaultVerdict};
 pub use link::{LinkScenario, LinkSim, LinkState, LinkTrace, MarkovLink};
+pub use loadgen::{LoadReport, LoadgenConfig};
 pub use pipeline::{CoInferencePipeline, SampleTrace};

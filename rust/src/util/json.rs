@@ -2,23 +2,51 @@
 //!
 //! The offline crate cache carries no `serde`/`serde_json`, so this module
 //! provides the subset of JSON the project needs: the artifact manifest,
-//! experiment reports, bench baselines and test fixtures.  It is a strict
-//! recursive-descent parser over UTF-8 with the usual escape handling; numbers
-//! are kept as `f64` (fine for manifests — tensor payloads travel in the
-//! binary formats, never JSON).
+//! experiment reports, bench baselines, the TCP wire protocol and test
+//! fixtures.  It is a strict recursive-descent parser over UTF-8 with the
+//! usual escape handling; fractional/signed numbers are kept as `f64`, while
+//! plain non-negative integer literals stay exact u64 ([`Json::UInt`]) so
+//! request ids above 2^53 survive a round trip (tensor payloads travel in
+//! the binary formats, never JSON).
 
 use std::collections::BTreeMap;
 use std::fmt;
 
 /// A JSON value.  Object keys are ordered (BTreeMap) so output is stable.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// Exact non-negative integer.  `Num`'s f64 payload silently rounds
+    /// integers above 2^53 (request ids are u64), so integer literals that
+    /// fit u64 parse into this variant and [`Json::uint`] constructs it —
+    /// both sides of a round trip keep all 64 bits.
+    UInt(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+/// `UInt` and `Num` compare numerically (`UInt(42) == Num(42.0)`): the
+/// parser now yields `UInt` for plain integer literals, and callers that
+/// built the same value as `Num` must still compare equal.
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::UInt(a), Json::UInt(b)) => a == b,
+            (Json::Num(n), Json::UInt(u)) | (Json::UInt(u), Json::Num(n)) => {
+                *n >= 0.0 && n.fract() == 0.0 && *n == *u as f64
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 /// Parse or access error.
@@ -36,12 +64,26 @@ impl Json {
     pub fn as_f64(&self) -> Result<f64, JsonError> {
         match self {
             Json::Num(n) => Ok(*n),
+            // lossy above 2^53 — exact consumers go through as_u64
+            Json::UInt(u) => Ok(*u as f64),
             other => Err(JsonError::Access(format!("expected number, got {other:?}"))),
         }
     }
 
     pub fn as_i64(&self) -> Result<i64, JsonError> {
         Ok(self.as_f64()? as i64)
+    }
+
+    /// Exact u64 access: `UInt` verbatim, or a `Num` that is a non-negative
+    /// integer small enough (< 2^53) for f64 to have represented exactly.
+    pub fn as_u64(&self) -> Result<u64, JsonError> {
+        match self {
+            Json::UInt(u) => Ok(*u),
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 9_007_199_254_740_992.0 => {
+                Ok(*n as u64)
+            }
+            other => Err(JsonError::Access(format!("expected exact u64, got {other:?}"))),
+        }
     }
 
     pub fn as_usize(&self) -> Result<usize, JsonError> {
@@ -126,6 +168,11 @@ impl From<String> for Json {
 impl From<f64> for Json {
     fn from(v: f64) -> Self {
         Json::Num(v)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Self {
+        Json::UInt(v)
     }
 }
 impl From<usize> for Json {
@@ -323,6 +370,13 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        // plain non-negative integer literals keep all 64 bits (request ids
+        // above 2^53 would round through f64); everything else stays f64
+        if !text.starts_with('-') && !text.contains(['.', 'e', 'E']) {
+            if let Ok(u) = text.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|e| JsonError::Parse(start, format!("bad number {text:?}: {e}")))
@@ -352,6 +406,7 @@ impl fmt::Display for Json {
                     write!(f, "{n}")
                 }
             }
+            Json::UInt(u) => write!(f, "{u}"),
             Json::Str(s) => write_escaped(f, s),
             Json::Arr(a) => {
                 write!(f, "[")?;
@@ -546,6 +601,40 @@ mod tests {
     fn integer_display_is_exact() {
         assert_eq!(Json::Num(25000.0).to_string(), "25000");
         assert_eq!(Json::Num(0.1).to_string(), "0.1");
+    }
+
+    #[test]
+    fn u64_round_trips_exactly_at_the_boundary() {
+        // above 2^53 an f64 path silently rounds; UInt must not
+        for v in [u64::MAX, u64::MAX - 1, (1u64 << 53) + 1, 0] {
+            let line = Json::UInt(v).to_string();
+            let back = parse(&line).unwrap();
+            assert_eq!(back.as_u64().unwrap(), v, "lost bits in {line}");
+        }
+        // f64 would have collapsed these two onto the same value
+        assert_ne!(
+            parse("18446744073709551615").unwrap().as_u64().unwrap(),
+            parse("18446744073709551614").unwrap().as_u64().unwrap(),
+        );
+    }
+
+    #[test]
+    fn uint_and_num_compare_numerically() {
+        assert_eq!(parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::UInt(42), Json::Num(42.0));
+        assert_ne!(Json::UInt(42), Json::Num(42.5));
+        assert_ne!(Json::UInt(1), Json::Num(-1.0));
+        // exact accessor rejects values f64 cannot have held exactly
+        assert!(Json::Num(9.1e15).as_u64().is_err());
+        assert_eq!(Json::Num(42.0).as_u64().unwrap(), 42);
+        // lossy widening is still available for stats-style consumers
+        assert_eq!(Json::UInt(3).as_f64().unwrap(), 3.0);
+        assert_eq!(Json::UInt(7).as_usize().unwrap(), 7);
+        // oversized integers with a sign or exponent stay on the f64 path
+        assert!(matches!(parse("1e3").unwrap(), Json::Num(_)));
+        assert!(matches!(parse("-42").unwrap(), Json::Num(_)));
+        // an integer literal too big even for u64 falls back to f64
+        assert!(matches!(parse("99999999999999999999999").unwrap(), Json::Num(_)));
     }
 
     #[test]

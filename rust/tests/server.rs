@@ -1,0 +1,464 @@
+//! Network serving plane integration tests: concurrent TCP front end over
+//! the coordinator (`rust/src/server/`).
+//!
+//! These run on every machine: they serve a synthetic reference-backend
+//! model (no artifacts needed) through a real loopback `TcpListener`, with
+//! the compute loop (`Service::run`) on its own thread exactly as
+//! `splitee serve --listen` wires it.  The contracts pinned here:
+//!
+//!  * every client gets exactly its own replies, correlated by line number,
+//!    in submission order — no cross-talk between connections;
+//!  * a stalled client (submits, never reads) cannot delay other clients
+//!    (watchdog-guarded);
+//!  * malformed lines, `quit`, and mid-request disconnects leave the router
+//!    and the counters balanced;
+//!  * over-capacity requests shed immediately — they never hang — and the
+//!    accounting identity `submitted == served + shed + rejected` holds.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use splitee::coordinator::service::{PolicyKind, SpeculateMode};
+use splitee::coordinator::{
+    BatcherConfig, Router, RouterConfig, Service, ServiceConfig,
+};
+use splitee::cost::CostModel;
+use splitee::model::{ModelWeights, MultiExitModel};
+use splitee::runtime::Backend;
+use splitee::server::{serve_tcp, ServerConfig, ServerCounters};
+use splitee::sim::{LinkScenario, LinkSim};
+use splitee::util::json::{self, Json};
+
+const SYN_LAYERS: usize = 6;
+const SYN_SEQ: usize = 8;
+const SYN_VOCAB: usize = 64;
+
+/// Generous per-read watchdog: a contract violation shows up as a timeout
+/// panic here instead of a hung test binary.
+const READ_GUARD: Duration = Duration::from_secs(30);
+
+fn synthetic_model() -> Arc<MultiExitModel> {
+    let weights = ModelWeights::synthetic(SYN_LAYERS, 16, 32, SYN_VOCAB, SYN_SEQ, 2, 0xFEED);
+    Arc::new(
+        MultiExitModel::from_weights(
+            "synthetic",
+            "reference",
+            weights,
+            2,
+            SYN_SEQ,
+            vec![1, 8],
+            &Backend::reference(),
+        )
+        .expect("synthetic reference model"),
+    )
+}
+
+fn make_service(model: &Arc<MultiExitModel>) -> (Service, BatcherConfig) {
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(splitee::cost::NetworkProfile::wifi(), 17);
+    let config = ServiceConfig {
+        policy: PolicyKind::SplitEe,
+        alpha: 0.7,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: Duration::from_millis(2),
+        },
+        coalesce: Default::default(),
+        speculate: SpeculateMode::from_env(),
+        link: LinkScenario::from_env(),
+        replicas: Default::default(),
+    };
+    let service = Service::new(Arc::clone(model), cm, link, &config);
+    (service, config.batcher)
+}
+
+/// The full serving plane on loopback: front end + compute thread, exactly
+/// the `serve --listen` wiring.  Dropping nothing — call `shutdown()` to
+/// quiesce and get the service (for metrics) and the answered count back.
+struct Stack {
+    addr: String,
+    router: Arc<Router>,
+    counters: Arc<ServerCounters>,
+    front: thread::JoinHandle<anyhow::Result<usize>>,
+    compute: thread::JoinHandle<Service>,
+}
+
+impl Stack {
+    fn start(max_inflight: usize, server_config: ServerConfig) -> Stack {
+        let model = synthetic_model();
+        let (mut service, batcher_config) = make_service(&model);
+        let router = Router::new(RouterConfig { max_inflight });
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr").to_string();
+        let counters = ServerCounters::new();
+        let compute = {
+            let router = Arc::clone(&router);
+            thread::spawn(move || {
+                service.run(router, batcher_config).expect("service run");
+                service
+            })
+        };
+        let front = {
+            let router = Arc::clone(&router);
+            let counters = Arc::clone(&counters);
+            let seq = model.seq_len();
+            thread::spawn(move || serve_tcp(listener, router, seq, None, server_config, counters))
+        };
+        Stack { addr, router, counters, front, compute }
+    }
+
+    fn shutdown(self) -> (Service, usize) {
+        self.router.shutdown();
+        let answered = self.front.join().expect("front join").expect("serve_tcp");
+        let service = self.compute.join().expect("compute join");
+        (service, answered)
+    }
+}
+
+/// A line-protocol client with a watchdog on every read.
+struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        stream.set_read_timeout(Some(READ_GUARD)).expect("read timeout");
+        let reader = BufReader::new(stream.try_clone().expect("clone"));
+        Client { stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.stream.write_all(line.as_bytes()).expect("write");
+        self.stream.write_all(b"\n").expect("write newline");
+    }
+
+    fn recv_json(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("reply within watchdog");
+        assert!(n > 0, "connection closed while expecting a reply");
+        json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+    }
+}
+
+fn token_line(client: usize, j: usize) -> String {
+    (0..SYN_SEQ)
+        .map(|k| ((client * 131 + j * 17 + k * 7) % SYN_VOCAB).to_string())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn reply_id(v: &Json) -> u64 {
+    v.opt("id").expect("id key").as_u64().expect("integer id")
+}
+
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_clients_get_exactly_their_own_replies() {
+    const CLIENTS: usize = 8;
+    const PER_CLIENT: usize = 12;
+    let stack = Stack::start(1024, ServerConfig::default());
+    let addr = stack.addr.clone();
+
+    let mut workers = Vec::new();
+    for c in 0..CLIENTS {
+        let addr = addr.clone();
+        workers.push(thread::spawn(move || {
+            let link = if c % 2 == 0 { "wifi" } else { "3g" };
+            let mut cl = Client::connect(&addr);
+            cl.send(&format!("hello {{\"client\":\"c{c}\",\"link\":\"{link}\"}}"));
+            let ack = cl.recv_json();
+            assert_eq!(
+                ack.opt("hello").and_then(|h| h.as_str().ok()),
+                Some(format!("c{c}")).as_deref()
+            );
+            assert_eq!(ack.opt("link").and_then(|l| l.as_str().ok()), Some(link));
+            // pipeline every request before reading a single reply
+            for j in 0..PER_CLIENT {
+                cl.send(&token_line(c, j));
+            }
+            for j in 0..PER_CLIENT {
+                let v = cl.recv_json();
+                assert!(v.opt("error").is_none(), "unexpected error reply: {v}");
+                // correlation ids are the connection's own line numbers, in
+                // submission order — replies can never leak across clients
+                assert_eq!(reply_id(&v) as usize, j, "client {c} got a foreign or reordered id");
+                assert!(v.opt("pred").is_some() && v.opt("latency_ms").is_some(), "{v}");
+            }
+            cl.send("quit");
+        }));
+    }
+    for w in workers {
+        w.join().expect("client worker");
+    }
+
+    let stat = stack.counters.snapshot();
+    let (service, answered) = stack.shutdown();
+    let total = (CLIENTS * PER_CLIENT) as u64;
+    assert_eq!(stat.submitted, total);
+    assert_eq!(stat.served, total);
+    assert_eq!(stat.shed + stat.rejected, 0);
+    assert!(stat.balanced(), "{stat:?}");
+    assert_eq!(answered as u64, total);
+    assert_eq!(stat.conn_accepted, CLIENTS as u64);
+
+    // per-client and per-link cohorts flowed through to the metrics
+    for c in 0..CLIENTS {
+        let row = service
+            .metrics
+            .cohorts
+            .get(&format!("client:c{c}"))
+            .unwrap_or_else(|| panic!("missing cohort for client c{c}"));
+        assert_eq!(row.served, PER_CLIENT as u64);
+    }
+    let wifi = &service.metrics.cohorts["link:wifi"];
+    let threeg = &service.metrics.cohorts["link:3g"];
+    assert_eq!(wifi.served + threeg.served, total);
+    assert_eq!(wifi.served, (CLIENTS / 2 * PER_CLIENT) as u64);
+}
+
+#[test]
+fn stalled_client_does_not_delay_others() {
+    const NORMAL: usize = 4;
+    const PER_CLIENT: usize = 20;
+    const STALLED_BURST: usize = 40;
+    let stack = Stack::start(1024, ServerConfig::default());
+    let addr = stack.addr.clone();
+
+    // the stalled client: submits a burst, never reads a byte, holds the
+    // socket open until the test is done
+    let (release_tx, release_rx) = mpsc::channel::<()>();
+    let stalled = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut cl = Client::connect(&addr);
+            cl.send("hello {\"client\":\"stalled\",\"link\":\"3g\"}");
+            for j in 0..STALLED_BURST {
+                cl.send(&token_line(usize::MAX / 2, j));
+            }
+            // never read; wait for the release signal (or test teardown)
+            let _ = release_rx.recv_timeout(Duration::from_secs(60));
+        })
+    };
+
+    // normal clients must complete under the watchdog despite the stall
+    let (done_tx, done_rx) = mpsc::channel::<usize>();
+    for c in 0..NORMAL {
+        let addr = addr.clone();
+        let done = done_tx.clone();
+        thread::spawn(move || {
+            let mut cl = Client::connect(&addr);
+            for j in 0..PER_CLIENT {
+                cl.send(&token_line(c, j));
+            }
+            for j in 0..PER_CLIENT {
+                let v = cl.recv_json();
+                assert_eq!(reply_id(&v) as usize, j);
+            }
+            cl.send("quit");
+            done.send(c).expect("report completion");
+        });
+    }
+    drop(done_tx);
+    let mut finished = 0usize;
+    while finished < NORMAL {
+        done_rx
+            .recv_timeout(READ_GUARD)
+            .expect("a normal client was delayed past the watchdog by the stalled client");
+        finished += 1;
+    }
+
+    let _ = release_tx.send(());
+    stalled.join().expect("stalled client thread");
+    let counters = Arc::clone(&stack.counters);
+    let (_service, _) = stack.shutdown();
+    let stat = counters.snapshot();
+    assert!(stat.balanced(), "quiesced counters must balance: {stat:?}");
+    assert_eq!(stat.submitted, (NORMAL * PER_CLIENT + STALLED_BURST) as u64);
+}
+
+#[test]
+fn malformed_quit_and_disconnect_leave_router_balanced() {
+    let stack = Stack::start(1024, ServerConfig::default());
+    let addr = stack.addr.clone();
+
+    // client A: malformed line, then a valid one, then a polite quit
+    {
+        let mut cl = Client::connect(&addr);
+        cl.send("this,is,not,numbers");
+        cl.send(&token_line(1, 0));
+        cl.send("quit");
+        let err = cl.recv_json();
+        assert_eq!(reply_id(&err), 0);
+        assert!(err.opt("error").is_some(), "malformed line must get an error: {err}");
+        let ok = cl.recv_json();
+        assert_eq!(reply_id(&ok), 1);
+        assert!(ok.opt("error").is_none(), "{ok}");
+        // after quit the server closes its side; EOF, not a hang
+        let mut rest = String::new();
+        let n = cl.reader.read_line(&mut rest).expect("EOF within watchdog");
+        assert_eq!(n, 0, "expected EOF after quit, got {rest:?}");
+    }
+
+    // client B: submits one request and vanishes before reading the reply
+    {
+        let mut cl = Client::connect(&addr);
+        cl.send(&token_line(2, 0));
+        // drop without reading: the reply's socket write fails server-side,
+        // but the request still counts as served at recv()
+    }
+
+    // client C: wrong arity is rejected without perturbing later requests
+    {
+        let mut cl = Client::connect(&addr);
+        cl.send("1,2,3");
+        let err = cl.recv_json();
+        assert!(err.opt("error").is_some(), "{err}");
+        cl.send("quit");
+    }
+
+    // quiesce: B's in-flight reply must resolve before the identity holds
+    let deadline = std::time::Instant::now() + READ_GUARD;
+    loop {
+        let s = stack.counters.snapshot();
+        if s.balanced() && s.submitted == 4 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "never quiesced: {s:?}");
+        thread::sleep(Duration::from_millis(10));
+    }
+    let counters = Arc::clone(&stack.counters);
+    let router = Arc::clone(&stack.router);
+    let (service, _) = stack.shutdown();
+    let stat = counters.snapshot();
+    assert_eq!(stat.submitted, 4, "{stat:?}");
+    assert_eq!(stat.served, 2, "{stat:?}");
+    assert_eq!(stat.rejected, 2, "{stat:?}");
+    assert_eq!(stat.shed, 0, "{stat:?}");
+    assert!(stat.balanced(), "{stat:?}");
+    assert_eq!(router.queued(), 0, "router drained");
+    assert_eq!(service.metrics.served, stat.served, "pipeline and front end agree");
+}
+
+#[test]
+fn shed_is_immediate_and_identity_holds() {
+    const BURST: usize = 20;
+    // a one-slot router window and *no running compute loop*: everything
+    // past the first accepted request must shed immediately — a hang here
+    // trips the read watchdog
+    let model = synthetic_model();
+    let (mut service, batcher_config) = make_service(&model);
+    let router = Router::new(RouterConfig { max_inflight: 1 });
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let counters = ServerCounters::new();
+    let front = {
+        let router = Arc::clone(&router);
+        let counters = Arc::clone(&counters);
+        let seq = model.seq_len();
+        thread::spawn(move || {
+            serve_tcp(listener, router, seq, None, ServerConfig::default(), counters)
+        })
+    };
+
+    let mut cl = Client::connect(&addr);
+    for j in 0..BURST {
+        cl.send(&token_line(3, j));
+    }
+    // with no compute loop running, replies 1..BURST-1 are shed lines and
+    // must arrive now; request 0 is parked in the router window
+    for j in 1..BURST {
+        let v = cl.recv_json();
+        assert_eq!(reply_id(&v) as usize, j);
+        assert_eq!(v.opt("error").and_then(|e| e.as_str().ok()), Some("shed"), "{v}");
+        let hint = v.opt("retry_after_ms").expect("retry hint").as_u64().expect("ms");
+        assert!(hint > 0, "{v}");
+    }
+    let mid = counters.snapshot();
+    assert_eq!(mid.shed, (BURST - 1) as u64);
+    assert_eq!(mid.served, 0);
+
+    // now start the compute loop: the parked request gets a real reply
+    let compute = {
+        let router = Arc::clone(&router);
+        thread::spawn(move || {
+            service.run(router, batcher_config).expect("service run");
+            service
+        })
+    };
+    let v = cl.recv_json();
+    assert_eq!(reply_id(&v), 0);
+    assert!(v.opt("error").is_none(), "{v}");
+    cl.send("quit");
+    drop(cl);
+
+    router.shutdown();
+    front.join().expect("front join").expect("serve_tcp");
+    let _service = compute.join().expect("compute join");
+    let stat = counters.snapshot();
+    assert_eq!(stat.submitted, BURST as u64);
+    assert_eq!(stat.served, 1);
+    assert_eq!(stat.shed, (BURST - 1) as u64);
+    assert_eq!(stat.rejected, 0);
+    assert!(stat.balanced(), "{stat:?}");
+    assert!(stat.shed_rate() > 0.9, "{stat:?}");
+}
+
+#[test]
+fn per_connection_pending_cap_sheds_before_the_router() {
+    const BURST: usize = 12;
+    // pending cap of 2: with no compute loop, requests 0 and 1 are accepted
+    // (router window is wide), everything after sheds at the connection
+    let model = synthetic_model();
+    let (mut service, batcher_config) = make_service(&model);
+    let router = Router::new(RouterConfig { max_inflight: 1024 });
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let counters = ServerCounters::new();
+    let front = {
+        let router = Arc::clone(&router);
+        let counters = Arc::clone(&counters);
+        let seq = model.seq_len();
+        let cfg = ServerConfig { max_pending_per_conn: 2, ..ServerConfig::default() };
+        thread::spawn(move || serve_tcp(listener, router, seq, None, cfg, counters))
+    };
+
+    let mut cl = Client::connect(&addr);
+    for j in 0..BURST {
+        cl.send(&token_line(4, j));
+    }
+    for j in 2..BURST {
+        let v = cl.recv_json();
+        assert_eq!(reply_id(&v) as usize, j);
+        assert_eq!(v.opt("error").and_then(|e| e.as_str().ok()), Some("shed"), "{v}");
+    }
+    let compute = {
+        let router = Arc::clone(&router);
+        thread::spawn(move || {
+            service.run(router, batcher_config).expect("service run");
+            service
+        })
+    };
+    for j in 0..2 {
+        let v = cl.recv_json();
+        assert_eq!(reply_id(&v) as usize, j);
+        assert!(v.opt("error").is_none(), "{v}");
+    }
+    cl.send("quit");
+    drop(cl);
+    router.shutdown();
+    front.join().expect("front join").expect("serve_tcp");
+    compute.join().expect("compute join");
+    let stat = counters.snapshot();
+    assert_eq!(stat.submitted, BURST as u64);
+    assert_eq!(stat.served, 2);
+    assert_eq!(stat.shed, (BURST - 2) as u64);
+    assert!(stat.balanced(), "{stat:?}");
+}
