@@ -120,6 +120,7 @@ fn main() {
                     // earlier PR's BENCH_serving.json
                     link: LinkScenario::default(),
                     replicas: Default::default(),
+                    codecs: Default::default(),
                 };
                 let router = Router::new(RouterConfig::default());
                 let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -195,6 +196,7 @@ fn main() {
                 speculate: SpeculateMode::Off,
                 link: LinkScenario::from_name("markov").expect("canonical markov scenario"),
                 replicas: Default::default(),
+                codecs: Default::default(),
             };
             let router = Router::new(RouterConfig::default());
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -265,6 +267,7 @@ fn main() {
                         .expect("bench fault schedule"),
                     ..Default::default()
                 },
+                codecs: Default::default(),
             };
             let router = Router::new(RouterConfig::default());
             let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -333,6 +336,7 @@ fn main() {
             speculate: SpeculateMode::Off,
             link: LinkScenario::default(),
             replicas: Default::default(),
+            codecs: Default::default(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -391,6 +395,33 @@ fn main() {
         extras.insert("serve_tcp_p99_ms".to_string(), report.latency.percentile_us(99.0) / 1e3);
         extras.insert("serve_tcp_shed_rate".to_string(), report.shed_rate());
     }
+
+    // Codec leg: per-codec top-1 agreement / confidence drift / uplink byte
+    // ratio on this bench's own workload, offloading at the mid split.  The
+    // `codec_i8_uplink_ratio` and `codec_*_agreement` keys sit under the
+    // >10% regression gate — the acceptance bar is i8 >= 3.9x byte reduction
+    // at >= 0.98 top-1 agreement vs the uncompressed continuation.
+    let codec_keys = {
+        let menu = splitee::codec::CodecMenu::from_list("identity,f16,i8,topk:64")
+            .expect("bench codec menu");
+        let split = model.n_layers() / 2 - 1;
+        let drifts = splitee::experiments::codec_drift::measure(
+            &model,
+            &request_tokens,
+            split,
+            &menu,
+        )
+        .expect("codec drift leg");
+        for d in &drifts {
+            println!(
+                "  codec {}: agreement {:.4}, uplink ratio {:.2}x",
+                d.codec,
+                d.agreement,
+                d.uplink_ratio()
+            );
+        }
+        splitee::experiments::codec_drift::metric_keys(&drifts)
+    };
 
     // raw backend roofline for comparison: back-to-back full-depth batches
     let roofline_rps = {
@@ -460,6 +491,9 @@ fn main() {
     }
     for (k, v) in link_json {
         baseline.insert(k, v);
+    }
+    for (k, v) in codec_keys {
+        baseline.insert(k, Json::Num(v));
     }
     baseline.insert("raw_roofline_rps".to_string(), Json::Num(roofline_rps));
     baseline.insert(

@@ -1,0 +1,837 @@
+//! Split-boundary payload codecs: shrink the offload uplink.
+//!
+//! The offload cost `o` dominates the accuracy/compute/communication
+//! tradeoff the split policy optimizes over, and the uplink payload is by
+//! default a raw f32 copy of the hidden state at the split layer.  This
+//! module provides the **codec seam** that sits exactly at that boundary:
+//! the cloud stage encodes each offloaded row before "transmission", the
+//! link simulator charges the transfer from the *encoded* bytes, and the
+//! replica decodes before running the continuation — so the cloud model
+//! consumes exactly what the (possibly lossy) uplink delivered.
+//!
+//! Codecs (`--codecs`, [`CodecSpec::from_name`]):
+//!
+//! * `identity` — raw little-endian f32; **bit-transparent** end to end
+//!   (the decoded row is bit-identical to the input), so the default menu
+//!   `[identity]` reproduces the pre-codec service exactly;
+//! * `f16` — IEEE 754 binary16 truncation (round-to-nearest-even), 2 bytes
+//!   per element;
+//! * `i8` — per-row absmax quantization: one f32 scale (the row's max
+//!   absolute value) plus one signed byte per element;
+//! * `topk:<k>` — magnitude sparsification: the `k` largest-|x| entries
+//!   per row (ties broken toward the lowest index) stored exactly as
+//!   `(u32 index, f32 value)` pairs, the rest reconstructed as zero;
+//! * `dedup:<inner>` — a content-addressed chunk cache layered over any of
+//!   the above: the inner encoding is cut into fixed [`DEDUP_CHUNK`]-byte
+//!   chunks, each chunk hashed (FNV-1a 64), and a chunk already in the
+//!   shared store ships as a 9-byte reference instead of its bytes
+//!   ([`DedupCache`], hit/miss/byte counters).
+//!
+//! A "row" is one sample's flattened `[seq_len * d_model]` hidden-state
+//! slice — quantization scales are per sample, never shared across a
+//! batch, so batch composition cannot change any row's numerics.
+//!
+//! The bandit policies learn over a `(split, codec)` action menu
+//! ([`CodecMenu`]); with the default single-entry menu the arm space — and
+//! therefore every decision — is identical to the codec-less service.
+//! Because non-identity codecs perturb the numerics, every codec is pinned
+//! by round-trip property tests (`tests/codec.rs`) and evaluated by the
+//! accuracy-drift harness (`splitee codec-drift`,
+//! [`crate::experiments::codec_drift`]) before the bandits may learn over
+//! it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+/// Fixed per-transfer framing overhead the link simulator adds on top of
+/// the payload (matches `LinkSim::activation_payload`'s `+ 64`).  Codec
+/// byte accounting (and the `codec_*_uplink_ratio` bench keys) is defined
+/// on the payload *excluding* this header; the transfer itself is charged
+/// with it.
+pub const FRAME_OVERHEAD: usize = 64;
+
+/// Dedup chunk size in bytes.  Small enough that repeated rows (and
+/// repeated zero runs from sparsified payloads) dedup well, large enough
+/// that a 9-byte chunk reference is a real saving.
+pub const DEDUP_CHUNK: usize = 64;
+
+/// One encoded row: the wire bytes plus the codec-output size *before*
+/// dedup (equal to `bytes.len()` for non-dedup codecs).  Metrics account
+/// `encoded_bytes` from `encoded_len` (pure codec compression — this is
+/// what the `encoded_bytes <= raw_bytes` invariant is stated over) and
+/// `deduped_bytes` from `encoded_len - bytes.len()` (chunk-cache savings,
+/// which depend on traffic history and may be zero).
+#[derive(Debug, Clone)]
+pub struct Encoded {
+    pub bytes: Vec<u8>,
+    pub encoded_len: usize,
+}
+
+/// A split-boundary payload codec.  Implementations must be deterministic:
+/// the same row always encodes to the same bytes (the dedup layer's
+/// *savings* depend on cache history, but its decode is bit-identical to
+/// the inner codec's for any history — pinned by `tests/codec.rs`).
+pub trait PayloadCodec: Send + Sync {
+    /// Stable name; round-trips through [`CodecSpec::from_name`].
+    fn name(&self) -> String;
+
+    /// Encode one sample row (the flattened `[seq_len * d_model]` slice).
+    fn encode(&self, row: &[f32]) -> Encoded;
+
+    /// Decode back to exactly `n` f32 values.
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>>;
+
+    /// Deterministic encoded payload size for a row of `n` f32s, before
+    /// dedup (dedup savings are traffic-dependent and deliberately do not
+    /// enter the reward — see [`PayloadCodec::nominal_ratio`]).
+    fn nominal_encoded_len(&self, n: usize) -> usize;
+
+    /// Deterministic raw/encoded payload ratio for a row of `n` f32s.
+    /// This — not the measured wire bytes — scales the offload cost `o`
+    /// in the reward, so rewards stay a pure function of the decision
+    /// sequence and pipelined serving remains decision-identical to
+    /// serial replay.  Exactly `1.0` for the identity codec.
+    fn nominal_ratio(&self, n: usize) -> f64 {
+        if n == 0 {
+            return 1.0;
+        }
+        (4 * n) as f64 / self.nominal_encoded_len(n).max(1) as f64
+    }
+
+    /// True when decode(encode(row)) is bit-identical to `row` for every
+    /// input.  Only bit-transparent codecs may adopt speculative cloud
+    /// results (speculation runs on the *unencoded* activation; see
+    /// `coordinator::replicas`).
+    fn bit_transparent(&self) -> bool {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// identity
+
+/// Raw little-endian f32 passthrough — the bit-transparent reference codec.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl PayloadCodec for Identity {
+    fn name(&self) -> String {
+        "identity".into()
+    }
+
+    fn encode(&self, row: &[f32]) -> Encoded {
+        let mut bytes = Vec::with_capacity(4 * row.len());
+        for &x in row {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let encoded_len = bytes.len();
+        Encoded { bytes, encoded_len }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        if bytes.len() != 4 * n {
+            bail!("identity payload is {} bytes, want {}", bytes.len(), 4 * n);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn nominal_encoded_len(&self, n: usize) -> usize {
+        4 * n
+    }
+
+    fn bit_transparent(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16
+
+/// Convert f32 to IEEE 754 binary16 bits, round-to-nearest-even.  NaN maps
+/// to a canonical quiet NaN; overflow rounds to infinity per the standard.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7fff_ffff;
+    if abs > 0x7f80_0000 {
+        return sign | 0x7e00; // NaN (canonical quiet payload)
+    }
+    if abs >= 0x4780_0000 {
+        // |x| >= 65536: past the largest finite f16 even after rounding
+        return sign | 0x7c00;
+    }
+    if abs >= 0x3880_0000 {
+        // normal range (|x| >= 2^-14); f16 exponent lands in 1..=30
+        let exp = ((abs >> 23) as i32) - 127 + 15;
+        let mant = abs & 0x007f_ffff;
+        let mut h = ((exp as u32) << 10) | (mant >> 13);
+        let round = mant & 0x1fff;
+        if round > 0x1000 || (round == 0x1000 && (h & 1) == 1) {
+            h += 1; // mantissa carry may bump the exponent — that IS the
+                    // correct rounding, up to and including overflow to inf
+        }
+        return sign | h as u16;
+    }
+    if abs < 0x3300_0000 {
+        // |x| < 2^-25: underflows to (signed) zero under RNE
+        return sign;
+    }
+    // subnormal: value = mant' * 2^(exp-150), f16 subnormal unit is 2^-24
+    let exp = (abs >> 23) as i32;
+    let mant = (abs & 0x007f_ffff) | 0x0080_0000;
+    let shift = 126 - exp; // 14..=24 in this branch
+    let mut h = mant >> shift;
+    let dropped = mant & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if dropped > half || (dropped == half && (h & 1) == 1) {
+        h += 1; // may carry into the smallest normal — still well-formed
+    }
+    sign | h as u16
+}
+
+/// Convert IEEE 754 binary16 bits to f32 (exact — every f16 value is
+/// representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x3ff) as u32;
+    if exp == 0x1f {
+        return f32::from_bits(sign | 0x7f80_0000 | (mant << 13));
+    }
+    if exp == 0 {
+        // subnormal (or zero): mant * 2^-24, exact in f32
+        let v = mant as f32 * f32::from_bits(0x3380_0000);
+        return if sign != 0 { -v } else { v };
+    }
+    f32::from_bits(sign | ((exp as u32 + 112) << 23) | (mant << 13))
+}
+
+/// IEEE 754 binary16 truncation: 2 bytes per element.  Relative error is
+/// bounded by 2^-11 for values in the f16 normal range.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct F16;
+
+impl PayloadCodec for F16 {
+    fn name(&self) -> String {
+        "f16".into()
+    }
+
+    fn encode(&self, row: &[f32]) -> Encoded {
+        let mut bytes = Vec::with_capacity(2 * row.len());
+        for &x in row {
+            bytes.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+        }
+        let encoded_len = bytes.len();
+        Encoded { bytes, encoded_len }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        if bytes.len() != 2 * n {
+            bail!("f16 payload is {} bytes, want {}", bytes.len(), 2 * n);
+        }
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect())
+    }
+
+    fn nominal_encoded_len(&self, n: usize) -> usize {
+        2 * n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8
+
+/// Per-row absmax quantization: one f32 scale (the row's max |x|) plus one
+/// signed byte per element.  Absolute error is bounded by `absmax / 127`
+/// per element (half a quantization step plus float rounding).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct I8;
+
+impl PayloadCodec for I8 {
+    fn name(&self) -> String {
+        "i8".into()
+    }
+
+    fn encode(&self, row: &[f32]) -> Encoded {
+        let absmax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let mut bytes = Vec::with_capacity(4 + row.len());
+        bytes.extend_from_slice(&absmax.to_le_bytes());
+        if absmax > 0.0 {
+            let inv = 127.0 / absmax;
+            for &x in row {
+                let q = (x * inv).round().clamp(-127.0, 127.0) as i8;
+                bytes.push(q as u8);
+            }
+        } else {
+            bytes.resize(4 + row.len(), 0);
+        }
+        let encoded_len = bytes.len();
+        Encoded { bytes, encoded_len }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        if bytes.len() != 4 + n {
+            bail!("i8 payload is {} bytes, want {}", bytes.len(), 4 + n);
+        }
+        let scale = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+        let step = scale / 127.0;
+        Ok(bytes[4..].iter().map(|&b| (b as i8) as f32 * step).collect())
+    }
+
+    fn nominal_encoded_len(&self, n: usize) -> usize {
+        4 + n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// top-k
+
+/// Magnitude sparsification: keep the `k` largest-|x| entries of the row
+/// (ties broken toward the lowest index), stored exactly as
+/// `(u32 index, f32 value)` pairs; everything else reconstructs as zero.
+#[derive(Debug, Clone, Copy)]
+pub struct TopK {
+    pub k: usize,
+}
+
+impl PayloadCodec for TopK {
+    fn name(&self) -> String {
+        format!("topk:{}", self.k)
+    }
+
+    fn encode(&self, row: &[f32]) -> Encoded {
+        let m = self.k.min(row.len());
+        let mut order: Vec<usize> = (0..row.len()).collect();
+        // total order: |x| descending, index ascending on ties — fully
+        // deterministic, independent of the sort algorithm
+        order.sort_by(|&a, &b| {
+            row[b].abs().total_cmp(&row[a].abs()).then(a.cmp(&b))
+        });
+        let mut kept: Vec<usize> = order[..m].to_vec();
+        kept.sort_unstable(); // canonical wire order
+        let mut bytes = Vec::with_capacity(4 + 8 * m);
+        bytes.extend_from_slice(&(m as u32).to_le_bytes());
+        for &i in &kept {
+            bytes.extend_from_slice(&(i as u32).to_le_bytes());
+            bytes.extend_from_slice(&row[i].to_le_bytes());
+        }
+        let encoded_len = bytes.len();
+        Encoded { bytes, encoded_len }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        if bytes.len() < 4 {
+            bail!("topk payload too short ({} bytes)", bytes.len());
+        }
+        let m = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        if bytes.len() != 4 + 8 * m {
+            bail!("topk payload is {} bytes, want {} for {m} entries", bytes.len(), 4 + 8 * m);
+        }
+        let mut out = vec![0.0f32; n];
+        for e in bytes[4..].chunks_exact(8) {
+            let i = u32::from_le_bytes([e[0], e[1], e[2], e[3]]) as usize;
+            if i >= n {
+                bail!("topk entry index {i} out of range (row has {n} values)");
+            }
+            out[i] = f32::from_le_bytes([e[4], e[5], e[6], e[7]]);
+        }
+        Ok(out)
+    }
+
+    fn nominal_encoded_len(&self, n: usize) -> usize {
+        4 + 8 * self.k.min(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// content-addressed dedup layer
+
+/// Shared dedup lifecycle counters (atomics — the pool's `PoolCounters`
+/// pattern): one instance is shared between the cache and
+/// `ServingMetrics`, so the report survives the cache.  The structural
+/// invariant `hits + misses == chunks` holds at every instant.
+#[derive(Debug, Default)]
+pub struct DedupCounters {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub chunks: AtomicU64,
+    /// payload bytes replaced by chunk references (gross savings, before
+    /// the 9-byte reference overhead — net wire savings are what
+    /// `ServingMetrics::deduped_bytes` accounts)
+    pub hit_bytes: AtomicU64,
+}
+
+impl DedupCounters {
+    pub fn new() -> Arc<DedupCounters> {
+        Arc::new(DedupCounters::default())
+    }
+
+    /// Consistent-enough snapshot `(hits, misses, chunks, hit_bytes)`:
+    /// hits and misses are loaded before chunks, so a mid-encode read can
+    /// never show `hits + misses > chunks`.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        let hits = self.hits.load(Ordering::Acquire);
+        let misses = self.misses.load(Ordering::Acquire);
+        let chunks = self.chunks.load(Ordering::Acquire);
+        let hit_bytes = self.hit_bytes.load(Ordering::Acquire);
+        (hits, misses, chunks, hit_bytes.min(u64::MAX))
+    }
+}
+
+/// Content-addressed chunk store shared by every `dedup:*` codec built
+/// from one [`CodecMenu::build`] call (and by encode/decode sides — a
+/// reference is only ever emitted for a chunk the store already holds, so
+/// decode always resolves).
+#[derive(Clone)]
+pub struct DedupCache {
+    store: Arc<Mutex<HashMap<u64, Vec<u8>>>>,
+    pub counters: Arc<DedupCounters>,
+}
+
+impl Default for DedupCache {
+    fn default() -> Self {
+        DedupCache::new()
+    }
+}
+
+impl DedupCache {
+    pub fn new() -> DedupCache {
+        DedupCache {
+            store: Arc::new(Mutex::new(HashMap::new())),
+            counters: DedupCounters::new(),
+        }
+    }
+
+    /// Chunks currently resident in the store.
+    pub fn resident(&self) -> usize {
+        self.store.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+}
+
+/// FNV-1a 64-bit hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+const DEDUP_TAG_LITERAL: u8 = 0;
+const DEDUP_TAG_REF: u8 = 1;
+
+/// The dedup layer: wraps any inner codec, cutting its output into
+/// [`DEDUP_CHUNK`]-byte chunks and shipping repeats as 9-byte references.
+/// Wire format: `u32 inner_len` then, per chunk in order, either
+/// `0x00 + chunk bytes` (literal; length implied by position) or
+/// `0x01 + u64 hash` (reference into the shared store).
+pub struct DedupCodec {
+    pub inner: Arc<dyn PayloadCodec>,
+    pub cache: DedupCache,
+}
+
+impl PayloadCodec for DedupCodec {
+    fn name(&self) -> String {
+        format!("dedup:{}", self.inner.name())
+    }
+
+    fn encode(&self, row: &[f32]) -> Encoded {
+        let inner = self.inner.encode(row);
+        let encoded_len = inner.encoded_len;
+        let payload = inner.bytes;
+        let mut bytes = Vec::with_capacity(4 + payload.len() + payload.len() / DEDUP_CHUNK + 1);
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let mut store = self.cache.store.lock().unwrap_or_else(|p| p.into_inner());
+        let c = &self.cache.counters;
+        for chunk in payload.chunks(DEDUP_CHUNK) {
+            c.chunks.fetch_add(1, Ordering::AcqRel);
+            let h = fnv1a64(chunk);
+            match store.get(&h) {
+                // a hash collision (same hash, different bytes) degrades
+                // to a literal — correctness never rests on the hash
+                Some(stored) if stored == chunk => {
+                    c.hits.fetch_add(1, Ordering::AcqRel);
+                    c.hit_bytes.fetch_add(chunk.len() as u64, Ordering::AcqRel);
+                    bytes.push(DEDUP_TAG_REF);
+                    bytes.extend_from_slice(&h.to_le_bytes());
+                }
+                _ => {
+                    c.misses.fetch_add(1, Ordering::AcqRel);
+                    if !store.contains_key(&h) {
+                        store.insert(h, chunk.to_vec());
+                    }
+                    bytes.push(DEDUP_TAG_LITERAL);
+                    bytes.extend_from_slice(chunk);
+                }
+            }
+        }
+        Encoded { bytes, encoded_len }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        if bytes.len() < 4 {
+            bail!("dedup payload too short ({} bytes)", bytes.len());
+        }
+        let inner_len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        let mut payload = Vec::with_capacity(inner_len);
+        let mut pos = 4usize;
+        let store = self.cache.store.lock().unwrap_or_else(|p| p.into_inner());
+        while payload.len() < inner_len {
+            let chunk_len = DEDUP_CHUNK.min(inner_len - payload.len());
+            let tag = *bytes
+                .get(pos)
+                .ok_or_else(|| anyhow::anyhow!("dedup payload truncated at chunk tag"))?;
+            pos += 1;
+            match tag {
+                DEDUP_TAG_LITERAL => {
+                    let chunk = bytes
+                        .get(pos..pos + chunk_len)
+                        .ok_or_else(|| anyhow::anyhow!("dedup literal chunk truncated"))?;
+                    payload.extend_from_slice(chunk);
+                    pos += chunk_len;
+                }
+                DEDUP_TAG_REF => {
+                    let hb = bytes
+                        .get(pos..pos + 8)
+                        .ok_or_else(|| anyhow::anyhow!("dedup chunk reference truncated"))?;
+                    pos += 8;
+                    let h = u64::from_le_bytes([
+                        hb[0], hb[1], hb[2], hb[3], hb[4], hb[5], hb[6], hb[7],
+                    ]);
+                    let chunk = store
+                        .get(&h)
+                        .ok_or_else(|| anyhow::anyhow!("dedup chunk {h:#x} not in store"))?;
+                    if chunk.len() != chunk_len {
+                        bail!(
+                            "dedup chunk {h:#x} is {} bytes, want {chunk_len}",
+                            chunk.len()
+                        );
+                    }
+                    payload.extend_from_slice(chunk);
+                }
+                other => bail!("dedup payload has unknown chunk tag {other}"),
+            }
+        }
+        if pos != bytes.len() {
+            bail!("dedup payload has {} trailing bytes", bytes.len() - pos);
+        }
+        drop(store);
+        self.inner.decode(&payload, n)
+    }
+
+    fn nominal_encoded_len(&self, n: usize) -> usize {
+        // dedup savings are traffic-dependent; the deterministic size (and
+        // therefore the reward) is the inner codec's
+        self.inner.nominal_encoded_len(n)
+    }
+
+    fn bit_transparent(&self) -> bool {
+        // decode is bit-identical to the inner codec for any cache history
+        self.inner.bit_transparent()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// spec + menu
+
+/// Parsed codec name — the `--codecs` grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecSpec {
+    Identity,
+    F16,
+    I8,
+    TopK(usize),
+    Dedup(Box<CodecSpec>),
+}
+
+impl CodecSpec {
+    /// Parse one codec name: `identity | f16 | i8 | topk:<k> |
+    /// dedup:<inner>` (dedup does not nest).
+    pub fn from_name(name: &str) -> Result<CodecSpec> {
+        match name {
+            "identity" => Ok(CodecSpec::Identity),
+            "f16" => Ok(CodecSpec::F16),
+            "i8" => Ok(CodecSpec::I8),
+            other => {
+                if let Some(k) = other.strip_prefix("topk:") {
+                    let k: usize = k.parse().map_err(|_| {
+                        anyhow::anyhow!("topk wants a positive entry count, got {other:?}")
+                    })?;
+                    if k == 0 {
+                        bail!("topk:0 would drop every entry — use a positive k");
+                    }
+                    return Ok(CodecSpec::TopK(k));
+                }
+                if let Some(inner) = other.strip_prefix("dedup:") {
+                    if inner.starts_with("dedup:") {
+                        bail!("dedup does not nest ({other:?})");
+                    }
+                    return Ok(CodecSpec::Dedup(Box::new(CodecSpec::from_name(inner)?)));
+                }
+                bail!(
+                    "unknown codec {other:?} — accepted: identity, f16, i8, topk:<k>, \
+                     dedup:<inner>"
+                )
+            }
+        }
+    }
+
+    /// Stable name; `CodecSpec::from_name(&s.name()).unwrap() == s`.
+    pub fn name(&self) -> String {
+        match self {
+            CodecSpec::Identity => "identity".into(),
+            CodecSpec::F16 => "f16".into(),
+            CodecSpec::I8 => "i8".into(),
+            CodecSpec::TopK(k) => format!("topk:{k}"),
+            CodecSpec::Dedup(inner) => format!("dedup:{}", inner.name()),
+        }
+    }
+
+    /// Instantiate the codec.  Every `dedup:*` spec built from the same
+    /// `cache` shares one chunk store and one counter set.
+    pub fn build(&self, cache: &DedupCache) -> Arc<dyn PayloadCodec> {
+        match self {
+            CodecSpec::Identity => Arc::new(Identity),
+            CodecSpec::F16 => Arc::new(F16),
+            CodecSpec::I8 => Arc::new(I8),
+            CodecSpec::TopK(k) => Arc::new(TopK { k: *k }),
+            CodecSpec::Dedup(inner) => Arc::new(DedupCodec {
+                inner: inner.build(cache),
+                cache: cache.clone(),
+            }),
+        }
+    }
+}
+
+/// The `(split, codec)` action menu's codec axis: an ordered list of codec
+/// specs the policy may choose between.  The `Default` — `[identity]` —
+/// yields an arm space (and a byte stream) identical to the codec-less
+/// service, bit for bit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CodecMenu {
+    pub specs: Vec<CodecSpec>,
+}
+
+impl Default for CodecMenu {
+    fn default() -> Self {
+        CodecMenu { specs: vec![CodecSpec::Identity] }
+    }
+}
+
+impl CodecMenu {
+    /// Parse a `--codecs` comma-separated list, e.g.
+    /// `identity,f16,i8,topk:64`.  Duplicate entries are rejected — they
+    /// would split one action's statistics across two arms.
+    pub fn from_list(csv: &str) -> Result<CodecMenu> {
+        let mut specs = Vec::new();
+        for name in csv.split(',') {
+            let name = name.trim();
+            if name.is_empty() {
+                bail!("--codecs wants a comma-separated codec list, got {csv:?}");
+            }
+            let spec = CodecSpec::from_name(name)?;
+            if specs.contains(&spec) {
+                bail!("--codecs lists {name:?} twice");
+            }
+            specs.push(spec);
+        }
+        if specs.is_empty() {
+            bail!("--codecs wants at least one codec");
+        }
+        Ok(CodecMenu { specs })
+    }
+
+    /// Test-matrix hook: `SPLITEE_CODECS=<csv>` (default `identity` when
+    /// unset).  An unparseable value panics — naming the variable, the
+    /// rejected value and the accepted grammar — rather than silently
+    /// running the identity path under a codec job label.
+    pub fn from_env() -> CodecMenu {
+        match std::env::var("SPLITEE_CODECS") {
+            Ok(v) => match CodecMenu::from_list(&v) {
+                Ok(m) => m,
+                Err(e) => panic!(
+                    "SPLITEE_CODECS={v:?} is invalid ({e:#}) — accepted: a comma-separated \
+                     list of identity, f16, i8, topk:<k>, dedup:<inner>"
+                ),
+            },
+            Err(_) => CodecMenu::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Comma-joined names (the fingerprint / report form).
+    pub fn names(&self) -> String {
+        self.specs.iter().map(|s| s.name()).collect::<Vec<_>>().join(",")
+    }
+
+    /// Instantiate every codec in menu order, sharing one dedup chunk
+    /// store (returned so its counters can be wired into the metrics even
+    /// when no `dedup:*` codec is listed — they simply stay zero).
+    pub fn build(&self) -> (Vec<Arc<dyn PayloadCodec>>, DedupCache) {
+        let cache = DedupCache::new();
+        let codecs = self.specs.iter().map(|s| s.build(&cache)).collect();
+        (codecs, cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_bits_round_trip_every_finite_half() {
+        // every non-NaN f16 value must survive f16 -> f32 -> f16 exactly
+        for h in 0..=u16::MAX {
+            let exp = (h >> 10) & 0x1f;
+            let mant = h & 0x3ff;
+            if exp == 0x1f && mant != 0 {
+                continue; // NaN payloads canonicalize; skip
+            }
+            let x = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(x), h, "h={h:#06x} x={x:?}");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_edge_cases() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff, "largest finite f16");
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00, "rounds to +inf");
+        assert_eq!(f32_to_f16_bits(1e9), 0x7c00, "overflow to +inf");
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xfc00);
+        let nan = f32_to_f16_bits(f32::NAN);
+        assert_eq!(nan & 0x7c00, 0x7c00);
+        assert_ne!(nan & 0x03ff, 0);
+        // smallest subnormal and the underflow edge
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000, "underflow");
+        // RNE at the exact halfway point between 1.0 and the next f16
+        let half_ulp = f32::from_bits(0x3f80_1000);
+        assert_eq!(f32_to_f16_bits(half_ulp), 0x3c00, "ties to even");
+    }
+
+    #[test]
+    fn i8_zero_row_and_scale() {
+        let c = I8;
+        let row = vec![0.0f32; 9];
+        let e = c.encode(&row);
+        assert_eq!(e.bytes.len(), 13);
+        assert_eq!(c.decode(&e.bytes, 9).unwrap(), row);
+        let row = vec![1.0, -2.0, 0.5];
+        let e = c.encode(&row);
+        let back = c.decode(&e.bytes, 3).unwrap();
+        assert_eq!(back[1], -2.0, "absmax element is exact");
+        for (a, b) in row.iter().zip(&back) {
+            assert!((a - b).abs() <= 2.0 / 127.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn topk_ties_break_toward_lowest_index() {
+        let c = TopK { k: 2 };
+        let row = vec![1.0f32, -1.0, 1.0, 0.5];
+        let e = c.encode(&row);
+        let back = c.decode(&e.bytes, 4).unwrap();
+        assert_eq!(back, vec![1.0, -1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_k_larger_than_row_keeps_everything() {
+        let c = TopK { k: 10 };
+        let row = vec![3.0f32, -4.0];
+        let e = c.encode(&row);
+        assert_eq!(e.bytes.len(), 4 + 8 * 2);
+        assert_eq!(c.decode(&e.bytes, 2).unwrap(), row);
+    }
+
+    #[test]
+    fn dedup_counters_and_collision_free_reuse() {
+        let cache = DedupCache::new();
+        let codec = DedupCodec { inner: Arc::new(Identity), cache: cache.clone() };
+        let row = vec![1.5f32; 32]; // 128 payload bytes = 2 chunks
+        let e1 = codec.encode(&row);
+        let e2 = codec.encode(&row);
+        let (hits, misses, chunks, hit_bytes) = cache.counters.snapshot();
+        assert_eq!((hits, misses, chunks), (2, 2, 4));
+        assert_eq!(hit_bytes, 128);
+        assert!(e2.bytes.len() < e1.bytes.len(), "second encode ships references");
+        assert_eq!(codec.decode(&e1.bytes, 32).unwrap(), row);
+        assert_eq!(codec.decode(&e2.bytes, 32).unwrap(), row);
+        assert_eq!(cache.resident(), 2);
+    }
+
+    #[test]
+    fn dedup_rejects_garbage() {
+        let codec = DedupCodec { inner: Arc::new(Identity), cache: DedupCache::new() };
+        assert!(codec.decode(&[], 4).is_err());
+        assert!(codec.decode(&[16, 0, 0, 0, 7], 4).is_err(), "unknown tag");
+        assert!(codec.decode(&[16, 0, 0, 0, 1, 1, 2], 4).is_err(), "truncated ref");
+    }
+
+    #[test]
+    fn spec_names_round_trip_and_reject_garbage() {
+        for name in ["identity", "f16", "i8", "topk:64", "dedup:i8", "dedup:topk:8"] {
+            let spec = CodecSpec::from_name(name).unwrap();
+            assert_eq!(spec.name(), name);
+            assert_eq!(CodecSpec::from_name(&spec.name()).unwrap(), spec);
+        }
+        for bad in ["", "f32", "topk:", "topk:0", "topk:x", "dedup:", "dedup:dedup:i8"] {
+            assert!(CodecSpec::from_name(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn menu_parses_validates_and_defaults() {
+        let m = CodecMenu::default();
+        assert_eq!((m.len(), m.names().as_str()), (1, "identity"));
+        let m = CodecMenu::from_list("identity, f16 ,i8,topk:64").unwrap();
+        assert_eq!(m.names(), "identity,f16,i8,topk:64");
+        assert!(CodecMenu::from_list("").is_err());
+        assert!(CodecMenu::from_list("identity,,i8").is_err());
+        assert!(CodecMenu::from_list("i8,i8").is_err(), "duplicates rejected");
+        let (codecs, _cache) = m.build();
+        assert_eq!(codecs.len(), 4);
+        assert!(codecs[0].bit_transparent());
+        assert!(!codecs[2].bit_transparent());
+    }
+
+    #[test]
+    fn nominal_ratios_match_the_wire() {
+        // the reward-side ratio must equal the actual raw/encoded byte
+        // ratio for every deterministic codec
+        let row: Vec<f32> = (0..512).map(|i| (i as f32).sin()).collect();
+        for spec in ["identity", "f16", "i8", "topk:64"] {
+            let codec = CodecSpec::from_name(spec).unwrap().build(&DedupCache::new());
+            let e = codec.encode(&row);
+            assert_eq!(e.bytes.len(), codec.nominal_encoded_len(row.len()), "{spec}");
+            let measured = (4 * row.len()) as f64 / e.bytes.len() as f64;
+            assert!((codec.nominal_ratio(row.len()) - measured).abs() < 1e-12, "{spec}");
+        }
+        // the acceptance target: i8 on the bench model's 512-value rows
+        let i8 = CodecSpec::I8.build(&DedupCache::new());
+        assert!(i8.nominal_ratio(512) >= 3.9, "ratio {}", i8.nominal_ratio(512));
+        let id = CodecSpec::Identity.build(&DedupCache::new());
+        assert_eq!(id.nominal_ratio(512), 1.0);
+    }
+}

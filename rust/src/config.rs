@@ -243,6 +243,11 @@ pub struct Settings {
     /// `trace:<path>` (parsed into `sim::link::LinkScenario`; dynamic
     /// scenarios vary bandwidth/latency/offload-cost per batch)
     pub link: String,
+    /// split-boundary payload codec menu the bandit learns over:
+    /// comma-joined `identity|f16|i8|topk:<k>|dedup:<inner>` names
+    /// (parsed into `codec::CodecMenu`; `identity` alone reproduces the
+    /// codec-less byte stream and decisions bit for bit)
+    pub codecs: String,
     /// cloud-tier replica lanes (>= 1; parsed into
     /// `coordinator::ReplicaConfig`)
     pub replicas: usize,
@@ -285,6 +290,7 @@ impl Default for Settings {
             backend: "auto".to_string(),
             speculate: "auto".to_string(),
             link: "static".to_string(),
+            codecs: "identity".to_string(),
             replicas: 1,
             dispatch: "round-robin".to_string(),
             faults: String::new(),
@@ -327,6 +333,9 @@ impl Settings {
         if let Some(f) = args.get("faults") {
             s.faults = f.to_string();
         }
+        if let Some(c) = args.get("codecs") {
+            s.codecs = c.to_string();
+        }
         // single source of truth for the accepted values (and the error
         // messages) are the coordinator's and the scenario engine's parsers;
         // a trace file is read eagerly here so a bad path fails at startup
@@ -334,6 +343,7 @@ impl Settings {
         crate::sim::link::LinkScenario::from_name(&s.link)?;
         crate::coordinator::replicas::DispatchPolicy::from_name(&s.dispatch)?;
         crate::sim::faults::FaultSchedule::from_name(&s.faults)?;
+        crate::codec::CodecMenu::from_list(&s.codecs)?;
         s.replicas = args.get_num("replicas", s.replicas).map_err(anyhow::Error::msg)?;
         if s.replicas == 0 {
             bail!("--replicas must be a positive integer");
@@ -390,6 +400,13 @@ impl Settings {
             faults: crate::sim::faults::FaultSchedule::from_name(&self.faults)?,
             ..crate::coordinator::ReplicaConfig::default()
         })
+    }
+
+    /// The split-boundary codec menu these settings describe (`--codecs`).
+    /// Validated by [`Settings::from_args`], but hand-built settings
+    /// re-validate here.
+    pub fn codec_menu(&self) -> Result<crate::codec::CodecMenu> {
+        crate::codec::CodecMenu::from_list(&self.codecs)
     }
 
     /// Apply `--ref-threads` to the reference backend's shared kernel pool.
@@ -523,6 +540,33 @@ mod tests {
             crate::coordinator::replicas::DispatchPolicy::LeastLoaded
         );
         assert_eq!(cfg.faults.name(), "kill@2:0|flaky@1:0.25,seed=7");
+    }
+
+    #[test]
+    fn settings_codec_flags_parse_and_round_trip() {
+        let s = Settings::from_args(&Args::parse(["x"].iter().map(|s| s.to_string()))).unwrap();
+        assert_eq!(s.codecs, "identity", "default menu = bit-transparent identity");
+        let menu = s.codec_menu().unwrap();
+        assert_eq!(menu.names(), "identity");
+
+        let args = Args::parse(
+            ["x", "--codecs", "identity,f16,i8,topk:64,dedup:i8"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let s = Settings::from_args(&args).unwrap();
+        let menu = s.codec_menu().unwrap();
+        assert_eq!(menu.len(), 5);
+        assert_eq!(menu.names(), "identity,f16,i8,topk:64,dedup:i8");
+
+        for bad in ["", "identity,", "gzip", "topk:0", "i8,i8", "dedup:dedup:i8"] {
+            let args = Args::parse(["x", "--codecs", bad].iter().map(|s| s.to_string()));
+            assert!(Settings::from_args(&args).is_err(), "accepted {bad:?}");
+        }
+        let args = Args::parse(["x", "--codecs", "gzip"].iter().map(|s| s.to_string()));
+        let err = Settings::from_args(&args).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gzip") && msg.contains("identity"), "unhelpful error: {msg}");
     }
 
     #[test]

@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::codec::DedupCounters;
 use crate::coordinator::router::ClientTag;
 use crate::runtime::SpecCounters;
 use crate::util::stats::{LatencyHistogram, Welford};
@@ -267,6 +268,12 @@ pub struct CohortStat {
     pub offloaded: u64,
     /// end-to-end latency of this cohort's requests
     pub latency: LatencyHistogram,
+    /// raw (pre-codec) uplink payload bytes this cohort's delivered
+    /// offloads would have shipped uncompressed
+    pub raw_bytes: u64,
+    /// encoded uplink payload bytes those offloads actually cost (the
+    /// codec output; `<= raw_bytes` always)
+    pub enc_bytes: u64,
 }
 
 impl CohortStat {
@@ -276,6 +283,16 @@ impl CohortStat {
             0.0
         } else {
             self.offloaded as f64 / self.served as f64
+        }
+    }
+
+    /// Raw/encoded uplink byte ratio for this cohort (1.0 when it never
+    /// offloaded).
+    pub fn uplink_ratio(&self) -> f64 {
+        if self.enc_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.enc_bytes as f64
         }
     }
 }
@@ -328,6 +345,22 @@ pub struct ServingMetrics {
     /// identity via the `hello` line (keys `client:<name>` and
     /// `link:<profile>`); empty for anonymous or in-process traffic
     pub cohorts: BTreeMap<String, CohortStat>,
+    /// raw (pre-codec) uplink payload bytes across all delivered offload
+    /// transfers — what the uncompressed uplink would have shipped
+    pub raw_bytes: u64,
+    /// encoded uplink payload bytes (the codec output before dedup).
+    /// Invariant: `encoded_bytes <= raw_bytes` — every codec's per-row
+    /// output is bounded by the raw row (asserted under load by
+    /// `tests/integration.rs`)
+    pub encoded_bytes: u64,
+    /// wire bytes saved by the content-addressed dedup layer on top of the
+    /// codec output (0 without a `dedup:*` codec in the menu)
+    pub deduped_bytes: u64,
+    /// dedup chunk-cache lifecycle counters (hits / misses / chunks),
+    /// shared with the service's [`crate::codec::DedupCache`].  Sized
+    /// empty by [`ServingMetrics::new`]; the service swaps in the cache's
+    /// counters at construction, exactly like [`ServingMetrics::pool`].
+    pub dedup: Arc<DedupCounters>,
     /// wall-clock mark of the previous batch's reply: the inter-reply
     /// interval is attributed to the *completing* batch's link state.
     /// `None` until the first batch, so service setup time is charged to no
@@ -363,6 +396,10 @@ impl ServingMetrics {
             pool: PoolCounters::new(0),
             link_states: BTreeMap::new(),
             cohorts: BTreeMap::new(),
+            raw_bytes: 0,
+            encoded_bytes: 0,
+            deduped_bytes: 0,
+            dedup: DedupCounters::new(),
             last_link_mark: None,
             snapshots_written: 0,
         }
@@ -450,11 +487,29 @@ impl ServingMetrics {
         *s.split_hist.entry(split).or_insert(0) += 1;
     }
 
+    /// Accumulate one batch's delivered uplink payload bytes: raw
+    /// (pre-codec), encoded (codec output), and the wire bytes the dedup
+    /// layer saved on top.  Called once per batch from the reply stage.
+    pub fn record_uplink_bytes(&mut self, raw: u64, encoded: u64, dedup_saved: u64) {
+        self.raw_bytes += raw;
+        self.encoded_bytes += encoded;
+        self.deduped_bytes += dedup_saved;
+    }
+
     /// Attribute one served request to its connection's cohorts: the named
-    /// client row and the link-profile row both advance.  Called from the
-    /// reply stage only for requests that carried a
-    /// [`ClientTag`]; anonymous traffic leaves `cohorts` empty.
-    pub fn record_cohort(&mut self, tag: &ClientTag, offloaded: bool, latency_ms: f64) {
+    /// client row and the link-profile row both advance, including the
+    /// request's delivered uplink payload bytes (`raw`/`enc` are 0 for
+    /// rows that exited on-device or fell back).  Called from the reply
+    /// stage only for requests that carried a [`ClientTag`]; anonymous
+    /// traffic leaves `cohorts` empty.
+    pub fn record_cohort(
+        &mut self,
+        tag: &ClientTag,
+        offloaded: bool,
+        latency_ms: f64,
+        raw_bytes: u64,
+        enc_bytes: u64,
+    ) {
         for key in [format!("client:{}", tag.client), format!("link:{}", tag.link)] {
             let c = self.cohorts.entry(key).or_default();
             c.served += 1;
@@ -462,6 +517,8 @@ impl ServingMetrics {
                 c.offloaded += 1;
             }
             c.latency.record_us(latency_ms * 1e3);
+            c.raw_bytes += raw_bytes;
+            c.enc_bytes += enc_bytes;
         }
     }
 
@@ -545,6 +602,24 @@ impl ServingMetrics {
             spec.wasted,
             100.0 * spec.hit_rate(),
         ));
+        // uplink byte accounting appears once a codec shipped anything
+        if self.raw_bytes > 0 {
+            out.push_str(&format!(
+                "uplink   raw {} B   encoded {} B ({:.2}x)   dedup saved {} B\n",
+                self.raw_bytes,
+                self.encoded_bytes,
+                self.raw_bytes as f64 / self.encoded_bytes.max(1) as f64,
+                self.deduped_bytes,
+            ));
+        }
+        let (hits, misses, chunks, hit_bytes) = self.dedup.snapshot();
+        if chunks > 0 {
+            out.push_str(&format!(
+                "dedup    chunks {chunks}   hits {hits}   misses {misses}   \
+                 (hit-rate {:.1}%, {hit_bytes} B referenced)\n",
+                100.0 * hits as f64 / chunks.max(1) as f64,
+            ));
+        }
         let pool = self.pool.snapshot();
         // a single healthy replica is the classic cloud stage — only print
         // the pool breakdown when there is a pool story to tell
@@ -603,8 +678,15 @@ impl ServingMetrics {
             // whole fleet — print the busiest handful and summarize the rest
             const MAX_CLIENT_ROWS: usize = 8;
             for (key, c) in self.cohorts.iter().filter(|(k, _)| k.starts_with("link:")) {
+                // per-link uplink bytes: which link cohorts pay for the
+                // offload traffic, and at what codec compression
+                let up = if c.enc_bytes > 0 {
+                    format!("  up {}/{} B ({:.2}x)", c.raw_bytes, c.enc_bytes, c.uplink_ratio())
+                } else {
+                    String::new()
+                };
                 out.push_str(&format!(
-                    "cohort[{key}]  {} req  offload {:.1}%  p50 {:.2} ms  p99 {:.2} ms\n",
+                    "cohort[{key}]  {} req  offload {:.1}%  p50 {:.2} ms  p99 {:.2} ms{up}\n",
                     c.served,
                     100.0 * c.offload_rate(),
                     c.latency.percentile_us(50.0) / 1e3,
@@ -749,15 +831,17 @@ mod tests {
         let mut m = ServingMetrics::new(6);
         let a = ClientTag { client: "edge-a".into(), link: "wifi".into() };
         let b = ClientTag { client: "edge-b".into(), link: "wifi".into() };
-        m.record_cohort(&a, true, 4.0);
-        m.record_cohort(&a, false, 6.0);
-        m.record_cohort(&b, true, 10.0);
+        m.record_cohort(&a, true, 4.0, 1024, 260);
+        m.record_cohort(&a, false, 6.0, 0, 0);
+        m.record_cohort(&b, true, 10.0, 1024, 260);
         assert_eq!(m.cohorts["client:edge-a"].served, 2);
         assert_eq!(m.cohorts["client:edge-a"].offloaded, 1);
         assert_eq!(m.cohorts["client:edge-b"].served, 1);
         // both clients share the wifi link row
         assert_eq!(m.cohorts["link:wifi"].served, 3);
         assert_eq!(m.cohorts["link:wifi"].offloaded, 2);
+        assert_eq!(m.cohorts["link:wifi"].raw_bytes, 2048);
+        assert_eq!(m.cohorts["link:wifi"].enc_bytes, 520);
         assert!((m.cohorts["client:edge-b"].offload_rate() - 1.0).abs() < 1e-12);
         let r = m.report();
         assert!(r.contains("cohort[link:wifi]"), "{r}");
@@ -771,7 +855,7 @@ mod tests {
             let t = ClientTag { client: format!("c{i:02}"), link: "4g".into() };
             // distinct served counts so the sort order is deterministic
             for _ in 0..=i {
-                m.record_cohort(&t, false, 1.0);
+                m.record_cohort(&t, false, 1.0, 0, 0);
             }
         }
         let r = m.report();
@@ -816,6 +900,45 @@ mod tests {
         assert_eq!(s.order_violations(), 0);
         assert!((s.replicas[0].busy_ms - 3.5).abs() < 1e-9);
         assert!((s.backoff_ms - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cohort_rows_carry_uplink_byte_attribution() {
+        // the per-link cohort accounting the codec seam threads through
+        // record_cohort: raw and encoded bytes land on both the client row
+        // and the shared link row, non-offloaded requests contribute zero,
+        // and the printed link row carries the byte ratio
+        let mut m = ServingMetrics::new(6);
+        let t = ClientTag { client: "edge-a".into(), link: "wifi".into() };
+        m.record_cohort(&t, true, 4.0, 1024, 516); // i8 on a 256-value row
+        m.record_cohort(&t, true, 4.0, 1024, 516);
+        m.record_cohort(&t, false, 1.0, 0, 0); // on-device exit: no uplink
+        for key in ["client:edge-a", "link:wifi"] {
+            let c = &m.cohorts[key];
+            assert_eq!((c.raw_bytes, c.enc_bytes), (2048, 1032), "{key}");
+            assert!(c.enc_bytes <= c.raw_bytes, "{key}");
+            assert!((c.uplink_ratio() - 2048.0 / 1032.0).abs() < 1e-12, "{key}");
+        }
+        let r = m.report();
+        assert!(r.contains("up 2048/1032 B"), "{r}");
+        // a cohort that never offloaded reports no byte suffix
+        let mut quiet = ServingMetrics::new(6);
+        quiet.record_cohort(&t, false, 1.0, 0, 0);
+        assert_eq!(quiet.cohorts["link:wifi"].uplink_ratio(), 1.0);
+        assert!(!quiet.report().contains(" up "), "{}", quiet.report());
+    }
+
+    #[test]
+    fn uplink_byte_totals_accumulate_and_report() {
+        let mut m = ServingMetrics::new(6);
+        assert!(!m.report().contains("uplink"), "zero bytes is noise");
+        m.record_uplink_bytes(2048, 520, 0);
+        m.record_uplink_bytes(1024, 260, 64);
+        assert_eq!((m.raw_bytes, m.encoded_bytes, m.deduped_bytes), (3072, 780, 64));
+        assert!(m.encoded_bytes <= m.raw_bytes);
+        let r = m.report();
+        assert!(r.contains("uplink   raw 3072 B   encoded 780 B"), "{r}");
+        assert!(r.contains("dedup saved 64 B"), "{r}");
     }
 
     #[test]

@@ -56,6 +56,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as _, Result};
 
+use crate::codec::PayloadCodec;
 use crate::coordinator::metrics::PoolCounters;
 use crate::coordinator::service::{CloudRow, EdgeWork, ReplyWork};
 use crate::model::{plan_batches_fused, ExitOutput, MultiExitModel};
@@ -404,16 +405,25 @@ impl ReplicaPool {
         edge: &EdgeSim,
         cloud: &CloudSim,
         mut group: Vec<EdgeWork>,
+        codecs: &[Arc<dyn PayloadCodec>],
     ) -> Result<Vec<ReplyWork>> {
         let split = group[0].split;
+        // the coalescing predicate never mixes codecs in a group
+        let codec = codecs
+            .get(group[0].codec)
+            .with_context(|| format!("codec index {} outside the menu", group[0].codec))?;
 
         // Speculation resolution (see the service module docs): a singleton
         // group may serve from its speculative result — on whichever lane
         // the pool dispatches it to, if that lane turns out healthy; a
         // merged group kills every member's pending launch first, so a
         // coalesced launch never mixes speculative rows with gathered rows.
+        // A non-bit-transparent codec also kills: the speculation ran on
+        // the *unencoded* activation, while the continuation below consumes
+        // the decoded (perturbed) payload — adopting the result would leak
+        // uncompressed numerics past the uplink.
         let mut spec: Option<SpecHandle> = None;
-        if group.len() == 1 {
+        if group.len() == 1 && codec.bit_transparent() {
             spec = group[0].spec.take();
         } else {
             for work in group.iter_mut() {
@@ -447,6 +457,36 @@ impl ReplicaPool {
             origin.extend(work.offload_rows.iter().map(|&r| (gi, r)));
         }
 
+        // Split-boundary transcode: every gathered row is encoded for
+        // "transmission" and decoded back before the continuation, so the
+        // cloud model consumes exactly what the (possibly lossy) uplink
+        // delivered.  Identity decodes to the row's own bits, so the
+        // default menu leaves the union bit-identical.  Per-row byte
+        // counts ride to the reply stage on each CloudRow — the transfer
+        // itself is simulated there, in batch order, to keep all link
+        // state single-owner.
+        let mut row_bytes: Vec<(usize, usize)> = Vec::new(); // (encoded, wire) per union row
+        let mut codec_ratio = 1.0;
+        let mut row_td = 0usize;
+        let union = match union {
+            None => None,
+            Some(u) => {
+                let shape = u.shape().to_vec();
+                row_td = shape[1] * shape[2];
+                codec_ratio = codec.nominal_ratio(row_td);
+                let mut decoded: Vec<f32> = Vec::with_capacity(u.data().len());
+                for r in 0..shape[0] {
+                    let enc = codec.encode(&u.data()[r * row_td..(r + 1) * row_td]);
+                    row_bytes.push((enc.encoded_len, enc.bytes.len()));
+                    let dec = codec
+                        .decode(&enc.bytes, row_td)
+                        .with_context(|| format!("decoding a {} uplink payload", codec.name()))?;
+                    decoded.extend_from_slice(&dec);
+                }
+                Some(TensorF32::new(shape, decoded).map_err(|e| anyhow::anyhow!(e))?)
+            }
+        };
+
         let mut cloud_out: Vec<Vec<CloudRow>> =
             group.iter().map(|w| Vec::with_capacity(w.offload_rows.len())).collect();
         let mut busy = vec![0.0f64; group.len()];
@@ -464,13 +504,17 @@ impl ReplicaPool {
                     // retry penalty (failure detection + seeded backoff);
                     // busy time splits pro rata so per-batch accounting
                     // sums to the launch totals.
-                    for (lr, &(gi, row)) in reply.rows.iter().zip(origin.iter()) {
+                    for (ui, (lr, &(gi, row))) in
+                        reply.rows.iter().zip(origin.iter()).enumerate()
+                    {
                         cloud_out[gi].push(CloudRow {
                             row,
                             pred: lr.pred,
                             conf: lr.conf,
                             cloud_ms: lr.cloud_ms + penalty_ms,
                             fallback: false,
+                            enc_bytes: row_bytes[ui].0,
+                            wire_bytes: row_bytes[ui].1,
                         });
                         busy[gi] += lr.share_ms;
                     }
@@ -499,6 +543,9 @@ impl ReplicaPool {
                                 conf: out.conf[i],
                                 cloud_ms: local_ms + penalty_ms,
                                 fallback: true,
+                                // a degraded row never transfers
+                                enc_bytes: 0,
+                                wire_bytes: 0,
                             });
                             busy[gi] += local_ms / real as f64;
                         }
@@ -519,15 +566,20 @@ impl ReplicaPool {
         let contributing = group.iter().filter(|w| !w.offload_rows.is_empty()).count();
         let mut replies = Vec::with_capacity(group.len());
         for (gi, work) in group.into_iter().enumerate() {
-            let EdgeWork { batch, exit_out, prefix_conf, split, edge_ms, payload, launches, .. } =
+            let offloaded_any = !work.offload_rows.is_empty();
+            let EdgeWork { batch, exit_out, prefix_conf, split, codec, edge_ms, launches, .. } =
                 work;
             replies.push(ReplyWork {
                 batch,
                 exit_out,
                 prefix_conf,
                 split,
+                codec,
+                codec_ratio,
+                // raw pre-codec payload per offloaded row (frame header
+                // excluded — the reply stage adds it to the transfer)
+                row_raw_bytes: if offloaded_any { 4 * row_td } else { 0 },
                 edge_ms,
-                payload,
                 cloud_out: std::mem::take(&mut cloud_out[gi]),
                 cloud_busy_ms: busy[gi],
                 edge_launches: launches,

@@ -118,6 +118,22 @@
 //! behaviour bit for bit.  Per-state traffic and split-choice histograms
 //! land in `ServingMetrics::link_states`.
 //!
+//! # Split-boundary payload codecs
+//!
+//! [`ServiceConfig::codecs`] (`--codecs identity,f16,i8,topk:64`) installs
+//! a payload codec menu at the split boundary ([`crate::codec`]): the
+//! cloud stage encodes every offloaded row before "transmission", the
+//! uplink transfer and the offload cost `o` are charged from the *encoded*
+//! bytes, and the replica decodes before running the continuation — the
+//! cloud model consumes exactly what the (possibly lossy) uplink
+//! delivered.  The bandit and contextual policies learn over the joint
+//! `(split, codec)` action space (one UCB arm per pair).  The identity
+//! codec — the default, single-entry menu — is bit-transparent, so the
+//! default service stays byte- and decision-identical to the codec-less
+//! one; a non-transparent codec kills speculative launches instead of
+//! adopting them, because the speculation ran on the unencoded
+//! activation.  See `ARCHITECTURE.md`'s "Split-boundary codec seam".
+//!
 //! [`Service::run_serial`] keeps the single-threaded reference path; both
 //! paths share the same stage functions, so their per-request outputs are
 //! identical by construction (asserted by `tests/integration.rs`).
@@ -129,6 +145,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
+use crate::codec::{CodecMenu, PayloadCodec, FRAME_OVERHEAD};
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
 use crate::coordinator::metrics::{PoolCounters, ServingMetrics};
 use crate::coordinator::replicas::{ReplicaConfig, ReplicaPool};
@@ -253,6 +270,12 @@ pub struct ServiceConfig {
     /// schedule, deadline/retry/breaker parameters.  The `Default` — one
     /// healthy replica — reproduces the single-worker cloud stage exactly.
     pub replicas: ReplicaConfig,
+    /// split-boundary payload codec menu (`--codecs`): the codec axis of
+    /// the bandit's `(split, codec)` action space.  Bandit and contextual
+    /// policies learn over every `(split, codec)` pair; fixed policies
+    /// always use entry 0.  The `Default` — `[identity]` — reproduces the
+    /// codec-less byte stream and decision sequence bit for bit.
+    pub codecs: CodecMenu,
 }
 
 /// Policy state held by the service.
@@ -266,17 +289,41 @@ enum PolicyState {
 }
 
 impl PolicyState {
-    /// Next split layer (1-based) from the current bandit state.  `context`
-    /// is the link context observed at decision time — only the contextual
-    /// policy reads it.
-    fn choose_split(&mut self, n_layers: usize, context: usize) -> usize {
-        match self {
-            PolicyState::SplitEe(p) => p.choose_split(),
-            PolicyState::SplitEeS(p) => p.choose_split(),
-            PolicyState::Contextual(p) => p.choose_split(context),
-            PolicyState::Fixed(k) => *k,
-            PolicyState::FinalExit => n_layers,
-        }
+    /// Next `(split layer, codec index)` from the current bandit state —
+    /// split 1-based, codec an index into the service's codec menu.
+    /// `context` is the link context observed at decision time — only the
+    /// contextual policy reads it.
+    ///
+    /// SplitEE and the contextual policy are constructed with
+    /// `n_layers * n_codecs` arms (arm `c * n_layers + (split - 1)` is the
+    /// pair `(split, codec c)`), so one UCB instance learns over the whole
+    /// `(split, codec)` menu; with the default single-codec menu the arm
+    /// space — and every decision — is exactly the codec-less one.
+    /// SplitEE-S keeps per-layer arms (its side observations credit one
+    /// arm per prefix layer) and the fixed policies carry no bandit, so
+    /// they always use codec 0.
+    fn choose_split_codec(
+        &mut self,
+        n_layers: usize,
+        n_codecs: usize,
+        context: usize,
+    ) -> (usize, usize) {
+        let l = n_layers;
+        let (split, codec) = match self {
+            PolicyState::SplitEe(p) => {
+                let a0 = p.choose_split() - 1;
+                (a0 % l + 1, a0 / l)
+            }
+            PolicyState::Contextual(p) => {
+                let a0 = p.choose_split(context) - 1;
+                (a0 % l + 1, a0 / l)
+            }
+            PolicyState::SplitEeS(p) => (p.choose_split(), 0),
+            PolicyState::Fixed(k) => (*k, 0),
+            PolicyState::FinalExit => (l, 0),
+        };
+        debug_assert!(codec < n_codecs.max(1));
+        (split, codec)
     }
 
     /// Split choice that needs no bandit state (fixed policies), if any.
@@ -348,9 +395,11 @@ pub(crate) struct EdgeWork {
     /// rows (by batch index) whose confidence fell below alpha
     pub(crate) offload_rows: Vec<usize>,
     pub(crate) split: usize,
+    /// codec-menu index this batch's uplink payload is encoded with (the
+    /// other half of the bandit's `(split, codec)` decision; coalesced
+    /// groups never mix codecs)
+    pub(crate) codec: usize,
     pub(crate) edge_ms: f64,
-    /// activation payload size for the uplink simulator
-    pub(crate) payload: usize,
     /// executable launches this batch's edge stage performed
     pub(crate) launches: u64,
     /// in-flight speculative continuation (blocks past the split + final
@@ -370,6 +419,14 @@ pub(crate) struct CloudRow {
     /// serve it): `cloud_ms` is already on the edge-time basis, includes
     /// the retry penalty, and the reply stage must not draw a link transfer
     pub(crate) fallback: bool,
+    /// this row's encoded uplink payload bytes — the codec output before
+    /// dedup, excluding the fixed frame header (0 for fallback rows, which
+    /// never transfer)
+    pub(crate) enc_bytes: usize,
+    /// bytes actually shipped after the dedup layer (what the transfer is
+    /// charged for, still excluding the frame header); equals `enc_bytes`
+    /// for non-dedup codecs
+    pub(crate) wire_bytes: usize,
 }
 
 /// Edge work plus cloud results, ready for the reply stage (the hidden
@@ -379,8 +436,16 @@ pub(crate) struct ReplyWork {
     pub(crate) exit_out: ExitOutput,
     pub(crate) prefix_conf: Vec<Vec<f32>>,
     pub(crate) split: usize,
+    /// codec-menu index the batch's offloads were encoded with
+    pub(crate) codec: usize,
+    /// the codec's deterministic raw/encoded payload ratio for this
+    /// model's rows — scales the offload cost in the rewards (1.0 when
+    /// nothing offloaded or the codec is identity)
+    pub(crate) codec_ratio: f64,
+    /// raw (pre-codec) uplink payload bytes per offloaded row, excluding
+    /// the frame header (0 when nothing offloaded)
+    pub(crate) row_raw_bytes: usize,
     pub(crate) edge_ms: f64,
-    pub(crate) payload: usize,
     pub(crate) cloud_out: Vec<CloudRow>,
     /// this batch's share of the simulated cloud compute (pro-rata within
     /// each coalesced launch, so shares sum to the launch totals)
@@ -403,6 +468,7 @@ fn edge_stage(
     side: bool,
     n_layers: usize,
     split: usize,
+    codec: usize,
     batch: Batch,
     spec: Option<(&SpecLane, &Arc<SpecCounters>)>,
 ) -> Result<EdgeWork> {
@@ -411,7 +477,7 @@ fn edge_stage(
     let h0 = model.embed_hidden(&batch.tokens)?;
     let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
     edge_stage_after_embed(
-        model, edge, alpha, side, n_layers, split, batch, h0, embed_ms, launches0, spec,
+        model, edge, alpha, side, n_layers, split, codec, batch, h0, embed_ms, launches0, spec,
     )
 }
 
@@ -426,6 +492,7 @@ fn edge_stage_after_embed(
     side: bool,
     n_layers: usize,
     split: usize,
+    codec: usize,
     batch: Batch,
     h0: HiddenState,
     embed_ms: f64,
@@ -495,18 +562,17 @@ fn edge_stage_after_embed(
         }
     }
     // the split-boundary host transfer: this buffer is what the uplink
-    // ships, so it happens only when some row actually crosses the split
-    // (when speculating, the buffer already exists — it was the speculative
+    // ships (after the codec encodes it, in the cloud stage), so it
+    // happens only when some row actually crosses the split (when
+    // speculating, the buffer already exists — it was the speculative
     // launch's input)
-    let (h, payload) = if offload_rows.is_empty() {
-        (None, 0)
+    let h = if offload_rows.is_empty() {
+        None
     } else {
-        let h = match spec_h {
+        Some(match spec_h {
             Some(hh) => hh,
             None => Arc::new(h_split.to_tensor()?),
-        };
-        let payload = LinkSim::activation_payload(model.seq_len(), h.shape()[2]);
-        (Some(h), payload)
+        })
     };
     compute_ms += t1.elapsed().as_secs_f64() * 1e3;
     if !offload_rows.is_empty() {
@@ -535,8 +601,8 @@ fn edge_stage_after_embed(
         prefix_conf,
         offload_rows,
         split,
+        codec,
         edge_ms,
-        payload,
         launches,
         spec: spec_handle,
     })
@@ -567,8 +633,18 @@ fn reply_stage(
 ) {
     let l = n_layers;
     // this batch's rewards/costs are charged at the instantaneous
-    // communication cost (identity under the static scenario)
-    let cost = &state.effective_cost(cost);
+    // communication cost (identity under the static scenario), scaled by
+    // the codec's deterministic raw/encoded payload ratio — the offload
+    // charge is per transmitted byte, and the codec shrinks the bytes.
+    // The nominal (not measured) ratio keeps the reward a pure function of
+    // the decision sequence; the identity codec's ratio is exactly 1.0 and
+    // skips the scaling entirely, so the default menu reproduces the
+    // codec-less rewards bit for bit.
+    let mut eff = state.effective_cost(cost);
+    if work.codec_ratio != 1.0 {
+        eff = eff.with_offload(eff.offload / eff.lambda / work.codec_ratio);
+    }
+    let cost = &eff;
     if !state.outage {
         // the uplink simulator serves this batch at the sampled condition
         link.profile = state.profile;
@@ -578,8 +654,10 @@ fn reply_stage(
         exit_out,
         prefix_conf,
         split,
+        codec,
+        codec_ratio: _,
+        row_raw_bytes,
         edge_ms,
-        payload,
         cloud_out,
         cloud_busy_ms,
         edge_launches,
@@ -596,6 +674,10 @@ fn reply_stage(
 
     // (pred, conf, extra_latency_ms, outage) for rows that were offloaded
     let mut final_by_row: Vec<Option<(usize, f32, f64, bool)>> = vec![None; n_real];
+    // per-row delivered uplink payload bytes (raw, encoded) for the cohort
+    // attribution below; stays (0, 0) for exits, outages and fallbacks
+    let mut bytes_by_row: Vec<(u64, u64)> = vec![(0, 0); n_real];
+    let (mut raw_up, mut enc_up, mut saved_up) = (0u64, 0u64, 0u64);
     for cr in cloud_out {
         // a pool-degraded row already carries its on-device latency (edge
         // compute basis, plus the simulated retry/backoff penalty): no
@@ -607,15 +689,21 @@ fn reply_stage(
             continue;
         }
         // a scenario-level outage fails every transfer deterministically
-        // (no rng drawn); otherwise the stochastic link decides
+        // (no rng drawn); otherwise the stochastic link decides.  The
+        // transfer is charged for the bytes the codec actually ships —
+        // post-dedup payload plus the fixed frame header.
         let result = if state.outage {
             TransferResult::Outage
         } else {
-            link.transfer(payload)
+            link.transfer(cr.wire_bytes + FRAME_OVERHEAD)
         };
         match result {
             TransferResult::Delivered { ms, .. } => {
                 final_by_row[cr.row] = Some((cr.pred, cr.conf, ms + cr.cloud_ms, false));
+                bytes_by_row[cr.row] = (row_raw_bytes as u64, cr.enc_bytes as u64);
+                raw_up += row_raw_bytes as u64;
+                enc_up += cr.enc_bytes as u64;
+                saved_up += cr.enc_bytes.saturating_sub(cr.wire_bytes) as u64;
             }
             TransferResult::Outage => {
                 // fall back: the cloud result is unreachable; the edge must
@@ -629,6 +717,7 @@ fn reply_stage(
     let state_offloads = final_by_row.iter().flatten().filter(|r| !r.3).count() as u64;
     let state_outages = final_by_row.iter().flatten().filter(|r| r.3).count() as u64;
     metrics.record_link_state(&state.label, split, n_real, state_offloads, state_outages);
+    metrics.record_uplink_bytes(raw_up, enc_up, saved_up);
 
     for (row, req) in batch.requests.iter().enumerate() {
         let queue_ms = batch
@@ -666,11 +755,15 @@ fn reply_stage(
         };
 
         match policy {
-            PolicyState::SplitEe(p) => p.record(split, reward),
+            // arm `codec * l + (split - 1)` is the `(split, codec)` pair —
+            // the inverse of `PolicyState::choose_split_codec`'s decode
+            // (the 1-based arithmetic works out: `codec * l + split` is the
+            // 1-based index of that arm)
+            PolicyState::SplitEe(p) => p.record(codec * l + split, reward),
             // keyed by the context observed at decision time — `state` is
             // exactly the condition under which this batch's split was
             // chosen, whatever the link has drifted to since
-            PolicyState::Contextual(p) => p.record(state.context, split, reward),
+            PolicyState::Contextual(p) => p.record(state.context, codec * l + split, reward),
             PolicyState::SplitEeS(p) => {
                 let mut prefix: Vec<f32> = prefix_conf.iter().map(|layer| layer[row]).collect();
                 prefix.push(exit_out.conf[row]);
@@ -690,7 +783,8 @@ fn reply_stage(
             energy,
         );
         if let Some(tag) = &req.tag {
-            metrics.record_cohort(tag, offloaded, latency);
+            let (row_raw, row_enc) = bytes_by_row[row];
+            metrics.record_cohort(tag, offloaded, latency, row_raw, row_enc);
         }
         let _ = req.reply.send(Response {
             id: req.id,
@@ -739,6 +833,10 @@ pub struct Service {
     policy: PolicyState,
     alpha: f64,
     coalesce: CoalesceConfig,
+    /// the instantiated `(split, codec)` menu's codec axis, indexed by the
+    /// codec id the policy chooses; `dedup:*` entries share one chunk
+    /// store whose counters are wired into `metrics.dedup`
+    codecs: Vec<Arc<dyn PayloadCodec>>,
     /// the speculation lane (worker thread) when speculation resolved on
     spec_lane: Option<SpecLane>,
     /// the cloud tier: a pool of replica lanes with fault injection,
@@ -782,7 +880,7 @@ fn fingerprint_of(config: &ServiceConfig, model: &MultiExitModel) -> String {
     };
     format!(
         "v1 policy={policy} alpha={:016x} beta={:016x} layers={} link={}:{} \
-         replicas={} dispatch={} faults={} backend={}",
+         replicas={} dispatch={} faults={} backend={} codecs={}",
         config.alpha.to_bits(),
         config.beta.to_bits(),
         model.n_layers(),
@@ -792,6 +890,9 @@ fn fingerprint_of(config: &ServiceConfig, model: &MultiExitModel) -> String {
         config.replicas.dispatch.name(),
         config.replicas.faults.name(),
         model.backend_name(),
+        // the codec menu reshapes the bandit's arm space, so snapshots
+        // only interchange between services with the identical menu
+        config.codecs.names(),
     )
 }
 
@@ -837,15 +938,22 @@ impl Service {
         config: &ServiceConfig,
     ) -> Service {
         let l = model.n_layers();
+        // The bandit policies learn over the full (split, codec) menu: one
+        // UCB with l * n_codecs arms (see PolicyState::choose_split_codec
+        // for the arm <-> pair mapping).  SplitEE-S keeps per-layer arms —
+        // its side observations credit one arm per prefix layer — and uses
+        // codec 0.  With the default single-codec menu every arm count is
+        // exactly the codec-less one.
+        let n_codecs = config.codecs.len().max(1);
         let policy = match config.policy {
             PolicyKind::SplitEe => {
-                PolicyState::SplitEe(SplitEePolicy::new(l, config.alpha, config.beta))
+                PolicyState::SplitEe(SplitEePolicy::new(l * n_codecs, config.alpha, config.beta))
             }
             PolicyKind::SplitEeS => {
                 PolicyState::SplitEeS(SplitEeSPolicy::new(l, config.alpha, config.beta))
             }
             PolicyKind::Contextual => PolicyState::Contextual(ContextualSplitPolicy::new(
-                l,
+                l * n_codecs,
                 config.link.n_contexts(),
                 config.alpha,
                 config.beta,
@@ -882,6 +990,10 @@ impl Service {
         let pool_counters = PoolCounters::new(config.replicas.n.max(1));
         let mut metrics = ServingMetrics::new(l);
         metrics.pool = Arc::clone(&pool_counters);
+        // instantiate the codec menu; the shared dedup chunk store's
+        // counters ride into the metrics report the same way the pool's do
+        let (codecs, dedup_cache) = config.codecs.build();
+        metrics.dedup = Arc::clone(&dedup_cache.counters);
         let replicas = ReplicaPool::new(Arc::clone(&model), config.replicas.clone(), pool_counters);
         let fingerprint = fingerprint_of(config, &model);
         Service {
@@ -898,6 +1010,7 @@ impl Service {
             policy,
             alpha: config.alpha,
             coalesce: config.coalesce,
+            codecs,
             spec_lane: speculate.then(SpecLane::new),
             snapshot_cfg: None,
             batches_done: 0,
@@ -1057,13 +1170,16 @@ impl Service {
         let (batch_tx, batch_rx) = mpsc::sync_channel::<Batch>(PIPELINE_DEPTH);
         let (edge_tx, edge_rx) = mpsc::sync_channel::<EdgeWork>(PIPELINE_DEPTH);
         let (cloud_tx, cloud_rx) = mpsc::sync_channel::<ReplyWork>(PIPELINE_DEPTH);
-        // split tokens: reply stage -> edge stage.  At most one token is in
-        // flight per batch; the seed token below covers the first batch.
-        let (split_tx, split_rx) = mpsc::channel::<usize>();
+        // (split, codec) tokens: reply stage -> edge stage.  At most one
+        // token is in flight per batch; the seed token below covers the
+        // first batch.
+        let (split_tx, split_rx) = mpsc::channel::<(usize, usize)>();
         // the edge stage's handle on the speculation lane + the shared
         // lifecycle counters (cloned before `self` is destructured below)
         let spec_lane = self.spec_lane.clone();
         let spec_counters = Arc::clone(&self.metrics.spec);
+        let n_codecs = self.codecs.len();
+        let codecs_cloud: Vec<Arc<dyn PayloadCodec>> = self.codecs.clone();
 
         let Service {
             model,
@@ -1084,7 +1200,7 @@ impl Service {
         // updates keyed) under — the same sequence the serial loop walks.
         let mut cur_state = scenario.next_state(&base_profile);
         if static_split.is_none() {
-            let _ = split_tx.send(policy.choose_split(l, cur_state.context));
+            let _ = split_tx.send(policy.choose_split_codec(l, n_codecs, cur_state.context));
         }
         let model_edge = Arc::clone(model);
         let model_cloud = Arc::clone(model);
@@ -1115,10 +1231,12 @@ impl Service {
                     let t0 = Instant::now();
                     let h0 = model_edge.embed_hidden(&batch.tokens)?;
                     let embed_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let split = match static_split {
-                        Some(k) => k,
+                    // fixed policies carry no bandit: they always serve
+                    // with codec-menu entry 0
+                    let (split, codec) = match static_split {
+                        Some(k) => (k, 0),
                         None => match split_rx.recv() {
-                            Ok(k) => k,
+                            Ok(pair) => pair,
                             Err(_) => break, // reply stage is gone
                         },
                     };
@@ -1129,6 +1247,7 @@ impl Service {
                         side,
                         l,
                         split,
+                        codec,
                         batch,
                         h0,
                         embed_ms,
@@ -1180,6 +1299,7 @@ impl Service {
                                 }
                             };
                             if next.split == group[0].split
+                                && next.codec == group[0].codec
                                 && rows + next.offload_rows.len() <= max_rows
                             {
                                 rows += next.offload_rows.len();
@@ -1196,7 +1316,7 @@ impl Service {
                     // before the channel send so the reply stage's snapshot
                     // export can never deadlock against a blocked send
                     let replies = lock_pool(&replicas_cloud)
-                        .serve_group(&model_cloud, &edge, &cloud, group)?;
+                        .serve_group(&model_cloud, &edge, &cloud, group, &codecs_cloud)?;
                     let mut closed = false;
                     for reply in replies {
                         if cloud_tx.send(reply).is_err() {
@@ -1246,7 +1366,8 @@ impl Service {
                 // the UCB round counter, never the arm statistics.
                 cur_state = scenario.next_state(&base_profile);
                 if static_split.is_none() {
-                    let _ = split_tx.send(policy.choose_split(l, cur_state.context));
+                    let _ =
+                        split_tx.send(policy.choose_split_codec(l, n_codecs, cur_state.context));
                 }
             }
 
@@ -1284,18 +1405,21 @@ impl Service {
         // the exact sequence the pipelined reply stage walks
         let base_profile = self.base_profile;
         let state = self.scenario.next_state(&base_profile);
-        let split = self.policy.choose_split(l, state.context);
+        let (split, codec) =
+            self.policy.choose_split_codec(l, self.codecs.len(), state.context);
         let side = self.side_info();
         // The serial path never speculates: it is the pristine reference
         // whose decisions the speculative pipeline must reproduce exactly
         // (tests/speculation.rs), and with one thread there is nothing to
         // overlap the continuation with.
-        let work = edge_stage(&self.model, &self.edge, self.alpha, side, l, split, batch, None)?;
+        let work =
+            edge_stage(&self.model, &self.edge, self.alpha, side, l, split, codec, batch, None)?;
         let mut replies = lock_pool(&self.replicas).serve_group(
             &self.model,
             &self.edge,
             &self.cloud,
             vec![work],
+            &self.codecs,
         )?;
         let work = replies.pop().expect("one reply per batch");
         reply_stage(

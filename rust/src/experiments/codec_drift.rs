@@ -1,0 +1,307 @@
+//! Codec drift harness: how much does each split-boundary payload codec
+//! move the *decisions*, and what does it save on the wire?
+//!
+//! For every codec in a [`CodecMenu`] this runs the same samples to a split
+//! layer, ships the hidden state through `encode -> decode`, finishes the
+//! forward pass from the reconstruction, and compares the final exit against
+//! the uncompressed continuation:
+//!
+//! * **agreement** — fraction of samples whose top-1 prediction is unchanged
+//!   (the quantity the acceptance gate pins: lossy uplink compression is
+//!   only admissible while the decisions survive it);
+//! * **conf drift** — mean |Δ confidence| at the final exit;
+//! * **uplink ratio** — raw bytes / encoded bytes over the same rows,
+//!   *excluding* the fixed per-transfer frame header (the header is charged
+//!   by the link simulator either way, so the ratio isolates the codec);
+//! * **max |err|** — worst reconstruction error of any hidden value.
+//!
+//! Exposed three ways: `splitee codec-drift` (synthetic model, prints the
+//! table and folds `codec_*` keys into `BENCH_serving.json` next to the
+//! serving bench's), the serving bench's codec leg (same [`measure`] call on
+//! its own workload), and the CI smoke leg that asserts f16 agreement.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::codec::{CodecMenu, PayloadCodec};
+use crate::model::{ModelWeights, MultiExitModel};
+use crate::runtime::Backend;
+use crate::tensor::{TensorF32, TensorI32};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+use super::report::Table;
+
+/// Per-codec drift measurement against the uncompressed continuation.
+#[derive(Debug, Clone)]
+pub struct CodecDrift {
+    /// menu name of the codec (`identity`, `i8`, `topk:64`, ...)
+    pub codec: String,
+    /// fraction of samples with an unchanged top-1 prediction in [0, 1]
+    pub agreement: f64,
+    /// mean |Δ confidence| at the final exit
+    pub conf_drift: f64,
+    /// worst |reconstructed - original| over every hidden value
+    pub max_abs_err: f64,
+    /// raw uplink bytes over the measured rows (4 B per f32)
+    pub raw_bytes: u64,
+    /// encoded uplink bytes over the same rows (pre-dedup codec output,
+    /// excluding the fixed frame header)
+    pub enc_bytes: u64,
+}
+
+impl CodecDrift {
+    /// raw / encoded uplink bytes (1.0 when nothing was encoded).
+    pub fn uplink_ratio(&self) -> f64 {
+        if self.enc_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.enc_bytes as f64
+        }
+    }
+
+    /// The codec's menu name flattened into a metric-key fragment
+    /// (`topk:64` -> `topk_64`), so every emitted key matches the CI
+    /// gate's `codec_` prefix grammar.
+    pub fn key_name(&self) -> String {
+        self.codec.replace([':', ','], "_")
+    }
+}
+
+/// Measure every codec in `menu` on `tokens` through `model`, offloading at
+/// `split` (0-based).  The uncompressed continuation is computed once per
+/// sample and shared across codecs, so the per-codec cost is one
+/// encode/decode plus one cloud-share forward.
+///
+/// Stateful codecs (dedup) keep their cache across samples — exactly like a
+/// serving run, so repeated activations count as hits here too.
+pub fn measure(
+    model: &MultiExitModel,
+    tokens: &[TensorI32],
+    split: usize,
+    menu: &CodecMenu,
+) -> Result<Vec<CodecDrift>> {
+    let (codecs, _dedup) = menu.build();
+    let mut out: Vec<CodecDrift> = codecs
+        .iter()
+        .map(|c| CodecDrift {
+            codec: c.name(),
+            agreement: 0.0,
+            conf_drift: 0.0,
+            max_abs_err: 0.0,
+            raw_bytes: 0,
+            enc_bytes: 0,
+        })
+        .collect();
+    let mut agree = vec![0u64; codecs.len()];
+
+    for t in tokens {
+        let (h, _exit) = model.run_split(t, split)?;
+        let baseline = model.forward_rest_exit(&h, split)?;
+        let row = h.data();
+        for (ci, codec) in codecs.iter().enumerate() {
+            let enc = codec.encode(row);
+            let dec = codec
+                .decode(&enc.bytes, row.len())
+                .with_context(|| format!("decoding a {} drift payload", codec.name()))?;
+            let mut worst = 0f32;
+            for (a, b) in row.iter().zip(dec.iter()) {
+                worst = worst.max((a - b).abs());
+            }
+            let ht = TensorF32::new(h.shape().to_vec(), dec).map_err(|e| anyhow::anyhow!(e))?;
+            let got = model.forward_rest_exit(&ht, split)?;
+            let d = &mut out[ci];
+            if got.pred[0] == baseline.pred[0] {
+                agree[ci] += 1;
+            }
+            d.conf_drift += (got.conf[0] - baseline.conf[0]).abs() as f64;
+            d.max_abs_err = d.max_abs_err.max(worst as f64);
+            d.raw_bytes += 4 * row.len() as u64;
+            d.enc_bytes += enc.encoded_len as u64;
+        }
+    }
+
+    let n = tokens.len().max(1) as f64;
+    for (ci, d) in out.iter_mut().enumerate() {
+        d.agreement = agree[ci] as f64 / n;
+        d.conf_drift /= n;
+    }
+    Ok(out)
+}
+
+/// The drift measurements as flat `codec_*` metric keys
+/// (`codec_i8_uplink_ratio`, `codec_f16_agreement`, ...), the shape both
+/// `BENCH_serving.json` and the CI smoke leg consume.
+pub fn metric_keys(drifts: &[CodecDrift]) -> BTreeMap<String, f64> {
+    let mut keys = BTreeMap::new();
+    for d in drifts {
+        let k = d.key_name();
+        keys.insert(format!("codec_{k}_agreement"), d.agreement);
+        keys.insert(format!("codec_{k}_uplink_ratio"), d.uplink_ratio());
+        keys.insert(format!("codec_{k}_conf_drift"), d.conf_drift);
+        keys.insert(format!("codec_{k}_max_abs_err"), d.max_abs_err);
+    }
+    keys
+}
+
+/// Render the measurements as the `splitee codec-drift` report table.
+pub fn render(drifts: &[CodecDrift], samples: usize, split: usize) -> String {
+    let mut t = Table::new(&[
+        "codec", "agreement", "conf drift", "max |err|", "raw B", "enc B", "ratio",
+    ]);
+    for d in drifts {
+        t.row(vec![
+            d.codec.clone(),
+            format!("{:.4}", d.agreement),
+            format!("{:.5}", d.conf_drift),
+            format!("{:.3e}", d.max_abs_err),
+            format!("{}", d.raw_bytes),
+            format!("{}", d.enc_bytes),
+            format!("{:.2}x", d.uplink_ratio()),
+        ]);
+    }
+    format!(
+        "codec drift over {samples} samples, offloading at layer {} (1-based)\n{}",
+        split + 1,
+        t.render()
+    )
+}
+
+/// The synthetic reference-backend workload the `codec-drift` subcommand and
+/// the CI smoke leg measure on: the serving bench's no-artifact model (12
+/// layers, d=32, T=16 — 512-value uplink rows) and a seeded token stream.
+pub fn synthetic_workload(
+    samples: usize,
+    seed: u64,
+) -> Result<(Arc<MultiExitModel>, Vec<TensorI32>)> {
+    let (layers, d, ff, vocab, seq, classes) = (12, 32, 64, 256, 16, 2);
+    let weights = ModelWeights::synthetic(layers, d, ff, vocab, seq, classes, 0xBE7C);
+    let model = Arc::new(MultiExitModel::from_weights(
+        "synthetic",
+        "reference",
+        weights,
+        4,
+        seq,
+        vec![1, 8],
+        &Backend::reference(),
+    )?);
+    let mut rng = Rng::new(seed);
+    let tokens = (0..samples)
+        .map(|_| {
+            TensorI32::new(
+                vec![1, seq],
+                (0..seq).map(|_| rng.below(vocab as u64) as i32).collect(),
+            )
+            .map_err(|e| anyhow::anyhow!(e))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((model, tokens))
+}
+
+/// `splitee codec-drift` — measure `menu` on the synthetic workload, fold
+/// the `codec_*` keys into `bench_path` (creating it if absent, preserving
+/// every non-`codec_` key an earlier bench run wrote), and return the
+/// printable report.
+pub fn run(
+    menu: &CodecMenu,
+    samples: usize,
+    seed: u64,
+    bench_path: &std::path::Path,
+) -> Result<String> {
+    let (model, tokens) = synthetic_workload(samples, seed)?;
+    let split = model.n_layers() / 2 - 1;
+    let drifts = measure(&model, &tokens, split, menu)?;
+
+    let mut obj: BTreeMap<String, Json> = match std::fs::read_to_string(bench_path) {
+        Ok(text) => json::parse(&text)
+            .with_context(|| format!("parsing {}", bench_path.display()))?
+            .as_obj()
+            .with_context(|| format!("{} is not a JSON object", bench_path.display()))?
+            .clone(),
+        Err(_) => BTreeMap::new(),
+    };
+    for (k, v) in metric_keys(&drifts) {
+        obj.insert(k, Json::Num(v));
+    }
+    json::write_atomic(bench_path, &Json::Obj(obj).to_string())
+        .with_context(|| format!("writing {}", bench_path.display()))?;
+
+    Ok(format!(
+        "{}\ncodec_* keys folded into {}",
+        render(&drifts, samples, split),
+        bench_path.display()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_workload() -> (Arc<MultiExitModel>, Vec<TensorI32>) {
+        let weights = ModelWeights::synthetic(4, 8, 16, 32, 4, 2, 0xD01F);
+        let model = Arc::new(
+            MultiExitModel::from_weights(
+                "synthetic",
+                "reference",
+                weights,
+                2,
+                4,
+                vec![1, 4],
+                &Backend::reference(),
+            )
+            .expect("tiny model"),
+        );
+        let mut rng = Rng::new(0xA11CE);
+        let tokens = (0..12)
+            .map(|_| {
+                TensorI32::new(vec![1, 4], (0..4).map(|_| rng.below(32) as i32).collect())
+                    .expect("tokens")
+            })
+            .collect();
+        (model, tokens)
+    }
+
+    #[test]
+    fn identity_never_drifts_and_lossy_codecs_stay_bounded() {
+        let (model, tokens) = tiny_workload();
+        let menu = CodecMenu::from_list("identity,f16,i8").expect("menu");
+        let drifts = measure(&model, &tokens, 1, &menu).expect("measure");
+        assert_eq!(drifts.len(), 3);
+        let id = &drifts[0];
+        assert_eq!(id.codec, "identity");
+        assert_eq!(id.agreement, 1.0, "identity must be bit-transparent");
+        assert_eq!(id.conf_drift, 0.0);
+        assert_eq!(id.max_abs_err, 0.0);
+        assert_eq!(id.raw_bytes, id.enc_bytes);
+        // f16 is near-lossless (~1e-3 relative error): decisions survive.
+        // i8 quantizes harder, so on this tiny random model only a loose
+        // floor is pinned here — the CI smoke leg holds the tight one on
+        // the full synthetic reference workload.
+        assert!(drifts[1].agreement >= 0.9, "f16 agreement {}", drifts[1].agreement);
+        assert!(drifts[2].agreement >= 0.5, "i8 agreement {}", drifts[2].agreement);
+        for lossy in &drifts[1..] {
+            assert!(lossy.enc_bytes < lossy.raw_bytes, "{} must compress", lossy.codec);
+        }
+        // 4 B -> 1 B payload plus one 4-byte scale per row
+        assert!(drifts[2].uplink_ratio() > 3.0, "i8 ratio {}", drifts[2].uplink_ratio());
+    }
+
+    #[test]
+    fn metric_keys_flatten_names_for_the_gate() {
+        let drifts = vec![CodecDrift {
+            codec: "topk:64".to_string(),
+            agreement: 0.5,
+            conf_drift: 0.1,
+            max_abs_err: 0.2,
+            raw_bytes: 100,
+            enc_bytes: 50,
+        }];
+        let keys = metric_keys(&drifts);
+        assert_eq!(keys.get("codec_topk_64_agreement"), Some(&0.5));
+        assert_eq!(keys.get("codec_topk_64_uplink_ratio"), Some(&2.0));
+        assert!(keys.contains_key("codec_topk_64_conf_drift"));
+        assert!(keys.contains_key("codec_topk_64_max_abs_err"));
+    }
+}

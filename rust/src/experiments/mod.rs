@@ -8,6 +8,7 @@
 //! | Figure 7 (cumulative regret)   | [`regret`]  | `splitee regret` |
 //! | section 5.4 (beyond-layer-6)   | [`sec5_4`]  | `splitee sec54` |
 //! | ablations (beta, mu, alpha...) | [`ablations`] | `splitee ablations` |
+//! | codec drift (beyond the paper)  | [`codec_drift`] | `splitee codec-drift` |
 //!
 //! The harness evaluates policies on **confidence caches**: one full forward
 //! pass per dataset through the PJRT `prefix_full` graph records every
@@ -17,6 +18,7 @@
 
 pub mod ablations;
 pub mod cache;
+pub mod codec_drift;
 pub mod figures;
 pub mod regret;
 pub mod report;

@@ -23,7 +23,7 @@
 //!   [`experiments`] harness that regenerates every table and figure of the
 //!   paper.
 //!
-//! The three deployment-facing switches every serving entry point takes:
+//! The deployment-facing switches every serving entry point takes:
 //!
 //! * `--backend auto|reference|pjrt` — which [`runtime::Backend`] executes
 //!   the model (`reference` runs everywhere, no artifacts needed);
@@ -32,7 +32,11 @@
 //!   decision-invariant);
 //! * `--link static|markov|markov:<seed>|trace:<path>` — the uplink
 //!   scenario ([`sim::link::LinkScenario`]): fixed, Markov-modulated, or a
-//!   replayed trace; pair dynamic links with `--policy contextual`.
+//!   replayed trace; pair dynamic links with `--policy contextual`;
+//! * `--codecs identity,f16,i8,topk:64` — the split-boundary payload
+//!   [`codec`] menu: the bandit learns over `(split, codec)` pairs and the
+//!   uplink is charged from the encoded bytes (`identity`, the default, is
+//!   bit-transparent).
 //!
 //! Quick start (after `make artifacts && cargo build --release`; see the
 //! repository `README.md` for the artifact-free reference-backend path):
@@ -46,6 +50,7 @@
 //! ```
 
 pub mod bandit;
+pub mod codec;
 pub mod config;
 pub mod coordinator;
 pub mod cost;

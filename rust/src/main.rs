@@ -10,6 +10,7 @@
 //! splitee sec54                      paper section 5.4 analysis
 //! splitee ablations --which beta     beta/mu/alpha/side ablations
 //! splitee serve --dataset imdb       live co-inference serving demo
+//! splitee codec-drift                payload-codec agreement/byte report
 //! ```
 
 use std::sync::Arc;
@@ -21,8 +22,8 @@ use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, Service
 use splitee::coordinator::service::{PolicyKind, SpeculateMode};
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::{Dataset, SampleStream};
-use splitee::experiments::{ablations, figures, regret, report, sec5_4, table2,
-                           ConfidenceCache};
+use splitee::experiments::{ablations, codec_drift, figures, regret, report, sec5_4,
+                           table2, ConfidenceCache};
 use splitee::model::{ModelWeights, MultiExitModel};
 use splitee::runtime::Backend;
 use splitee::server::{serve_tcp, ServerConfig, ServerCounters};
@@ -86,6 +87,7 @@ fn run(args: &Args) -> Result<()> {
         }
         "serve" => serve(args, &settings),
         "loadgen" => loadgen(args, &settings),
+        "codec-drift" => codec_drift_cmd(args, &settings),
         "help" | _ => {
             println!("{}", HELP);
             if sub != "help" {
@@ -118,6 +120,7 @@ Subcommands
                 [--replicas N] [--dispatch round-robin|least-loaded]
                 [--faults kill@B:R|slow@B:RxF|flaky@R:P[,seed=S]]
                 [--snapshot PATH] [--snapshot-every N]
+               [--codecs identity,f16,i8,topk:64]
                with --listen HOST:PORT requests arrive over a concurrent
                TCP front end (newline JSON; optional first line
                hello {\"client\":NAME,\"link\":wifi|5g|4g|3g} registers a
@@ -130,6 +133,11 @@ Subcommands
                [--addr HOST:PORT [--seq-len N] [--vocab N]]
                without --addr it self-hosts a synthetic serving plane on
                loopback and enforces the shed-accounting identity
+  codec-drift  per-codec top-1 agreement, confidence drift and uplink byte
+               ratio vs the uncompressed continuation, on the synthetic
+               reference model (no artifacts needed); folds codec_* keys
+               into BENCH_serving.json [--samples 512]
+               [--codecs identity,f16,i8,topk:64 (default: that menu)]
 
 Common flags
   --artifacts DIR   artifact directory (default: artifacts)
@@ -149,6 +157,12 @@ Common flags
                     on a different replica with backoff, degrade to
                     on-device final exit when none can serve
   --dispatch NAME   replica dispatch policy: round-robin|least-loaded
+  --codecs LIST     split-boundary payload codec menu, comma-joined
+                    identity|f16|i8|topk:K|dedup:INNER names (default:
+                    identity — bit-transparent); with more than one entry
+                    the bandit learns over (split, codec) pairs and the
+                    uplink is charged from the encoded bytes (also via
+                    SPLITEE_CODECS in tests)
   --faults SPEC     deterministic replica fault schedule, '|'-joined
                     kill@BATCH:REPLICA, slow@BATCH:REPLICAxFACTOR and
                     flaky@REPLICA:P events, optional ',seed=N' trailer
@@ -311,6 +325,7 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
         speculate: SpeculateMode::from_name(&settings.speculate)?,
         link: scenario,
         replicas: settings.replica_config()?,
+        codecs: settings.codec_menu()?,
     };
 
     let router = Router::new(RouterConfig::default());
@@ -406,18 +421,33 @@ fn serve(args: &Args, settings: &Settings) -> Result<()> {
     println!("— serving report ({dataset_name}, policy {:?}, network {:?}) —",
              args.get_or("policy", "splitee"), args.get_or("network", "3g"));
     println!("{}", service.metrics.report());
+    let menu = settings.codec_menu()?;
+    let l = model.n_layers();
+    // an arm is a (split, codec) pair once the menu has more than one entry
+    // and the policy expanded its arm space (SplitEE-S keeps L arms):
+    // 0-based arm a = (codec * L) + (split - 1)
+    let arm_name = |a0: usize, n_arms: usize| {
+        if menu.len() > 1 && n_arms == l * menu.len() {
+            format!("L{} {}", a0 % l + 1, menu.specs[a0 / l].name())
+        } else {
+            format!("L{}", a0 + 1)
+        }
+    };
     if let Some((best, arms)) = service.bandit_summary() {
-        println!("bandit: best empirical split = layer {best}");
+        println!("bandit: best empirical action = {}", arm_name(best - 1, arms.len()));
         for (i, (n, q)) in arms.iter().enumerate() {
-            println!("  L{:<2} pulls {:<6} Q {:+.4}", i + 1, n, q);
+            println!("  {:<12} pulls {:<6} Q {:+.4}", arm_name(i, arms.len()), n, q);
         }
     }
     if let Some(per_ctx) = service.contextual_summary() {
         for (ctx, arms) in per_ctx.iter().enumerate() {
-            let modal = arms.iter().enumerate().max_by_key(|(_, (n, _))| *n).map(|(i, _)| i + 1);
+            let modal = arms.iter().enumerate().max_by_key(|(_, (n, _))| *n).map(|(i, _)| i);
             let pulls: u64 = arms.iter().map(|(n, _)| n).sum();
             if let Some(modal) = modal.filter(|_| pulls > 0) {
-                println!("context {ctx}: {pulls} pulls, modal split = layer {modal}");
+                println!(
+                    "context {ctx}: {pulls} pulls, modal action = {}",
+                    arm_name(modal, arms.len())
+                );
             }
         }
     }
@@ -494,6 +524,7 @@ fn loadgen(args: &Args, settings: &Settings) -> Result<()> {
         speculate: SpeculateMode::from_name(&settings.speculate)?,
         link: LinkScenario::from_name(&settings.link)?,
         replicas: settings.replica_config()?,
+        codecs: settings.codec_menu()?,
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -544,5 +575,31 @@ fn loadgen(args: &Args, settings: &Settings) -> Result<()> {
         report.rejected
     );
     log::info!("front end answered {served} requests");
+    Ok(())
+}
+
+/// `splitee codec-drift` — per-codec top-1 agreement, confidence drift and
+/// uplink byte ratio against the uncompressed continuation, on the synthetic
+/// reference model (no artifacts needed).  Folds the `codec_*` keys into
+/// `BENCH_serving.json` so the regression gate sees them next to the serving
+/// bench's.
+fn codec_drift_cmd(args: &Args, settings: &Settings) -> Result<()> {
+    let samples = args.get_num("samples", 512usize).map_err(anyhow::Error::msg)?;
+    if samples == 0 {
+        bail!("--samples must be positive");
+    }
+    // default to the full menu here: measuring only the identity codec says
+    // nothing, and the serving default stays identity regardless
+    let menu = match args.get("codecs") {
+        Some(_) => settings.codec_menu()?,
+        None => splitee::codec::CodecMenu::from_list("identity,f16,i8,topk:64")?,
+    };
+    let out = codec_drift::run(
+        &menu,
+        samples,
+        settings.seed,
+        std::path::Path::new("BENCH_serving.json"),
+    )?;
+    println!("{out}");
     Ok(())
 }

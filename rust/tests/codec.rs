@@ -1,0 +1,303 @@
+//! Property tests for the split-boundary payload codecs (`splitee::codec`).
+//!
+//! These pin the contracts the serving plane builds on:
+//!
+//! * `identity` is **bit**-transparent — every f32 bit pattern, NaNs
+//!   included, survives encode/decode unchanged (the precondition for the
+//!   default menu reproducing the codec-less byte stream and decisions);
+//! * the lossy codecs' reconstruction error is bounded by the per-row
+//!   absmax: f16 by rounding at 10 mantissa bits, i8 by half a quantization
+//!   step — so a bound the reward model can reason about, not "best effort";
+//! * `topk:k` keeps its selected entries *exactly* (bit-for-bit) and
+//!   reconstructs everything else as zero, never dropping a larger-|x|
+//!   entry in favor of a smaller one;
+//! * the dedup layer is a pure transport optimization: its decode is
+//!   bit-identical to the inner codec's for every chunk alignment —
+//!   empty rows, exact multiples of the chunk size, ragged tails and
+//!   repeated rows — and its counters satisfy `hits + misses == chunks`.
+
+use splitee::codec::{CodecSpec, DedupCache, PayloadCodec, CodecMenu, DEDUP_CHUNK};
+use splitee::prop_assert;
+use splitee::util::prop::{check, PropConfig};
+use splitee::util::rng::Rng;
+
+/// A row of "interesting" f32s: mixed magnitudes, exact zeros, negative
+/// zeros, subnormals and (when `allow_nan`) NaN/infinity bit patterns.
+fn gen_row(rng: &mut Rng, size: usize, allow_nan: bool) -> Vec<f32> {
+    let n = rng.range(0, size * 4 + 2);
+    (0..n)
+        .map(|_| match rng.below(10) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::from_bits(rng.below(0x0080_0000) as u32), // subnormal
+            3 if allow_nan => f32::NAN,
+            4 if allow_nan => f32::INFINITY,
+            5 if allow_nan => f32::NEG_INFINITY,
+            6 => (rng.normal() as f32) * 1e4,
+            _ => (rng.normal() as f32) * (10f64.powi(rng.range(0, 6) as i32 - 2) as f32),
+        })
+        .collect()
+}
+
+fn absmax(row: &[f32]) -> f32 {
+    row.iter().fold(0f32, |m, x| m.max(x.abs()))
+}
+
+#[test]
+fn identity_round_trips_every_bit_pattern() {
+    check(
+        PropConfig { cases: 256, ..Default::default() },
+        |rng, size| gen_row(rng, size, true),
+        |row| {
+            let codec = CodecSpec::Identity.build(&DedupCache::new());
+            let enc = codec.encode(row);
+            prop_assert!(
+                enc.bytes.len() == 4 * row.len() && enc.encoded_len == enc.bytes.len(),
+                "identity must be exactly 4 B per value: {} for {} values",
+                enc.bytes.len(),
+                row.len()
+            );
+            let dec = codec.decode(&enc.bytes, row.len()).map_err(|e| format!("{e:#}"))?;
+            for (i, (a, b)) in row.iter().zip(dec.iter()).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "bit drift at {i}: {:#010x} -> {:#010x}",
+                    a.to_bits(),
+                    b.to_bits()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn f16_error_is_bounded_by_rounding_at_ten_mantissa_bits() {
+    check(
+        PropConfig { cases: 256, ..Default::default() },
+        // finite values only, inside the f16 normal range so the bound is
+        // pure rounding (overflow-to-inf is pinned separately in the
+        // module's unit tests)
+        |rng, size| {
+            let n = rng.range(0, size * 4 + 2);
+            (0..n)
+                .map(|_| ((rng.normal() as f32) * 100.0).clamp(-6e4, 6e4))
+                .collect::<Vec<f32>>()
+        },
+        |row| {
+            let codec = CodecSpec::F16.build(&DedupCache::new());
+            let enc = codec.encode(row);
+            prop_assert!(
+                enc.bytes.len() == 2 * row.len(),
+                "f16 must be exactly 2 B per value"
+            );
+            let dec = codec.decode(&enc.bytes, row.len()).map_err(|e| format!("{e:#}"))?;
+            for (i, (a, b)) in row.iter().zip(dec.iter()).enumerate() {
+                // round-to-nearest-even at 10 mantissa bits: relative error
+                // <= 2^-11, i.e. absolute error <= |a| / 1024 over the
+                // half-ulp; subnormal outputs quantize at 2^-24
+                let bound = a.abs() / 1024.0 + 6.0e-8;
+                prop_assert!(
+                    (a - b).abs() <= bound,
+                    "f16 error at {i}: {a} -> {b} (err {}, bound {bound})",
+                    (a - b).abs()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn i8_error_is_bounded_by_half_a_quantization_step_of_the_row_absmax() {
+    check(
+        PropConfig { cases: 256, ..Default::default() },
+        |rng, size| gen_row(rng, size, false),
+        |row| {
+            let codec = CodecSpec::I8.build(&DedupCache::new());
+            let enc = codec.encode(row);
+            prop_assert!(
+                enc.bytes.len() == if row.is_empty() { 4 } else { 4 + row.len() },
+                "i8 must be one scale + 1 B per value, got {} for {} values",
+                enc.bytes.len(),
+                row.len()
+            );
+            let dec = codec.decode(&enc.bytes, row.len()).map_err(|e| format!("{e:#}"))?;
+            let m = absmax(row);
+            // |q*m/127 - x| <= (m/127)/2 from rounding; the multiplicative
+            // slack absorbs the f32 arithmetic in scale application
+            let bound = m / 254.0 * 1.001 + f32::MIN_POSITIVE;
+            for (i, (a, b)) in row.iter().zip(dec.iter()).enumerate() {
+                prop_assert!(
+                    (a - b).abs() <= bound,
+                    "i8 error at {i}: {a} -> {b} (err {}, absmax {m}, bound {bound})",
+                    (a - b).abs()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn topk_keeps_selected_entries_exactly_and_zeroes_the_rest() {
+    check(
+        PropConfig { cases: 256, ..Default::default() },
+        |rng, size| {
+            let k = rng.range(1, size + 2);
+            (k, gen_row(rng, size, false))
+        },
+        |(k, row)| {
+            let codec = CodecSpec::TopK(*k).build(&DedupCache::new());
+            let dec = codec
+                .decode(&codec.encode(row).bytes, row.len())
+                .map_err(|e| format!("{e:#}"))?;
+            let mut kept: Vec<usize> = Vec::new();
+            let mut dropped: Vec<usize> = Vec::new();
+            for i in 0..row.len() {
+                if dec[i].to_bits() == row[i].to_bits() {
+                    kept.push(i);
+                } else {
+                    prop_assert!(
+                        dec[i] == 0.0,
+                        "entry {i} neither kept exactly nor zeroed: {} -> {}",
+                        row[i],
+                        dec[i]
+                    );
+                    dropped.push(i);
+                }
+            }
+            // a dropped entry that reconstructs as zero anyway can land in
+            // `kept` (0.0 == 0.0 bitwise for +0.0), so only the upper bound
+            // on *non-zero* survivors is meaningful
+            let nonzero_kept = kept.iter().filter(|&&i| row[i] != 0.0).count();
+            prop_assert!(
+                nonzero_kept <= *k,
+                "{nonzero_kept} non-zero entries survived with k = {k}"
+            );
+            if let Some(worst_dropped) =
+                dropped.iter().map(|&i| row[i].abs()).fold(None, |m: Option<f32>, x| {
+                    Some(m.map_or(x, |m| m.max(x)))
+                })
+            {
+                for &i in &kept {
+                    if row[i] != 0.0 {
+                        prop_assert!(
+                            row[i].abs() >= worst_dropped,
+                            "kept |{}| at {i} but dropped a larger |{worst_dropped}|",
+                            row[i]
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dedup_decode_is_bit_identical_to_the_inner_codec_for_every_alignment() {
+    for inner in ["identity", "i8"] {
+        let spec = CodecSpec::from_name(&format!("dedup:{inner}")).expect("spec");
+        let plain = CodecSpec::from_name(inner).expect("inner spec");
+        let cache = DedupCache::new();
+        let dedup = spec.build(&cache);
+        let reference = plain.build(&DedupCache::new());
+        check(
+            PropConfig { cases: 192, ..Default::default() },
+            |rng, size| {
+                // lengths that sweep every alignment against the chunk size:
+                // empty, one byte short/long of a chunk boundary, exact
+                // multiples, plus random ragged rows.  Values repeat across
+                // cases (small discrete set) so the chunk cache hits.
+                let vals_per_chunk = DEDUP_CHUNK / 4;
+                let n = match rng.below(6) {
+                    0 => 0,
+                    1 => vals_per_chunk,
+                    2 => vals_per_chunk * rng.range(1, 4),
+                    3 => vals_per_chunk + 1,
+                    4 => vals_per_chunk.saturating_sub(1),
+                    _ => rng.range(0, size * 3 + 2),
+                };
+                (0..n)
+                    .map(|_| (rng.below(5) as f32 - 2.0) * 0.75)
+                    .collect::<Vec<f32>>()
+            },
+            |row| {
+                let via_dedup = dedup.encode(row);
+                let direct = reference.encode(row);
+                prop_assert!(
+                    via_dedup.encoded_len == direct.bytes.len(),
+                    "pre-dedup size {} != inner size {}",
+                    via_dedup.encoded_len,
+                    direct.bytes.len()
+                );
+                let a = dedup
+                    .decode(&via_dedup.bytes, row.len())
+                    .map_err(|e| format!("dedup decode: {e:#}"))?;
+                let b = reference
+                    .decode(&direct.bytes, row.len())
+                    .map_err(|e| format!("inner decode: {e:#}"))?;
+                prop_assert!(a.len() == b.len(), "length {} != {}", a.len(), b.len());
+                for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                    prop_assert!(
+                        x.to_bits() == y.to_bits(),
+                        "dedup drift at {i}: {:#010x} != {:#010x}",
+                        x.to_bits(),
+                        y.to_bits()
+                    );
+                }
+                Ok(())
+            },
+        );
+        let (hits, misses, chunks, hit_bytes) = cache.counters.snapshot();
+        assert_eq!(
+            hits + misses,
+            chunks,
+            "dedup:{inner} counter identity broken (hits {hits} misses {misses} chunks {chunks})"
+        );
+        assert!(hits > 0, "repeated rows never hit the dedup:{inner} chunk cache");
+        assert!(hit_bytes > 0, "hits recorded but no referenced bytes");
+        assert!(cache.resident() as u64 <= misses, "more chunks stored than misses");
+    }
+}
+
+#[test]
+fn decoders_reject_truncated_and_oversized_payloads() {
+    let cache = DedupCache::new();
+    for name in ["identity", "f16", "i8", "topk:4", "dedup:identity"] {
+        let codec = CodecSpec::from_name(name).expect("spec").build(&cache);
+        let row: Vec<f32> = (0..20).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let enc = codec.encode(&row);
+        assert!(codec.decode(&enc.bytes, row.len()).is_ok(), "{name} round trip");
+        if !enc.bytes.is_empty() {
+            let truncated = &enc.bytes[..enc.bytes.len() - 1];
+            assert!(
+                codec.decode(truncated, row.len()).is_err(),
+                "{name} accepted a truncated payload"
+            );
+        }
+        let mut oversized = enc.bytes.clone();
+        oversized.extend_from_slice(&[0u8; 3]);
+        assert!(
+            codec.decode(&oversized, row.len()).is_err(),
+            "{name} accepted trailing garbage"
+        );
+    }
+}
+
+#[test]
+fn menu_nominal_ratios_are_consistent_with_real_encodings() {
+    let menu = CodecMenu::from_list("identity,f16,i8,topk:8").expect("menu");
+    let (codecs, _cache) = menu.build();
+    let row: Vec<f32> = (0..96).map(|i| ((i * 37) % 19) as f32 * 0.3 - 2.0).collect();
+    for codec in &codecs {
+        let enc = codec.encode(&row);
+        assert_eq!(
+            enc.encoded_len,
+            codec.nominal_encoded_len(row.len()),
+            "{}: nominal size must match the real encoding",
+            codec.name()
+        );
+    }
+}

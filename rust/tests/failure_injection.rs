@@ -228,6 +228,9 @@ fn link_outage_with_speculation_in_flight_resolves_cleanly() {
         speculate: SpeculateMode::On,
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        // identity only: speculation (asserted below) is gated off under
+        // non-bit-transparent codec menus
+        codecs: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -281,6 +284,8 @@ fn router_shutdown_with_speculation_in_flight_resolves_every_launch() {
             speculate: SpeculateMode::On,
             link: LinkScenario::from_env(),
             replicas: Default::default(),
+            // identity only: see above — lossy menus suppress speculation
+            codecs: Default::default(),
         };
         let router = Router::new(RouterConfig { max_inflight: 32 });
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -382,6 +387,7 @@ fn run_pool(cfg: ReplicaConfig, n: usize) -> (Service, Vec<Response>) {
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
         replicas: cfg,
+        codecs: splitee::codec::CodecMenu::from_env(),
     };
     let router = Router::new(RouterConfig { max_inflight: 256 });
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -565,6 +571,7 @@ fn stage_panic_is_captured_as_an_error_not_an_abort() {
             speculate: SpeculateMode::from_env(),
             link: LinkScenario::from_env(),
             replicas: Default::default(),
+            codecs: splitee::codec::CodecMenu::from_env(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);

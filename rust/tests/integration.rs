@@ -13,6 +13,7 @@
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
+use splitee::codec::CodecMenu;
 use splitee::config::Manifest;
 use splitee::cost::{CostModel, NetworkProfile};
 use splitee::data::Dataset;
@@ -340,6 +341,7 @@ fn full_coordinator_round_trip_answers_every_request() {
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        codecs: CodecMenu::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -405,6 +407,17 @@ fn pipelined_matches_serial_decisions() {
         }
     };
     for scenario_name in ["env", "markov", "trace"] {
+        // codec leg: the equivalence must also hold when the bandit learns
+        // over (split, codec) pairs and lossy uplink codecs are in play —
+        // the reward scaling uses the codec's *nominal* ratio precisely so
+        // pipelined rewards stay a pure function of the decision sequence.
+        // One scenario carries the multi-codec menu to bound test runtime.
+        let menus: &[&str] = if scenario_name == "env" {
+            &["env", "identity,f16,i8,topk:16"]
+        } else {
+            &["env"]
+        };
+        for menu in menus {
         for policy in [PolicyKind::SplitEe, PolicyKind::SplitEeS, PolicyKind::Contextual] {
             let mut runs = Vec::new();
             for pipelined in [false, true] {
@@ -422,6 +435,10 @@ fn pipelined_matches_serial_decisions() {
                     speculate: SpeculateMode::from_env(),
                     link: make_scenario(scenario_name),
                     replicas: Default::default(),
+                    codecs: match *menu {
+                        "env" => CodecMenu::from_env(),
+                        list => CodecMenu::from_list(list).unwrap(),
+                    },
                 };
                 let router = Router::new(RouterConfig::default());
                 let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -465,14 +482,163 @@ fn pipelined_matches_serial_decisions() {
                     .collect();
                 runs.push((replies, arms, per_ctx, states));
             }
-            let tag = format!("{policy:?} over {scenario_name}");
+            let tag = format!("{policy:?} over {scenario_name} (codecs {menu})");
             assert_eq!(runs[0].0, runs[1].0, "{tag}: per-request decisions drifted");
             assert_eq!(runs[0].1, runs[1].1, "{tag}: bandit arm statistics drifted");
             assert_eq!(runs[0].2, runs[1].2, "{tag}: per-context arm statistics drifted");
             assert_eq!(runs[0].3, runs[1].3, "{tag}: per-link-state accounting drifted");
         }
+        }
     }
     std::fs::remove_file(&trace_path).ok();
+}
+
+#[test]
+fn identity_codec_is_bit_transparent_end_to_end() {
+    // Acceptance: the default codec menu (identity) must reproduce the
+    // codec-less serving path bit for bit.  A pipelined run under the
+    // default menu and a serial run under an explicit `identity` menu must
+    // agree on every reply down to the confidence bits, and the uplink byte
+    // accounting must show zero compression and zero dedup: every offloaded
+    // row ships exactly its 4 B/value raw payload.
+    use splitee::coordinator::service::{PolicyKind, SpeculateMode};
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+
+    let n = 12usize;
+    let ctx = serve_ctx(n);
+    let model = ctx.model;
+    let split = 3usize; // 1-based static split; both models have >= 6 layers
+    let (h, _) = model.run_split(&ctx.tokens[0], split - 1).unwrap();
+    let row_td = h.shape()[1] * h.shape()[2];
+
+    let mut runs = Vec::new();
+    let explicit_identity = || CodecMenu::from_list("identity").unwrap();
+    for (pipelined, menu) in [(true, CodecMenu::default()), (false, explicit_identity())] {
+        let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+        let mut link = LinkSim::new(NetworkProfile::four_g(), 21);
+        link.outage_rate = 0.0; // every offload delivers -> byte totals are exact
+        let config = ServiceConfig {
+            policy: PolicyKind::Fixed(split),
+            alpha: 1.1, // nothing exits: every row offloads
+            beta: 1.0,
+            batcher: BatcherConfig {
+                batch_sizes: model.batch_sizes().to_vec(),
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            coalesce: Default::default(),
+            speculate: SpeculateMode::from_env(),
+            link: LinkScenario::from_env(),
+            replicas: Default::default(),
+            codecs: menu,
+        };
+        let router = Router::new(RouterConfig::default());
+        let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for t in &ctx.tokens {
+            router.submit(t.clone(), tx.clone()).unwrap();
+        }
+        drop(tx);
+        router.shutdown();
+        if pipelined {
+            service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+        } else {
+            service.run_serial(Arc::clone(&router), config.batcher.clone()).unwrap();
+        }
+        let mut replies: Vec<(u64, usize, u32, usize, bool)> = Vec::new();
+        while let Ok(r) = rx.recv() {
+            replies.push((r.id, r.prediction, r.confidence.to_bits(), r.infer_layer, r.offloaded));
+        }
+        replies.sort_unstable();
+        assert_eq!(replies.len(), n);
+
+        let met = &service.metrics;
+        assert_eq!(met.offloaded, n as u64, "alpha > 1 forces every row to offload");
+        assert_eq!(
+            met.raw_bytes,
+            (n * 4 * row_td) as u64,
+            "every offloaded row accounts exactly 4 B per hidden value"
+        );
+        assert_eq!(met.encoded_bytes, met.raw_bytes, "identity must not compress");
+        assert_eq!(met.deduped_bytes, 0, "no dedup layer in the identity menu");
+        let (hits, misses, chunks, _) = met.dedup.snapshot();
+        assert_eq!((hits, misses, chunks), (0, 0, 0), "no dedup traffic without dedup codecs");
+        runs.push(replies);
+    }
+    assert_eq!(
+        runs[0], runs[1],
+        "default menu (pipelined) and explicit identity menu (serial) must agree bit for bit"
+    );
+}
+
+#[test]
+fn codec_byte_accounting_invariants_hold_under_load() {
+    // Under a full multi-codec menu (lossy, sparsifying and dedup'd arms all
+    // explored by the bandit) the structural byte invariants must hold:
+    // `encoded_bytes <= raw_bytes` (nominal codec output never exceeds raw
+    // in the tested menus) and the dedup chunk counters satisfy
+    // `hits + misses == chunks` exactly.
+    use splitee::coordinator::service::{PolicyKind, SpeculateMode};
+    use splitee::coordinator::{BatcherConfig, Router, RouterConfig, Service, ServiceConfig};
+
+    let n = 80usize;
+    let ctx = serve_ctx(n);
+    let model = ctx.model;
+
+    let cm = CostModel::paper(5.0, 0.1, model.n_layers());
+    let link = LinkSim::new(NetworkProfile::three_g(), 17);
+    let config = ServiceConfig {
+        policy: PolicyKind::SplitEe,
+        alpha: ctx.alpha,
+        beta: 1.0,
+        batcher: BatcherConfig {
+            batch_sizes: model.batch_sizes().to_vec(),
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        coalesce: Default::default(),
+        speculate: SpeculateMode::from_env(),
+        link: LinkScenario::from_env(),
+        replicas: Default::default(),
+        codecs: CodecMenu::from_list("identity,f16,i8,topk:16,dedup:i8").unwrap(),
+    };
+    let router = Router::new(RouterConfig::default());
+    let mut service = Service::new(Arc::clone(&model), cm, link, &config);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for t in &ctx.tokens {
+        router.submit(t.clone(), tx.clone()).unwrap();
+    }
+    drop(tx);
+    router.shutdown();
+    service.run_pipelined(Arc::clone(&router), config.batcher.clone()).unwrap();
+    let mut served = 0usize;
+    while rx.recv().is_ok() {
+        served += 1;
+    }
+    assert_eq!(served, n);
+
+    let met = &service.metrics;
+    assert_eq!(met.served, n as u64);
+    assert!(
+        met.encoded_bytes <= met.raw_bytes,
+        "codec invariant broken: encoded {} > raw {}",
+        met.encoded_bytes,
+        met.raw_bytes
+    );
+    let (hits, misses, chunks, hit_bytes) = met.dedup.snapshot();
+    assert_eq!(
+        hits + misses,
+        chunks,
+        "dedup counter identity broken (hits {hits} misses {misses} chunks {chunks})"
+    );
+    assert!(hits == 0 || hit_bytes > 0, "hits recorded without referenced bytes");
+    // the expanded arm space still gets exactly one update per sample
+    let (_best, arms) = service.bandit_summary().unwrap();
+    assert_eq!(
+        arms.len(),
+        model.n_layers() * 5,
+        "bandit must learn over (split, codec) pairs"
+    );
+    let updates: u64 = arms.iter().map(|(p, _)| p).sum();
+    assert_eq!(updates, met.served, "one bandit update per sample");
 }
 
 #[test]
@@ -514,6 +680,7 @@ fn static_link_scenario_is_bit_identical_to_no_scenario() {
             speculate: SpeculateMode::from_env(),
             link: LinkScenario::Static,
             replicas: Default::default(),
+            codecs: CodecMenu::from_env(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -565,6 +732,7 @@ fn pipelined_service_answers_concurrent_producers_in_order() {
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        codecs: CodecMenu::from_env(),
     };
     let router = Router::new(RouterConfig { max_inflight: 32 });
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -640,6 +808,7 @@ fn one_fused_launch_per_partition_verified_by_counters() {
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        codecs: CodecMenu::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -720,6 +889,7 @@ fn coalesced_offload_groups_merge_adjacent_batches_and_preserve_results() {
             speculate: SpeculateMode::from_env(),
             link: LinkScenario::from_env(),
             replicas: Default::default(),
+            codecs: CodecMenu::from_env(),
         };
         let router = Router::new(RouterConfig::default());
         let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -901,7 +1071,11 @@ fn contextual_policy_shifts_split_across_link_states() {
         coalesce: Default::default(),
         speculate: SpeculateMode::from_env(),
         link: scenario(),
+        // explicitly identity: this test derives the per-context reward
+        // argmaxes without codec cost scaling, so a SPLITEE_CODECS job
+        // must not expand the arm space under it
         replicas: Default::default(),
+        codecs: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);
@@ -974,6 +1148,7 @@ fn service_outage_falls_back_on_device() {
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        codecs: CodecMenu::from_env(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(&model), cm, link, &config);

@@ -77,6 +77,9 @@ fn config(
         speculate: SpeculateMode::Off,
         link: LinkScenario::from_name(scenario).unwrap(),
         replicas,
+        // identity only: snapshot fingerprints embed the codec menu, and the
+        // restart-equivalence assertions compare byte-level link streams
+        codecs: Default::default(),
     }
 }
 

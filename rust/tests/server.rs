@@ -72,6 +72,7 @@ fn make_service(model: &Arc<MultiExitModel>) -> (Service, BatcherConfig) {
         speculate: SpeculateMode::from_env(),
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        codecs: splitee::codec::CodecMenu::from_env(),
     };
     let service = Service::new(Arc::clone(model), cm, link, &config);
     (service, config.batcher)

@@ -103,6 +103,10 @@ fn run_service(
         speculate,
         link: LinkScenario::from_env(),
         replicas: Default::default(),
+        // identity only: speculation is gated on bit-transparent codecs, so
+        // a lossy SPLITEE_CODECS menu would zero the adoption counters these
+        // tests assert on
+        codecs: Default::default(),
     };
     let router = Router::new(RouterConfig::default());
     let mut service = Service::new(Arc::clone(model), cm, link, &config);
